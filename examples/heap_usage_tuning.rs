@@ -1,0 +1,71 @@
+//! Paper §V-F / Table IV / Fig 7: optimize average heap-usage percentage
+//! (eq. 8/9) instead of execution time — "tuning for low memory footprint
+//! is common as it is desirable to reduce the cost incurred on virtual
+//! machines."  Also demonstrates the time/memory trade-off the paper warns
+//! about.
+//!
+//! Run with:  cargo run --release --example heap_usage_tuning [bench]
+
+use onestoptuner::pipeline::{measure, run_pipeline, Algo, PipelineConfig};
+use onestoptuner::runtime::load_backend;
+use onestoptuner::{Benchmark, GcMode, Metric};
+
+fn main() -> anyhow::Result<()> {
+    let bench = std::env::args()
+        .nth(1)
+        .and_then(|s| Benchmark::parse(&s))
+        .unwrap_or(Benchmark::Lda);
+    let mode = GcMode::G1GC;
+    let backend = load_backend("artifacts");
+    let cfg = PipelineConfig::default();
+
+    println!("tuning {} ({}) for heap usage\n", bench.name(), mode.name());
+    let out = run_pipeline(
+        bench,
+        mode,
+        Metric::HeapUsage,
+        &[Algo::Bo, Algo::BoWarm, Algo::Sa],
+        &cfg,
+        &backend,
+    )?;
+
+    println!(
+        "default heap usage: {:.1} +- {:.1} %",
+        out.default_summary.mean, out.default_summary.std
+    );
+    for o in &out.outcomes {
+        let impr = 100.0 * (out.default_summary.mean - o.tuned_summary.mean)
+            / out.default_summary.mean;
+        println!(
+            "  {:<15} {:.1} +- {:.1} %   improvement {impr:.1}%",
+            o.algo.name(),
+            o.tuned_summary.mean,
+            o.tuned_summary.std
+        );
+    }
+
+    // The paper's §V-F caveat: a memory-tuned config may slow the job down.
+    let best = out
+        .outcomes
+        .iter()
+        .min_by(|a, b| a.tuned_summary.mean.partial_cmp(&b.tuned_summary.mean).unwrap())
+        .unwrap();
+    let runner = onestoptuner::SparkRunner::paper_default(bench);
+    let time_default = measure(
+        &runner,
+        &onestoptuner::FlagConfig::default_for(mode),
+        Metric::ExecTime,
+        5,
+        77,
+    );
+    let time_tuned = measure(&runner, &best.tune.best_config, Metric::ExecTime, 5, 77);
+    println!(
+        "\ntrade-off check ({}): exec time default {:.1} s -> memory-tuned {:.1} s ({:+.1}%)",
+        best.algo.name(),
+        time_default.mean,
+        time_tuned.mean,
+        100.0 * (time_tuned.mean - time_default.mean) / time_default.mean
+    );
+    println!("(\"tuning for small memory footprint may lead to worse configurations,\n  that may end up slowing down the application\" — paper SectionV-F)");
+    Ok(())
+}

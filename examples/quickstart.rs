@@ -1,0 +1,78 @@
+//! Quickstart: the full OneStopTuner pipeline end-to-end on one benchmark.
+//!
+//! Phases (paper Fig 1): (1) BEMCM active-learning characterization on the
+//! simulated Spark cluster, (2) lasso flag selection, (3) tuning with BO,
+//! BO-warm-start, RBO and the SA baseline — then a 10-repeat measurement of
+//! each recommendation against the JVM defaults.
+//!
+//! Run with:  cargo run --release --example quickstart [bench] [gc]
+//! (defaults: densekmeans parallelgc — the paper's headline 1.35x case)
+
+
+use onestoptuner::pipeline::{run_pipeline, Algo, PipelineConfig};
+use onestoptuner::runtime::load_backend;
+use onestoptuner::{Benchmark, GcMode, Metric};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let bench = args
+        .get(1)
+        .and_then(|s| Benchmark::parse(s))
+        .unwrap_or(Benchmark::DenseKMeans);
+    let mode = args
+        .get(2)
+        .and_then(|s| GcMode::parse(s))
+        .unwrap_or(GcMode::ParallelGC);
+
+    let backend = load_backend("artifacts");
+    println!("== OneStopTuner quickstart ==");
+    println!("benchmark: {}   GC: {}   backend: {}", bench.name(), mode.name(), backend.name());
+
+    let cfg = PipelineConfig::default();
+    let algos = [Algo::Bo, Algo::Rbo, Algo::BoWarm, Algo::Sa];
+    let out = run_pipeline(bench, mode, Metric::ExecTime, &algos, &cfg, &backend)?;
+
+    println!(
+        "\nphase 1 (AL characterization): {} runs over {} rounds, RMSE {:.2} -> {:.2} s",
+        out.characterization.runs_executed,
+        out.characterization.rounds,
+        out.characterization.rmse_history.first().unwrap(),
+        out.characterization.rmse_history.last().unwrap(),
+    );
+    println!(
+        "phase 2 (lasso selection): {} of {} flags kept (lambda = {})",
+        out.selection.n_selected(),
+        out.selection.group_size,
+        out.selection.lambda,
+    );
+    println!(
+        "\ndefault execution time: {:.1} +- {:.1} s (n={})",
+        out.default_summary.mean, out.default_summary.std, out.default_summary.n
+    );
+    println!("\nphase 3 (tuning, {} iterations each):", cfg.tune_iters);
+    for o in &out.outcomes {
+        println!(
+            "  {:<15} tuned {:>6.1} +- {:>4.1} s   speedup {:>5.2}x   tuning time {:>7.1} s   ({} evals)",
+            o.algo.name(),
+            o.tuned_summary.mean,
+            o.tuned_summary.std,
+            o.improvement,
+            o.tuning_time_s,
+            o.tune.evals,
+        );
+    }
+
+    let best = out
+        .outcomes
+        .iter()
+        .max_by(|a, b| a.improvement.partial_cmp(&b.improvement).unwrap())
+        .unwrap();
+    println!(
+        "\nheadline: {} achieves {:.2}x speedup over default ({} {})",
+        best.algo.name(),
+        best.improvement,
+        bench.name(),
+        mode.name()
+    );
+    Ok(())
+}

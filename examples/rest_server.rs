@@ -1,0 +1,61 @@
+//! The Fig 2 backend in action: start the REST API, then act as the UI —
+//! characterize, select flags, and tune over HTTP.
+//!
+//! Run with:  cargo run --release --example rest_server
+
+use onestoptuner::runtime::load_backend;
+use onestoptuner::server::{http_request, spawn};
+use onestoptuner::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let backend = load_backend("artifacts");
+    let addr = spawn("127.0.0.1:0", backend)?;
+    println!("REST API up on http://{addr}\n");
+
+    let get = |path: &str| http_request(addr, "GET", path, "").unwrap();
+    let post = |path: &str, body: &str| http_request(addr, "POST", path, body).unwrap();
+
+    let (_, body) = get("/api/health");
+    println!("GET /api/health\n  {body}\n");
+
+    let (_, body) = get("/api/benchmarks");
+    println!("GET /api/benchmarks\n  {body}\n");
+
+    println!("POST /api/run (DenseKMeans, ParallelGC, 32G heap)");
+    let (_, body) = post(
+        "/api/run",
+        r#"{"bench":"densekmeans","gc":"parallel","flags":{"MaxHeapSize":32768}}"#,
+    );
+    println!("  {body}\n");
+
+    println!("POST /api/characterize (LDA, G1GC — this runs the AL loop)");
+    let (_, body) = post(
+        "/api/characterize",
+        r#"{"bench":"lda","gc":"g1","pool":200,"rounds":3}"#,
+    );
+    println!("  {body}\n");
+    let v = Json::parse(&body).unwrap();
+    let id = v.get("dataset_id").unwrap().as_f64().unwrap();
+
+    println!("POST /api/select (lasso on dataset {id})");
+    let (_, body) = post("/api/select", &format!(r#"{{"dataset_id":{id}}}"#));
+    let sel = Json::parse(&body).unwrap();
+    println!(
+        "  kept {} of {} flags\n",
+        sel.get("n_selected").unwrap(),
+        sel.get("group_size").unwrap()
+    );
+
+    println!("POST /api/tune (BO warm start, 10 iterations)");
+    let (_, body) = post(
+        "/api/tune",
+        &format!(r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":10}}"#),
+    );
+    let v = Json::parse(&body).unwrap();
+    println!(
+        "  improvement {}x, tuning time {} s",
+        v.get("improvement").unwrap(),
+        v.get("tuning_time_s").unwrap()
+    );
+    Ok(())
+}

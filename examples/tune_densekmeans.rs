@@ -1,0 +1,101 @@
+//! The paper's headline scenario: DenseKMeans under ParallelGC is GC-bound
+//! (72 GB input, frequent long full-GC pauses) and flag tuning recovers
+//! ~1.35x (paper Table III).  This example walks the three phases manually
+//! — the long-form version of what `run_pipeline` automates — and prints
+//! what each phase contributed.
+//!
+//! Run with:  cargo run --release --example tune_densekmeans
+
+
+use onestoptuner::datagen::{characterize, DataGenConfig, Strategy};
+use onestoptuner::featsel::{grid_search_lambda, select_flags};
+use onestoptuner::flags::FlagConfig;
+use onestoptuner::pipeline::measure;
+use onestoptuner::runtime::load_backend;
+use onestoptuner::tuner::{bo::BoConfig, BoTuner, SimObjective, TuneSpace, Tuner};
+use onestoptuner::{Benchmark, GcMode, Metric, SparkRunner};
+
+fn main() -> anyhow::Result<()> {
+    let backend = load_backend("artifacts");
+    let bench = Benchmark::DenseKMeans;
+    let mode = GcMode::ParallelGC;
+    let metric = Metric::ExecTime;
+    let runner = SparkRunner::paper_default(bench);
+
+    // Baseline: what the stock JVM does.
+    let default_cfg = FlagConfig::default_for(mode);
+    let base = measure(&runner, &default_cfg, metric, 10, 0xba5e);
+    let base_run = runner.run(&default_cfg, 1);
+    println!("default: {:.1} +- {:.1} s, {} full GCs per run — GC-bound", base.mean, base.std, base_run.gc.full);
+
+    // Phase 1: BEMCM active learning.
+    let ch = characterize(
+        &runner,
+        mode,
+        metric,
+        Strategy::Bemcm,
+        &DataGenConfig::default(),
+        &backend,
+    )?;
+    println!(
+        "\nphase 1: {} labelled samples from {} runs ({} AL rounds, RMSE {:.1} -> {:.1} s)",
+        ch.dataset.len(),
+        ch.runs_executed,
+        ch.rounds,
+        ch.rmse_history.first().unwrap(),
+        ch.rmse_history.last().unwrap()
+    );
+
+    // Phase 2: lasso selection, with the paper's lambda grid search.
+    let (lambda, grid) = grid_search_lambda(
+        &ch.dataset,
+        &[0.003, 0.01, 0.03, 0.1],
+        &backend,
+    )?;
+    println!("\nphase 2: lambda grid search");
+    for (lam, mse, kept) in &grid {
+        println!("  lambda={lam:<6} holdout MSE {mse:.4}  flags kept {kept}");
+    }
+    let sel = select_flags(&ch.dataset, lambda, &backend)?;
+    println!(
+        "  -> lambda {} keeps {} of {} flags",
+        lambda,
+        sel.n_selected(),
+        sel.group_size
+    );
+
+    // Phase 3: BO with warm start over the selected subspace.
+    let space = TuneSpace::from_selection(mode, &sel);
+    let mut objective = SimObjective::new(&runner, metric, 0x7e57);
+    let mut tuner = BoTuner::warm_start(backend.clone(), BoConfig::default(), &space, &ch.dataset);
+    let result = tuner.tune(&space, &mut objective, 20)?;
+
+    let tuned = measure(&runner, &result.best_config, metric, 10, 0x0f00);
+    let tuned_run = runner.run(&result.best_config, 1);
+    println!(
+        "\nphase 3 (BO warm start, 20 iters): {:.1} +- {:.1} s, {} full GCs",
+        tuned.mean, tuned.std, tuned_run.gc.full
+    );
+    println!(
+        "speedup over default: {:.2}x  (paper Table III: ~1.35x)",
+        base.mean / tuned.mean
+    );
+
+    // Show which flags moved the needle.
+    println!("\nkey tuned flags vs defaults:");
+    for name in [
+        "MaxHeapSize",
+        "MaxNewSize",
+        "NewRatio",
+        "ParallelGCThreads",
+        "CompileThreshold",
+        "MaxInlineSize",
+    ] {
+        println!(
+            "  {name:<22} default {:>8}   tuned {:>8}",
+            default_cfg.get(name),
+            result.best_config.get(name)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+"""AOT exporter: lower every L2 function to HLO *text* artifacts.
+
+HLO text (NOT .serialize()): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+`xla` 0.1.6 rust crate links) rejects with `proto.id() <= INT_MAX`.  The
+text parser on the rust side reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Also writes artifacts/manifest.json describing shapes and argument order so
+the rust runtime can validate itself against the python side.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "shapes": {
+            "d_feat": shapes.D_FEAT,
+            "n_train": shapes.N_TRAIN,
+            "m_cand": shapes.M_CAND,
+            "z_ens": shapes.Z_ENS,
+            "lasso_iters": shapes.LASSO_ITERS,
+        },
+        "artifacts": {},
+    }
+    for name, (fn, args) in model.export_specs().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(a.shape) for a in args],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

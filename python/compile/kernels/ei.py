@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: Expected Improvement acquisition (minimization form).
+
+Elementwise over the M candidates of a BO acquisition sweep:
+    z  = (best - mu) / sigma
+    EI = sigma * (z * Phi(z) + phi(z))
+with a deterministic fallback max(0, best - mu) when sigma ~ 0.  Pure VPU
+work over the same TILE_M tiles the GP kernels produce.  interpret=True for
+CPU PJRT.
+
+NOTE: Phi is computed from a rational erf approximation (Abramowitz &
+Stegun 7.1.26, |err| <= 1.5e-7) spelled out in mul/exp ops — jax's
+`erf` primitive lowers to an `erf` HLO opcode that the xla_extension 0.5.1
+text parser (the version the rust `xla` crate links) does not know.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import TILE_M
+
+_SQRT2 = 1.4142135623730951
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def erf_approx(x):
+    """A&S 7.1.26 rational erf approximation using only basic HLO ops."""
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736) * t + 0.254829592
+    y = 1.0 - poly * t * jnp.exp(-ax * ax)
+    return sign * y
+
+
+def _ei_kernel(mu_ref, sigma_ref, best_ref, out_ref):
+    mu = mu_ref[...]
+    sigma = sigma_ref[...]
+    best = best_ref[0]
+    sig = jnp.maximum(sigma, 1e-9)
+    z = (best - mu) / sig
+    cdf = 0.5 * (1.0 + erf_approx(z / _SQRT2))
+    pdf = _INV_SQRT_2PI * jnp.exp(-0.5 * z * z)
+    ei = jnp.maximum(sig * (z * cdf + pdf), 0.0)
+    out_ref[...] = jnp.where(sigma > 1e-9, ei, jnp.maximum(best - mu, 0.0))
+
+
+def expected_improvement(mu, sigma, best, tile_m=TILE_M, interpret=True):
+    """Pallas EI; matches ref.ref_ei.  mu, sigma (M,) -> (M,)."""
+    m = mu.shape[0]
+    assert m % tile_m == 0, (m, tile_m)
+    best_arr = jnp.asarray(best, mu.dtype).reshape(1)
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        _ei_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), mu.dtype),
+        interpret=interpret,
+    )(mu, sigma, best_arr)

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: batched EMCM candidate scoring.
+
+The data-generation hot spot (phase 1 of the pipeline, paper §III-B): for a
+pool chunk of M candidate flag configurations and a bootstrap ensemble of Z
+linear models, compute the expected-model-change score
+
+    score(x*) = mean_z |f_z(x*) - f0(x*)| * ||x*||_2
+
+TPU mapping: the M x D candidate block streams HBM->VMEM in TILE_M x D
+tiles; the (Z, D) ensemble weight matrix is small and stays resident in
+VMEM; each grid step does a (TILE_M, D) @ (D, Z) MXU matmul plus VPU
+elementwise reduction.  interpret=True for CPU PJRT (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import TILE_M
+
+
+def _emcm_kernel(x_ref, wens_ref, w0_ref, mask_ref, out_ref):
+    x = x_ref[...] * mask_ref[...]            # (TILE_M, D) masked in VMEM
+    wens = wens_ref[...]                      # (Z, D), resident
+    w0 = w0_ref[...]                          # (1, D)
+    preds = jnp.dot(x, wens.T)                # (TILE_M, Z) — MXU
+    fbar = jnp.sum(x * w0, axis=1)            # (TILE_M,)
+    resid = jnp.abs(preds - fbar[:, None])
+    xnorm = jnp.sqrt(jnp.sum(x * x, axis=1))
+    out_ref[...] = jnp.mean(resid, axis=1) * xnorm
+
+
+def emcm_score(w_ens, w0, x, feat_mask, tile_m=TILE_M, interpret=True):
+    """Pallas EMCM scores; matches ref.ref_emcm_score.
+
+    w_ens (Z, D), w0 (D,), x (M, D), feat_mask (D,) -> (M,) float32.
+    M must be a multiple of tile_m.
+    """
+    m, d = x.shape
+    z = w_ens.shape[0]
+    assert m % tile_m == 0, (m, tile_m)
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        _emcm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((z, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=interpret,
+    )(x, w_ens, w0.reshape(1, d), feat_mask.reshape(1, d))

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: one ISTA step for Lasso feature selection.
+
+Phase 2 of the pipeline (paper §III-C) runs LASSO_ITERS of these inside a
+lax.fori_loop in the lasso_fit artifact.  With the Gram matrix G = X^T X / n
+precomputed once in L2, each step is
+
+    w <- soft(w - step * (G w - X^T y), step * lam)
+
+Grid tiles rows of G (TILE_D x D) so the matvec hits the MXU in row blocks;
+w stays fully resident in VMEM (D = 320 floats).  interpret=True for CPU
+PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import TILE_D
+
+
+def _ista_kernel(gram_ref, w_ref, xty_ref, hp_ref, out_ref):
+    g = gram_ref[...]                          # (TILE_D, D)
+    w = w_ref[...]                             # (1, D) resident
+    xty = xty_ref[...]                         # (TILE_D,)
+    step = hp_ref[0, 0]
+    lam = hp_ref[0, 1]
+    i0 = pl.program_id(0) * g.shape[0]
+    grad = jnp.dot(g, w[0]) - xty              # (TILE_D,) — MXU matvec
+    w_rows = jax.lax.dynamic_slice(w[0], (i0,), (g.shape[0],))
+    u = w_rows - step * grad
+    thr = step * lam
+    out_ref[...] = jnp.sign(u) * jnp.maximum(jnp.abs(u) - thr, 0.0)
+
+
+def ista_step(w, gram, xty, step, lam, tile_d=TILE_D, interpret=True):
+    """Pallas ISTA step; matches ref.ref_ista_step.
+
+    w (D,), gram (D, D), xty (D,) -> (D,).  D % tile_d == 0.
+    """
+    d = w.shape[0]
+    assert d % tile_d == 0, (d, tile_d)
+    hp = jnp.stack([jnp.asarray(step, w.dtype),
+                    jnp.asarray(lam, w.dtype)]).reshape(1, 2)
+    grid = (d // tile_d,)
+    return pl.pallas_call(
+        _ista_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_d, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), w.dtype),
+        interpret=interpret,
+    )(gram, w.reshape(1, d), xty, hp)

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled RBF (squared-exponential) kernel matrix.
+
+The GP hot spot (phase 3, paper §III-D): K[i,j] = sf2 * exp(-||xi-xj||^2 /
+(2 l^2)) computed with the matmul trick ||x||^2 + ||y||^2 - 2 x.y so the
+inner product hits the MXU.  Grid tiles are TILE x TILE over the output;
+each grid step streams one (TILE, D) row block of each input HBM->VMEM.
+interpret=True for CPU PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import TILE_M, TILE_N
+
+
+def _rbf_kernel(x1_ref, x2_ref, theta_ref, out_ref):
+    x1 = x1_ref[...]                          # (TA, D)
+    x2 = x2_ref[...]                          # (TB, D)
+    lengthscale = theta_ref[0, 0]
+    sf2 = theta_ref[0, 1]
+    n1 = jnp.sum(x1 * x1, axis=1)[:, None]
+    n2 = jnp.sum(x2 * x2, axis=1)[None, :]
+    cross = jnp.dot(x1, x2.T)                 # MXU
+    sq = jnp.maximum(n1 + n2 - 2.0 * cross, 0.0)
+    out_ref[...] = sf2 * jnp.exp(-sq / (2.0 * lengthscale * lengthscale))
+
+
+def rbf_matrix(x1, x2, lengthscale, sigma_f2, tile_a=TILE_M, tile_b=TILE_N,
+               interpret=True):
+    """Pallas RBF kernel matrix; matches ref.ref_rbf.
+
+    x1 (A, D), x2 (B, D) -> (A, B).  A % tile_a == 0, B % tile_b == 0.
+    """
+    a, d = x1.shape
+    b = x2.shape[0]
+    assert a % tile_a == 0 and b % tile_b == 0, (a, b, tile_a, tile_b)
+    theta = jnp.stack([jnp.asarray(lengthscale, x1.dtype),
+                       jnp.asarray(sigma_f2, x1.dtype)]).reshape(1, 2)
+    grid = (a // tile_a, b // tile_b)
+    return pl.pallas_call(
+        _rbf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_a, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_a, tile_b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), x1.dtype),
+        interpret=interpret,
+    )(x1, x2, theta)

@@ -1,0 +1,167 @@
+"""Pure-jnp reference oracles for every Pallas kernel and L2 composition.
+
+These are the ground truth for pytest: each Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance, and each exported
+model function in model.py must match the corresponding `ref_*` composition.
+No pallas imports here — plain jax.numpy only.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+from jax.scipy.special import erf
+
+# ---------------------------------------------------------------------------
+# EMCM (Batch-mode Expected Model Change Maximization) candidate scoring
+# ---------------------------------------------------------------------------
+
+
+def ref_emcm_score(w_ens, w0, x, feat_mask):
+    """Expected model change per candidate (paper eq. 5, bootstrap form).
+
+    For a linear model the parameter-change magnitude when adding candidate
+    x* with unknown label y* is ||(f(x*) - y*) x*||.  The label is estimated
+    by the bootstrap ensemble, giving
+
+        score(x*) = mean_z |f_z(x*) - f(x*)| * ||x*||_2
+
+    w_ens: (Z, D) bootstrap ensemble weights
+    w0:    (D,)   central model weights
+    x:     (M, D) candidate feature rows
+    feat_mask: (D,) 1.0 for live feature columns, 0.0 for padding
+    returns (M,) scores
+    """
+    xm = x * feat_mask[None, :]
+    preds = xm @ w_ens.T                      # (M, Z)
+    fbar = xm @ w0                            # (M,)
+    resid = jnp.abs(preds - fbar[:, None])    # (M, Z)
+    xnorm = jnp.sqrt(jnp.sum(xm * xm, axis=1))
+    return jnp.mean(resid, axis=1) * xnorm
+
+
+# ---------------------------------------------------------------------------
+# RBF kernel matrix
+# ---------------------------------------------------------------------------
+
+
+def ref_rbf(x1, x2, lengthscale, sigma_f2):
+    """K[i,j] = sigma_f2 * exp(-||x1_i - x2_j||^2 / (2 l^2))."""
+    n1 = jnp.sum(x1 * x1, axis=1)[:, None]
+    n2 = jnp.sum(x2 * x2, axis=1)[None, :]
+    sq = jnp.maximum(n1 + n2 - 2.0 * (x1 @ x2.T), 0.0)
+    return sigma_f2 * jnp.exp(-sq / (2.0 * lengthscale * lengthscale))
+
+
+# ---------------------------------------------------------------------------
+# Expected Improvement (minimization form)
+# ---------------------------------------------------------------------------
+
+_SQRT2 = 1.4142135623730951
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def _phi(z):
+    return _INV_SQRT_2PI * jnp.exp(-0.5 * z * z)
+
+
+def _Phi(z):
+    return 0.5 * (1.0 + erf(z / _SQRT2))
+
+
+def ref_ei(mu, sigma, best):
+    """EI for minimization: E[max(0, best - f(x))] under N(mu, sigma^2)."""
+    sig = jnp.maximum(sigma, 1e-9)
+    z = (best - mu) / sig
+    ei = jnp.maximum(sig * (z * _Phi(z) + _phi(z)), 0.0)
+    return jnp.where(sigma > 1e-9, ei, jnp.maximum(best - mu, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# ISTA step for Lasso
+# ---------------------------------------------------------------------------
+
+
+def ref_ista_step(w, gram, xty, step, lam):
+    """One ISTA update: w <- soft(w - step * (G w - X^T y), step * lam)."""
+    grad = gram @ w - xty
+    u = w - step * grad
+    thr = step * lam
+    return jnp.sign(u) * jnp.maximum(jnp.abs(u) - thr, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# L2-composition references (padded/masked, matching model.py exports)
+# ---------------------------------------------------------------------------
+
+
+def ref_lr_fit(x, y, row_mask, feat_mask, ridge):
+    """Masked ridge-regularized least squares via normal equations.
+
+    Padded feature columns get weight exactly 0 (their normal-equation row
+    is ridge * I only, with rhs 0).
+    """
+    xm = x * row_mask[:, None] * feat_mask[None, :]
+    ym = y * row_mask
+    d = x.shape[1]
+    a = xm.T @ xm + ridge * jnp.eye(d, dtype=x.dtype)
+    b = xm.T @ ym
+    c, low = jsl.cho_factor(a)
+    return jsl.cho_solve((c, low), b)
+
+
+def ref_lasso_fit(x, y, row_mask, feat_mask, lam, iters=400, power_iters=16):
+    """Lasso by ISTA with a power-iteration Lipschitz estimate.
+
+    Objective: (1/2n) ||y - Xw||^2 + lam * ||w||_1 over live rows/features.
+    """
+    xm = x * row_mask[:, None] * feat_mask[None, :]
+    ym = y * row_mask
+    n_eff = jnp.maximum(jnp.sum(row_mask), 1.0)
+    gram = (xm.T @ xm) / n_eff
+    xty = (xm.T @ ym) / n_eff
+
+    d = x.shape[1]
+    v = jnp.ones((d,), dtype=x.dtype) / jnp.sqrt(jnp.asarray(d, x.dtype))
+    for _ in range(power_iters):
+        v = gram @ v
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-12)
+    lmax = jnp.maximum(v @ (gram @ v), 1e-6)
+    step = 1.0 / (lmax * 1.01)
+
+    w = jnp.zeros((d,), dtype=x.dtype)
+    for _ in range(iters):
+        w = ref_ista_step(w, gram, xty, step, lam)
+    return w * feat_mask
+
+
+def ref_gp_ei(xtr, ytr, row_mask, xc, feat_mask, lengthscale, sigma_f2,
+              sigma_n2, best):
+    """GP posterior at candidates + EI, with exact padding via masks.
+
+    Padded training rows are spliced out of the kernel matrix by pinning
+    their rows/columns to the identity, so the Cholesky factor is block
+    diagonal (active block, identity block) and padded rows contribute
+    nothing to the posterior.  Returns (ei, mu, sigma), each (M,).
+    """
+    xtr_m = xtr * row_mask[:, None] * feat_mask[None, :]
+    xc_m = xc * feat_mask[None, :]
+    ytr_m = ytr * row_mask
+    n = xtr.shape[0]
+
+    k = ref_rbf(xtr_m, xtr_m, lengthscale, sigma_f2)
+    pair = row_mask[:, None] * row_mask[None, :]
+    eye = jnp.eye(n, dtype=xtr.dtype)
+    k_eff = pair * (k + sigma_n2 * eye) + (1.0 - pair) * eye
+
+    low = jnp.linalg.cholesky(k_eff)
+    # alpha = K^-1 y via two triangular solves
+    t = jsl.solve_triangular(low, ytr_m, lower=True)
+    alpha = jsl.solve_triangular(low.T, t, lower=False)
+
+    kc = ref_rbf(xc_m, xtr_m, lengthscale, sigma_f2) * row_mask[None, :]
+    mu = kc @ alpha
+
+    v = jsl.solve_triangular(low, kc.T, lower=True)  # (N, M)
+    var = sigma_f2 - jnp.sum(v * v, axis=0)
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-12))
+    ei = ref_ei(mu, sigma, best)
+    return ei, mu, sigma

@@ -1,0 +1,204 @@
+"""L2: the OneStopTuner compute graph, written in JAX and calling the L1
+Pallas kernels, lowered once by aot.py to fixed-shape HLO artifacts that the
+rust coordinator executes via PJRT.
+
+Every exported function is total over padded inputs: row masks splice out
+unused training rows, the feature mask splices out unused flag columns, so
+the rust side can run any (bench x GC-mode) problem size below the static
+maxima in shapes.py.
+
+Exports (all float32):
+  emcm_score(w_ens, w0, x, feat_mask)                    -> (M,)
+  gp_ei(xtr, ytr, row_mask, xc, feat_mask, theta)        -> (ei, mu, sigma)
+  lr_fit(x, y, row_mask, feat_mask, ridge)               -> (D,)
+  lasso_fit(x, y, row_mask, feat_mask, lam)              -> (D,)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels import ei as ei_k
+from .kernels import emcm as emcm_k
+from .kernels import ista as ista_k
+from .kernels import rbf as rbf_k
+
+# ---------------------------------------------------------------------------
+# Phase 1: EMCM active-learning candidate scoring
+# ---------------------------------------------------------------------------
+
+
+def emcm_score(w_ens, w0, x, feat_mask):
+    """Score a pool chunk of M candidates for batch-mode AL selection."""
+    return emcm_k.emcm_score(w_ens, w0, x, feat_mask)
+
+
+# ---------------------------------------------------------------------------
+# Dense linear algebra in basic HLO ops
+#
+# jnp.linalg.cholesky / jsl.solve_triangular lower to lapack_*_ffi
+# custom-calls (API_VERSION_TYPED_FFI) that xla_extension 0.5.1 — the
+# runtime the rust `xla` crate links — can neither parse nor execute, so we
+# spell out left-looking Cholesky and substitution solves with fori_loop +
+# dynamic slices.  O(n^3) matvec formulation; n <= 320.
+# ---------------------------------------------------------------------------
+
+
+def _cholesky(a):
+    """Lower-triangular L with a = L L^T (a must be PD)."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        # s_i = a[i, j] - sum_{k<j} l[i, k] l[j, k]; columns >= j of l are
+        # still zero, so a full matvec gives exactly the k<j sum.
+        lj = jax.lax.dynamic_slice(l, (j, 0), (1, n))[0]      # row j
+        s = jax.lax.dynamic_slice(a, (0, j), (n, 1))[:, 0] - l @ lj
+        d = jnp.sqrt(jnp.maximum(s[j], 1e-20))
+        col = jnp.where(idx >= j, s / d, 0.0)
+        return jax.lax.dynamic_update_slice(l, col[:, None], (0, j))
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def _solve_lower(l, b):
+    """x with L x = b (forward substitution), b of shape (n,) or (n, m)."""
+    n = l.shape[0]
+    vec = b.ndim == 1
+    bm = b[:, None] if vec else b
+    m = bm.shape[1]
+
+    def body(i, x):
+        li = jax.lax.dynamic_slice(l, (i, 0), (1, n))[0]
+        bi = jax.lax.dynamic_slice(bm, (i, 0), (1, m))[0]
+        xi = (bi - li @ x) / li[i]
+        return jax.lax.dynamic_update_slice(x, xi[None, :], (i, 0))
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(bm))
+    return x[:, 0] if vec else x
+
+
+def _solve_lower_t(l, b):
+    """x with L^T x = b (backward substitution), b of shape (n,)."""
+    n = l.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        # (L^T)[i, :] = L[:, i]
+        ci = jax.lax.dynamic_slice(l, (0, i), (n, 1))[:, 0]
+        xi = (b[i] - ci @ x) / ci[i]
+        return jax.lax.dynamic_update_slice(x, xi[None], (i,))
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: GP posterior + Expected Improvement
+# ---------------------------------------------------------------------------
+
+
+def gp_ei(xtr, ytr, row_mask, xc, feat_mask, theta):
+    """GP-EI acquisition over a candidate chunk.
+
+    theta = [lengthscale, sigma_f2, sigma_n2, best_y] (shape (4,)).
+    Padded training rows are pinned to the identity block of the kernel
+    matrix (see kernels.ref.ref_gp_ei), making the padding exact.
+    """
+    lengthscale, sigma_f2, sigma_n2, best = (theta[0], theta[1], theta[2],
+                                             theta[3])
+    n = xtr.shape[0]
+    xtr_m = xtr * row_mask[:, None] * feat_mask[None, :]
+    xc_m = xc * feat_mask[None, :]
+    ytr_m = ytr * row_mask
+
+    k = rbf_k.rbf_matrix(xtr_m, xtr_m, lengthscale, sigma_f2)
+    pair = row_mask[:, None] * row_mask[None, :]
+    eye = jnp.eye(n, dtype=xtr.dtype)
+    k_eff = pair * (k + sigma_n2 * eye) + (1.0 - pair) * eye
+
+    low = _cholesky(k_eff)
+    t = _solve_lower(low, ytr_m)
+    alpha = _solve_lower_t(low, t)
+
+    kc = rbf_k.rbf_matrix(xc_m, xtr_m, lengthscale, sigma_f2) \
+        * row_mask[None, :]
+    mu = kc @ alpha
+
+    v = _solve_lower(low, kc.T)                       # (N, M)
+    var = sigma_f2 - jnp.sum(v * v, axis=0)
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-12))
+    ei = ei_k.expected_improvement(mu, sigma, best)
+    return ei, mu, sigma
+
+
+# ---------------------------------------------------------------------------
+# Phases 1 & 3 (RBO): masked ridge linear-regression fit
+# ---------------------------------------------------------------------------
+
+
+def lr_fit(x, y, row_mask, feat_mask, ridge):
+    """Ridge LR via masked normal equations; ridge is shape (1,)."""
+    xm = x * row_mask[:, None] * feat_mask[None, :]
+    ym = y * row_mask
+    d = x.shape[1]
+    a = xm.T @ xm + ridge[0] * jnp.eye(d, dtype=x.dtype)
+    b = xm.T @ ym
+    low = _cholesky(a)
+    return _solve_lower_t(low, _solve_lower(low, b))
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: Lasso feature selection (ISTA around the L1 step kernel)
+# ---------------------------------------------------------------------------
+
+
+def lasso_fit(x, y, row_mask, feat_mask, lam):
+    """Lasso weights via LASSO_ITERS ISTA steps; lam is shape (1,)."""
+    xm = x * row_mask[:, None] * feat_mask[None, :]
+    ym = y * row_mask
+    d = x.shape[1]
+    n_eff = jnp.maximum(jnp.sum(row_mask), 1.0)
+    gram = (xm.T @ xm) / n_eff
+    xty = (xm.T @ ym) / n_eff
+
+    # Lipschitz constant by power iteration (fixed step count).
+    v = jnp.ones((d,), dtype=x.dtype) / jnp.sqrt(jnp.asarray(d, x.dtype))
+
+    def power_body(_, vv):
+        vv = gram @ vv
+        return vv / jnp.maximum(jnp.linalg.norm(vv), 1e-12)
+
+    v = jax.lax.fori_loop(0, shapes.POWER_ITERS, power_body, v)
+    lmax = jnp.maximum(v @ (gram @ v), 1e-6)
+    step = 1.0 / (lmax * 1.01)
+
+    def ista_body(_, w):
+        return ista_k.ista_step(w, gram, xty, step, lam[0])
+
+    w0 = jnp.zeros((d,), dtype=x.dtype)
+    w = jax.lax.fori_loop(0, shapes.LASSO_ITERS, ista_body, w0)
+    return w * feat_mask
+
+
+# ---------------------------------------------------------------------------
+# AOT export table: name -> (function, example argument shapes)
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_specs():
+    """name -> (callable, tuple of ShapeDtypeStructs) for aot.py."""
+    d, n, m, z = shapes.D_FEAT, shapes.N_TRAIN, shapes.M_CAND, shapes.Z_ENS
+    return {
+        "emcm_score": (emcm_score, (_f32(z, d), _f32(d), _f32(m, d),
+                                    _f32(d))),
+        "gp_ei": (gp_ei, (_f32(n, d), _f32(n), _f32(n), _f32(m, d), _f32(d),
+                          _f32(4))),
+        "lr_fit": (lr_fit, (_f32(n, d), _f32(n), _f32(n), _f32(d),
+                            _f32(1))),
+        "lasso_fit": (lasso_fit, (_f32(n, d), _f32(n), _f32(n), _f32(d),
+                                  _f32(1))),
+    }

@@ -1,0 +1,34 @@
+"""Fixed AOT export shapes shared by L1 kernels, L2 model, aot.py and the
+rust runtime (rust/src/runtime/shapes.rs mirrors these constants).
+
+Everything the rust coordinator sends through PJRT is padded to these static
+shapes and masked; masks make the padding exact (see model.py docstrings).
+"""
+
+# Feature dimension: normalized flag values for the larger GC group (141)
+# plus squared terms for continuous flags, padded up to a multiple of the
+# 128-lane tile width used by the Pallas kernels.
+D_FEAT = 320
+
+# Max labelled rows per fit call (AL training set / GP training set).
+N_TRAIN = 256
+
+# Candidates scored per XLA call (AL pool chunk / BO acquisition grid chunk).
+M_CAND = 512
+
+# Bootstrap ensemble size for BEMCM.
+Z_ENS = 8
+
+# Pallas tile sizes (MXU-oriented: 128x128 f32 tiles; the ISTA matvec tiles
+# D = 320 rows in 64-row blocks since 320 is not a multiple of 128).
+TILE_M = 128
+TILE_N = 128
+TILE_D = 64
+
+# ISTA iteration count inside the lasso_fit artifact.
+LASSO_ITERS = 400
+
+# Power-iteration steps for the Lipschitz estimate inside lasso_fit.
+POWER_ITERS = 16
+
+ARTIFACTS = ("emcm_score", "gp_ei", "lr_fit", "lasso_fit")

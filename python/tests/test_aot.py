@@ -1,0 +1,74 @@
+"""AOT export sanity: every artifact lowers, the HLO text parses the way the
+rust runtime expects (ENTRY + parameters in declared order), and the manifest
+matches shapes.py."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot, model, shapes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _artifacts_present():
+    return all(
+        os.path.exists(os.path.join(ART_DIR, f"{n}.hlo.txt"))
+        for n in shapes.ARTIFACTS
+    )
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    if not _artifacts_present():
+        aot.export_all(ART_DIR)
+    return ART_DIR
+
+
+def test_export_specs_cover_all_artifacts():
+    assert set(model.export_specs().keys()) == set(shapes.ARTIFACTS)
+
+
+def test_manifest_matches_shapes(artifacts):
+    with open(os.path.join(artifacts, "manifest.json")) as f:
+        manifest = json.load(f)
+    s = manifest["shapes"]
+    assert s["d_feat"] == shapes.D_FEAT
+    assert s["n_train"] == shapes.N_TRAIN
+    assert s["m_cand"] == shapes.M_CAND
+    assert s["z_ens"] == shapes.Z_ENS
+    assert set(manifest["artifacts"].keys()) == set(shapes.ARTIFACTS)
+
+
+@pytest.mark.parametrize("name", shapes.ARTIFACTS)
+def test_hlo_text_structure(artifacts, name):
+    path = os.path.join(artifacts, f"{name}.hlo.txt")
+    text = open(path).read()
+    assert "ENTRY" in text, "rust loader needs an ENTRY computation"
+    # Parameter count must match the export spec arity.
+    spec = model.export_specs()[name]
+    entry = text[text.index("ENTRY"):]
+    params = re.findall(r"parameter\((\d+)\)", entry)
+    assert len(set(params)) == len(spec[1]), (
+        f"{name}: {len(set(params))} params vs {len(spec[1])} spec args")
+    # Tuple root (return_tuple=True) so rust unwraps with to_tuple.
+    assert re.search(r"ROOT\s+\S+\s+=\s+\(", entry), "root must be a tuple"
+
+
+@pytest.mark.parametrize("name", shapes.ARTIFACTS)
+def test_no_custom_calls(artifacts, name):
+    """interpret=True pallas must lower to plain HLO — a Mosaic custom-call
+    would make the artifact unloadable on the CPU PJRT client."""
+    text = open(os.path.join(artifacts, f"{name}.hlo.txt")).read()
+    assert "custom-call" not in text or "mosaic" not in text.lower()
+
+
+@pytest.mark.parametrize("name", shapes.ARTIFACTS)
+def test_f32_only_interface(artifacts, name):
+    """The rust runtime sends f32 literals only."""
+    text = open(os.path.join(artifacts, f"{name}.hlo.txt")).read()
+    entry = text[text.index("ENTRY"):]
+    first_line = entry.splitlines()[0]
+    assert "f64" not in first_line

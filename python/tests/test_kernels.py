@@ -1,0 +1,237 @@
+"""Pallas kernels vs pure-jnp oracle (ref.py) — the core L1 correctness
+signal.  Hypothesis sweeps shapes, masks and hyper-parameters; fixed cases
+pin the exact export shapes used by aot.py."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import shapes
+from compile.kernels import ei, emcm, ista, rbf, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _f32(a):
+    return jnp.asarray(np.asarray(a, dtype=np.float32))
+
+
+def _rand(*shape, scale=1.0, rng=RNG):
+    return _f32(rng.normal(size=shape) * scale)
+
+
+# ---------------------------------------------------------------------------
+# EMCM scoring
+# ---------------------------------------------------------------------------
+
+
+class TestEmcm:
+    def test_export_shape(self):
+        z, d, m = shapes.Z_ENS, shapes.D_FEAT, shapes.M_CAND
+        w_ens, w0, x = _rand(z, d), _rand(d), _rand(m, d)
+        mask = _f32(np.ones(d))
+        got = emcm.emcm_score(w_ens, w0, x, mask)
+        want = ref.ref_emcm_score(w_ens, w0, x, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_feature_mask_zeroes_padding(self):
+        z, d, m = 4, 320, 128
+        w_ens, w0 = _rand(z, d), _rand(d)
+        x = _rand(m, d)
+        mask = _f32((np.arange(d) < 200).astype(np.float32))
+        got = emcm.emcm_score(w_ens, w0, x, mask)
+        # Zeroing the padded columns of x by hand must give the same scores.
+        x2 = _f32(np.array(x) * np.array(mask)[None, :])
+        got2 = emcm.emcm_score(w_ens, w0, x2, mask)
+        np.testing.assert_allclose(got, got2, rtol=1e-5, atol=1e-5)
+
+    def test_zero_ensemble_spread_gives_zero_score(self):
+        z, d, m = 4, 320, 128
+        w0 = _rand(d)
+        w_ens = jnp.tile(w0[None, :], (z, 1))
+        x = _rand(m, d)
+        mask = _f32(np.ones(d))
+        got = np.array(emcm.emcm_score(w_ens, w0, x, mask))
+        assert np.all(np.abs(got) < 1e-3)
+
+    def test_score_scales_with_candidate_norm(self):
+        z, d = 4, 320
+        w_ens, w0 = _rand(z, d), _rand(d)
+        base = np.tile(RNG.normal(size=(1, d)).astype(np.float32), (128, 1))
+        base[64:] *= 2.0  # second half = same direction, twice the norm
+        mask = _f32(np.ones(d))
+        got = np.array(emcm.emcm_score(_f32(base), w0, w_ens[0] * 0 + _f32(base), mask))
+        # |resid| and ||x|| both scale linearly -> score scales ~4x
+        np.testing.assert_allclose(got[64:] / np.maximum(got[:64], 1e-9),
+                                   4.0, rtol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m_tiles=st.integers(1, 4),
+        z=st.integers(2, 8),
+        live=st.integers(1, 320),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_random(self, m_tiles, z, live, seed):
+        rng = np.random.default_rng(seed)
+        d, m = 320, m_tiles * shapes.TILE_M
+        w_ens, w0 = _rand(z, d, rng=rng), _rand(d, rng=rng)
+        x = _rand(m, d, rng=rng)
+        mask = _f32((np.arange(d) < live).astype(np.float32))
+        got = emcm.emcm_score(w_ens, w0, x, mask)
+        want = ref.ref_emcm_score(w_ens, w0, x, mask)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RBF kernel matrix
+# ---------------------------------------------------------------------------
+
+
+class TestRbf:
+    def test_export_shapes(self):
+        n, m, d = shapes.N_TRAIN, shapes.M_CAND, shapes.D_FEAT
+        x1, x2 = _rand(n, d), _rand(m, d)
+        got = rbf.rbf_matrix(x1, x2, 2.0, 1.5)
+        want = ref.ref_rbf(x1, x2, 2.0, 1.5)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_diagonal_is_sigma_f2(self):
+        d = 320
+        x = _rand(128, d)
+        k = np.array(rbf.rbf_matrix(x, x, 3.0, 2.5))
+        np.testing.assert_allclose(np.diag(k), 2.5, rtol=1e-4)
+
+    def test_symmetry(self):
+        x = _rand(128, 320)
+        k = np.array(rbf.rbf_matrix(x, x, 1.0, 1.0))
+        np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+
+    def test_values_in_range(self):
+        x1, x2 = _rand(128, 320), _rand(256, 320)
+        k = np.array(rbf.rbf_matrix(x1, x2, 2.0, 1.0))
+        assert np.all(k >= 0.0) and np.all(k <= 1.0 + 1e-6)
+
+    def test_identical_points_give_max(self):
+        x = _rand(128, 320)
+        k = np.array(rbf.rbf_matrix(x, x, 2.0, 1.0))
+        assert np.all(k <= np.diag(k)[:, None] + 1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        a_tiles=st.integers(1, 2),
+        b_tiles=st.integers(1, 4),
+        ls=st.floats(0.3, 10.0),
+        sf2=st.floats(0.1, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_random(self, a_tiles, b_tiles, ls, sf2, seed):
+        rng = np.random.default_rng(seed)
+        a, b, d = a_tiles * 128, b_tiles * 128, 320
+        x1, x2 = _rand(a, d, rng=rng), _rand(b, d, rng=rng)
+        got = rbf.rbf_matrix(x1, x2, ls, sf2)
+        want = ref.ref_rbf(x1, x2, ls, sf2)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Expected Improvement
+# ---------------------------------------------------------------------------
+
+
+class TestEi:
+    def test_export_shape(self):
+        m = shapes.M_CAND
+        mu = _rand(m)
+        sigma = _f32(np.abs(RNG.normal(size=m)) + 0.01)
+        got = ei.expected_improvement(mu, sigma, 0.25)
+        want = ref.ref_ei(mu, sigma, 0.25)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+    def test_nonnegative(self):
+        mu = _rand(256, scale=3.0)
+        sigma = _f32(np.abs(RNG.normal(size=256)))
+        got = np.array(ei.expected_improvement(mu, sigma, 0.0))
+        assert np.all(got >= -1e-7)
+
+    def test_zero_sigma_fallback(self):
+        mu = _f32(np.array([1.0, -1.0] * 64))
+        sigma = _f32(np.zeros(128))
+        got = np.array(ei.expected_improvement(mu, sigma, 0.0))
+        want = np.maximum(0.0 - np.array(mu), 0.0)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_monotone_in_best(self):
+        mu = _rand(128)
+        sigma = _f32(np.abs(RNG.normal(size=128)) + 0.1)
+        lo = np.array(ei.expected_improvement(mu, sigma, -1.0))
+        hi = np.array(ei.expected_improvement(mu, sigma, 1.0))
+        assert np.all(hi >= lo - 1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 4),
+        best=st.floats(-3.0, 3.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_random(self, tiles, best, seed):
+        rng = np.random.default_rng(seed)
+        m = tiles * 128
+        mu = _rand(m, rng=rng)
+        sigma = _f32(np.abs(rng.normal(size=m)))
+        got = ei.expected_improvement(mu, sigma, best)
+        want = ref.ref_ei(mu, sigma, best)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ISTA step
+# ---------------------------------------------------------------------------
+
+
+def _spd(d, rng):
+    a = rng.normal(size=(d, d)).astype(np.float32)
+    return a @ a.T / d
+
+
+class TestIsta:
+    def test_export_shape(self):
+        d = shapes.D_FEAT
+        gram = _f32(_spd(d, RNG))
+        w, xty = _rand(d), _rand(d)
+        got = ista.ista_step(w, gram, xty, 0.01, 0.05)
+        want = ref.ref_ista_step(w, gram, xty, 0.01, 0.05)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+    def test_soft_threshold_sparsifies(self):
+        d = 320
+        gram = _f32(np.eye(d, dtype=np.float32))
+        w = _f32(np.zeros(d))
+        xty = _rand(d, scale=0.01)
+        # One step from zero with huge lambda must stay exactly zero.
+        got = np.array(ista.ista_step(w, gram, xty, 1.0, 10.0))
+        assert np.all(got == 0.0)
+
+    def test_fixed_point_of_zero_gradient(self):
+        # With gram = I, xty = w and lam = 0 the update is the identity.
+        d = 320
+        gram = _f32(np.eye(d, dtype=np.float32))
+        w = _rand(d)
+        got = np.array(ista.ista_step(w, gram, w, 1.0, 0.0))
+        np.testing.assert_allclose(got, np.array(w), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        step=st.floats(1e-4, 0.5),
+        lam=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_random(self, step, lam, seed):
+        rng = np.random.default_rng(seed)
+        d = 320
+        gram = _f32(_spd(d, rng))
+        w, xty = _rand(d, rng=rng), _rand(d, rng=rng)
+        got = ista.ista_step(w, gram, xty, step, lam)
+        want = ref.ref_ista_step(w, gram, xty, step, lam)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)

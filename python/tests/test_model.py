@@ -1,0 +1,195 @@
+"""L2 model compositions vs ref.py oracles, on the exact export shapes, plus
+masking/padding invariants that the rust runtime relies on."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model, shapes
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+D, N, M, Z = shapes.D_FEAT, shapes.N_TRAIN, shapes.M_CAND, shapes.Z_ENS
+
+
+def _f32(a):
+    return jnp.asarray(np.asarray(a, dtype=np.float32))
+
+
+def _problem(n_live, d_live, rng):
+    """A smooth synthetic regression problem padded to export shapes."""
+    x = np.zeros((N, D), dtype=np.float32)
+    x[:n_live, :d_live] = rng.uniform(0, 1, size=(n_live, d_live))
+    w_true = np.zeros(D, dtype=np.float32)
+    w_true[:d_live] = rng.normal(size=d_live) * (rng.uniform(size=d_live) < 0.3)
+    y = np.zeros(N, dtype=np.float32)
+    y[:n_live] = x[:n_live] @ w_true + 0.01 * rng.normal(size=n_live)
+    rm = (np.arange(N) < n_live).astype(np.float32)
+    fm = (np.arange(D) < d_live).astype(np.float32)
+    return _f32(x), _f32(y), _f32(rm), _f32(fm), w_true
+
+
+class TestLrFit:
+    def test_matches_ref(self):
+        # Underdetermined system: weights are numerically ill-determined, so
+        # compare the models' *predictions* (the quantity the pipeline uses),
+        # not raw weights (model.lr_fit uses a hand-rolled pure-HLO Cholesky,
+        # ref uses LAPACK).
+        x, y, rm, fm, _ = _problem(120, 260, RNG)
+        got = np.array(model.lr_fit(x, y, rm, fm, _f32([1e-3])))
+        want = np.array(ref.ref_lr_fit(x, y, rm, fm, 1e-3))
+        pa = np.array(x) @ got
+        pb = np.array(x) @ want
+        np.testing.assert_allclose(pa, pb, atol=5e-2)
+
+    def test_padded_features_are_zero(self):
+        x, y, rm, fm, _ = _problem(80, 150, RNG)
+        w = np.array(model.lr_fit(x, y, rm, fm, _f32([1e-3])))
+        assert np.all(w[150:] == 0.0)
+
+    def test_recovers_clean_linear_model(self):
+        rng = np.random.default_rng(7)
+        x, y, rm, fm, w_true = _problem(200, 64, rng)
+        w = np.array(model.lr_fit(x, y, rm, fm, _f32([1e-5])))
+        pred = np.array(x[:200]) @ w
+        np.testing.assert_allclose(pred, np.array(y[:200]), atol=0.15)
+
+    def test_padding_rows_do_not_leak(self):
+        """Garbage in padded rows must not change the fit."""
+        rng = np.random.default_rng(3)
+        x, y, rm, fm, _ = _problem(100, 200, rng)
+        w1 = np.array(model.lr_fit(x, y, rm, fm, _f32([1e-3])))
+        x2 = np.array(x)
+        x2[100:] = rng.normal(size=(N - 100, D)) * 100.0
+        y2 = np.array(y)
+        y2[100:] = 1e6
+        w2 = np.array(model.lr_fit(_f32(x2), _f32(y2), rm, fm, _f32([1e-3])))
+        np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+
+
+class TestLassoFit:
+    def test_matches_ref(self):
+        x, y, rm, fm, _ = _problem(150, 280, RNG)
+        got = model.lasso_fit(x, y, rm, fm, _f32([0.01]))
+        want = ref.ref_lasso_fit(x, y, rm, fm, 0.01)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_sparsity_increases_with_lambda(self):
+        x, y, rm, fm, _ = _problem(180, 250, np.random.default_rng(5))
+        nnz = []
+        for lam in (1e-4, 1e-2, 1e-1):
+            w = np.array(model.lasso_fit(x, y, rm, fm, _f32([lam])))
+            nnz.append(int((np.abs(w) > 1e-7).sum()))
+        assert nnz[0] >= nnz[1] >= nnz[2]
+
+    def test_huge_lambda_gives_all_zero(self):
+        x, y, rm, fm, _ = _problem(100, 100, np.random.default_rng(6))
+        w = np.array(model.lasso_fit(x, y, rm, fm, _f32([1e4])))
+        assert np.all(w == 0.0)
+
+    def test_padded_features_are_zero(self):
+        x, y, rm, fm, _ = _problem(100, 170, np.random.default_rng(8))
+        w = np.array(model.lasso_fit(x, y, rm, fm, _f32([0.01])))
+        assert np.all(w[170:] == 0.0)
+
+    def test_selects_true_support_on_sparse_problem(self):
+        rng = np.random.default_rng(11)
+        n_live, d_live = 220, 120
+        x = np.zeros((N, D), dtype=np.float32)
+        x[:n_live, :d_live] = rng.uniform(-1, 1, size=(n_live, d_live))
+        w_true = np.zeros(D, dtype=np.float32)
+        support = rng.choice(d_live, size=8, replace=False)
+        w_true[support] = rng.choice([-2.0, 2.0], size=8)
+        y = np.zeros(N, dtype=np.float32)
+        y[:n_live] = x[:n_live] @ w_true + 0.02 * rng.normal(size=n_live)
+        rm = _f32((np.arange(N) < n_live).astype(np.float32))
+        fm = _f32((np.arange(D) < d_live).astype(np.float32))
+        w = np.array(model.lasso_fit(_f32(x), _f32(y), rm, fm, _f32([0.02])))
+        picked = set(np.where(np.abs(w) > 1e-3)[0])
+        assert set(support) <= picked
+        # and it should not pick up everything
+        assert len(picked) < d_live // 2
+
+
+class TestGpEi:
+    def _inputs(self, n_live, d_live, seed):
+        rng = np.random.default_rng(seed)
+        x, y, rm, fm, _ = _problem(n_live, d_live, rng)
+        xc = np.zeros((M, D), dtype=np.float32)
+        xc[:, :d_live] = rng.uniform(0, 1, size=(M, d_live))
+        theta = np.array([2.0, 1.0, 0.01, float(np.array(y)[:n_live].min())],
+                         dtype=np.float32)
+        return x, y, rm, _f32(xc), fm, _f32(theta)
+
+    def test_matches_ref(self):
+        x, y, rm, xc, fm, theta = self._inputs(90, 260, 21)
+        got = model.gp_ei(x, y, rm, xc, fm, theta)
+        want = ref.ref_gp_ei(x, y, rm, xc, fm, float(theta[0]),
+                             float(theta[1]), float(theta[2]),
+                             float(theta[3]))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-4)
+
+    def test_posterior_interpolates_training_points(self):
+        """With tiny noise, mu at a training input ~= its label."""
+        rng = np.random.default_rng(31)
+        n_live, d_live = 40, 50
+        x = np.zeros((N, D), dtype=np.float32)
+        x[:n_live, :d_live] = rng.uniform(0, 1, size=(n_live, d_live))
+        y = np.zeros(N, dtype=np.float32)
+        y[:n_live] = np.sin(x[:n_live, :d_live].sum(axis=1))
+        rm = _f32((np.arange(N) < n_live).astype(np.float32))
+        fm = _f32((np.arange(D) < d_live).astype(np.float32))
+        xc = np.zeros((M, D), dtype=np.float32)
+        xc[:n_live] = x[:n_live]
+        theta = _f32(np.array([1.5, 1.0, 1e-4, float(y[:n_live].min())],
+                              dtype=np.float32))
+        ei_v, mu, sigma = model.gp_ei(_f32(x), _f32(y), rm, _f32(xc), fm,
+                                      theta)
+        np.testing.assert_allclose(np.array(mu)[:n_live], y[:n_live],
+                                   atol=0.05)
+        # posterior uncertainty at training points is ~ noise level
+        assert np.all(np.array(sigma)[:n_live] < 0.1)
+
+    def test_padding_rows_do_not_leak(self):
+        x, y, rm, xc, fm, theta = self._inputs(60, 200, 41)
+        got1 = model.gp_ei(x, y, rm, xc, fm, theta)
+        x2, y2 = np.array(x), np.array(y)
+        rng = np.random.default_rng(0)
+        x2[60:] = rng.normal(size=(N - 60, D))
+        y2[60:] = -1e3
+        got2 = model.gp_ei(_f32(x2), _f32(y2), rm, xc, fm, theta)
+        for a, b in zip(got1, got2):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_ei_nonnegative_and_finite(self):
+        x, y, rm, xc, fm, theta = self._inputs(100, 150, 51)
+        ei_v, mu, sigma = model.gp_ei(x, y, rm, xc, fm, theta)
+        assert np.all(np.isfinite(np.array(ei_v)))
+        assert np.all(np.array(ei_v) >= -1e-6)
+        assert np.all(np.array(sigma) > 0.0)
+
+    @settings(max_examples=8, deadline=None)
+    @given(n_live=st.integers(10, 200), d_live=st.integers(10, 300),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_random(self, n_live, d_live, seed):
+        x, y, rm, xc, fm, theta = self._inputs(n_live, d_live, seed)
+        got = model.gp_ei(x, y, rm, xc, fm, theta)
+        want = ref.ref_gp_ei(x, y, rm, xc, fm, float(theta[0]),
+                             float(theta[1]), float(theta[2]),
+                             float(theta[3]))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=5e-3, atol=5e-4)
+
+
+class TestEmcmModel:
+    def test_matches_ref_on_export_shapes(self):
+        rng = np.random.default_rng(61)
+        w_ens = _f32(rng.normal(size=(Z, D)))
+        w0 = _f32(rng.normal(size=D))
+        x = _f32(rng.normal(size=(M, D)))
+        fm = _f32((np.arange(D) < 282).astype(np.float32))
+        got = model.emcm_score(w_ens, w0, x, fm)
+        want = ref.ref_emcm_score(w_ens, w0, x, fm)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,42 @@
+//! End-to-end experiment benchmarks: wall time to regenerate each paper
+//! artifact at `--fast` budget (one per table/figure — the paper's own
+//! "time to tune" Section V-C is reported inside table3/timing output).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::{section, Bench};
+use onestoptuner::pipeline::experiments::{
+    run_fig4, run_fig5, run_fig6, run_heap_usage, run_table2, ExperimentCtx,
+};
+use onestoptuner::runtime::{engine::XlaEngine, MlBackend, NativeBackend};
+
+fn ctx() -> ExperimentCtx {
+    let backend: Arc<dyn MlBackend> = match XlaEngine::load("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(_) => Arc::new(NativeBackend),
+    };
+    let dir = std::env::temp_dir().join("ost_bench_experiments");
+    let mut c = ExperimentCtx::new(backend, dir).fast();
+    // trim further: benches measure wall cost, not statistical quality
+    c.cfg.datagen.pool_size = 120;
+    c.cfg.datagen.max_rounds = 2;
+    c.cfg.tune_iters = 5;
+    c.cfg.repeats = 3;
+    c
+}
+
+fn main() {
+    let ctx = ctx();
+    println!("(backend: {})", ctx.backend.name());
+
+    section("paper-artifact regeneration wall time (fast budget)");
+    Bench::new("repro/table2").iters(0, 2).run(|| run_table2(&ctx).unwrap());
+    Bench::new("repro/table4+fig7").iters(0, 1).run(|| run_heap_usage(&ctx).unwrap());
+    Bench::new("repro/fig4").iters(0, 2).run(|| run_fig4(&ctx).unwrap());
+    Bench::new("repro/fig5").iters(0, 2).run(|| run_fig5(&ctx).unwrap());
+    Bench::new("repro/fig6").iters(0, 1).run(|| run_fig6(&ctx).unwrap());
+    println!("\n(table3/fig3/timing share the exec-time pipeline; see bench_tuners for its parts)");
+}

@@ -1,0 +1,81 @@
+//! ML-operation benchmarks: each L2 artifact through PJRT (xla backend)
+//! vs the pure-rust native mirror, at the pipeline's production shapes.
+//! This is the L1/L2-vs-L3 comparison the perf pass optimizes (see
+//! EXPERIMENTS.md §Perf).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::{section, Bench};
+use onestoptuner::runtime::{engine::XlaEngine, MlBackend, NativeBackend, Z_ENS};
+use onestoptuner::util::rng::Pcg;
+
+fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
+}
+
+fn main() {
+    let mut rng = Pcg::new(1);
+    let backends: Vec<Arc<dyn MlBackend>> = {
+        let mut v: Vec<Arc<dyn MlBackend>> = vec![Arc::new(NativeBackend)];
+        match XlaEngine::load("artifacts") {
+            Ok(e) => v.push(Arc::new(e)),
+            Err(e) => eprintln!("(xla backend unavailable: {e:#}; native only)"),
+        }
+        v
+    };
+
+    // Production shapes: G1 group features d=241, AL pool chunk 512,
+    // GP with ~120 training points and 1024 candidates.
+    let d = 241;
+
+    section("emcm_score: AL pool scoring (M=512 chunk, paper Algorithm 1)");
+    let w_ens: Vec<Vec<f64>> = (0..Z_ENS).map(|_| (0..d).map(|_| rng.normal() * 0.2).collect()).collect();
+    let w0: Vec<f64> = (0..d).map(|_| rng.normal() * 0.2).collect();
+    let pool = rand_rows(512, d, &mut rng);
+    for b in &backends {
+        Bench::new(format!("emcm_score/512x{d}/{}", b.name()))
+            .run_throughput(512.0, "cand", || b.emcm_score(&w_ens, &w0, &pool).unwrap());
+    }
+
+    section("lr_fit: ridge LR (N=224, the AL model refit)");
+    let x = rand_rows(224, d, &mut rng);
+    let y: Vec<f64> = x.iter().map(|r| r.iter().sum::<f64>() / d as f64).collect();
+    for b in &backends {
+        Bench::new(format!("lr_fit/224x{d}/{}", b.name()))
+            .run(|| b.lr_fit(&x, &y, 1e-3).unwrap());
+    }
+
+    section("lasso_fit: 400 ISTA iterations (phase 2)");
+    for b in &backends {
+        Bench::new(format!("lasso_fit/224x{d}/{}", b.name()))
+            .iters(2, 6)
+            .run(|| b.lasso_fit(&x, &y, 0.01).unwrap());
+    }
+
+    section("gp_ei: GP posterior + EI (N=120 train, M=1024 candidates)");
+    let xtr = rand_rows(120, d, &mut rng);
+    let ytr: Vec<f64> = xtr.iter().map(|r| r.iter().sum::<f64>() / d as f64).collect();
+    let xc = rand_rows(1024, d, &mut rng);
+    for b in &backends {
+        Bench::new(format!("gp_ei/120tr_1024c/{}", b.name()))
+            .iters(2, 8)
+            .run_throughput(1024.0, "cand", || {
+                b.gp_ei(&xtr, &ytr, &xc, 4.0, 1.0, 0.01, 0.0).unwrap()
+            });
+    }
+
+    section("gp_ei scaling in training-set size (BO iteration cost)");
+    for n in [32usize, 64, 128, 250] {
+        let xtr = rand_rows(n, d, &mut rng);
+        let ytr: Vec<f64> = xtr.iter().map(|r| r.iter().sum::<f64>() / d as f64).collect();
+        let xc = rand_rows(512, d, &mut rng);
+        for b in &backends {
+            Bench::new(format!("gp_ei/{n}tr_512c/{}", b.name()))
+                .iters(2, 6)
+                .run(|| b.gp_ei(&xtr, &ytr, &xc, 4.0, 1.0, 0.01, 0.0).unwrap());
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Benchmarks of the simulated testbed (the objective function Q): single
+//! JVM runs, full Spark jobs, parallel jobs — per (benchmark x GC mode).
+//! The simulator is the pipeline's hot path (hundreds of runs per phase-1
+//! characterization), so runs/s here bounds end-to-end tuning throughput.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{section, Bench};
+use onestoptuner::flags::{FlagConfig, GcMode};
+use onestoptuner::jvmsim::{self, JvmParams};
+use onestoptuner::sparksim::{run_parallel, ClusterSpec, ExecutorSpec, SparkRunner};
+use onestoptuner::util::rng::Pcg;
+use onestoptuner::Benchmark;
+
+fn main() {
+    section("jvmsim: single-executor JVM run");
+    for mode in [GcMode::ParallelGC, GcMode::G1GC] {
+        for bench in Benchmark::all() {
+            let cfg = FlagConfig::default_for(mode);
+            let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+            let load = bench.executor_load(3);
+            let mut seed = 0u64;
+            Bench::new(format!("jvm_run/{}/{}", bench.name(), mode.name()))
+                .iters(5, 30)
+                .run(|| {
+                    seed += 1;
+                    jvmsim::run(&p, &load, 20.0, &mut Pcg::new(seed))
+                });
+        }
+    }
+
+    section("sparksim: full 3-executor job (the tuner's objective)");
+    for mode in [GcMode::ParallelGC, GcMode::G1GC] {
+        for bench in Benchmark::all() {
+            let runner = SparkRunner::paper_default(bench);
+            let cfg = FlagConfig::default_for(mode);
+            let mut seed = 0u64;
+            Bench::new(format!("spark_run/{}/{}", bench.name(), mode.name()))
+                .iters(5, 30)
+                .run_throughput(1.0, "runs", || {
+                    seed += 1;
+                    runner.run(&cfg, seed)
+                });
+        }
+    }
+
+    section("sparksim: parallel two-job contention (Fig 6 setting)");
+    let cluster = ClusterSpec::paper();
+    let cfg = FlagConfig::default_for(GcMode::G1GC);
+    let jobs = vec![
+        (Benchmark::Lda, cfg.clone(), ExecutorSpec::parallel_2x15()),
+        (Benchmark::DenseKMeans, cfg.clone(), ExecutorSpec::parallel_2x15()),
+    ];
+    let mut seed = 0u64;
+    Bench::new("spark_parallel/lda+dk/G1GC").iters(5, 20).run(|| {
+        seed += 1;
+        run_parallel(&cluster, &jobs, seed)
+    });
+
+    section("flags: config plumbing");
+    let mut rng = Pcg::new(7);
+    let enc = onestoptuner::FeatureEncoder::new(GcMode::G1GC);
+    Bench::new("flag_config/random+encode/G1GC").iters(10, 50).run(|| {
+        let c = FlagConfig::random(GcMode::G1GC, &mut rng);
+        enc.encode(&c)
+    });
+    Bench::new("jvm_params/derive/G1GC").iters(10, 50).run(|| {
+        JvmParams::derive(&FlagConfig::default_for(GcMode::G1GC), 81920.0, 20.0)
+    });
+}

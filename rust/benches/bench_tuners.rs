@@ -1,0 +1,125 @@
+//! Tuner-loop benchmarks: optimizer overhead per iteration (excluding the
+//! benchmark runs the paper's §V-C timing is dominated by) and full small
+//! tuning loops per algorithm — the L3 perf-pass targets.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::{section, Bench};
+use onestoptuner::datagen::{characterize, DataGenConfig, Strategy};
+use onestoptuner::featsel::select_flags;
+use onestoptuner::flags::GcMode;
+use onestoptuner::runtime::{engine::XlaEngine, MlBackend, NativeBackend};
+use onestoptuner::sparksim::SparkRunner;
+use onestoptuner::tuner::{
+    bo::BoConfig, sa::SaConfig, BoTuner, Objective, RboTuner, SaTuner, SimObjective,
+    TuneSpace, Tuner,
+};
+use onestoptuner::{Benchmark, Metric};
+
+/// Free objective to isolate optimizer overhead from simulator time.
+struct FreeObjective {
+    space: TuneSpace,
+    count: usize,
+}
+
+impl Objective for FreeObjective {
+    fn eval(&mut self, cfg: &onestoptuner::FlagConfig) -> f64 {
+        self.count += 1;
+        let u = self.space.project(cfg);
+        u.iter().map(|&x| (x - 0.6) * (x - 0.6)).sum()
+    }
+    fn evals(&self) -> usize {
+        self.count
+    }
+    fn sim_time_s(&self) -> f64 {
+        0.0
+    }
+}
+
+fn main() {
+    let backend: Arc<dyn MlBackend> = match XlaEngine::load("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(_) => Arc::new(NativeBackend),
+    };
+    println!("(backend: {})", backend.name());
+
+    // A realistic tuning problem: characterize DK/ParallelGC, select flags.
+    let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+    let dg = DataGenConfig {
+        pool_size: 200,
+        seed_runs: 24,
+        test_runs: 10,
+        batch_k: 16,
+        max_rounds: 4,
+        rmse_rel_tol: 0.0,
+        ridge: 1e-3,
+        seed: 9,
+    };
+    let ch = characterize(
+        &runner,
+        GcMode::ParallelGC,
+        Metric::ExecTime,
+        Strategy::Bemcm,
+        &dg,
+        &backend,
+    )
+    .unwrap();
+    let sel = select_flags(&ch.dataset, 0.01, &backend).unwrap();
+    let space = TuneSpace::from_selection(GcMode::ParallelGC, &sel);
+    println!("(tuning space: {} of {} flags)", space.dim(), sel.group_size);
+
+    section("optimizer overhead per 10 iterations (objective cost = 0)");
+    Bench::new("bo/10iters/overhead").iters(2, 8).run(|| {
+        let mut obj = FreeObjective { space: space.clone(), count: 0 };
+        let mut t = BoTuner::new(backend.clone(), BoConfig { n_init: 4, ..Default::default() });
+        t.tune(&space, &mut obj, 10).unwrap()
+    });
+    Bench::new("bo_warm/10iters/overhead").iters(2, 8).run(|| {
+        let mut obj = FreeObjective { space: space.clone(), count: 0 };
+        let mut t = BoTuner::warm_start(backend.clone(), BoConfig::default(), &space, &ch.dataset);
+        t.tune(&space, &mut obj, 10).unwrap()
+    });
+    Bench::new("rbo/10iters/overhead").iters(2, 8).run(|| {
+        let mut obj = FreeObjective { space: space.clone(), count: 0 };
+        let mut t = RboTuner::new(backend.clone(), BoConfig::default(), ch.dataset.clone());
+        t.tune(&space, &mut obj, 10).unwrap()
+    });
+    Bench::new("sa/10iters/overhead").iters(2, 8).run(|| {
+        let mut obj = FreeObjective { space: space.clone(), count: 0 };
+        let mut t = SaTuner::new(SaConfig::default());
+        t.tune(&space, &mut obj, 10).unwrap()
+    });
+
+    section("full tuning loop incl. simulated runs (8 iterations)");
+    Bench::new("bo/8iters/full").iters(1, 4).run(|| {
+        let mut obj = SimObjective::new(&runner, Metric::ExecTime, 3);
+        let mut t = BoTuner::new(backend.clone(), BoConfig { n_init: 4, ..Default::default() });
+        t.tune(&space, &mut obj, 8).unwrap()
+    });
+    Bench::new("sa/8iters/full").iters(1, 4).run(|| {
+        let mut obj = SimObjective::new(&runner, Metric::ExecTime, 3);
+        let mut t = SaTuner::new(SaConfig::default());
+        t.tune(&space, &mut obj, 8).unwrap()
+    });
+
+    section("phase 1: one BEMCM AL round (fit ensemble + score pool)");
+    Bench::new("characterize/4rounds_200pool").iters(1, 3).run(|| {
+        characterize(
+            &runner,
+            GcMode::ParallelGC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &dg,
+            &backend,
+        )
+        .unwrap()
+    });
+
+    section("phase 2: lasso selection");
+    Bench::new("select_flags/lambda0.01").iters(2, 6).run(|| {
+        select_flags(&ch.dataset, 0.01, &backend).unwrap()
+    });
+}

@@ -1,0 +1,104 @@
+//! Minimal criterion-style bench harness (the offline image has no
+//! criterion crate): warmup, timed iterations, mean/std/min, ns/iter and
+//! throughput reporting.  Used by every `cargo bench` target.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub struct Bench {
+    pub name: String,
+    warmup_iters: usize,
+    measure_iters: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench { name: name.into(), warmup_iters: 3, measure_iters: 12 }
+    }
+
+    pub fn iters(mut self, warmup: usize, measure: usize) -> Bench {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Time `f`, which performs one logical operation per call.
+    pub fn run<R>(&self, mut f: impl FnMut() -> R) -> Sample {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let s = Sample { mean_ns: mean, std_ns: var.sqrt(), min_ns: min, iters: self.measure_iters };
+        self.report(&s, None);
+        s
+    }
+
+    /// Like `run`, but reports `units` of work per call as throughput.
+    #[allow(dead_code)]
+    pub fn run_throughput<R>(&self, units: f64, unit_name: &str, mut f: impl FnMut() -> R) -> Sample {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let s = Sample { mean_ns: mean, std_ns: var.sqrt(), min_ns: min, iters: self.measure_iters };
+        self.report(&s, Some((units, unit_name)));
+        s
+    }
+
+    fn report(&self, s: &Sample, throughput: Option<(f64, &str)>) {
+        let fmt = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.2} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.2} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.2} us", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let mut line = format!(
+            "{:<48} {:>10}/iter (+- {:>9}, min {:>10}, n={})",
+            self.name,
+            fmt(s.mean_ns),
+            fmt(s.std_ns),
+            fmt(s.min_ns),
+            s.iters
+        );
+        if let Some((units, name)) = throughput {
+            let per_s = units / (s.mean_ns / 1e9);
+            line.push_str(&format!("   {per_s:>12.1} {name}/s"));
+        }
+        println!("{line}");
+    }
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

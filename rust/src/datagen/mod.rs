@@ -1,0 +1,495 @@
+//! Phase 1 — application characterization by batch-mode active learning
+//! (paper §III-B, Algorithm 1).
+//!
+//! A pool of random flag configurations is scored by BEMCM (expected model
+//! change of a bootstrap LR ensemble, computed by the L1 Pallas kernel via
+//! PJRT); the top-k batch is labelled by actually running the benchmark on
+//! the simulated cluster; the loop stops when validation RMSE plateaus —
+//! "no significant improvement in validation RMSE between runs" (§III-A).
+//!
+//! QBC (committee variance) and uniform-random selection are the baselines
+//! of Fig 5.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::flags::{FeatureEncoder, FlagConfig, GcMode};
+use crate::runtime::{MlBackend, N_TRAIN, Z_ENS};
+use crate::sparksim::SparkRunner;
+use crate::util::csv::Table;
+use crate::util::rng::Pcg;
+use crate::util::stats::{self, TargetScaler};
+use crate::Metric;
+
+/// Sampling strategy for the AL loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Batch-mode Expected Model Change Maximization (the paper's choice).
+    Bemcm,
+    /// Query-by-committee: label where the bootstrap ensemble disagrees.
+    Qbc,
+    /// Uniform random batches (the "without AL" baseline).
+    Random,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Bemcm => "bemcm",
+            Strategy::Qbc => "qbc",
+            Strategy::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "bemcm" | "al" => Some(Strategy::Bemcm),
+            "qbc" => Some(Strategy::Qbc),
+            "random" | "rand" => Some(Strategy::Random),
+            _ => None,
+        }
+    }
+}
+
+/// Data-generation parameters (scaled-down mirror of §IV-A: pool, 10% seed,
+/// ~20% test, ~3% of the pool per AL round, 10 rounds max).
+#[derive(Clone, Debug)]
+pub struct DataGenConfig {
+    pub pool_size: usize,
+    pub seed_runs: usize,
+    pub test_runs: usize,
+    pub batch_k: usize,
+    pub max_rounds: usize,
+    /// Stop when |RMSE_t - RMSE_{t-1}| / RMSE_{t-1} falls below this.
+    pub rmse_rel_tol: f64,
+    pub ridge: f64,
+    pub seed: u64,
+}
+
+impl Default for DataGenConfig {
+    fn default() -> Self {
+        DataGenConfig {
+            pool_size: 660,
+            seed_runs: 24,
+            test_runs: 40,
+            batch_k: 20,
+            max_rounds: 10,
+            rmse_rel_tol: 0.01,
+            ridge: 1e-3,
+            seed: 0x0115_70b7,
+        }
+    }
+}
+
+/// The labelled dataset phase 1 produces ("the collected data is stored in
+/// a csv file", §III-A).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub mode: GcMode,
+    pub metric: Metric,
+    /// Unit-normalized flag vectors (one entry per flag in the GC group).
+    pub unit_rows: Vec<Vec<f64>>,
+    /// Encoded feature rows (flags + squared terms).
+    pub feat_rows: Vec<Vec<f64>>,
+    /// Recorded metric values (original units).
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Serialize as CSV: flag columns (unit values) then the metric column.
+    pub fn to_table(&self) -> Table {
+        let enc = FeatureEncoder::new(self.mode);
+        let mut cols: Vec<String> =
+            (0..enc.n_flags()).map(|p| enc.flag_name(p).to_string()).collect();
+        cols.push(self.metric.name().to_string());
+        let mut t = Table::new(cols);
+        for (u, &yv) in self.unit_rows.iter().zip(&self.y) {
+            let mut row = u.clone();
+            row.push(yv);
+            t.push(row);
+        }
+        t
+    }
+
+    /// Rebuild from a CSV table written by `to_table`.
+    pub fn from_table(t: &Table, mode: GcMode, metric: Metric) -> Result<Dataset> {
+        let enc = FeatureEncoder::new(mode);
+        anyhow::ensure!(
+            t.columns.len() == enc.n_flags() + 1,
+            "csv has {} columns, expected {}",
+            t.columns.len(),
+            enc.n_flags() + 1
+        );
+        let mut unit_rows = Vec::with_capacity(t.rows.len());
+        let mut feat_rows = Vec::with_capacity(t.rows.len());
+        let mut y = Vec::with_capacity(t.rows.len());
+        for row in &t.rows {
+            let (u, yv) = row.split_at(row.len() - 1);
+            let cfg = FlagConfig::from_unit(mode, u);
+            unit_rows.push(u.to_vec());
+            feat_rows.push(enc.encode(&cfg));
+            y.push(yv[0]);
+        }
+        Ok(Dataset { mode, metric, unit_rows, feat_rows, y })
+    }
+}
+
+/// Everything phase 1 reports.
+#[derive(Clone, Debug)]
+pub struct CharacterizeResult {
+    pub strategy: Strategy,
+    pub dataset: Dataset,
+    /// Validation RMSE after the seed fit and after each AL round.
+    pub rmse_history: Vec<f64>,
+    /// Benchmark executions consumed (seed + test + labelled batches).
+    pub runs_executed: usize,
+    pub rounds: usize,
+    /// Total simulated benchmark time spent generating data (seconds).
+    pub sim_time_s: f64,
+}
+
+/// Labelled pool entry.
+struct Labeller<'a> {
+    runner: &'a SparkRunner,
+    metric: Metric,
+    seed: u64,
+    count: usize,
+    sim_time_s: f64,
+    /// Adaptive cap on recorded exec-time labels (Ashouri et al.'s capped
+    /// algorithm runs, paper SectionII): failed/thrashing configurations are
+    /// recorded as `cap` rather than the raw timeout, so a handful of OOM
+    /// outliers cannot dominate the regression model phase 1 trains.
+    cap: f64,
+}
+
+impl<'a> Labeller<'a> {
+    fn label(&mut self, cfg: &FlagConfig) -> f64 {
+        self.count += 1;
+        let m = self.runner.run(cfg, self.seed.wrapping_add(self.count as u64));
+        self.sim_time_s += m.wall_clock_s;
+        let mut v = self.metric.of(&m);
+        match self.metric {
+            Metric::ExecTime => v = v.min(self.cap),
+            Metric::HeapUsage => {
+                if m.timed_out {
+                    // Failed configurations must not look memory-efficient.
+                    v += 50.0;
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Run phase 1: characterize `runner`'s benchmark for `metric` under the
+/// given GC mode, returning the dataset + convergence history.
+pub fn characterize(
+    runner: &SparkRunner,
+    mode: GcMode,
+    metric: Metric,
+    strategy: Strategy,
+    cfg: &DataGenConfig,
+    backend: &Arc<dyn MlBackend>,
+) -> Result<CharacterizeResult> {
+    let enc = FeatureEncoder::new(mode);
+    let mut rng = Pcg::new(cfg.seed);
+    // One default-config run fixes the adaptive label cap (5x default).
+    let default_run = runner.run(&FlagConfig::default_for(mode), cfg.seed ^ 0xca55);
+    let mut labeller = Labeller {
+        runner,
+        metric,
+        seed: cfg.seed ^ 0xda7a,
+        count: 1,
+        sim_time_s: default_run.wall_clock_s,
+        cap: 5.0 * default_run.exec_time_s,
+    };
+
+    // Unlabelled pool.
+    let mut pool: Vec<(Vec<f64>, Vec<f64>)> = (0..cfg.pool_size)
+        .map(|_| {
+            let c = FlagConfig::random(mode, &mut rng);
+            (c.to_unit(), enc.encode(&c))
+        })
+        .collect();
+
+    // EMCM scores and LR fits operate on *standardized* features (Cai et
+    // al. assume centered inputs; on raw [0,1] features the ||x|| factor in
+    // the model-change norm just favours cube corners).  The standardizer
+    // is fit once on the pool — the sampling distribution.
+    let pool_feats_raw: Vec<Vec<f64>> = pool.iter().map(|(_, f)| f.clone()).collect();
+    let fstd = stats::Standardizer::fit(&pool_feats_raw);
+
+    // Seed set (10% of the labelling budget) + held-out test set.
+    let mut unit_rows = Vec::new();
+    let mut feat_rows = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..cfg.seed_runs {
+        let idx = rng.below(pool.len());
+        let (u, f) = pool.swap_remove(idx);
+        let c = FlagConfig::from_unit(mode, &u);
+        y.push(labeller.label(&c));
+        unit_rows.push(u);
+        feat_rows.push(f);
+    }
+    let mut test_x = Vec::new();
+    let mut test_y = Vec::new();
+    for _ in 0..cfg.test_runs {
+        let c = FlagConfig::random(mode, &mut rng);
+        test_x.push(enc.encode(&c));
+        test_y.push(labeller.label(&c));
+    }
+
+    let ridge = cfg.ridge;
+    let test_std: Vec<Vec<f64>> = test_x.iter().map(|x| fstd.transform_row(x)).collect();
+    let fit_and_rmse = |feat_std: &[Vec<f64>],
+                        yv: &[f64],
+                        backend: &Arc<dyn MlBackend>|
+     -> Result<(Vec<f64>, TargetScaler, f64)> {
+        let scaler = TargetScaler::fit(yv);
+        let ys: Vec<f64> = yv.iter().map(|&v| scaler.transform(v)).collect();
+        let w = backend.lr_fit(feat_std, &ys, ridge)?;
+        let preds: Vec<f64> = test_std
+            .iter()
+            .map(|x| scaler.inverse(crate::native::ops::lr_predict(&w, x)))
+            .collect();
+        let r = stats::rmse(&preds, &test_y);
+        Ok((w, scaler, r))
+    };
+
+    let mut feat_std_rows: Vec<Vec<f64>> =
+        feat_rows.iter().map(|x| fstd.transform_row(x)).collect();
+
+    let (_, _, rmse0) = fit_and_rmse(&feat_std_rows, &y, backend)?;
+    let mut rmse_history = vec![rmse0];
+
+    let mut rounds = 0;
+    for round in 0..cfg.max_rounds {
+        if pool.is_empty() || y.len() + cfg.batch_k > N_TRAIN {
+            break;
+        }
+        rounds = round + 1;
+
+        // Fit central model + bootstrap ensemble on the labelled set.
+        let scaler = TargetScaler::fit(&y);
+        let ys: Vec<f64> = y.iter().map(|&v| scaler.transform(v)).collect();
+        let w0 = backend.lr_fit(&feat_std_rows, &ys, cfg.ridge)?;
+        let mut w_ens = Vec::with_capacity(Z_ENS);
+        for z in 0..Z_ENS {
+            let mut brng = rng.fork(0xb007 + z as u64);
+            let idx = brng.bootstrap_indices(y.len());
+            let bx: Vec<Vec<f64>> = idx.iter().map(|&i| feat_std_rows[i].clone()).collect();
+            let by: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
+            w_ens.push(backend.lr_fit(&bx, &by, cfg.ridge)?);
+        }
+
+        // Score the pool (standardized feature space).
+        let pool_std: Vec<Vec<f64>> =
+            pool.iter().map(|(_, f)| fstd.transform_row(f)).collect();
+        let scores: Vec<f64> = match strategy {
+            Strategy::Bemcm => backend.emcm_score(&w_ens, &w0, &pool_std)?,
+            Strategy::Qbc => qbc_scores(&w_ens, &pool_std),
+            Strategy::Random => (0..pool.len()).map(|_| rng.f64()).collect(),
+        };
+
+        // Select and label the top-k batch.
+        let mut order: Vec<usize> = (0..pool.len()).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        let mut batch: Vec<usize> = order.into_iter().take(cfg.batch_k).collect();
+        batch.sort_unstable_by(|a, b| b.cmp(a)); // remove from the back
+        for i in batch {
+            let (u, f) = pool.swap_remove(i);
+            let c = FlagConfig::from_unit(mode, &u);
+            y.push(labeller.label(&c));
+            unit_rows.push(u);
+            feat_std_rows.push(fstd.transform_row(&f));
+            feat_rows.push(f);
+        }
+
+        // Convergence check on validation RMSE.
+        let (_, _, r) = fit_and_rmse(&feat_std_rows, &y, backend)?;
+        let prev = *rmse_history.last().unwrap();
+        rmse_history.push(r);
+        if (prev - r).abs() / prev.max(1e-9) < cfg.rmse_rel_tol {
+            break;
+        }
+    }
+
+    Ok(CharacterizeResult {
+        strategy,
+        dataset: Dataset { mode, metric, unit_rows, feat_rows, y },
+        rmse_history,
+        runs_executed: labeller.count,
+        rounds,
+        sim_time_s: labeller.sim_time_s,
+    })
+}
+
+/// QBC disagreement: committee prediction variance per candidate.
+fn qbc_scores(w_ens: &[Vec<f64>], x: &[Vec<f64>]) -> Vec<f64> {
+    x.iter()
+        .map(|xi| {
+            let preds: Vec<f64> = w_ens
+                .iter()
+                .map(|w| crate::native::ops::lr_predict(w, xi))
+                .collect();
+            let m = preds.iter().sum::<f64>() / preds.len() as f64;
+            preds.iter().map(|p| (p - m) * (p - m)).sum::<f64>() / preds.len() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::Benchmark;
+
+    fn quick_cfg() -> DataGenConfig {
+        DataGenConfig {
+            pool_size: 120,
+            seed_runs: 12,
+            test_runs: 10,
+            batch_k: 8,
+            max_rounds: 4,
+            rmse_rel_tol: 1e-4,
+            ridge: 1e-3,
+            seed: 7,
+        }
+    }
+
+    fn backend() -> Arc<dyn MlBackend> {
+        Arc::new(NativeBackend)
+    }
+
+    #[test]
+    fn characterize_produces_labelled_dataset() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let r = characterize(
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &quick_cfg(),
+            &backend(),
+        )
+        .unwrap();
+        assert!(r.dataset.len() >= 12);
+        assert_eq!(r.dataset.unit_rows.len(), r.dataset.y.len());
+        assert_eq!(r.dataset.feat_rows.len(), r.dataset.y.len());
+        assert!(r.rounds >= 1);
+        assert!(r.runs_executed >= r.dataset.len());
+        assert!(r.sim_time_s > 0.0);
+        // exec times look like seconds
+        assert!(r.dataset.y.iter().all(|&v| v > 10.0 && v < 10_000.0));
+    }
+
+    #[test]
+    fn rmse_history_tracks_rounds() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let r = characterize(
+            &runner,
+            GcMode::ParallelGC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &quick_cfg(),
+            &backend(),
+        )
+        .unwrap();
+        assert_eq!(r.rmse_history.len(), r.rounds + 1);
+        assert!(r.rmse_history.iter().all(|&v| v.is_finite() && v > 0.0));
+    }
+
+    #[test]
+    fn strategies_differ_in_selection() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let a = characterize(
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &quick_cfg(),
+            &backend(),
+        )
+        .unwrap();
+        let b = characterize(
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Random,
+            &quick_cfg(),
+            &backend(),
+        )
+        .unwrap();
+        // same seed pool, different selections -> different datasets
+        assert_ne!(a.dataset.unit_rows, b.dataset.unit_rows);
+    }
+
+    #[test]
+    fn dataset_csv_roundtrip() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let mut cfg = quick_cfg();
+        cfg.max_rounds = 1;
+        let r = characterize(
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Random,
+            &cfg,
+            &backend(),
+        )
+        .unwrap();
+        let t = r.dataset.to_table();
+        assert_eq!(t.columns.len(), 141 + 1);
+        let back = Dataset::from_table(&t, GcMode::G1GC, Metric::ExecTime).unwrap();
+        assert_eq!(back.len(), r.dataset.len());
+        for (a, b) in back.y.iter().zip(&r.dataset.y) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn heap_metric_characterization() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let mut cfg = quick_cfg();
+        cfg.max_rounds = 2;
+        let r = characterize(
+            &runner,
+            GcMode::G1GC,
+            Metric::HeapUsage,
+            Strategy::Bemcm,
+            &cfg,
+            &backend(),
+        )
+        .unwrap();
+        assert!(r.dataset.y.iter().all(|&v| v > 0.0 && v < 150.0));
+    }
+
+    #[test]
+    fn respects_n_train_cap() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let mut cfg = quick_cfg();
+        cfg.pool_size = 400;
+        cfg.batch_k = 60;
+        cfg.max_rounds = 10;
+        cfg.rmse_rel_tol = 0.0; // never converge early
+        let r = characterize(
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &cfg,
+            &backend(),
+        )
+        .unwrap();
+        assert!(r.dataset.len() <= N_TRAIN);
+    }
+}

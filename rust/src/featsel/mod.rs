@@ -1,0 +1,189 @@
+//! Phase 2 — feature selection by lasso regression (paper §III-C, eq. 6):
+//! standardize the phase-1 features, fit lasso through the `lasso_fit` HLO
+//! artifact, and keep only flags with non-zero weight.  λ defaults to the
+//! paper's grid-searched 0.01 (§IV-C); `grid_search_lambda` reproduces that
+//! search.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::datagen::Dataset;
+use crate::flags::FeatureEncoder;
+use crate::runtime::MlBackend;
+use crate::util::stats::{Standardizer, TargetScaler};
+
+/// Weight threshold below which a feature counts as dropped.
+pub const SELECT_TOL: f64 = 1e-4;
+
+/// The paper's λ (§IV-C, found by grid search).
+pub const DEFAULT_LAMBDA: f64 = 0.01;
+
+/// Output of feature selection.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub lambda: f64,
+    /// Per-feature lasso weights (standardized space).
+    pub weights: Vec<f64>,
+    /// Selected flag positions within the GC group (deduplicated across a
+    /// flag's linear and squared features).
+    pub selected: Vec<usize>,
+    /// Selected flag names, same order as `selected`.
+    pub names: Vec<String>,
+    /// Flag-group size (Table II denominator: 126 or 141).
+    pub group_size: usize,
+}
+
+impl Selection {
+    pub fn n_selected(&self) -> usize {
+        self.selected.len()
+    }
+}
+
+/// Fit lasso on the dataset and collapse feature weights to selected flags.
+pub fn select_flags(
+    ds: &Dataset,
+    lambda: f64,
+    backend: &Arc<dyn MlBackend>,
+) -> Result<Selection> {
+    anyhow::ensure!(!ds.is_empty(), "cannot select flags from an empty dataset");
+    let enc = FeatureEncoder::new(ds.mode);
+    let xs = Standardizer::fit(&ds.feat_rows);
+    let x = xs.transform(&ds.feat_rows);
+    let ysc = TargetScaler::fit(&ds.y);
+    let y: Vec<f64> = ds.y.iter().map(|&v| ysc.transform(v)).collect();
+
+    let weights = backend.lasso_fit(&x, &y, lambda)?;
+    let selected = enc.selected_flags(&weights, SELECT_TOL);
+    let names = selected.iter().map(|&p| enc.flag_name(p).to_string()).collect();
+    Ok(Selection {
+        lambda,
+        weights,
+        selected,
+        names,
+        group_size: enc.n_flags(),
+    })
+}
+
+/// Grid-search λ by holdout MSE (the paper's "λ = 0.01 using grid search").
+/// Returns the winning λ and the full (λ, holdout MSE, flags kept) grid.
+pub fn grid_search_lambda(
+    ds: &Dataset,
+    lambdas: &[f64],
+    backend: &Arc<dyn MlBackend>,
+) -> Result<(f64, Vec<(f64, f64, usize)>)> {
+    anyhow::ensure!(ds.len() >= 10, "need >= 10 rows for a holdout split");
+    let enc = FeatureEncoder::new(ds.mode);
+    let n_val = (ds.len() / 5).max(2);
+    let n_tr = ds.len() - n_val;
+
+    let xs = Standardizer::fit(&ds.feat_rows);
+    let x = xs.transform(&ds.feat_rows);
+    let ysc = TargetScaler::fit(&ds.y);
+    let y: Vec<f64> = ds.y.iter().map(|&v| ysc.transform(v)).collect();
+
+    let (xtr, xval) = x.split_at(n_tr);
+    let (ytr, yval) = y.split_at(n_tr);
+
+    let mut grid = Vec::with_capacity(lambdas.len());
+    let mut best = (lambdas[0], f64::INFINITY);
+    for &lam in lambdas {
+        let w = backend.lasso_fit(xtr, ytr, lam)?;
+        let mse: f64 = xval
+            .iter()
+            .zip(yval)
+            .map(|(xi, &yi)| {
+                let p = crate::native::ops::lr_predict(&w, xi);
+                (p - yi) * (p - yi)
+            })
+            .sum::<f64>()
+            / yval.len() as f64;
+        let kept = enc.selected_flags(&w, SELECT_TOL).len();
+        grid.push((lam, mse, kept));
+        if mse < best.1 {
+            best = (lam, mse);
+        }
+    }
+    Ok((best.0, grid))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{characterize, DataGenConfig, Strategy};
+    use crate::flags::GcMode;
+    use crate::runtime::NativeBackend;
+    use crate::sparksim::SparkRunner;
+    use crate::{Benchmark, Metric};
+
+    fn dataset(mode: GcMode) -> Dataset {
+        let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+        let cfg = DataGenConfig {
+            pool_size: 260,
+            seed_runs: 30,
+            test_runs: 12,
+            batch_k: 25,
+            max_rounds: 5,
+            rmse_rel_tol: 0.0,
+            ridge: 1e-3,
+            seed: 11,
+        };
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        characterize(&runner, mode, Metric::ExecTime, Strategy::Bemcm, &cfg, &backend)
+            .unwrap()
+            .dataset
+    }
+
+    #[test]
+    fn selection_prunes_but_keeps_signal() {
+        let ds = dataset(GcMode::ParallelGC);
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        let sel = select_flags(&ds, DEFAULT_LAMBDA, &backend).unwrap();
+        assert_eq!(sel.group_size, 126);
+        assert!(
+            sel.n_selected() > 10 && sel.n_selected() < 126,
+            "selected {}",
+            sel.n_selected()
+        );
+        // The dominant GC knob must survive selection.
+        assert!(
+            sel.names.iter().any(|n| n == "MaxHeapSize" || n == "NewRatio"
+                || n == "MaxNewSize" || n == "ParallelGCThreads"),
+            "no primary heap flag kept: {:?}",
+            sel.names
+        );
+    }
+
+    #[test]
+    fn larger_lambda_selects_fewer() {
+        let ds = dataset(GcMode::ParallelGC);
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        let a = select_flags(&ds, 0.005, &backend).unwrap();
+        let b = select_flags(&ds, 0.15, &backend).unwrap();
+        assert!(b.n_selected() <= a.n_selected());
+    }
+
+    #[test]
+    fn grid_search_returns_member_of_grid() {
+        let ds = dataset(GcMode::ParallelGC);
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        let grid = [0.003, 0.01, 0.03, 0.1];
+        let (best, rows) = grid_search_lambda(&ds, &grid, &backend).unwrap();
+        assert!(grid.contains(&best));
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.1.is_finite()));
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let ds = Dataset {
+            mode: GcMode::G1GC,
+            metric: Metric::ExecTime,
+            unit_rows: vec![],
+            feat_rows: vec![],
+            y: vec![],
+        };
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        assert!(select_flags(&ds, 0.01, &backend).is_err());
+    }
+}

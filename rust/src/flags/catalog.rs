@@ -1,0 +1,470 @@
+//! The JVM flag catalog: every tunable `-XX` flag the tuner sees, grouped by
+//! GC mode the way the paper groups them ("we extract the list of JVM flags
+//! using `java -XX:+PrintFlagsFinal` and group the flags according to GC
+//! modes", §IV-D).
+//!
+//! Counts are pinned to the paper's Table II denominators: the ParallelGC
+//! group has 126 flags, the G1GC group 141 (common flags + GC-specific
+//! flags).  Names, defaults and ranges follow HotSpot 1.8.0_144; ranges are
+//! the sane tuning intervals the data-generation phase samples from.
+
+/// Value domain of one flag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kind {
+    /// Boolean (-XX:+Flag / -XX:-Flag).
+    Bool { default: bool },
+    /// Integer-valued with an inclusive range; `log` ranges are sampled
+    /// log-uniformly (sizes, thresholds spanning decades).
+    Int { min: f64, max: f64, default: f64, log: bool },
+}
+
+/// Which GC-mode group(s) a flag belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Group {
+    /// In both the ParallelGC and G1GC groups (heap, TLAB, compiler, ...).
+    Common,
+    /// ParallelGC-specific.
+    Parallel,
+    /// G1GC-specific.
+    G1,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct FlagDef {
+    pub name: &'static str,
+    pub kind: Kind,
+    pub group: Group,
+}
+
+impl FlagDef {
+    pub fn default_value(&self) -> f64 {
+        match self.kind {
+            Kind::Bool { default } => {
+                if default {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Kind::Int { default, .. } => default,
+        }
+    }
+
+    pub fn is_numeric(&self) -> bool {
+        matches!(self.kind, Kind::Int { .. })
+    }
+
+    /// Normalize a raw value into [0,1] (log-scaled where flagged).
+    pub fn normalize(&self, v: f64) -> f64 {
+        match self.kind {
+            Kind::Bool { .. } => v.clamp(0.0, 1.0),
+            Kind::Int { min, max, log, .. } => {
+                if log {
+                    let lo = min.max(1.0).ln();
+                    let hi = max.ln();
+                    ((v.max(1.0).ln() - lo) / (hi - lo)).clamp(0.0, 1.0)
+                } else {
+                    ((v - min) / (max - min)).clamp(0.0, 1.0)
+                }
+            }
+        }
+    }
+
+    /// Inverse of `normalize`: map u in [0,1] back to a raw value (rounded
+    /// for integer flags, 0/1 for booleans).
+    pub fn denormalize(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        match self.kind {
+            Kind::Bool { .. } => {
+                if u >= 0.5 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Kind::Int { min, max, log, .. } => {
+                let raw = if log {
+                    let lo = min.max(1.0).ln();
+                    let hi = max.ln();
+                    (lo + u * (hi - lo)).exp()
+                } else {
+                    min + u * (max - min)
+                };
+                raw.round().clamp(min, max)
+            }
+        }
+    }
+}
+
+const fn b(name: &'static str, default: bool, group: Group) -> FlagDef {
+    FlagDef { name, kind: Kind::Bool { default }, group }
+}
+
+const fn i(
+    name: &'static str,
+    min: f64,
+    max: f64,
+    default: f64,
+    group: Group,
+) -> FlagDef {
+    FlagDef { name, kind: Kind::Int { min, max, default, log: false }, group }
+}
+
+const fn il(
+    name: &'static str,
+    min: f64,
+    max: f64,
+    default: f64,
+    group: Group,
+) -> FlagDef {
+    FlagDef { name, kind: Kind::Int { min, max, default, log: true }, group }
+}
+
+use Group::{Common as C, Parallel as P, G1 as G};
+
+/// The full catalog.  111 Common + 15 Parallel + 30 G1 =>
+/// ParallelGC group = 126, G1GC group = 141 (paper Table II).
+pub const CATALOG: &[FlagDef] = &[
+    // --- Heap & memory sizing (MB unless noted) -------------------------
+    il("InitialHeapSize", 256.0, 65536.0, 2048.0, C),
+    il("MaxHeapSize", 2048.0, 65536.0, 24576.0, C),
+    i("NewRatio", 1.0, 8.0, 2.0, C),
+    il("NewSize", 64.0, 16384.0, 683.0, C),
+    il("MaxNewSize", 128.0, 32768.0, 8192.0, C),
+    i("SurvivorRatio", 2.0, 16.0, 8.0, C),
+    i("TargetSurvivorRatio", 20.0, 90.0, 50.0, C),
+    i("MaxTenuringThreshold", 0.0, 15.0, 15.0, C),
+    i("InitialTenuringThreshold", 0.0, 15.0, 7.0, C),
+    i("PretenureSizeThreshold", 0.0, 4096.0, 0.0, C), // KB, 0 = off
+    i("MinHeapFreeRatio", 10.0, 70.0, 40.0, C),
+    i("MaxHeapFreeRatio", 30.0, 100.0, 70.0, C),
+    il("MetaspaceSize", 16.0, 512.0, 21.0, C),
+    il("MaxMetaspaceSize", 64.0, 2048.0, 512.0, C),
+    il("CompressedClassSpaceSize", 64.0, 3072.0, 1024.0, C),
+    i("MaxDirectMemorySize", 0.0, 8192.0, 0.0, C),
+    // --- GC common -------------------------------------------------------
+    i("ParallelGCThreads", 1.0, 40.0, 15.0, C),
+    i("ConcGCThreads", 1.0, 20.0, 4.0, C),
+    i("GCTimeRatio", 1.0, 99.0, 99.0, C),
+    il("MaxGCPauseMillis", 10.0, 2000.0, 200.0, C),
+    b("UseAdaptiveSizePolicy", true, C),
+    i("AdaptiveSizePolicyWeight", 0.0, 100.0, 10.0, C),
+    i("AdaptiveTimeWeight", 0.0, 100.0, 25.0, C),
+    i("AdaptiveSizeDecrementScaleFactor", 1.0, 16.0, 4.0, C),
+    i("GCHeapFreeLimit", 0.0, 50.0, 2.0, C),
+    i("GCTimeLimit", 50.0, 100.0, 98.0, C),
+    b("UseGCOverheadLimit", true, C),
+    b("DisableExplicitGC", false, C),
+    b("ExplicitGCInvokesConcurrent", false, C),
+    b("ScavengeBeforeFullGC", true, C),
+    il("SoftRefLRUPolicyMSPerMB", 1.0, 10000.0, 1000.0, C),
+    il("StringTableSize", 1009.0, 1000003.0, 60013.0, C),
+    il("SymbolTableSize", 1009.0, 1000003.0, 20011.0, C),
+    b("AlwaysPreTouch", false, C),
+    b("UseLargePages", false, C),
+    i("LargePageSizeInBytes", 0.0, 16.0, 0.0, C), // MB, 0 = default
+    b("UseNUMA", false, C),
+    b("UseNUMAInterleaving", false, C),
+    b("UseCompressedOops", true, C),
+    b("UseCompressedClassPointers", true, C),
+    // --- TLAB --------------------------------------------------------------
+    b("UseTLAB", true, C),
+    i("TLABSize", 0.0, 1024.0, 0.0, C), // KB, 0 = adaptive
+    i("MinTLABSize", 1.0, 64.0, 2.0, C),
+    i("TLABAllocationWeight", 1.0, 100.0, 35.0, C),
+    i("TLABWasteTargetPercent", 1.0, 10.0, 1.0, C),
+    i("TLABRefillWasteFraction", 1.0, 256.0, 64.0, C),
+    i("TLABWasteIncrement", 1.0, 16.0, 4.0, C),
+    b("ResizeTLAB", true, C),
+    // --- JIT compiler ------------------------------------------------------
+    b("TieredCompilation", true, C),
+    i("TieredStopAtLevel", 1.0, 4.0, 4.0, C),
+    il("CompileThreshold", 100.0, 100000.0, 10000.0, C),
+    il("Tier3InvocationThreshold", 100.0, 10000.0, 200.0, C),
+    il("Tier3CompileThreshold", 500.0, 20000.0, 2000.0, C),
+    il("Tier4InvocationThreshold", 1000.0, 50000.0, 5000.0, C),
+    il("Tier4CompileThreshold", 2000.0, 100000.0, 15000.0, C),
+    i("CICompilerCount", 1.0, 8.0, 4.0, C),
+    il("ReservedCodeCacheSize", 32.0, 512.0, 240.0, C), // MB
+    il("InitialCodeCacheSize", 1.0, 64.0, 3.0, C),      // MB
+    i("CodeCacheExpansionSize", 16.0, 512.0, 64.0, C),  // KB
+    b("UseCodeCacheFlushing", true, C),
+    i("MaxInlineSize", 5.0, 200.0, 35.0, C),
+    i("FreqInlineSize", 50.0, 1000.0, 325.0, C),
+    i("MaxInlineLevel", 1.0, 30.0, 9.0, C),
+    i("MaxRecursiveInlineLevel", 0.0, 4.0, 1.0, C),
+    i("InlineSmallCode", 500.0, 5000.0, 2000.0, C),
+    i("MinInliningThreshold", 0.0, 1000.0, 250.0, C),
+    i("LiveNodeCountInliningCutoff", 10000.0, 80000.0, 40000.0, C),
+    b("BackgroundCompilation", true, C),
+    b("UseCounterDecay", true, C),
+    i("CounterHalfLifeTime", 1.0, 120.0, 30.0, C),
+    i("OnStackReplacePercentage", 100.0, 2000.0, 140.0, C),
+    i("InterpreterProfilePercentage", 0.0, 100.0, 33.0, C),
+    b("DoEscapeAnalysis", true, C),
+    b("EliminateAllocations", true, C),
+    b("EliminateLocks", true, C),
+    b("OptimizeStringConcat", true, C),
+    b("UseSuperWord", true, C),
+    i("LoopUnrollLimit", 0.0, 200.0, 60.0, C),
+    i("LoopMaxUnroll", 0.0, 32.0, 16.0, C),
+    b("UseLoopPredicate", true, C),
+    b("AggressiveOpts", false, C),
+    b("UseAES", true, C),
+    b("UseAESIntrinsics", true, C),
+    b("UseSSE42Intrinsics", true, C),
+    b("UseBiasedLocking", true, C),
+    i("BiasedLockingStartupDelay", 0.0, 10000.0, 4000.0, C),
+    i("PreBlockSpin", 1.0, 100.0, 10.0, C),
+    b("UseFastAccessorMethods", false, C),
+    // --- Threads / stacks --------------------------------------------------
+    il("ThreadStackSize", 256.0, 4096.0, 1024.0, C), // KB
+    il("VMThreadStackSize", 256.0, 4096.0, 1024.0, C),
+    i("CompilerThreadStackSize", 0.0, 8192.0, 0.0, C),
+    i("ThreadPriorityPolicy", 0.0, 1.0, 0.0, C),
+    b("UseThreadPriorities", true, C),
+    b("ReduceSignalUsage", false, C),
+    // --- Misc / diagnostics -------------------------------------------------
+    b("ClassUnloading", true, C),
+    b("ClassUnloadingWithConcurrentMark", true, C),
+    b("UsePerfData", true, C),
+    i("PerfDataMemorySize", 8.0, 128.0, 32.0, C), // KB
+    i("PerfDataSamplingInterval", 10.0, 200.0, 50.0, C),
+    i("MinHeapDeltaBytes", 64.0, 4096.0, 192.0, C), // KB
+    i("HeapSizePerGCThread", 16.0, 256.0, 87.0, C), // MB
+    i("GCPauseIntervalMillis", 0.0, 5000.0, 0.0, C),
+    b("PrintGC", false, C),
+    b("PrintGCDetails", false, C),
+    b("PrintGCTimeStamps", false, C),
+    b("VerifyBeforeGC", false, C),
+    b("VerifyAfterGC", false, C),
+    b("ReduceInitialCardMarks", true, C),
+    b("UseCondCardMark", false, C),
+    i("MarkSweepDeadRatio", 0.0, 20.0, 5.0, C),
+    i("MarkSweepAlwaysCompactCount", 1.0, 8.0, 4.0, C),
+    // --- ParallelGC-specific (15) -------------------------------------------
+    b("UseParallelOldGC", true, P),
+    il("YoungPLABSize", 256.0, 8192.0, 4096.0, P), // words
+    il("OldPLABSize", 256.0, 8192.0, 1024.0, P),
+    i("PLABWeight", 0.0, 100.0, 75.0, P),
+    b("ResizePLAB", true, P),
+    i("ParallelGCBufferWastePct", 1.0, 20.0, 10.0, P),
+    b("UseAdaptiveGCBoundary", false, P),
+    i("ParallelOldDeadWoodLimiterMean", 0.0, 100.0, 50.0, P),
+    i("ParallelOldDeadWoodLimiterStdDev", 0.0, 100.0, 80.0, P),
+    i("AdaptiveSizeMajorGCDecayTimeScale", 1.0, 64.0, 10.0, P),
+    i("AdaptiveSizePolicyInitializingSteps", 1.0, 100.0, 20.0, P),
+    i("AdaptiveSizeThroughPutPolicy", 0.0, 1.0, 0.0, P),
+    i("ThresholdTolerance", 1.0, 50.0, 10.0, P),
+    i("SurvivorPadding", 1.0, 10.0, 3.0, P),
+    i("PromotedPadding", 1.0, 10.0, 3.0, P),
+    // --- G1-specific (30) ----------------------------------------------------
+    il("G1HeapRegionSize", 1.0, 32.0, 8.0, G), // MB (power of two in HotSpot)
+    i("InitiatingHeapOccupancyPercent", 10.0, 90.0, 45.0, G),
+    i("G1NewSizePercent", 1.0, 20.0, 5.0, G),
+    i("G1MaxNewSizePercent", 20.0, 90.0, 60.0, G),
+    i("G1ReservePercent", 0.0, 50.0, 10.0, G),
+    i("G1HeapWastePercent", 0.0, 20.0, 5.0, G),
+    i("G1MixedGCCountTarget", 1.0, 32.0, 8.0, G),
+    i("G1MixedGCLiveThresholdPercent", 50.0, 100.0, 85.0, G),
+    i("G1OldCSetRegionThresholdPercent", 1.0, 30.0, 10.0, G),
+    i("G1ConfidencePercent", 0.0, 100.0, 50.0, G),
+    i("G1RSetRegionEntries", 0.0, 4096.0, 0.0, G), // 0 = adaptive
+    i("G1RSetSparseRegionEntries", 0.0, 128.0, 0.0, G),
+    i("G1RSetUpdatingPauseTimePercent", 1.0, 50.0, 10.0, G),
+    i("G1ConcRefinementThreads", 0.0, 40.0, 15.0, G),
+    i("G1ConcRefinementGreenZone", 0.0, 1024.0, 0.0, G),
+    i("G1ConcRefinementYellowZone", 0.0, 2048.0, 0.0, G),
+    i("G1ConcRefinementRedZone", 0.0, 4096.0, 0.0, G),
+    i("G1ConcRefinementThresholdStep", 0.0, 16.0, 0.0, G),
+    i("G1ConcRefinementServiceIntervalMillis", 10.0, 1000.0, 300.0, G),
+    b("G1UseAdaptiveConcRefinement", true, G),
+    i("G1SATBBufferSize", 1.0, 64.0, 1.0, G), // KB
+    i("G1SATBBufferEnqueueingThresholdPercent", 0.0, 100.0, 60.0, G),
+    il("G1UpdateBufferSize", 64.0, 4096.0, 256.0, G),
+    i("G1ConcMarkStepDurationMillis", 1.0, 50.0, 10.0, G),
+    i("G1ConcRSLogCacheSize", 4.0, 16.0, 10.0, G),
+    i("G1ConcRSHotCardLimit", 1.0, 16.0, 4.0, G),
+    i("G1ExpandByPercentOfAvailable", 0.0, 100.0, 20.0, G),
+    b("UseStringDeduplication", false, G),
+    i("StringDeduplicationAgeThreshold", 1.0, 15.0, 3.0, G),
+    i("G1PeriodicGCInterval", 0.0, 60000.0, 0.0, G), // ms, 0 = off
+];
+
+/// Flags that genuinely do nothing in the simulator (logging/diagnostics);
+/// lasso should learn to drop these — part of the Table II reproduction.
+pub const NOOP_FLAGS: &[&str] = &[
+    "PrintGC",
+    "PrintGCDetails",
+    "PrintGCTimeStamps",
+    "UsePerfData",
+    "PerfDataMemorySize",
+    "PerfDataSamplingInterval",
+    "ReduceSignalUsage",
+    "ThreadPriorityPolicy",
+    "UseThreadPriorities",
+    "GCPauseIntervalMillis",
+    "MinHeapDeltaBytes",
+    "LargePageSizeInBytes",
+];
+
+/// GC mode under tuning (the paper evaluates G1GC and ParallelGC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GcMode {
+    ParallelGC,
+    G1GC,
+}
+
+impl GcMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            GcMode::ParallelGC => "ParallelGC",
+            GcMode::G1GC => "G1GC",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GcMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "parallel" | "parallelgc" => Some(GcMode::ParallelGC),
+            "g1" | "g1gc" => Some(GcMode::G1GC),
+            _ => None,
+        }
+    }
+}
+
+/// Indices into CATALOG for one GC mode's flag group, in catalog order.
+/// Cached: this sits on the simulator hot path (`FlagConfig::get` during
+/// `JvmParams::derive`, hundreds of thousands of calls per tuning run).
+pub fn group_indices(mode: GcMode) -> &'static [usize] {
+    fn build(mode: GcMode) -> Vec<usize> {
+        CATALOG
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| match f.group {
+                Group::Common => true,
+                Group::Parallel => mode == GcMode::ParallelGC,
+                Group::G1 => mode == GcMode::G1GC,
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+    static PARALLEL: once_cell::sync::Lazy<Vec<usize>> =
+        once_cell::sync::Lazy::new(|| build(GcMode::ParallelGC));
+    static G1: once_cell::sync::Lazy<Vec<usize>> =
+        once_cell::sync::Lazy::new(|| build(GcMode::G1GC));
+    match mode {
+        GcMode::ParallelGC => &PARALLEL,
+        GcMode::G1GC => &G1,
+    }
+}
+
+/// Position of `name` within a mode's group (cached name -> position map).
+pub fn group_position(mode: GcMode, name: &str) -> Option<usize> {
+    use std::collections::HashMap;
+    fn build(mode: GcMode) -> HashMap<&'static str, usize> {
+        group_indices(mode)
+            .iter()
+            .enumerate()
+            .map(|(pos, &i)| (CATALOG[i].name, pos))
+            .collect()
+    }
+    static PARALLEL: once_cell::sync::Lazy<std::collections::HashMap<&'static str, usize>> =
+        once_cell::sync::Lazy::new(|| build(GcMode::ParallelGC));
+    static G1: once_cell::sync::Lazy<std::collections::HashMap<&'static str, usize>> =
+        once_cell::sync::Lazy::new(|| build(GcMode::G1GC));
+    match mode {
+        GcMode::ParallelGC => PARALLEL.get(name).copied(),
+        GcMode::G1GC => G1.get(name).copied(),
+    }
+}
+
+pub fn flag_by_name(name: &str) -> Option<(usize, &'static FlagDef)> {
+    CATALOG.iter().enumerate().find(|(_, f)| f.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_counts_match_paper_table2_denominators() {
+        assert_eq!(group_indices(GcMode::ParallelGC).len(), 126);
+        assert_eq!(group_indices(GcMode::G1GC).len(), 141);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = CATALOG.iter().map(|f| f.name).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn defaults_within_range() {
+        for f in CATALOG {
+            if let Kind::Int { min, max, default, .. } = f.kind {
+                assert!(
+                    (min..=max).contains(&default),
+                    "{} default {default} outside [{min},{max}]",
+                    f.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_roundtrips_default() {
+        for f in CATALOG {
+            let d = f.default_value();
+            let u = f.normalize(d);
+            assert!((0.0..=1.0).contains(&u), "{}", f.name);
+            let back = f.denormalize(u);
+            match f.kind {
+                Kind::Bool { .. } => assert_eq!(back, d, "{}", f.name),
+                Kind::Int { min, max, .. } => {
+                    // round-trip within quantization error of the range
+                    let tol = ((max - min) * 1e-3).max(1.0);
+                    assert!(
+                        (back - d).abs() <= tol,
+                        "{}: {d} -> {u} -> {back}",
+                        f.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn denormalize_endpoints() {
+        for f in CATALOG {
+            if let Kind::Int { min, max, .. } = f.kind {
+                assert_eq!(f.denormalize(0.0), min.round(), "{}", f.name);
+                assert_eq!(f.denormalize(1.0), max.round(), "{}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn noop_flags_exist_in_catalog() {
+        for name in NOOP_FLAGS {
+            assert!(flag_by_name(name).is_some(), "{name} not in catalog");
+        }
+    }
+
+    #[test]
+    fn g1_flags_not_in_parallel_group() {
+        let par = group_indices(GcMode::ParallelGC);
+        for &i in par {
+            assert_ne!(CATALOG[i].group, Group::G1);
+        }
+    }
+
+    #[test]
+    fn gcmode_parse() {
+        assert_eq!(GcMode::parse("g1"), Some(GcMode::G1GC));
+        assert_eq!(GcMode::parse("ParallelGC"), Some(GcMode::ParallelGC));
+        assert_eq!(GcMode::parse("cms"), None);
+    }
+}

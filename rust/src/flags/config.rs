@@ -1,0 +1,385 @@
+//! A concrete flag assignment for one GC mode, plus the feature encoding
+//! used by every ML stage (AL, lasso, GP): normalized flag values in [0,1]
+//! followed by squared terms for numeric flags — the "linear regression
+//! model with polynomial features" of paper §III-B.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::catalog::{self, FlagDef, GcMode, Kind, CATALOG};
+use crate::util::rng::Pcg;
+
+/// A full flag configuration for one GC mode.  `values` is aligned with
+/// `catalog::group_indices(mode)` and stores raw flag values (bool as 0/1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlagConfig {
+    pub mode: GcMode,
+    pub values: Vec<f64>,
+}
+
+impl FlagConfig {
+    /// The JVM's default configuration for this GC mode.
+    pub fn default_for(mode: GcMode) -> FlagConfig {
+        let values = catalog::group_indices(mode)
+            .iter()
+            .map(|&i| CATALOG[i].default_value())
+            .collect();
+        FlagConfig { mode, values }
+    }
+
+    /// Uniformly random configuration (log-uniform for log-scaled flags) —
+    /// the phase-1 sampling distribution.
+    pub fn random(mode: GcMode, rng: &mut Pcg) -> FlagConfig {
+        let values = catalog::group_indices(mode)
+            .iter()
+            .map(|&i| sample_flag(&CATALOG[i], rng))
+            .collect();
+        FlagConfig { mode, values }
+    }
+
+    /// Build from a normalized [0,1]^k vector (k = flag count for `mode`).
+    pub fn from_unit(mode: GcMode, unit: &[f64]) -> FlagConfig {
+        let idx = catalog::group_indices(mode);
+        assert_eq!(unit.len(), idx.len(), "unit vector arity");
+        let values = idx
+            .iter()
+            .zip(unit)
+            .map(|(&i, &u)| CATALOG[i].denormalize(u))
+            .collect();
+        FlagConfig { mode, values }
+    }
+
+    /// Normalized [0,1] vector (one entry per flag in the group).
+    pub fn to_unit(&self) -> Vec<f64> {
+        self.defs()
+            .iter()
+            .zip(&self.values)
+            .map(|(f, &v)| f.normalize(v))
+            .collect()
+    }
+
+    /// Flag definitions in this config's group, aligned with `values`.
+    pub fn defs(&self) -> Vec<&'static FlagDef> {
+        catalog::group_indices(self.mode)
+            .iter()
+            .map(|&i| &CATALOG[i])
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Value of a flag by name; defaults apply for flags outside the group.
+    pub fn get(&self, name: &str) -> f64 {
+        if let Some(pos) = catalog::group_position(self.mode, name) {
+            return self.values[pos];
+        }
+        catalog::flag_by_name(name)
+            .map(|(_, f)| f.default_value())
+            .unwrap_or_else(|| panic!("unknown flag {name}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) >= 0.5
+    }
+
+    /// Set a flag by name (must be in this mode's group).
+    pub fn set(&mut self, name: &str, value: f64) {
+        match catalog::group_position(self.mode, name) {
+            Some(pos) => {
+                let i = catalog::group_indices(self.mode)[pos];
+                self.values[pos] = clamp_to_range(&CATALOG[i], value);
+            }
+            None => panic!("flag {name} not in {} group", self.mode.name()),
+        }
+    }
+
+    /// Render as `java` CLI arguments (`-XX:+Flag`, `-XX:Flag=value`) the
+    /// way a real launcher would pass them.
+    pub fn to_java_args(&self) -> String {
+        let mut out = String::new();
+        match self.mode {
+            GcMode::ParallelGC => out.push_str("-XX:+UseParallelGC"),
+            GcMode::G1GC => out.push_str("-XX:+UseG1GC"),
+        }
+        for (f, &v) in self.defs().iter().zip(&self.values) {
+            match f.kind {
+                Kind::Bool { .. } => {
+                    let sign = if v >= 0.5 { '+' } else { '-' };
+                    let _ = write!(out, " -XX:{}{}", sign, f.name);
+                }
+                Kind::Int { .. } => {
+                    let _ = write!(out, " -XX:{}={}", f.name, v as i64);
+                }
+            }
+        }
+        out
+    }
+
+    /// Map of name -> value (for the REST API / JSON results).
+    pub fn to_map(&self) -> BTreeMap<String, f64> {
+        self.defs()
+            .iter()
+            .zip(&self.values)
+            .map(|(f, &v)| (f.name.to_string(), v))
+            .collect()
+    }
+}
+
+fn clamp_to_range(f: &FlagDef, v: f64) -> f64 {
+    match f.kind {
+        Kind::Bool { .. } => {
+            if v >= 0.5 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        Kind::Int { min, max, .. } => v.round().clamp(min, max),
+    }
+}
+
+fn sample_flag(f: &FlagDef, rng: &mut Pcg) -> f64 {
+    match f.kind {
+        Kind::Bool { .. } => {
+            if rng.bool() {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        Kind::Int { min, max, log, .. } => {
+            let v = if log {
+                rng.log_uniform(min.max(1.0), max)
+            } else {
+                rng.uniform(min, max)
+            };
+            v.round().clamp(min, max)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature encoding
+// ---------------------------------------------------------------------------
+
+/// Feature encoder for one GC mode: linear terms for all flags + squared
+/// terms for numeric flags ("polynomial features", §III-B).  The same
+/// encoder maps feature indices back to flag names for the lasso report.
+#[derive(Clone, Debug)]
+pub struct FeatureEncoder {
+    pub mode: GcMode,
+    catalog_idx: Vec<usize>,
+    squared_pos: Vec<usize>, // positions (within group) that get x^2 terms
+}
+
+impl FeatureEncoder {
+    pub fn new(mode: GcMode) -> Self {
+        let catalog_idx = catalog::group_indices(mode).to_vec();
+        let squared_pos = catalog_idx
+            .iter()
+            .enumerate()
+            .filter(|(_, &i)| CATALOG[i].is_numeric())
+            .map(|(pos, _)| pos)
+            .collect();
+        FeatureEncoder { mode, catalog_idx, squared_pos }
+    }
+
+    /// Number of flags in the group (126 or 141).
+    pub fn n_flags(&self) -> usize {
+        self.catalog_idx.len()
+    }
+
+    /// Total feature dimensionality (flags + squared terms).
+    pub fn n_features(&self) -> usize {
+        self.catalog_idx.len() + self.squared_pos.len()
+    }
+
+    /// Encode a config into its feature vector.
+    pub fn encode(&self, cfg: &FlagConfig) -> Vec<f64> {
+        assert_eq!(cfg.mode, self.mode);
+        let unit = cfg.to_unit();
+        let mut out = Vec::with_capacity(self.n_features());
+        out.extend_from_slice(&unit);
+        out.extend(self.squared_pos.iter().map(|&p| unit[p] * unit[p]));
+        out
+    }
+
+    /// Which flag (position within the group) produced feature j.
+    pub fn feature_flag_pos(&self, j: usize) -> usize {
+        if j < self.catalog_idx.len() {
+            j
+        } else {
+            self.squared_pos[j - self.catalog_idx.len()]
+        }
+    }
+
+    /// Human-readable feature name ("MaxHeapSize" or "MaxHeapSize^2").
+    pub fn feature_name(&self, j: usize) -> String {
+        let pos = self.feature_flag_pos(j);
+        let name = CATALOG[self.catalog_idx[pos]].name;
+        if j < self.catalog_idx.len() {
+            name.to_string()
+        } else {
+            format!("{name}^2")
+        }
+    }
+
+    /// Collapse per-feature weights into per-flag relevance (a flag counts
+    /// as selected if any of its features is non-zero — how the paper's
+    /// Table II counts "flags selected by lasso").
+    pub fn selected_flags(&self, weights: &[f64], tol: f64) -> Vec<usize> {
+        assert_eq!(weights.len(), self.n_features());
+        let mut hit = vec![false; self.n_flags()];
+        for (j, &w) in weights.iter().enumerate() {
+            if w.abs() > tol {
+                hit[self.feature_flag_pos(j)] = true;
+            }
+        }
+        hit.iter()
+            .enumerate()
+            .filter(|(_, &h)| h)
+            .map(|(p, _)| p)
+            .collect()
+    }
+
+    pub fn flag_name(&self, pos: usize) -> &'static str {
+        CATALOG[self.catalog_idx[pos]].name
+    }
+
+    pub fn flag_def(&self, pos: usize) -> &'static FlagDef {
+        &CATALOG[self.catalog_idx[pos]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_matches_catalog_defaults() {
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        assert_eq!(cfg.len(), 141);
+        assert_eq!(cfg.get("MaxGCPauseMillis"), 200.0);
+        assert_eq!(cfg.get("InitiatingHeapOccupancyPercent"), 45.0);
+        assert!(cfg.get_bool("UseTLAB"));
+    }
+
+    #[test]
+    fn parallel_group_excludes_g1_flags() {
+        let cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        assert_eq!(cfg.len(), 126);
+        // get() on an out-of-group flag falls back to its catalog default
+        assert_eq!(cfg.get("G1HeapRegionSize"), 8.0);
+        assert!(cfg.defs().iter().all(|f| f.name != "G1HeapRegionSize"));
+    }
+
+    #[test]
+    fn random_configs_in_range() {
+        let mut rng = Pcg::new(1);
+        for _ in 0..20 {
+            let cfg = FlagConfig::random(GcMode::G1GC, &mut rng);
+            for (f, &v) in cfg.defs().iter().zip(&cfg.values) {
+                match f.kind {
+                    Kind::Bool { .. } => assert!(v == 0.0 || v == 1.0),
+                    Kind::Int { min, max, .. } => {
+                        assert!((min..=max).contains(&v), "{} = {v}", f.name)
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unit_roundtrip() {
+        let mut rng = Pcg::new(2);
+        let cfg = FlagConfig::random(GcMode::ParallelGC, &mut rng);
+        let unit = cfg.to_unit();
+        assert!(unit.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        let back = FlagConfig::from_unit(GcMode::ParallelGC, &unit);
+        for ((f, &a), &b) in cfg.defs().iter().zip(&cfg.values).zip(&back.values) {
+            let tol = match f.kind {
+                Kind::Bool { .. } => 0.0,
+                Kind::Int { min, max, log, .. } => {
+                    if log {
+                        (a.max(1.0) * 0.01).max(1.0)
+                    } else {
+                        ((max - min) * 1e-3).max(1.0)
+                    }
+                }
+            };
+            assert!((a - b).abs() <= tol, "{}: {a} vs {b}", f.name);
+        }
+    }
+
+    #[test]
+    fn set_and_get() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        cfg.set("MaxHeapSize", 32768.0);
+        assert_eq!(cfg.get("MaxHeapSize"), 32768.0);
+        cfg.set("MaxHeapSize", 1e12); // clamped to range max
+        assert_eq!(cfg.get("MaxHeapSize"), 65536.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_out_of_group_panics() {
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("G1ReservePercent", 20.0);
+    }
+
+    #[test]
+    fn java_args_format() {
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let args = cfg.to_java_args();
+        assert!(args.starts_with("-XX:+UseG1GC"));
+        assert!(args.contains("-XX:MaxGCPauseMillis=200"));
+        assert!(args.contains("-XX:+UseTLAB"));
+        assert!(args.contains("-XX:-AlwaysPreTouch"));
+    }
+
+    #[test]
+    fn encoder_dimensions_fit_artifact_budget() {
+        for mode in [GcMode::ParallelGC, GcMode::G1GC] {
+            let enc = FeatureEncoder::new(mode);
+            assert!(enc.n_features() <= 320, "{}: {}", mode.name(), enc.n_features());
+            assert!(enc.n_features() > enc.n_flags());
+        }
+    }
+
+    #[test]
+    fn encoder_squared_terms() {
+        let enc = FeatureEncoder::new(GcMode::ParallelGC);
+        let cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        let feats = enc.encode(&cfg);
+        assert_eq!(feats.len(), enc.n_features());
+        let unit = cfg.to_unit();
+        // check one squared term
+        let j = enc.n_flags(); // first squared feature
+        let pos = enc.feature_flag_pos(j);
+        assert!((feats[j] - unit[pos] * unit[pos]).abs() < 1e-12);
+        assert!(enc.feature_name(j).ends_with("^2"));
+    }
+
+    #[test]
+    fn selected_flags_collapses_squares() {
+        let enc = FeatureEncoder::new(GcMode::ParallelGC);
+        let mut w = vec![0.0; enc.n_features()];
+        // only the squared term of some numeric flag is active
+        let j = enc.n_flags() + 3;
+        w[j] = 0.5;
+        let sel = enc.selected_flags(&w, 1e-9);
+        assert_eq!(sel, vec![enc.feature_flag_pos(j)]);
+    }
+
+    #[test]
+    fn to_map_contains_all_flags() {
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        assert_eq!(cfg.to_map().len(), 141);
+    }
+}

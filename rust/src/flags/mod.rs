@@ -1,0 +1,8 @@
+//! JVM flag catalog, configurations and feature encoding (the search space
+//! the tuner explores; paper §III-B and Table II).
+
+pub mod catalog;
+pub mod config;
+
+pub use catalog::{flag_by_name, group_indices, FlagDef, GcMode, Group, Kind, CATALOG, NOOP_FLAGS};
+pub use config::{FeatureEncoder, FlagConfig};

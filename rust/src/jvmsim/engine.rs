@@ -1,0 +1,536 @@
+//! Event-driven JVM execution engine: mutator + generational GC + JIT
+//! warmup, at minor-GC granularity.
+//!
+//! One `run` simulates a single executor JVM executing `MutatorLoad` units
+//! of compute while allocating; GC pauses are stop-the-world events that
+//! extend wall time, G1's concurrent phases steal mutator cores instead.
+//! A jstat-style sampler records heap occupancy every 5 simulated seconds
+//! and the run reports the paper's HU metric (eq. 8/9).
+
+use super::params::JvmParams;
+use crate::flags::GcMode;
+use crate::util::rng::Pcg;
+
+/// Workload placed on one executor JVM.
+#[derive(Clone, Debug)]
+pub struct MutatorLoad {
+    /// Total compute demand (core-seconds at steady speed 1.0).
+    pub work_core_s: f64,
+    /// Allocation intensity (MB allocated per core-second of work).
+    pub alloc_mb_per_core_s: f64,
+    /// Steady-state live set in MB (input cache + model state).
+    pub live_mb: f64,
+    /// Fraction of the work during which the live set builds up.
+    pub cache_work_frac: f64,
+    /// Fraction of eden surviving a minor collection.
+    pub young_survival: f64,
+    /// Fraction of survived bytes promoted regardless of survivor room.
+    pub promote_frac: f64,
+    /// Humongous allocation (G1: straight to old) MB per core-second.
+    pub humongous_mb_per_core_s: f64,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GcStats {
+    pub minor: u32,
+    pub mixed: u32,
+    pub full: u32,
+    pub conc_cycles: u32,
+    pub total_pause_ms: f64,
+    pub max_pause_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct JvmRunResult {
+    /// Wall-clock duration of the run (seconds, simulated).
+    pub wall_s: f64,
+    pub gc: GcStats,
+    /// Average heap-usage percentage over the 5 s jstat samples (eq. 9).
+    pub hu_avg_pct: f64,
+    pub n_samples: usize,
+    /// True if the run failed: wall-time cap hit (GC thrash) or the live
+    /// set outgrew the old generation (executor OOM — the JVM dies fast,
+    /// like a real `java.lang.OutOfMemoryError`).
+    pub timed_out: bool,
+}
+
+/// Hard cap on simulated wall time: configurations that thrash are
+/// truncated here, mirroring a benchmark timeout.
+pub const MAX_WALL_S: f64 = 1800.0;
+
+const SAMPLE_PERIOD_S: f64 = 5.0;
+/// Concurrent-mark scan rate, MB per ms per concurrent thread.
+const MARK_RATE: f64 = 9.0;
+
+struct State {
+    t_s: f64,
+    work: f64,
+    eden_used: f64,
+    surv_used: f64,
+    old_live: f64,
+    old_garbage: f64,
+    eden_cap: f64,
+    marking_until: f64, // G1: wall time when concurrent mark finishes
+    mixed_left: u32,
+    garbage_at_mark: f64,
+    next_sample: f64,
+    hu_sum: f64,
+    n_samples: usize,
+    gc: GcStats,
+}
+
+pub fn run(p: &JvmParams, load: &MutatorLoad, cores: f64, rng: &mut Pcg) -> JvmRunResult {
+    let speed_noise = rng.noise_factor(0.015);
+    let copy_total = (p.copy_rate * p.gc_threads).max(0.05); // MB/ms
+    let compact_total = (p.compact_rate * p.gc_threads).max(0.03);
+
+    let survivor_total = 2.0 * p.survivor_mb;
+    let old_cap = match p.mode {
+        GcMode::ParallelGC => (p.heap_mb - p.young_mb - survivor_total).max(256.0),
+        GcMode::G1GC => (p.heap_mb - p.young_min_mb).max(256.0),
+    };
+
+    let live_target = load.live_mb * p.live_scale;
+    let alloc_per_core = load.alloc_mb_per_core_s * p.alloc_scale;
+
+    let mut st = State {
+        t_s: 0.0,
+        work: 0.0,
+        eden_used: 0.0,
+        surv_used: 0.0,
+        old_live: live_target.min(0.05 * live_target),
+        old_garbage: 0.0,
+        eden_cap: eden_capacity(p, load, copy_total, 0.0),
+        marking_until: f64::NEG_INFINITY,
+        mixed_left: 0,
+        garbage_at_mark: 0.0,
+        next_sample: SAMPLE_PERIOD_S,
+        hu_sum: 0.0,
+        n_samples: 0,
+        gc: GcStats::default(),
+    };
+
+    let mut timed_out = false;
+    loop {
+        let marking = st.t_s < st.marking_until;
+        let s = mutator_speed(p, st.t_s, cores, marking) * speed_noise;
+        let alloc_rate = (alloc_per_core * s).max(1e-6); // MB/s
+        let humongous_rate = load.humongous_mb_per_core_s * s * p.alloc_scale;
+
+        let dt_eden = (st.eden_cap - st.eden_used).max(0.0) / alloc_rate;
+        let dt_work = (load.work_core_s - st.work).max(0.0) / s;
+        let dt = dt_work.min(dt_eden);
+
+        advance(&mut st, p, old_cap, dt, s, alloc_rate, humongous_rate);
+
+        if dt_work <= dt_eden {
+            break; // job finished
+        }
+        if st.t_s > MAX_WALL_S {
+            timed_out = true;
+            break;
+        }
+
+        minor_gc(&mut st, p, load, old_cap, live_target, copy_total, rng);
+
+        // OOM fast-fail: once the live set alone no longer fits in the old
+        // generation, no amount of collecting helps — the executor dies
+        // with OutOfMemoryError almost immediately (the paper avoids this
+        // region by constraining heap-flag ranges; we let the tuner learn
+        // it instead).
+        if st.old_live > old_cap * 0.99 {
+            timed_out = true;
+            break;
+        }
+
+        // Old-generation pressure handling.
+        match p.mode {
+            GcMode::ParallelGC => {
+                let old_used = st.old_live + st.old_garbage;
+                if old_used > old_cap * p.full_trigger_frac {
+                    full_gc(&mut st, p, compact_total, old_used, rng, false);
+                }
+            }
+            GcMode::G1GC => {
+                g1_cycle(&mut st, p, old_cap, copy_total, compact_total, rng);
+            }
+        }
+        // Re-derive the (G1-adaptive) eden for the next cycle.
+        st.eden_cap = eden_capacity(p, load, copy_total, st.old_live + st.old_garbage);
+    }
+
+    let hu = if st.n_samples > 0 {
+        st.hu_sum / st.n_samples as f64
+    } else {
+        // Short run: single synthetic sample at the end state.
+        hu_now(&st, p, old_cap)
+    };
+
+    JvmRunResult {
+        wall_s: st.t_s,
+        gc: st.gc,
+        hu_avg_pct: hu,
+        n_samples: st.n_samples,
+        timed_out,
+    }
+}
+
+/// Mutator speed in core-equivalents: JIT warmup ramp, steady-state factor,
+/// G1 concurrent work stealing cores.
+fn mutator_speed(p: &JvmParams, t_s: f64, cores: f64, marking: bool) -> f64 {
+    let ramp = 1.0 - (1.0 - p.interp_speed) * (-t_s / p.warmup_s).exp();
+    let mut s = cores * p.steady_speed * ramp;
+    s *= 1.0 - p.conc_overhead;
+    if marking {
+        let stolen = (p.conc_threads * 0.55).min(cores * 0.5);
+        s *= 1.0 - stolen / cores;
+    }
+    s.max(0.05)
+}
+
+/// Eden capacity: fixed geometry for ParallelGC; pause-target-driven
+/// adaptive young sizing for G1 (the MaxGCPauseMillis mechanism), further
+/// shrunk under old-generation pressure the way real G1 resizes young.
+fn eden_capacity(p: &JvmParams, load: &MutatorLoad, copy_total: f64, old_used: f64) -> f64 {
+    match p.mode {
+        GcMode::ParallelGC => (p.young_mb * p.eden_frac).max(16.0),
+        GcMode::G1GC => {
+            let survival = load.young_survival.max(0.01);
+            let budget_ms = (p.pause_target_ms - p.minor_base_ms).max(2.0);
+            let target = budget_ms * copy_total / survival;
+            let lo = (p.young_min_mb * p.eden_frac).max(16.0);
+            let pressure_cap = ((p.heap_mb - old_used) * 0.75).max(lo);
+            let hi = (p.young_mb * p.eden_frac).max(lo).min(pressure_cap);
+            target.clamp(lo, hi.max(lo))
+        }
+    }
+}
+
+/// Advance simulated time by `dt` seconds of mutator execution, taking
+/// jstat samples at 5 s boundaries.
+fn advance(
+    st: &mut State,
+    p: &JvmParams,
+    old_cap: f64,
+    dt: f64,
+    s: f64,
+    alloc_rate: f64,
+    humongous_rate: f64,
+) {
+    let t_end = st.t_s + dt;
+    while st.next_sample <= t_end {
+        let frac = ((st.next_sample - st.t_s) / dt.max(1e-12)).clamp(0.0, 1.0);
+        let eden_at = st.eden_used + alloc_rate * dt * frac;
+        let old_at = st.old_live + st.old_garbage + humongous_rate * dt * frac;
+        st.hu_sum += hu_of(eden_at, st.surv_used, old_at, st.eden_cap, p, old_cap);
+        st.n_samples += 1;
+        st.next_sample += SAMPLE_PERIOD_S;
+    }
+    st.work += s * dt;
+    st.eden_used += alloc_rate * dt;
+    st.old_garbage += humongous_rate * dt; // humongous: straight to old
+    st.t_s = t_end;
+}
+
+fn hu_of(eu: f64, su: f64, ou: f64, ec: f64, p: &JvmParams, oc: f64) -> f64 {
+    let s0c = p.survivor_mb.max(1.0);
+    let caps = ec + 2.0 * s0c + oc;
+    100.0 * (eu + su + ou.min(oc)) / caps.max(1.0)
+}
+
+fn hu_now(st: &State, p: &JvmParams, old_cap: f64) -> f64 {
+    hu_of(
+        st.eden_used,
+        st.surv_used,
+        st.old_live + st.old_garbage,
+        st.eden_cap,
+        p,
+        old_cap,
+    )
+}
+
+/// One stop-the-world minor collection.
+fn minor_gc(
+    st: &mut State,
+    p: &JvmParams,
+    load: &MutatorLoad,
+    _old_cap: f64,
+    live_target: f64,
+    copy_total: f64,
+    rng: &mut Pcg,
+) {
+    let tenuring_factor = 1.0 - 0.015 * (p.tenuring - 15.0).abs() / 15.0;
+    let survived =
+        st.eden_cap * load.young_survival * tenuring_factor * rng.noise_factor(0.03);
+
+    // Survivor-space fit: overflow promotes directly.
+    let surv_room = (p.survivor_mb * p.target_survivor).max(1.0);
+    let to_survivor = survived.min(surv_room);
+    let overflow = survived - to_survivor;
+    let churn_promoted = survived * load.promote_frac + overflow
+        + st.surv_used * (1.0 / (1.0 + p.tenuring));
+
+    // Live-set buildup tracks job progress through the caching phase.
+    let progress = (st.work / (load.work_core_s * load.cache_work_frac).max(1.0)).min(1.0);
+    st.old_live = st.old_live.max(live_target * progress);
+    st.old_garbage += churn_promoted;
+
+    let pause_ms = (p.minor_base_ms
+        + survived / copy_total
+        + p.verify_ms_per_gc)
+        * rng.noise_factor(0.04);
+    apply_pause(st, pause_ms);
+    st.gc.minor += 1;
+    st.eden_used = 0.0;
+    st.surv_used = to_survivor;
+}
+
+/// Stop-the-world full collection (ParallelGC old gen / G1 evac failure).
+fn full_gc(
+    st: &mut State,
+    p: &JvmParams,
+    compact_total: f64,
+    old_used: f64,
+    rng: &mut Pcg,
+    degenerate: bool,
+) {
+    let rate = if degenerate {
+        compact_total * 0.4 // G1 fallback full GC is badly parallelized
+    } else {
+        compact_total
+    };
+    let mut pause_ms = 55.0 + (st.old_live + 0.25 * old_used) / rate.max(0.02);
+    if p.scavenge_before_full {
+        pause_ms += st.eden_used * 0.6 / compact_total.max(0.02);
+        st.eden_used = 0.0;
+    }
+    pause_ms = (pause_ms + p.verify_ms_per_gc) * rng.noise_factor(0.05);
+    apply_pause(st, pause_ms);
+    st.gc.full += 1;
+    st.old_garbage = 0.0;
+    st.surv_used = 0.0;
+}
+
+/// G1 concurrent cycle management: IHOP-triggered marking, then a burst of
+/// mixed collections reclaiming old-gen garbage down to the waste floor.
+fn g1_cycle(
+    st: &mut State,
+    p: &JvmParams,
+    old_cap: f64,
+    copy_total: f64,
+    compact_total: f64,
+    rng: &mut Pcg,
+) {
+    let old_used = st.old_live + st.old_garbage;
+
+    // Evacuation failure -> degenerate full GC.
+    if old_used > (p.heap_mb - st.eden_cap) * 0.97 || old_used > old_cap {
+        full_gc(st, p, compact_total, old_used, rng, true);
+        return;
+    }
+
+    let marking = st.t_s < st.marking_until;
+    let occupancy = (old_used + st.eden_used + st.surv_used) / p.heap_mb;
+    if !marking && st.mixed_left == 0 && occupancy > p.ihop {
+        // Start a concurrent mark cycle.
+        let mark_ms = old_used / (MARK_RATE * p.conc_threads).max(0.5);
+        st.marking_until = st.t_s + mark_ms / 1000.0;
+        st.gc.conc_cycles += 1;
+        st.garbage_at_mark = st.old_garbage;
+        st.mixed_left = p.mixed_count_target.max(1.0) as u32;
+    }
+
+    // Mixed collections piggyback on minor GCs once marking has finished.
+    if st.mixed_left > 0 && st.t_s >= st.marking_until && st.marking_until > 0.0 {
+        // Live-threshold: only regions below the threshold get collected;
+        // a higher threshold reclaims more but copies more live data.
+        let eff = (p.mixed_live_threshold - 0.45).clamp(0.1, 0.55) / 0.55;
+        let reclaimable = (st.garbage_at_mark * eff).max(0.0);
+        let per_mixed = reclaimable / p.mixed_count_target.max(1.0);
+        let floor = p.heap_mb * p.heap_waste_frac;
+        let take = per_mixed.min((st.old_garbage - floor).max(0.0));
+        if take > 0.0 {
+            let extra_ms =
+                (take * (0.4 + 0.6 * p.mixed_live_threshold)) / (copy_total * 0.75);
+            apply_pause(st, extra_ms * rng.noise_factor(0.05));
+            st.old_garbage -= take;
+            st.gc.mixed += 1;
+        }
+        st.mixed_left -= 1;
+    }
+}
+
+fn apply_pause(st: &mut State, pause_ms: f64) {
+    let pause_s = pause_ms / 1000.0;
+    // STW: heap frozen; jstat samples during a pause see the pre-GC state.
+    while st.next_sample <= st.t_s + pause_s {
+        st.next_sample += SAMPLE_PERIOD_S;
+        // skip sampling inside the pause window (jstat stalls too)
+    }
+    st.t_s += pause_s;
+    st.gc.total_pause_ms += pause_ms;
+    if pause_ms > st.gc.max_pause_ms {
+        st.gc.max_pause_ms = pause_ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flags::FlagConfig;
+
+    fn load() -> MutatorLoad {
+        MutatorLoad {
+            work_core_s: 1700.0,
+            alloc_mb_per_core_s: 90.0,
+            live_mb: 6000.0,
+            cache_work_frac: 0.3,
+            young_survival: 0.08,
+            promote_frac: 0.25,
+            humongous_mb_per_core_s: 0.0,
+        }
+    }
+
+    fn params(mode: GcMode) -> JvmParams {
+        JvmParams::derive(&FlagConfig::default_for(mode), 81920.0, 20.0)
+    }
+
+    #[test]
+    fn run_completes_and_is_deterministic() {
+        let p = params(GcMode::ParallelGC);
+        let a = run(&p, &load(), 20.0, &mut Pcg::new(1));
+        let b = run(&p, &load(), 20.0, &mut Pcg::new(1));
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.gc, b.gc);
+        assert!(a.wall_s > 0.0 && !a.timed_out);
+    }
+
+    #[test]
+    fn wall_time_exceeds_ideal_compute_time() {
+        let p = params(GcMode::ParallelGC);
+        let l = load();
+        let r = run(&p, &l, 20.0, &mut Pcg::new(2));
+        let ideal = l.work_core_s / 20.0;
+        assert!(r.wall_s > ideal, "wall {} <= ideal {}", r.wall_s, ideal);
+        // ... but not pathologically so for the default config
+        assert!(r.wall_s < ideal * 2.0, "wall {}", r.wall_s);
+    }
+
+    #[test]
+    fn minor_gcs_happen() {
+        let p = params(GcMode::ParallelGC);
+        let r = run(&p, &load(), 20.0, &mut Pcg::new(3));
+        assert!(r.gc.minor > 3, "minor={}", r.gc.minor);
+        assert!(r.gc.total_pause_ms > 0.0);
+    }
+
+    #[test]
+    fn heavy_live_set_triggers_full_gcs_on_parallel() {
+        let p = params(GcMode::ParallelGC);
+        let mut l = load();
+        l.live_mb = 14000.0; // close to default old capacity
+        l.alloc_mb_per_core_s = 130.0;
+        l.work_core_s = 2000.0;
+        let r = run(&p, &l, 20.0, &mut Pcg::new(4));
+        assert!(r.gc.full > 0, "expected full GCs, got {:?}", r.gc);
+    }
+
+    #[test]
+    fn g1_runs_concurrent_cycles_under_pressure() {
+        let p = params(GcMode::G1GC);
+        let mut l = load();
+        l.live_mb = 14000.0;
+        l.alloc_mb_per_core_s = 130.0;
+        let r = run(&p, &l, 20.0, &mut Pcg::new(5));
+        assert!(r.gc.conc_cycles > 0, "{:?}", r.gc);
+        assert!(r.gc.full <= 2, "G1 should avoid full GCs: {:?}", r.gc);
+    }
+
+    #[test]
+    fn g1_respects_pause_target_structure() {
+        // Tight pause target -> smaller eden -> more, shorter pauses.
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        cfg.set("MaxGCPauseMillis", 50.0);
+        let tight = JvmParams::derive(&cfg, 81920.0, 20.0);
+        cfg.set("MaxGCPauseMillis", 1000.0);
+        let loose = JvmParams::derive(&cfg, 81920.0, 20.0);
+        let rt = run(&tight, &load(), 20.0, &mut Pcg::new(6));
+        let rl = run(&loose, &load(), 20.0, &mut Pcg::new(6));
+        assert!(rt.gc.minor > rl.gc.minor, "{} vs {}", rt.gc.minor, rl.gc.minor);
+        assert!(rt.gc.max_pause_ms < rl.gc.max_pause_ms);
+    }
+
+    #[test]
+    fn bigger_heap_reduces_full_gc_pressure() {
+        let mut l = load();
+        l.live_mb = 14000.0;
+        l.alloc_mb_per_core_s = 130.0;
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        let small = run(
+            &JvmParams::derive(&cfg, 81920.0, 20.0),
+            &l,
+            20.0,
+            &mut Pcg::new(7),
+        );
+        cfg.set("MaxHeapSize", 32768.0);
+        let big = run(
+            &JvmParams::derive(&cfg, 81920.0, 20.0),
+            &l,
+            20.0,
+            &mut Pcg::new(7),
+        );
+        assert!(big.gc.full < small.gc.full, "{:?} vs {:?}", big.gc, small.gc);
+        assert!(big.wall_s < small.wall_s);
+    }
+
+    #[test]
+    fn hu_metric_sampled_and_bounded() {
+        let p = params(GcMode::G1GC);
+        let r = run(&p, &load(), 20.0, &mut Pcg::new(8));
+        assert!(r.n_samples > 3);
+        assert!(r.hu_avg_pct > 0.0 && r.hu_avg_pct < 100.0, "{}", r.hu_avg_pct);
+    }
+
+    #[test]
+    fn verify_flags_slow_the_run() {
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        let base = run(
+            &JvmParams::derive(&cfg, 81920.0, 20.0),
+            &load(),
+            20.0,
+            &mut Pcg::new(9),
+        );
+        cfg.set("VerifyBeforeGC", 1.0);
+        cfg.set("VerifyAfterGC", 1.0);
+        let slow = run(
+            &JvmParams::derive(&cfg, 81920.0, 20.0),
+            &load(),
+            20.0,
+            &mut Pcg::new(9),
+        );
+        assert!(slow.wall_s > base.wall_s * 1.02);
+    }
+
+    #[test]
+    fn pathological_config_times_out_not_hangs() {
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("MaxHeapSize", 2048.0); // heap far below live set
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        let mut l = load();
+        l.live_mb = 14000.0;
+        let r = run(&p, &l, 20.0, &mut Pcg::new(10));
+        // Either times out or thrashes to completion; must terminate.
+        assert!(r.wall_s <= MAX_WALL_S * 1.5);
+    }
+
+    #[test]
+    fn noise_is_small_but_present() {
+        let p = params(GcMode::G1GC);
+        let walls: Vec<f64> = (0..8)
+            .map(|s| run(&p, &load(), 20.0, &mut Pcg::new(100 + s)).wall_s)
+            .collect();
+        let s = crate::util::stats::summarize(&walls);
+        assert!(s.std / s.mean < 0.08, "cv={}", s.std / s.mean);
+        assert!(s.std > 0.0);
+    }
+}

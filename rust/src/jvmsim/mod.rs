@@ -1,0 +1,11 @@
+//! JVM simulator substrate (paper-testbed substitution; see DESIGN.md).
+//!
+//! `params` derives physical simulator parameters from a `FlagConfig`;
+//! `engine` is the event-driven mutator/GC/JIT execution model with the
+//! jstat-style heap-usage sampler.
+
+pub mod engine;
+pub mod params;
+
+pub use engine::{run, GcStats, JvmRunResult, MutatorLoad, MAX_WALL_S};
+pub use params::JvmParams;

@@ -1,0 +1,452 @@
+//! Map a `FlagConfig` onto the simulator's physical parameters.
+//!
+//! This is where "flags have effects": ~30 primary flags map onto explicit
+//! heap/GC/JIT mechanics, a long tail of secondary flags contributes small
+//! deterministic multiplicative effects (so feature selection has a real
+//! signal-vs-noise problem to solve, like the real JVM), and the
+//! diagnostics in `NOOP_FLAGS` do nothing at all.
+
+use crate::flags::{FlagConfig, GcMode, NOOP_FLAGS};
+
+/// Everything the GC/JIT engine needs, derived once per run from the flags.
+#[derive(Clone, Debug)]
+pub struct JvmParams {
+    pub mode: GcMode,
+    // --- heap geometry (MB) ---
+    pub heap_mb: f64,
+    pub young_mb: f64,       // ParallelGC fixed young size; G1 upper bound
+    pub young_min_mb: f64,   // G1 adaptive floor
+    pub eden_frac: f64,      // eden / young
+    pub survivor_mb: f64,    // each survivor space (ParallelGC)
+    pub target_survivor: f64,
+    pub tenuring: f64,
+    // --- GC behaviour ---
+    pub gc_threads: f64,
+    pub conc_threads: f64,
+    pub pause_target_ms: f64,
+    pub ihop: f64,                   // G1 concurrent-mark trigger fraction
+    pub mixed_count_target: f64,     // G1
+    pub mixed_live_threshold: f64,   // G1 (fraction)
+    pub heap_waste_frac: f64,        // G1 reclaim floor
+    pub full_trigger_frac: f64,      // ParallelGC old-occupancy trigger
+    pub minor_base_ms: f64,
+    pub copy_rate: f64,              // MB/ms per GC thread (minor)
+    pub compact_rate: f64,           // MB/ms per GC thread (full)
+    pub verify_ms_per_gc: f64,       // VerifyBeforeGC/VerifyAfterGC cost
+    pub scavenge_before_full: bool,
+    // --- mutator / JIT ---
+    pub steady_speed: f64,   // steady-state mutator speed multiplier
+    pub interp_speed: f64,   // relative speed at t=0 (warmup start)
+    pub warmup_s: f64,       // JIT warmup time constant
+    pub alloc_scale: f64,    // allocation volume multiplier (oops size etc.)
+    pub live_scale: f64,     // live-set size multiplier
+    pub conc_overhead: f64,  // G1 concurrent refinement CPU fraction
+}
+
+/// Smooth unimodal bonus: gaussian bump in log-space around `opt`,
+/// normalized so the contribution at `def` is 0 (the default config scores
+/// exactly 1.0 in the product).
+fn bump(x: f64, def: f64, opt: f64, width: f64, amp: f64) -> f64 {
+    let g = |v: f64| {
+        let z = ((v.max(1e-9) / opt).ln()) / width;
+        (-0.5 * z * z).exp()
+    };
+    amp * (g(x) - g(def))
+}
+
+/// FNV-1a for the deterministic long-tail effect assignment.
+fn fnv(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Flags with explicit mechanics below (excluded from the long tail).
+const PRIMARY: &[&str] = &[
+    "MaxHeapSize",
+    "InitialHeapSize",
+    "NewRatio",
+    "NewSize",
+    "MaxNewSize",
+    "SurvivorRatio",
+    "TargetSurvivorRatio",
+    "MaxTenuringThreshold",
+    "ParallelGCThreads",
+    "ConcGCThreads",
+    "MaxGCPauseMillis",
+    "UseAdaptiveSizePolicy",
+    "MinHeapFreeRatio",
+    "MaxHeapFreeRatio",
+    "UseCompressedOops",
+    "UseTLAB",
+    "AlwaysPreTouch",
+    "UseLargePages",
+    "UseNUMA",
+    "VerifyBeforeGC",
+    "VerifyAfterGC",
+    "ScavengeBeforeFullGC",
+    "TieredCompilation",
+    "CompileThreshold",
+    "Tier4InvocationThreshold",
+    "CICompilerCount",
+    "MaxInlineSize",
+    "FreqInlineSize",
+    "InlineSmallCode",
+    "LoopUnrollLimit",
+    "UseSuperWord",
+    "DoEscapeAnalysis",
+    "EliminateAllocations",
+    "ReservedCodeCacheSize",
+    "InitiatingHeapOccupancyPercent",
+    "G1NewSizePercent",
+    "G1MaxNewSizePercent",
+    "G1HeapRegionSize",
+    "G1MixedGCCountTarget",
+    "G1MixedGCLiveThresholdPercent",
+    "G1HeapWastePercent",
+    "G1ReservePercent",
+    "G1ConcRefinementThreads",
+    "UseParallelOldGC",
+];
+
+impl JvmParams {
+    /// Derive simulator parameters from a flag configuration.
+    ///
+    /// `exec_mem_mb` is the Spark executor memory limit — the JVM heap is
+    /// capped at ~92% of it (container overhead).  `cores` is executor
+    /// cores (caps useful GC threads).
+    pub fn derive(cfg: &FlagConfig, exec_mem_mb: f64, cores: f64) -> JvmParams {
+        let mode = cfg.mode;
+        let heap_cap = exec_mem_mb * 0.92;
+        let mut heap_mb = cfg.get("MaxHeapSize").min(heap_cap);
+
+        // Compressed oops die above 32 GB: object headers/pointers grow,
+        // inflating both allocation volume and the live set.  This makes
+        // heap sizing non-monotone — the paper's BO has a real cliff to find.
+        let oops_on = cfg.get_bool("UseCompressedOops") && heap_mb <= 32768.0;
+        let (alloc_scale, live_scale) = if oops_on { (1.0, 1.0) } else { (1.18, 1.22) };
+
+        heap_mb = heap_mb.max(2048.0);
+
+        // --- young generation geometry ---
+        let sr = cfg.get("SurvivorRatio").max(2.0);
+        let eden_frac = sr / (sr + 2.0);
+        let (young_mb, young_min_mb, survivor_mb);
+        match mode {
+            GcMode::ParallelGC => {
+                let ratio_young = heap_mb / (cfg.get("NewRatio") + 1.0);
+                let y = ratio_young
+                    .max(cfg.get("NewSize"))
+                    .min(cfg.get("MaxNewSize"))
+                    .min(heap_mb * 0.8);
+                young_mb = y;
+                young_min_mb = y;
+                survivor_mb = y / (sr + 2.0);
+            }
+            GcMode::G1GC => {
+                let lo = heap_mb * cfg.get("G1NewSizePercent") / 100.0;
+                let hi = heap_mb * cfg.get("G1MaxNewSizePercent") / 100.0;
+                young_mb = hi.max(lo + 1.0);
+                young_min_mb = lo;
+                survivor_mb = young_mb / (sr + 2.0);
+            }
+        }
+
+        // --- GC threads & rates ---
+        let gc_threads = cfg.get("ParallelGCThreads").min(cores * 2.0).max(1.0);
+        let conc_threads = match mode {
+            GcMode::G1GC => cfg
+                .get("ConcGCThreads")
+                .max(1.0)
+                .min(cores),
+            GcMode::ParallelGC => cfg.get("ConcGCThreads").max(1.0),
+        };
+        // Thread scaling is sub-linear (term copying saturates memory BW)
+        // and oversubscription beyond physical cores hurts.
+        let eff_threads = {
+            let t = gc_threads.min(cores);
+            let over = (gc_threads - cores).max(0.0);
+            t.powf(0.82) * (1.0 - 0.03 * over / cores.max(1.0)).max(0.7)
+        };
+        let copy_rate = 0.85 * eff_threads / gc_threads.max(1.0); // per-thread MB/ms, folded below
+        let compact_rate = 0.38 * eff_threads / gc_threads.max(1.0);
+
+        // PLAB / TLAB efficiency tweaks on the copy path (ParallelGC).
+        let mut copy_eff = 1.0;
+        if mode == GcMode::ParallelGC {
+            copy_eff += bump(cfg.get("YoungPLABSize"), 4096.0, 2048.0, 1.0, 0.04);
+            copy_eff += bump(cfg.get("OldPLABSize"), 1024.0, 2048.0, 1.0, 0.03);
+            if !cfg.get_bool("UseParallelOldGC") {
+                copy_eff -= 0.25; // serial old compaction
+            }
+        } else {
+            copy_eff += bump(cfg.get("G1UpdateBufferSize"), 256.0, 1024.0, 1.2, 0.03);
+            copy_eff += bump(cfg.get("G1SATBBufferSize"), 1.0, 8.0, 1.5, 0.02);
+        }
+
+        // --- verification flags: catastrophic when enabled (default off) ---
+        let mut verify_ms_per_gc = 0.0;
+        if cfg.get_bool("VerifyBeforeGC") {
+            verify_ms_per_gc += 120.0;
+        }
+        if cfg.get_bool("VerifyAfterGC") {
+            verify_ms_per_gc += 120.0;
+        }
+
+        // --- JIT model ---
+        let tiered = cfg.get_bool("TieredCompilation");
+        let ct = cfg.get("CompileThreshold");
+        let t4 = cfg.get("Tier4InvocationThreshold");
+        let cic = cfg.get("CICompilerCount").max(1.0);
+        let warmup_s = if tiered {
+            26.0 * (ct / 10000.0).powf(0.35) * (t4 / 5000.0).powf(0.25)
+                / (cic / 4.0).powf(0.4)
+        } else {
+            52.0 * (ct / 10000.0).powf(0.5) / (cic / 4.0).powf(0.4)
+        };
+        let interp_speed = if tiered { 0.52 } else { 0.38 };
+
+        // Steady-state compiler speed: smooth bumps around non-default
+        // optima (the tuner's compiler headroom), normalized to 1.0 at the
+        // defaults.
+        let mut steady = 1.0;
+        steady += bump(cfg.get("MaxInlineSize"), 35.0, 90.0, 0.6, 0.055);
+        steady += bump(cfg.get("FreqInlineSize"), 325.0, 520.0, 0.7, 0.030);
+        steady += bump(cfg.get("InlineSmallCode"), 2000.0, 2600.0, 0.8, 0.020);
+        steady += bump(cfg.get("LoopUnrollLimit").max(1.0), 60.0, 110.0, 0.7, 0.025);
+        steady += bump(cfg.get("ReservedCodeCacheSize"), 240.0, 380.0, 0.8, 0.012);
+        if !cfg.get_bool("UseSuperWord") {
+            steady -= 0.035;
+        }
+        if !cfg.get_bool("DoEscapeAnalysis") {
+            steady -= 0.030;
+        }
+        if !cfg.get_bool("EliminateAllocations") {
+            steady -= 0.020;
+        }
+        if !cfg.get_bool("UseTLAB") {
+            steady -= 0.12;
+        }
+        if cfg.get_bool("AlwaysPreTouch") {
+            steady += 0.006;
+        }
+        if cfg.get_bool("UseLargePages") {
+            steady += 0.011;
+        }
+        if cfg.get_bool("UseNUMA") {
+            steady += 0.014;
+        }
+
+        // --- long tail: every other flag gets a tiny deterministic effect ---
+        let mut speed_tail = 1.0;
+        let mut pause_tail = 1.0;
+        for (f, &v) in cfg.defs().iter().zip(&cfg.values) {
+            if PRIMARY.contains(&f.name) || NOOP_FLAGS.contains(&f.name) {
+                continue;
+            }
+            let u = (f.normalize(v) - f.normalize(f.default_value())).abs();
+            if u <= 0.0 {
+                continue;
+            }
+            let h = fnv(f.name);
+            let amp = ((h >> 8) & 0xffff) as f64 / 65535.0; // [0,1)
+            let amp = 0.0035 * amp * amp; // long-tailed toward 0
+            let sign = if h & 1 == 0 { 1.0 } else { -1.0 };
+            if (h >> 1) & 1 == 0 {
+                speed_tail *= 1.0 + sign * amp * u;
+            } else {
+                pause_tail *= 1.0 + sign * 2.0 * amp * u;
+            }
+        }
+        steady *= speed_tail;
+
+        // --- G1 concurrent refinement overhead ---
+        let conc_overhead = if mode == GcMode::G1GC {
+            let refine = cfg.get("G1ConcRefinementThreads");
+            0.012 + 0.002 * (refine / 15.0 - 1.0).abs()
+        } else {
+            0.0
+        };
+
+        let full_trigger_frac = {
+            // ParallelGC runs a full GC when the old gen can no longer absorb
+            // a promotion wave; MaxHeapFreeRatio nudges the effective slack.
+            let mhfr = cfg.get("MaxHeapFreeRatio");
+            (0.92 + (mhfr - 70.0) / 1000.0).clamp(0.85, 0.97)
+        };
+
+        JvmParams {
+            mode,
+            heap_mb,
+            young_mb,
+            young_min_mb,
+            eden_frac,
+            survivor_mb,
+            target_survivor: cfg.get("TargetSurvivorRatio") / 100.0,
+            tenuring: cfg.get("MaxTenuringThreshold"),
+            gc_threads,
+            conc_threads,
+            pause_target_ms: cfg.get("MaxGCPauseMillis"),
+            ihop: match mode {
+                GcMode::G1GC => cfg.get("InitiatingHeapOccupancyPercent") / 100.0,
+                GcMode::ParallelGC => 1.0,
+            },
+            mixed_count_target: cfg.get("G1MixedGCCountTarget"),
+            mixed_live_threshold: cfg.get("G1MixedGCLiveThresholdPercent") / 100.0,
+            heap_waste_frac: cfg.get("G1HeapWastePercent") / 100.0,
+            full_trigger_frac,
+            minor_base_ms: 9.0 * pause_tail,
+            copy_rate: (copy_rate * copy_eff).max(0.02),
+            compact_rate: (compact_rate * copy_eff).max(0.01),
+            verify_ms_per_gc,
+            scavenge_before_full: cfg.get_bool("ScavengeBeforeFullGC"),
+            steady_speed: steady.max(0.3),
+            interp_speed,
+            warmup_s: warmup_s.clamp(1.0, 120.0),
+            alloc_scale,
+            live_scale,
+            conc_overhead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flags::FlagConfig;
+
+    fn defaults(mode: GcMode) -> JvmParams {
+        JvmParams::derive(&FlagConfig::default_for(mode), 81920.0, 20.0)
+    }
+
+    #[test]
+    fn default_steady_speed_is_one() {
+        for mode in [GcMode::ParallelGC, GcMode::G1GC] {
+            let p = defaults(mode);
+            assert!(
+                (p.steady_speed - 1.0).abs() < 1e-9,
+                "{}: steady={}",
+                mode.name(),
+                p.steady_speed
+            );
+        }
+    }
+
+    #[test]
+    fn default_heap_geometry_parallel() {
+        let p = defaults(GcMode::ParallelGC);
+        assert!((p.heap_mb - 24576.0).abs() < 1.0);
+        // NewRatio=2 -> young = heap/3, but capped by MaxNewSize=8192
+        assert!((p.young_mb - 8192.0).abs() < 1.0, "young={}", p.young_mb);
+        assert!(p.eden_frac > 0.7 && p.eden_frac < 0.9);
+    }
+
+    #[test]
+    fn default_g1_young_range() {
+        let p = defaults(GcMode::G1GC);
+        assert!((p.young_min_mb - 24576.0 * 0.05).abs() < 1.0);
+        assert!((p.young_mb - 24576.0 * 0.60).abs() < 1.0);
+        assert!((p.ihop - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heap_capped_by_executor_memory() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        cfg.set("MaxHeapSize", 65536.0);
+        let p = JvmParams::derive(&cfg, 40960.0, 20.0);
+        assert!(p.heap_mb <= 40960.0 * 0.92 + 1.0);
+    }
+
+    #[test]
+    fn compressed_oops_cliff_above_32g() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        cfg.set("MaxHeapSize", 32768.0);
+        let below = JvmParams::derive(&cfg, 81920.0, 20.0);
+        cfg.set("MaxHeapSize", 36864.0);
+        let above = JvmParams::derive(&cfg, 81920.0, 20.0);
+        assert_eq!(below.alloc_scale, 1.0);
+        assert!(above.alloc_scale > 1.1);
+        assert!(above.live_scale > 1.1);
+    }
+
+    #[test]
+    fn verify_flags_cost_pause_time() {
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        assert_eq!(defaults(GcMode::ParallelGC).verify_ms_per_gc, 0.0);
+        cfg.set("VerifyBeforeGC", 1.0);
+        cfg.set("VerifyAfterGC", 1.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        assert!(p.verify_ms_per_gc >= 200.0);
+    }
+
+    #[test]
+    fn tiered_off_slows_warmup() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        let on = JvmParams::derive(&cfg, 81920.0, 20.0);
+        cfg.set("TieredCompilation", 0.0);
+        let off = JvmParams::derive(&cfg, 81920.0, 20.0);
+        assert!(off.warmup_s > on.warmup_s);
+        assert!(off.interp_speed < on.interp_speed);
+    }
+
+    #[test]
+    fn lower_compile_threshold_warms_up_faster() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        let base = JvmParams::derive(&cfg, 81920.0, 20.0).warmup_s;
+        cfg.set("CompileThreshold", 1000.0);
+        cfg.set("Tier4InvocationThreshold", 1500.0);
+        let fast = JvmParams::derive(&cfg, 81920.0, 20.0).warmup_s;
+        assert!(fast < base * 0.7, "{fast} vs {base}");
+    }
+
+    #[test]
+    fn inline_tuning_beats_default_steady_speed() {
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("MaxInlineSize", 90.0);
+        cfg.set("FreqInlineSize", 520.0);
+        cfg.set("LoopUnrollLimit", 110.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        assert!(p.steady_speed > 1.03, "steady={}", p.steady_speed);
+    }
+
+    #[test]
+    fn disabling_tlab_is_expensive() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        cfg.set("UseTLAB", 0.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        assert!(p.steady_speed < 0.92);
+    }
+
+    #[test]
+    fn noop_flags_have_no_effect() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        let base = JvmParams::derive(&cfg, 81920.0, 20.0);
+        cfg.set("PrintGCDetails", 1.0);
+        cfg.set("PerfDataMemorySize", 128.0);
+        cfg.set("GCPauseIntervalMillis", 3000.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        assert_eq!(base.steady_speed, p.steady_speed);
+        assert_eq!(base.minor_base_ms, p.minor_base_ms);
+    }
+
+    #[test]
+    fn long_tail_flags_have_tiny_effect() {
+        let mut cfg = FlagConfig::default_for(GcMode::G1GC);
+        let base = JvmParams::derive(&cfg, 81920.0, 20.0);
+        cfg.set("SymbolTableSize", 1000003.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        let rel = (p.steady_speed / base.steady_speed - 1.0).abs();
+        assert!(rel < 0.005, "tail effect too large: {rel}");
+    }
+
+    #[test]
+    fn gc_threads_capped_and_effective() {
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("ParallelGCThreads", 40.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 10.0);
+        assert!(p.gc_threads <= 20.0); // 2x cores cap
+    }
+}

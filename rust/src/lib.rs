@@ -1,0 +1,65 @@
+//! # OneStopTuner
+//!
+//! A production-grade reproduction of *"OneStopTuner: An End to End
+//! Architecture for JVM Tuning of Spark Applications"* (cs.DC 2020) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the tuning pipeline: active-learning data
+//!   generation, lasso feature selection, Bayesian-optimization tuning, the
+//!   simulated-annealing baseline, the simulated Spark/JVM testbed, the CLI
+//!   and the REST API.
+//! * **L2/L1 (python/, build-time only)** — the ML compute graph (EMCM
+//!   scoring, GP + EI, ridge LR, lasso ISTA) written in JAX over Pallas
+//!   kernels and AOT-lowered to HLO artifacts.
+//! * **runtime/** — loads those artifacts via PJRT (`xla` crate) so Python
+//!   never runs on the tuning path.
+
+pub mod datagen;
+pub mod featsel;
+pub mod flags;
+pub mod jvmsim;
+pub mod native;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod sparksim;
+pub mod tuner;
+pub mod util;
+
+pub use flags::{FeatureEncoder, FlagConfig, GcMode};
+pub use sparksim::{Benchmark, RunMetrics, SparkRunner};
+
+/// Which metric the user optimizes (paper §IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Job execution time in seconds (minimize).
+    ExecTime,
+    /// Average heap-usage percentage, eq. (8)/(9) (minimize).
+    HeapUsage,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::ExecTime => "exec_time",
+            Metric::HeapUsage => "heap_usage",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "exec_time" | "exec-time" | "time" => Some(Metric::ExecTime),
+            "heap_usage" | "heap-usage" | "heap" => Some(Metric::HeapUsage),
+            _ => None,
+        }
+    }
+
+    /// Extract this metric from run metrics.
+    pub fn of(self, m: &RunMetrics) -> f64 {
+        match self {
+            Metric::ExecTime => m.exec_time_s,
+            Metric::HeapUsage => m.hu_avg_pct,
+        }
+    }
+}

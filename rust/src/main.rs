@@ -1,0 +1,363 @@
+//! OneStopTuner CLI — the leader entrypoint.
+//!
+//! ```text
+//! onestoptuner <command> [options]
+//!
+//! commands:
+//!   list-benchmarks                         Table I workloads
+//!   list-flags      --gc g1|parallel        flag catalog (PrintFlagsFinal-style)
+//!   run             --bench B --gc G [--seed N] [--set Flag=V ...]
+//!   characterize    --bench B --gc G [--metric M] [--strategy S] [--out F.csv]
+//!   select          --data F.csv --gc G [--metric M] [--lambda L] [--grid]
+//!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
+//!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
+//!   serve           [--port 7878]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use onestoptuner::datagen::{self, DataGenConfig, Dataset, Strategy};
+use onestoptuner::featsel;
+use onestoptuner::flags::{FlagConfig, GcMode, Kind};
+use onestoptuner::pipeline::{self, experiments, Algo, PipelineConfig};
+use onestoptuner::report::TextTable;
+use onestoptuner::runtime::load_backend;
+use onestoptuner::sparksim::SparkRunner;
+use onestoptuner::util::csv::Table;
+use onestoptuner::{Benchmark, Metric};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` options plus positional arguments.
+struct Opts {
+    positional: Vec<String>,
+    named: HashMap<String, Vec<String>>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Opts {
+        let mut positional = Vec::new();
+        let mut named: HashMap<String, Vec<String>> = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                named.entry(key.to_string()).or_default().push(value);
+                i += 1;
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Opts { positional, named }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.named.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.named.contains_key(key)
+    }
+
+    fn bench(&self) -> Result<Benchmark> {
+        self.get("bench")
+            .and_then(Benchmark::parse)
+            .context("--bench lda|densekmeans required")
+    }
+
+    fn gc(&self) -> Result<GcMode> {
+        self.get("gc").and_then(GcMode::parse).context("--gc g1|parallel required")
+    }
+
+    fn metric(&self) -> Metric {
+        self.get("metric").and_then(Metric::parse).unwrap_or(Metric::ExecTime)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..]);
+    match cmd {
+        "list-benchmarks" => list_benchmarks(),
+        "list-flags" => list_flags(&opts),
+        "run" => cmd_run(&opts),
+        "characterize" => cmd_characterize(&opts),
+        "select" => cmd_select(&opts),
+        "tune" => cmd_tune(&opts),
+        "repro" => cmd_repro(&opts),
+        "serve" => cmd_serve(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: onestoptuner help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "OneStopTuner — ML-based JVM flag autotuning for Spark applications\n\n\
+         usage: onestoptuner <command> [options]\n\n\
+         commands:\n\
+         \x20 list-benchmarks                        Table I workloads\n\
+         \x20 list-flags    --gc g1|parallel         flag catalog for a GC group\n\
+         \x20 run           --bench B --gc G [--seed N] [--set Flag=V ...]\n\
+         \x20 characterize  --bench B --gc G [--metric M] [--strategy bemcm|qbc|random] [--out data.csv]\n\
+         \x20 select        --data data.csv --gc G [--metric M] [--lambda 0.01] [--grid]\n\
+         \x20 tune          --bench B --gc G [--metric M] [--algo bo|rbo|bo-warm|sa|all] [--iters 20]\n\
+         \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
+         \x20 serve         [--port 7878]\n"
+    );
+}
+
+fn list_benchmarks() -> Result<()> {
+    let mut t = TextTable::new("Benchmarks (paper Table I)", &["Application", "Dataset", "input", "tasks"]);
+    for b in Benchmark::all() {
+        let s = b.spec();
+        t.row(vec![
+            s.name.to_string(),
+            s.dataset.to_string(),
+            format!("{} GB", s.input_gb),
+            s.n_tasks.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn list_flags(opts: &Opts) -> Result<()> {
+    let gc = opts.gc()?;
+    let cfg = FlagConfig::default_for(gc);
+    let mut t = TextTable::new(
+        format!("JVM flags, {} group ({} flags)", gc.name(), cfg.len()),
+        &["flag", "type", "range", "default"],
+    );
+    for f in cfg.defs() {
+        let (ty, range, default) = match f.kind {
+            Kind::Bool { default } => ("bool".to_string(), "-/+".to_string(), default.to_string()),
+            Kind::Int { min, max, default, log } => (
+                if log { "int (log)".into() } else { "int".into() },
+                format!("[{min}, {max}]"),
+                format!("{default}"),
+            ),
+        };
+        t.row(vec![f.name.to_string(), ty, range, default]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_run(opts: &Opts) -> Result<()> {
+    let bench = opts.bench()?;
+    let gc = opts.gc()?;
+    let seed: u64 = opts.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let mut cfg = FlagConfig::default_for(gc);
+    for kv in opts.get_all("set") {
+        let (name, value) = kv.split_once('=').context("--set needs Flag=Value")?;
+        let v: f64 = match value {
+            "true" | "+" => 1.0,
+            "false" | "-" => 0.0,
+            other => other.parse().with_context(|| format!("bad value for {name}"))?,
+        };
+        cfg.set(name, v);
+    }
+    let m = SparkRunner::paper_default(bench).run(&cfg, seed);
+    println!("benchmark:     {} ({})", bench.name(), gc.name());
+    println!("exec time:     {:.1} s{}", m.exec_time_s, if m.timed_out { "  [FAILED]" } else { "" });
+    println!("heap usage:    {:.1} %", m.hu_avg_pct);
+    println!(
+        "gc:            {} minor, {} mixed, {} full, {} conc cycles",
+        m.gc.minor, m.gc.mixed, m.gc.full, m.gc.conc_cycles
+    );
+    println!("total pause:   {:.0} ms (max {:.0} ms)", m.gc.total_pause_ms, m.gc.max_pause_ms);
+    println!("java args:     {}", cfg.to_java_args());
+    Ok(())
+}
+
+fn datagen_config(opts: &Opts) -> DataGenConfig {
+    let mut dg = DataGenConfig::default();
+    if let Some(v) = opts.get("pool").and_then(|s| s.parse().ok()) {
+        dg.pool_size = v;
+    }
+    if let Some(v) = opts.get("rounds").and_then(|s| s.parse().ok()) {
+        dg.max_rounds = v;
+    }
+    if let Some(v) = opts.get("batch").and_then(|s| s.parse().ok()) {
+        dg.batch_k = v;
+    }
+    if let Some(v) = opts.get("seed").and_then(|s| s.parse().ok()) {
+        dg.seed = v;
+    }
+    dg
+}
+
+fn cmd_characterize(opts: &Opts) -> Result<()> {
+    let bench = opts.bench()?;
+    let gc = opts.gc()?;
+    let metric = opts.metric();
+    let strategy = opts
+        .get("strategy")
+        .and_then(Strategy::parse)
+        .unwrap_or(Strategy::Bemcm);
+    let backend = load_backend("artifacts");
+    let runner = SparkRunner::paper_default(bench);
+    let dg = datagen_config(opts);
+    let r = datagen::characterize(&runner, gc, metric, strategy, &dg, &backend)?;
+    println!(
+        "characterized {} ({}) for {} via {}: {} labelled samples, {} runs, {} AL rounds",
+        bench.name(),
+        gc.name(),
+        metric.name(),
+        strategy.name(),
+        r.dataset.len(),
+        r.runs_executed,
+        r.rounds
+    );
+    println!(
+        "validation RMSE: {}",
+        r.rmse_history.iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>().join(" -> ")
+    );
+    println!("simulated benchmark time: {:.0} s", r.sim_time_s);
+    let out = opts.get("out").unwrap_or("data.csv");
+    r.dataset.to_table().save(out)?;
+    println!("dataset written to {out}");
+    Ok(())
+}
+
+fn cmd_select(opts: &Opts) -> Result<()> {
+    let gc = opts.gc()?;
+    let metric = opts.metric();
+    let path = opts.get("data").context("--data data.csv required")?;
+    let table = Table::load(path).map_err(|e| anyhow::anyhow!(e))?;
+    let ds = Dataset::from_table(&table, gc, metric)?;
+    let backend = load_backend("artifacts");
+
+    if opts.has("grid") {
+        let lambdas = [0.001, 0.003, 0.01, 0.03, 0.1];
+        let (best, grid) = featsel::grid_search_lambda(&ds, &lambdas, &backend)?;
+        let mut t = TextTable::new("lambda grid search", &["lambda", "holdout MSE", "flags kept"]);
+        for (lam, mse, kept) in grid {
+            t.row(vec![format!("{lam}"), format!("{mse:.4}"), kept.to_string()]);
+        }
+        print!("{}", t.render());
+        println!("best lambda: {best}");
+        return Ok(());
+    }
+
+    let lambda: f64 =
+        opts.get("lambda").map(|s| s.parse()).transpose()?.unwrap_or(featsel::DEFAULT_LAMBDA);
+    let sel = featsel::select_flags(&ds, lambda, &backend)?;
+    println!(
+        "lasso (lambda={lambda}) kept {} of {} flags for {}:",
+        sel.n_selected(),
+        sel.group_size,
+        metric.name()
+    );
+    for name in &sel.names {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn cmd_tune(opts: &Opts) -> Result<()> {
+    let bench = opts.bench()?;
+    let gc = opts.gc()?;
+    let metric = opts.metric();
+    let iters: usize = opts.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(20);
+    let algos: Vec<Algo> = match opts.get("algo").unwrap_or("all") {
+        "all" => Algo::all().to_vec(),
+        s => vec![Algo::parse(s).context("--algo bo|rbo|bo-warm|sa|all")?],
+    };
+    let backend = load_backend("artifacts");
+    let mut cfg = PipelineConfig { tune_iters: iters, ..Default::default() };
+    cfg.datagen = datagen_config(opts);
+
+    let out = pipeline::run_pipeline(bench, gc, metric, &algos, &cfg, &backend)?;
+    println!(
+        "characterization: {} runs; lasso kept {}/{} flags",
+        out.characterization.runs_executed,
+        out.selection.n_selected(),
+        out.selection.group_size
+    );
+    println!(
+        "default {}: {:.2} +- {:.2} ({} runs)\n",
+        metric.name(),
+        out.default_summary.mean,
+        out.default_summary.std,
+        out.default_summary.n
+    );
+    let mut t = TextTable::new(
+        format!("tuning results — {} ({}), {}", bench.name(), gc.name(), metric.name()),
+        &["algorithm", "tuned (mean +- std)", "improvement", "tuning time [s]", "evals"],
+    );
+    for o in &out.outcomes {
+        t.row(vec![
+            o.algo.name().to_string(),
+            format!("{:.2} +- {:.2}", o.tuned_summary.mean, o.tuned_summary.std),
+            format!("{:.2}x", o.improvement),
+            format!("{:.0}", o.tuning_time_s),
+            o.tune.evals.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    if let Some(best) = out
+        .outcomes
+        .iter()
+        .max_by(|a, b| a.improvement.partial_cmp(&b.improvement).unwrap())
+    {
+        println!("\nbest ({}) java args:\n{}", best.algo.name(), best.tune.best_config.to_java_args());
+    }
+    Ok(())
+}
+
+fn cmd_repro(opts: &Opts) -> Result<()> {
+    let what = opts.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let out_dir = opts.get("out").unwrap_or("results").to_string();
+    let backend = load_backend("artifacts");
+    let mut ctx = experiments::ExperimentCtx::new(backend, &out_dir);
+    if opts.has("fast") {
+        ctx = ctx.fast();
+    }
+    let text = match what {
+        "table1" => experiments::run_table1(&ctx)?,
+        "table2" => experiments::run_table2(&ctx)?,
+        "table3" | "fig3" | "timing" | "exec" => experiments::run_exec_time(&ctx)?,
+        "table4" | "fig7" | "heap" => experiments::run_heap_usage(&ctx)?,
+        "fig4" => experiments::run_fig4(&ctx)?,
+        "fig5" => experiments::run_fig5(&ctx)?,
+        "fig6" => experiments::run_fig6(&ctx)?,
+        "all" => experiments::run_all(&ctx)?,
+        other => bail!("unknown experiment '{other}'"),
+    };
+    println!("{text}");
+    println!("(results written under {out_dir}/)");
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    let port: u16 = opts.get("port").map(|s| s.parse()).transpose()?.unwrap_or(7878);
+    let backend = load_backend("artifacts");
+    onestoptuner::server::serve_forever(&format!("127.0.0.1:{port}"), backend)?;
+    Ok(())
+}

@@ -1,0 +1,253 @@
+//! Dense linear algebra for the native (pure-rust) ML backend: row-major
+//! matrices, Cholesky factorization and triangular solves — mirrors of what
+//! the L2 JAX graph does inside the HLO artifacts.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols);
+            data.extend_from_slice(r);
+        }
+        Mat { rows: rows.len(), cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// self * v
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(v) {
+                acc += a * b;
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// self^T * v
+    pub fn tmatvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let vi = v[i];
+            for (o, a) in out.iter_mut().zip(row) {
+                *o += a * vi;
+            }
+        }
+        out
+    }
+
+    /// self^T * self (Gram matrix), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let d = self.cols;
+        let mut g = Mat::zeros(d, d);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..d {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let gi = &mut g.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    gi[j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..i {
+                g.data[i * d + j] = g.data[j * d + i];
+            }
+        }
+        g
+    }
+}
+
+/// In-place Cholesky: returns lower-triangular L with A = L L^T.
+/// Fails (None) if A is not positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = sum.sqrt();
+            } else {
+                *l.at_mut(i, j) = sum / l.at(j, j);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L x = b (L lower-triangular).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.at(i, k) * x[k];
+        }
+        x[i] = sum / l.at(i, i);
+    }
+    x
+}
+
+/// Solve L^T x = b (L lower-triangular, solving the transposed system).
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = b[i];
+        for k in (i + 1)..n {
+            sum -= l.at(k, i) * x[k];
+        }
+        x[i] = sum / l.at(i, i);
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_spd(n: usize, rng: &mut Pcg) -> Mat {
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let x = Mat::from_rows(&rows);
+        let mut g = x.gram();
+        for i in 0..n {
+            *g.at_mut(i, i) += n as f64; // well-conditioned
+        }
+        g
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(m.tmatvec(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let mut rng = Pcg::new(1);
+        let rows: Vec<Vec<f64>> =
+            (0..7).map(|_| (0..5).map(|_| rng.normal()).collect()).collect();
+        let x = Mat::from_rows(&rows);
+        let g = x.gram();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want: f64 = rows.iter().map(|r| r[i] * r[j]).sum();
+                assert!((g.at(i, j) - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg::new(2);
+        let a = random_spd(12, &mut rng);
+        let l = cholesky(&a).unwrap();
+        for i in 0..12 {
+            for j in 0..12 {
+                let mut s = 0.0;
+                for k in 0..12 {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - a.at(i, j)).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_roundtrip() {
+        let mut rng = Pcg::new(3);
+        let a = random_spd(20, &mut rng);
+        let x_true: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let b = a.matvec(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn triangular_solves_inverse_each_other() {
+        let mut rng = Pcg::new(4);
+        let a = random_spd(9, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let y = solve_lower(&l, &b);
+        // L y = b
+        for i in 0..9 {
+            let mut s = 0.0;
+            for k in 0..=i {
+                s += l.at(i, k) * y[k];
+            }
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+        let z = solve_lower_t(&l, &b);
+        for i in 0..9 {
+            let mut s = 0.0;
+            for k in i..9 {
+                s += l.at(k, i) * z[k];
+            }
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+}

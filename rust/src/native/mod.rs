@@ -1,0 +1,4 @@
+//! Pure-rust mirrors of the L1/L2 compute (cross-check + fallback backend).
+
+pub mod linalg;
+pub mod ops;

@@ -1,0 +1,286 @@
+//! Pure-rust mirrors of the four L2 artifacts (EMCM scoring, GP+EI, ridge
+//! LR, lasso ISTA).  Algorithmically identical to python/compile/model.py —
+//! integration tests cross-check them against the HLO artifacts through
+//! PJRT, and they double as the fallback backend when artifacts are absent.
+
+use super::linalg::{cholesky, solve_lower, solve_lower_t, solve_spd, Mat};
+
+pub const SQRT2: f64 = std::f64::consts::SQRT_2;
+pub const INV_SQRT_2PI: f64 = 0.3989422804014327;
+
+/// erf via Abramowitz & Stegun 7.1.26 (|err| <= 1.5e-7), enough to match
+/// the f32 kernels.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / SQRT2))
+}
+
+pub fn norm_pdf(z: f64) -> f64 {
+    INV_SQRT_2PI * (-0.5 * z * z).exp()
+}
+
+/// EMCM score per candidate (mirror of kernels/emcm.py):
+/// `mean_z |f_z(x) - f0(x)| * ||x||`.
+pub fn emcm_score(w_ens: &[Vec<f64>], w0: &[f64], x: &[Vec<f64>]) -> Vec<f64> {
+    x.iter()
+        .map(|xi| {
+            let fbar: f64 = xi.iter().zip(w0).map(|(a, b)| a * b).sum();
+            let mut resid = 0.0;
+            for wz in w_ens {
+                let fz: f64 = xi.iter().zip(wz).map(|(a, b)| a * b).sum();
+                resid += (fz - fbar).abs();
+            }
+            let norm: f64 = xi.iter().map(|a| a * a).sum::<f64>().sqrt();
+            (resid / w_ens.len() as f64) * norm
+        })
+        .collect()
+}
+
+/// Expected improvement for minimization (mirror of kernels/ei.py).
+pub fn expected_improvement(mu: f64, sigma: f64, best: f64) -> f64 {
+    if sigma <= 1e-9 {
+        return (best - mu).max(0.0);
+    }
+    let z = (best - mu) / sigma;
+    (sigma * (z * norm_cdf(z) + norm_pdf(z))).max(0.0)
+}
+
+/// Ridge linear regression via normal equations (mirror of lr_fit).
+pub fn lr_fit(x: &[Vec<f64>], y: &[f64], ridge: f64) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    let m = Mat::from_rows(x);
+    let mut a = m.gram();
+    for i in 0..a.rows {
+        *a.at_mut(i, i) += ridge;
+    }
+    let b = m.tmatvec(y);
+    solve_spd(&a, &b).expect("ridge-regularized normal equations must be SPD")
+}
+
+pub fn lr_predict(w: &[f64], x: &[f64]) -> f64 {
+    w.iter().zip(x).map(|(a, b)| a * b).sum()
+}
+
+/// Lasso via ISTA with power-iteration Lipschitz estimate (mirror of
+/// lasso_fit: same objective (1/2n)||y - Xw||^2 + lam ||w||_1, same
+/// iteration counts).
+pub fn lasso_fit(x: &[Vec<f64>], y: &[f64], lam: f64, iters: usize) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let m = Mat::from_rows(x);
+    let mut gram = m.gram();
+    for v in gram.data.iter_mut() {
+        *v /= n;
+    }
+    let mut xty = m.tmatvec(y);
+    for v in xty.iter_mut() {
+        *v /= n;
+    }
+    let d = gram.rows;
+
+    // Power iteration for the max eigenvalue.
+    let mut v = vec![1.0 / (d as f64).sqrt(); d];
+    for _ in 0..16 {
+        let gv = gram.matvec(&v);
+        let norm: f64 = gv.iter().map(|a| a * a).sum::<f64>().sqrt().max(1e-12);
+        v = gv.into_iter().map(|a| a / norm).collect();
+    }
+    let gv = gram.matvec(&v);
+    let lmax: f64 = v.iter().zip(&gv).map(|(a, b)| a * b).sum::<f64>().max(1e-6);
+    let step = 1.0 / (lmax * 1.01);
+    let thr = step * lam;
+
+    let mut w = vec![0.0; d];
+    for _ in 0..iters {
+        let grad = {
+            let mut g = gram.matvec(&w);
+            for (gi, bi) in g.iter_mut().zip(&xty) {
+                *gi -= bi;
+            }
+            g
+        };
+        for j in 0..d {
+            let u = w[j] - step * grad[j];
+            w[j] = u.signum() * (u.abs() - thr).max(0.0);
+        }
+    }
+    w
+}
+
+/// RBF kernel row block: K[i][j] = sf2 exp(-||a_i-b_j||^2/(2 l^2)).
+pub fn rbf(a: &[Vec<f64>], b: &[Vec<f64>], lengthscale: f64, sf2: f64) -> Vec<Vec<f64>> {
+    let inv = 1.0 / (2.0 * lengthscale * lengthscale);
+    a.iter()
+        .map(|ai| {
+            b.iter()
+                .map(|bj| {
+                    let sq: f64 =
+                        ai.iter().zip(bj).map(|(x, y)| (x - y) * (x - y)).sum();
+                    sf2 * (-sq * inv).exp()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// GP posterior + EI at candidates (mirror of gp_ei):
+/// returns (ei, mu, sigma) per candidate.
+pub fn gp_ei(
+    xtr: &[Vec<f64>],
+    ytr: &[f64],
+    xc: &[Vec<f64>],
+    lengthscale: f64,
+    sigma_f2: f64,
+    sigma_n2: f64,
+    best: f64,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let n = xtr.len();
+    assert_eq!(ytr.len(), n);
+    let mut k = rbf(xtr, xtr, lengthscale, sigma_f2);
+    for (i, row) in k.iter_mut().enumerate() {
+        row[i] += sigma_n2;
+    }
+    let km = Mat::from_rows(&k);
+    let l = cholesky(&km).expect("GP kernel matrix must be PD (jitter too small?)");
+    let alpha = solve_lower_t(&l, &solve_lower(&l, ytr));
+
+    let kc = rbf(xc, xtr, lengthscale, sigma_f2);
+    let mut mu = Vec::with_capacity(xc.len());
+    let mut sigma = Vec::with_capacity(xc.len());
+    let mut ei = Vec::with_capacity(xc.len());
+    for kci in &kc {
+        let m: f64 = kci.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        let v = solve_lower(&l, kci);
+        let var = (sigma_f2 - v.iter().map(|a| a * a).sum::<f64>()).max(1e-12);
+        let s = var.sqrt();
+        mu.push(m);
+        sigma.push(s);
+        ei.push(expected_improvement(m, s, best));
+    }
+    (ei, mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
+        (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(0)=0, erf(1)=0.8427007929, erf(-1)=-erf(1), erf(inf)->1
+        assert!(erf(0.0).abs() < 1e-6); // A&S 7.1.26 is ~1e-7 accurate
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(4.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ei_properties() {
+        // certain improvement
+        assert!((expected_improvement(0.0, 1e-12, 1.0) - 1.0).abs() < 1e-9);
+        // no improvement, no uncertainty
+        assert_eq!(expected_improvement(2.0, 0.0, 1.0), 0.0);
+        // more uncertainty -> more EI at same mean
+        let lo = expected_improvement(1.0, 0.1, 0.0);
+        let hi = expected_improvement(1.0, 2.0, 0.0);
+        assert!(hi > lo);
+        assert!(expected_improvement(0.5, 0.5, 0.0) >= 0.0);
+    }
+
+    #[test]
+    fn emcm_zero_for_identical_ensemble() {
+        let mut rng = Pcg::new(5);
+        let w0: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let w_ens = vec![w0.clone(), w0.clone(), w0.clone()];
+        let x = rand_rows(10, 8, &mut rng);
+        let s = emcm_score(&w_ens, &w0, &x);
+        assert!(s.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn lr_fit_recovers_weights() {
+        let mut rng = Pcg::new(6);
+        let w_true: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let x = rand_rows(200, 6, &mut rng);
+        let y: Vec<f64> = x.iter().map(|r| lr_predict(&w_true, r)).collect();
+        let w = lr_fit(&x, &y, 1e-8);
+        for (a, b) in w.iter().zip(&w_true) {
+            assert!((a - b).abs() < 1e-5, "{w:?} vs {w_true:?}");
+        }
+    }
+
+    #[test]
+    fn lasso_sparsifies_and_finds_support() {
+        let mut rng = Pcg::new(7);
+        let d = 30;
+        let x = rand_rows(150, d, &mut rng);
+        let mut w_true = vec![0.0; d];
+        w_true[3] = 2.0;
+        w_true[17] = -1.5;
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| lr_predict(&w_true, r) + 0.01 * rng.normal())
+            .collect();
+        let w = lasso_fit(&x, &y, 0.02, 400);
+        assert!(w[3] > 0.5, "{}", w[3]);
+        assert!(w[17] < -0.5, "{}", w[17]);
+        let nnz = w.iter().filter(|v| v.abs() > 1e-6).count();
+        assert!(nnz < d / 2, "nnz={nnz}");
+    }
+
+    #[test]
+    fn lasso_huge_lambda_all_zero() {
+        let mut rng = Pcg::new(8);
+        let x = rand_rows(50, 10, &mut rng);
+        let y: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let w = lasso_fit(&x, &y, 1e6, 100);
+        assert!(w.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gp_interpolates_with_small_noise() {
+        let mut rng = Pcg::new(9);
+        let x = rand_rows(25, 4, &mut rng);
+        let y: Vec<f64> = x.iter().map(|r| (r[0] * 3.0).sin() + r[1]).collect();
+        // predicting at the training points themselves
+        let (_, mu_tr, sig_tr) = gp_ei(&x, &y, &x, 1.0, 1.0, 1e-6, 0.0);
+        for (m, yi) in mu_tr.iter().zip(&y) {
+            assert!((m - yi).abs() < 1e-3, "{m} vs {yi}");
+        }
+        assert!(sig_tr.iter().all(|&s| s < 1e-2));
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let xtr = vec![vec![0.0], vec![0.1], vec![0.2]];
+        let ytr = vec![0.0, 0.1, 0.2];
+        let xc = vec![vec![0.1], vec![5.0]];
+        let (_, _, sigma) = gp_ei(&xtr, &ytr, &xc, 0.5, 1.0, 1e-4, 0.0);
+        assert!(sigma[1] > sigma[0] * 5.0, "{sigma:?}");
+    }
+
+    #[test]
+    fn rbf_diag_is_sf2() {
+        let mut rng = Pcg::new(10);
+        let x = rand_rows(5, 3, &mut rng);
+        let k = rbf(&x, &x, 1.0, 2.5);
+        for i in 0..5 {
+            assert!((k[i][i] - 2.5).abs() < 1e-12);
+        }
+    }
+}

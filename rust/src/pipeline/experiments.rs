@@ -1,0 +1,707 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (§V).  Each `run_*` returns rendered text and writes text +
+//! CSV under `results/`.  DESIGN.md's per-experiment index maps paper
+//! artifact -> driver here -> modules exercised.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Algo, PipelineConfig};
+use crate::datagen::{self, DataGenConfig, Strategy};
+use crate::featsel;
+use crate::flags::{FlagConfig, GcMode};
+use crate::report::{bar_chart, line_plot, save_result, TextTable};
+use crate::runtime::MlBackend;
+use crate::sparksim::{ClusterSpec, ExecutorSpec, SparkRunner};
+use crate::tuner::{BoTuner, ParallelSimObjective, TuneSpace, Tuner};
+use crate::util::csv::Table;
+use crate::{Benchmark, Metric};
+
+/// Shared context for all experiment drivers.
+pub struct ExperimentCtx {
+    pub backend: Arc<dyn MlBackend>,
+    pub cfg: PipelineConfig,
+    pub out_dir: PathBuf,
+}
+
+impl ExperimentCtx {
+    pub fn new(backend: Arc<dyn MlBackend>, out_dir: impl Into<PathBuf>) -> Self {
+        ExperimentCtx { backend, cfg: PipelineConfig::default(), out_dir: out_dir.into() }
+    }
+
+    /// Reduced-budget settings for smoke runs (`repro --fast`).
+    pub fn fast(mut self) -> Self {
+        self.cfg.datagen = DataGenConfig {
+            pool_size: 200,
+            seed_runs: 20,
+            test_runs: 12,
+            batch_k: 16,
+            max_rounds: 4,
+            rmse_rel_tol: 0.0,
+            ridge: 1e-3,
+            seed: self.cfg.datagen.seed,
+        };
+        self.cfg.tune_iters = 8;
+        self.cfg.repeats = 4;
+        self.cfg.bo.n_candidates = 512;
+        self
+    }
+
+    fn save(&self, name: &str, text: &str) -> Result<()> {
+        save_result(&self.out_dir, name, text)?;
+        Ok(())
+    }
+}
+
+const GRID: [(Benchmark, GcMode); 4] = [
+    (Benchmark::Lda, GcMode::ParallelGC),
+    (Benchmark::Lda, GcMode::G1GC),
+    (Benchmark::DenseKMeans, GcMode::ParallelGC),
+    (Benchmark::DenseKMeans, GcMode::G1GC),
+];
+
+fn case_name(bench: Benchmark, mode: GcMode) -> String {
+    let short = if bench == Benchmark::DenseKMeans { "DK" } else { "LDA" };
+    format!("{short}, {}", mode.name())
+}
+
+// ---------------------------------------------------------------------------
+// Table II — flags selected by lasso
+// ---------------------------------------------------------------------------
+
+/// Table II: lasso-selected flag counts per (benchmark, GC, metric).
+pub fn run_table2(ctx: &ExperimentCtx) -> Result<String> {
+    let mut table = TextTable::new(
+        "Table II: Flags selected by lasso regression (of group size)",
+        &["benchmark", "# flags exec. time", "# flags heap usage", "group"],
+    );
+    let mut csv = Table::new(vec![
+        "bench".into(),
+        "g1".into(),
+        "exec_flags".into(),
+        "heap_flags".into(),
+        "group_size".into(),
+    ]);
+    for (bench, mode) in GRID {
+        let runner = SparkRunner::paper_default(bench);
+        let mut counts = Vec::new();
+        for metric in [Metric::ExecTime, Metric::HeapUsage] {
+            let ch = datagen::characterize(
+                &runner,
+                mode,
+                metric,
+                Strategy::Bemcm,
+                &ctx.cfg.datagen,
+                &ctx.backend,
+            )?;
+            let sel = featsel::select_flags(&ch.dataset, ctx.cfg.lambda, &ctx.backend)?;
+            counts.push((sel.n_selected(), sel.group_size));
+        }
+        table.row(vec![
+            case_name(bench, mode),
+            counts[0].0.to_string(),
+            counts[1].0.to_string(),
+            counts[0].1.to_string(),
+        ]);
+        csv.push(vec![
+            if bench == Benchmark::Lda { 0.0 } else { 1.0 },
+            if mode == GcMode::G1GC { 1.0 } else { 0.0 },
+            counts[0].0 as f64,
+            counts[1].0 as f64,
+            counts[0].1 as f64,
+        ]);
+    }
+    let text = table.render();
+    ctx.save("table2.txt", &text)?;
+    csv.save(ctx.out_dir.join("table2.csv")).map_err(anyhow::Error::from)?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------------
+// Table III + Fig 3 — execution-time tuning
+// ---------------------------------------------------------------------------
+
+/// Table III (speedups) + Fig 3 (default-vs-tuned bars), one pipeline run
+/// per (benchmark, GC) with all four algorithms.
+pub fn run_exec_time(ctx: &ExperimentCtx) -> Result<String> {
+    let algos = [Algo::Bo, Algo::Rbo, Algo::BoWarm, Algo::Sa];
+    let mut table = TextTable::new(
+        "Table III: Execution-time speedups over default",
+        &["Benchmark, GC", "BO", "RBO", "BO, warm start", "SA"],
+    );
+    let mut csv = Table::new(vec![
+        "case".into(),
+        "default_mean".into(),
+        "bo".into(),
+        "rbo".into(),
+        "bo_warm".into(),
+        "sa".into(),
+    ]);
+    let mut figs = String::new();
+    let mut timing_rows: Vec<(String, f64, f64)> = Vec::new();
+
+    for (i, (bench, mode)) in GRID.iter().enumerate() {
+        let out = super::run_pipeline(
+            *bench,
+            *mode,
+            Metric::ExecTime,
+            &algos,
+            &ctx.cfg,
+            &ctx.backend,
+        )?;
+        let sp: Vec<f64> = out.outcomes.iter().map(|o| o.improvement).collect();
+        table.row(vec![
+            case_name(*bench, *mode),
+            format!("{:.2}x", sp[0]),
+            format!("{:.2}x", sp[1]),
+            format!("{:.2}x", sp[2]),
+            format!("{:.2}x", sp[3]),
+        ]);
+        csv.push(vec![i as f64, out.default_summary.mean, sp[0], sp[1], sp[2], sp[3]]);
+
+        // Fig 3 panel: mean +- std execution times.
+        let mut labels = vec!["default".to_string()];
+        let mut values = vec![out.default_summary.mean];
+        for o in &out.outcomes {
+            labels.push(o.algo.name().to_string());
+            values.push(o.tuned_summary.mean);
+        }
+        figs.push_str(&bar_chart(
+            &format!(
+                "Fig 3({}): execution time, {} (mean of {} runs, default std {:.1})",
+                char::from(b'a' + i as u8),
+                case_name(*bench, *mode),
+                out.default_summary.n,
+                out.default_summary.std
+            ),
+            &labels,
+            &values,
+            "s",
+        ));
+        figs.push('\n');
+
+        // §V-C timing inputs: OneStopTuner (BO warm) vs SA tuning time.
+        let warm_t = out.outcomes[2].tuning_time_s + out.characterization.sim_time_s * 0.0;
+        let sa_t = out.outcomes[3].tuning_time_s;
+        timing_rows.push((case_name(*bench, *mode), warm_t, sa_t));
+    }
+
+    let table_text = table.render();
+    ctx.save("table3.txt", &table_text)?;
+    csv.save(ctx.out_dir.join("table3.csv")).map_err(anyhow::Error::from)?;
+    ctx.save("fig3.txt", &figs)?;
+
+    let mut timing = TextTable::new(
+        "SectionV-C: time to tune (20 iterations, excluding data generation)",
+        &["case", "OneStopTuner (BO warm) [s]", "SA [s]", "speedup"],
+    );
+    for (case, a, b) in &timing_rows {
+        timing.row(vec![
+            case.clone(),
+            format!("{a:.0}"),
+            format!("{b:.0}"),
+            format!("{:.2}x", b / a.max(1e-9)),
+        ]);
+    }
+    let timing_text = timing.render();
+    ctx.save("timing.txt", &timing_text)?;
+
+    Ok(format!("{table_text}\n{figs}\n{timing_text}"))
+}
+
+// ---------------------------------------------------------------------------
+// Table IV + Fig 7 — heap-usage tuning
+// ---------------------------------------------------------------------------
+
+/// Table IV (heap-usage improvement %) + Fig 7 (default-vs-tuned HU bars).
+pub fn run_heap_usage(ctx: &ExperimentCtx) -> Result<String> {
+    let algos = [Algo::Bo, Algo::Rbo, Algo::BoWarm, Algo::Sa];
+    let mut table = TextTable::new(
+        "Table IV: Heap-usage improvements over default usage",
+        &["benchmark, GC", "BO", "RBO", "BO, warm start", "SA"],
+    );
+    let mut csv = Table::new(vec![
+        "case".into(),
+        "default_hu".into(),
+        "bo".into(),
+        "rbo".into(),
+        "bo_warm".into(),
+        "sa".into(),
+    ]);
+    let mut figs = String::new();
+    for (i, (bench, mode)) in GRID.iter().enumerate() {
+        let out = super::run_pipeline(
+            *bench,
+            *mode,
+            Metric::HeapUsage,
+            &algos,
+            &ctx.cfg,
+            &ctx.backend,
+        )?;
+        // Improvement = % reduction of average HU.
+        let impr: Vec<f64> = out
+            .outcomes
+            .iter()
+            .map(|o| {
+                100.0 * (out.default_summary.mean - o.tuned_summary.mean)
+                    / out.default_summary.mean.max(1e-9)
+            })
+            .collect();
+        table.row(vec![
+            case_name(*bench, *mode),
+            format!("{:.2}%", impr[0]),
+            format!("{:.2}%", impr[1]),
+            format!("{:.2}%", impr[2]),
+            format!("{:.2}%", impr[3]),
+        ]);
+        csv.push(vec![i as f64, out.default_summary.mean, impr[0], impr[1], impr[2], impr[3]]);
+
+        let mut labels = vec!["default".to_string()];
+        let mut values = vec![out.default_summary.mean];
+        for o in &out.outcomes {
+            labels.push(o.algo.name().to_string());
+            values.push(o.tuned_summary.mean);
+        }
+        figs.push_str(&bar_chart(
+            &format!(
+                "Fig 7({}): heap usage %, {}",
+                char::from(b'a' + i as u8),
+                case_name(*bench, *mode)
+            ),
+            &labels,
+            &values,
+            "%",
+        ));
+        figs.push('\n');
+    }
+    let text = table.render();
+    ctx.save("table4.txt", &text)?;
+    csv.save(ctx.out_dir.join("table4.csv")).map_err(anyhow::Error::from)?;
+    ctx.save("fig7.txt", &figs)?;
+    Ok(format!("{text}\n{figs}"))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 — RBO with AL-trained LR vs LR on more random data
+// ---------------------------------------------------------------------------
+
+/// Fig 4: predicted-vs-actual execution time for the AL-trained LR (fewer
+/// samples) against an LR trained on ~3x more randomly-selected samples.
+pub fn run_fig4(ctx: &ExperimentCtx) -> Result<String> {
+    let bench = Benchmark::Lda;
+    let mode = GcMode::G1GC;
+    let metric = Metric::ExecTime;
+    let runner = SparkRunner::paper_default(bench);
+
+    // AL dataset (scaled mirror of the paper's 600-sample AL model).
+    let ch = datagen::characterize(
+        &runner,
+        mode,
+        metric,
+        Strategy::Bemcm,
+        &ctx.cfg.datagen,
+        &ctx.backend,
+    )?;
+    let al_pred =
+        crate::tuner::objective::PredictorObjective::fit(&ch.dataset, 1e-3, &ctx.backend)?;
+
+    // Random dataset ~3x larger (the paper's 2000-sample non-AL model).
+    // It exceeds the 256-row XLA artifact budget, so this *baseline* model
+    // is fit with the native mirror (the AL model above went through the
+    // artifact path).
+    let enc = crate::flags::FeatureEncoder::new(mode);
+    let mut rng = crate::util::rng::Pcg::new(0xf1644);
+    let default_run = runner.run(&FlagConfig::default_for(mode), 0xf00);
+    let cap = 5.0 * default_run.exec_time_s;
+    let n_big = 3 * ch.dataset.len();
+    let mut big_x = Vec::with_capacity(n_big);
+    let mut big_y = Vec::with_capacity(n_big);
+    for i in 0..n_big {
+        let cfg = FlagConfig::random(mode, &mut rng);
+        big_x.push(enc.encode(&cfg));
+        big_y.push(runner.run(&cfg, 0xb16 + i as u64).exec_time_s.min(cap));
+    }
+    let xsc = crate::util::stats::Standardizer::fit(&big_x);
+    let ysc = crate::util::stats::TargetScaler::fit(&big_y);
+    let ystd: Vec<f64> = big_y.iter().map(|&v| ysc.transform(v)).collect();
+    let w_rnd = crate::native::ops::lr_fit(&xsc.transform(&big_x), &ystd, 1e-3);
+    let rnd_predict = |cfg: &FlagConfig| -> f64 {
+        let f = xsc.transform_row(&enc.encode(cfg));
+        ysc.inverse(crate::native::ops::lr_predict(&w_rnd, &f))
+    };
+    // ... and a random model at the *same* budget as the AL model (the
+    // like-for-like comparison of sample efficiency).
+    let n_match = ch.dataset.len().min(big_x.len());
+    let w_match = crate::native::ops::lr_fit(
+        &xsc.transform(&big_x[..n_match]),
+        &ystd[..n_match],
+        1e-3,
+    );
+    let match_predict = |cfg: &FlagConfig| -> f64 {
+        let f = xsc.transform_row(&enc.encode(cfg));
+        ysc.inverse(crate::native::ops::lr_predict(&w_match, &f))
+    };
+
+    // Evaluate both predictors on fresh configs that actually complete
+    // (failed runs are what the adaptive cap screens out during data
+    // generation; the paper's Fig 4 plots completing runs).
+    let n_eval = 24u64;
+    let mut actual = Vec::new();
+    let mut pred_al = Vec::new();
+    let mut pred_rnd = Vec::new();
+    let mut pred_match = Vec::new();
+    let mut tries = 0u64;
+    while actual.len() < n_eval as usize && tries < 400 {
+        tries += 1;
+        let cfg = FlagConfig::random(mode, &mut rng);
+        let m = runner.run(&cfg, 0xeef + tries);
+        if m.timed_out {
+            continue;
+        }
+        actual.push(m.exec_time_s);
+        pred_al.push(al_pred.predict(&cfg));
+        pred_rnd.push(rnd_predict(&cfg));
+        pred_match.push(match_predict(&cfg));
+    }
+    let rmse_al = crate::util::stats::rmse(&pred_al, &actual);
+    let rmse_rnd = crate::util::stats::rmse(&pred_rnd, &actual);
+    let rmse_match = crate::util::stats::rmse(&pred_match, &actual);
+    let corr_al = crate::util::stats::pearson(&pred_al, &actual);
+    let corr_rnd = crate::util::stats::pearson(&pred_rnd, &actual);
+    let corr_match = crate::util::stats::pearson(&pred_match, &actual);
+
+    let mut text = format!(
+        "Fig 4: RBO predictor quality, LDA (target: execution time)\n\
+         AL-trained LR:        {} samples, RMSE {:.1} s, corr {:.3}\n\
+         random LR (matched):  {} samples, RMSE {:.1} s, corr {:.3}\n\
+         random LR (3x data):  {} samples, RMSE {:.1} s, corr {:.3}\n\n",
+        ch.dataset.len(),
+        rmse_al,
+        corr_al,
+        n_match,
+        rmse_match,
+        corr_match,
+        n_big,
+        rmse_rnd,
+        corr_rnd
+    );
+    text.push_str(&line_plot(
+        "predicted vs actual (sorted by actual)",
+        &{
+            let mut idx: Vec<usize> = (0..actual.len()).collect();
+            idx.sort_by(|&a, &b| actual[a].partial_cmp(&actual[b]).unwrap());
+            vec![
+                ("actual".to_string(), idx.iter().map(|&i| actual[i]).collect()),
+                ("AL LR".to_string(), idx.iter().map(|&i| pred_al[i]).collect()),
+                ("random LR".to_string(), idx.iter().map(|&i| pred_rnd[i]).collect()),
+            ]
+        },
+        14,
+    ));
+
+    let mut csv = Table::new(vec!["actual".into(), "pred_al".into(), "pred_random".into()]);
+    for i in 0..actual.len() {
+        csv.push(vec![actual[i], pred_al[i], pred_rnd[i]]);
+    }
+    csv.save(ctx.out_dir.join("fig4.csv")).map_err(anyhow::Error::from)?;
+    ctx.save("fig4.txt", &text)?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — AL convergence: BEMCM vs QBC vs random
+// ---------------------------------------------------------------------------
+
+/// Fig 5: validation RMSE vs AL round for BEMCM / QBC / random, plus the
+/// §V-B claim (data-generation run reduction at matched RMSE).
+pub fn run_fig5(ctx: &ExperimentCtx) -> Result<String> {
+    let bench = Benchmark::Lda;
+    let mode = GcMode::G1GC;
+    let runner = SparkRunner::paper_default(bench);
+    let mut dg = ctx.cfg.datagen.clone();
+    dg.rmse_rel_tol = 0.0; // run all rounds so the curves are comparable
+
+    let mut series = Vec::new();
+    let mut results = Vec::new();
+    for strategy in [Strategy::Bemcm, Strategy::Qbc, Strategy::Random] {
+        let r = datagen::characterize(
+            &runner,
+            mode,
+            Metric::ExecTime,
+            strategy,
+            &dg,
+            &ctx.backend,
+        )?;
+        series.push((strategy.name().to_string(), r.rmse_history.clone()));
+        results.push(r);
+    }
+
+    let mut text = line_plot(
+        "Fig 5: validation RMSE vs AL round (LDA, target: execution time)",
+        &series,
+        14,
+    );
+
+    // Runs-reduction claim: rounds BEMCM needs to reach random's final RMSE.
+    let random_final = *series[2].1.last().unwrap();
+    let bemcm = &series[0].1;
+    let batch = dg.batch_k as f64;
+    let seed = dg.seed_runs as f64;
+    let rounds_needed = bemcm.iter().position(|&r| r <= random_final).unwrap_or(bemcm.len() - 1);
+    let bemcm_runs = seed + rounds_needed as f64 * batch;
+    let random_runs = seed + (series[2].1.len() - 1) as f64 * batch;
+    let reduction = 100.0 * (1.0 - bemcm_runs / random_runs.max(1.0));
+    text.push_str(&format!(
+        "\nBEMCM reaches random-selection final RMSE ({random_final:.2} s) after \
+         {bemcm_runs:.0} labelled runs vs {random_runs:.0} for random: \
+         {reduction:.0}% fewer data-generation runs\n",
+    ));
+
+    let mut csv = Table::new(vec!["round".into(), "bemcm".into(), "qbc".into(), "random".into()]);
+    let len = series.iter().map(|(_, v)| v.len()).min().unwrap();
+    for i in 0..len {
+        csv.push(vec![i as f64, series[0].1[i], series[1].1[i], series[2].1[i]]);
+    }
+    csv.save(ctx.out_dir.join("fig5.csv")).map_err(anyhow::Error::from)?;
+    ctx.save("fig5.txt", &text)?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 — tuning with benchmarks running in parallel
+// ---------------------------------------------------------------------------
+
+/// Fig 6: tuning results with LDA and DenseKMeans running concurrently, in
+/// the two executor topologies of the paper (2x15c/60GB and 3x10c/44-50GB).
+pub fn run_fig6(ctx: &ExperimentCtx) -> Result<String> {
+    let cluster = ClusterSpec::paper();
+    let metric = Metric::ExecTime;
+    let mut text = String::new();
+    let mut csv = Table::new(vec![
+        "panel".into(),
+        "default_mean".into(),
+        "bo".into(),
+        "bo_warm".into(),
+    ]);
+
+    let setups: [(&str, Benchmark, GcMode, ExecutorSpec, Benchmark, ExecutorSpec); 4] = [
+        (
+            "a: LDA G1GC, 2 exec x 15 cores x 60GB",
+            Benchmark::Lda,
+            GcMode::G1GC,
+            ExecutorSpec::parallel_2x15(),
+            Benchmark::DenseKMeans,
+            ExecutorSpec::parallel_2x15(),
+        ),
+        (
+            "b: DK G1GC, 2 exec x 15 cores x 60GB",
+            Benchmark::DenseKMeans,
+            GcMode::G1GC,
+            ExecutorSpec::parallel_2x15(),
+            Benchmark::Lda,
+            ExecutorSpec::parallel_2x15(),
+        ),
+        (
+            "c: LDA G1GC, 3 exec x 10 cores, 44GB",
+            Benchmark::Lda,
+            GcMode::G1GC,
+            ExecutorSpec::parallel_3x10(44.0),
+            Benchmark::DenseKMeans,
+            ExecutorSpec::parallel_3x10(50.0),
+        ),
+        (
+            "d: DK G1GC, 3 exec x 10 cores, 50GB",
+            Benchmark::DenseKMeans,
+            GcMode::G1GC,
+            ExecutorSpec::parallel_3x10(50.0),
+            Benchmark::Lda,
+            ExecutorSpec::parallel_3x10(44.0),
+        ),
+    ];
+
+    for (pi, (panel, bench, mode, exec, other_bench, other_exec)) in
+        setups.iter().enumerate()
+    {
+        // Characterize on the exclusive cluster (phase 1 is per-benchmark),
+        // then tune under the parallel-run objective.
+        let runner = SparkRunner::paper_default(*bench);
+        let ch = datagen::characterize(
+            &runner,
+            *mode,
+            metric,
+            Strategy::Bemcm,
+            &ctx.cfg.datagen,
+            &ctx.backend,
+        )?;
+        let sel = featsel::select_flags(&ch.dataset, ctx.cfg.lambda, &ctx.backend)?;
+        let space = TuneSpace::from_selection(*mode, &sel);
+
+        let default_cfg = FlagConfig::default_for(*mode);
+        let mk_obj = |seed: u64| {
+            ParallelSimObjective::new(
+                cluster,
+                (*bench, *exec),
+                (*other_bench, default_cfg.clone(), *other_exec),
+                metric,
+                seed,
+            )
+        };
+
+        // Default baseline in the parallel setting.
+        let mut base_obj = mk_obj(0xba5e ^ pi as u64);
+        let base: Vec<f64> = (0..ctx.cfg.repeats)
+            .map(|_| metric.of(&base_obj.run_once(&default_cfg)))
+            .collect();
+        let base_mean = crate::util::stats::mean(&base);
+
+        // The characterization ran on the exclusive cluster, where
+        // execution times sit on a different scale than under contention;
+        // rescale its labels by the default-config ratio so the
+        // warm-started GP sees consistent targets.
+        let exclusive_default = metric.of(&runner.run(&default_cfg, 0xdef));
+        let scale = base_mean / exclusive_default.max(1e-9);
+        let mut warm_ds = ch.dataset.clone();
+        for y in warm_ds.y.iter_mut() {
+            *y *= scale;
+        }
+
+        let mut vals = vec![base_mean];
+        let mut labels = vec!["default".to_string()];
+        for (ai, algo) in [Algo::Bo, Algo::BoWarm].into_iter().enumerate() {
+            let mut tuner: Box<dyn Tuner> = match algo {
+                Algo::Bo => Box::new(BoTuner::new(ctx.backend.clone(), ctx.cfg.bo.clone())),
+                Algo::BoWarm => Box::new(BoTuner::warm_start(
+                    ctx.backend.clone(),
+                    ctx.cfg.bo.clone(),
+                    &space,
+                    &warm_ds,
+                )),
+                _ => unreachable!(),
+            };
+            let mut obj = mk_obj(0x7e5 + (pi * 2 + ai) as u64);
+            let r = tuner.tune(&space, &mut obj, ctx.cfg.tune_iters)?;
+            // Final measurement in the parallel setting.
+            let mut meas_obj = mk_obj(0x3a5);
+            let vs: Vec<f64> = (0..ctx.cfg.repeats)
+                .map(|_| metric.of(&meas_obj.run_once(&r.best_config)))
+                .collect();
+            vals.push(crate::util::stats::mean(&vs));
+            labels.push(algo.name().to_string());
+        }
+
+        text.push_str(&bar_chart(
+            &format!(
+                "Fig 6({panel}) — exec time, speedups: BO {:.2}x, warm {:.2}x",
+                base_mean / vals[1],
+                base_mean / vals[2]
+            ),
+            &labels,
+            &vals,
+            "s",
+        ));
+        text.push('\n');
+        csv.push(vec![pi as f64, base_mean, base_mean / vals[1], base_mean / vals[2]]);
+    }
+
+    csv.save(ctx.out_dir.join("fig6.csv")).map_err(anyhow::Error::from)?;
+    ctx.save("fig6.txt", &text)?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------------
+// Table I — benchmark descriptions (trivial, but part of the index)
+// ---------------------------------------------------------------------------
+
+pub fn run_table1(ctx: &ExperimentCtx) -> Result<String> {
+    let mut t = TextTable::new(
+        "Table I: Benchmark applications used in evaluation",
+        &["Application", "Dataset"],
+    );
+    for b in Benchmark::all() {
+        let s = b.spec();
+        t.row(vec![
+            if b == Benchmark::Lda {
+                "Latent Dirichlet Allocation".into()
+            } else {
+                "Dense K-Means".into()
+            },
+            s.dataset.to_string(),
+        ]);
+    }
+    let text = t.render();
+    ctx.save("table1.txt", &text)?;
+    Ok(text)
+}
+
+/// Everything, in paper order.
+pub fn run_all(ctx: &ExperimentCtx) -> Result<String> {
+    let mut out = String::new();
+    for (name, f) in [
+        ("table1", run_table1 as fn(&ExperimentCtx) -> Result<String>),
+        ("table2", run_table2),
+        ("exec (table3+fig3+timing)", run_exec_time),
+        ("heap (table4+fig7)", run_heap_usage),
+        ("fig4", run_fig4),
+        ("fig5", run_fig5),
+        ("fig6", run_fig6),
+    ] {
+        eprintln!("[repro] running {name} ...");
+        out.push_str(&f(ctx)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn tiny_ctx() -> ExperimentCtx {
+        let dir = std::env::temp_dir().join("ost_experiments_test");
+        let mut ctx =
+            ExperimentCtx::new(Arc::new(NativeBackend), dir).fast();
+        // even faster for unit tests
+        ctx.cfg.datagen.pool_size = 80;
+        ctx.cfg.datagen.seed_runs = 14;
+        ctx.cfg.datagen.test_runs = 6;
+        ctx.cfg.datagen.batch_k = 8;
+        ctx.cfg.datagen.max_rounds = 2;
+        ctx.cfg.tune_iters = 3;
+        ctx.cfg.repeats = 2;
+        ctx
+    }
+
+    #[test]
+    fn table1_renders() {
+        let ctx = tiny_ctx();
+        let t = run_table1(&ctx).unwrap();
+        assert!(t.contains("Dense K-Means"));
+        assert!(t.contains("20M samples"));
+    }
+
+    #[test]
+    fn table2_counts_within_group_bounds() {
+        let ctx = tiny_ctx();
+        let t = run_table2(&ctx).unwrap();
+        assert!(t.contains("126") || t.contains("141"));
+        let csv = Table::load(ctx.out_dir.join("table2.csv")).unwrap();
+        for row in &csv.rows {
+            let (exec_flags, heap_flags, group) = (row[2], row[3], row[4]);
+            assert!(exec_flags > 0.0 && exec_flags <= group);
+            assert!(heap_flags > 0.0 && heap_flags <= group);
+        }
+    }
+
+    #[test]
+    fn fig5_produces_three_series() {
+        let ctx = tiny_ctx();
+        let t = run_fig5(&ctx).unwrap();
+        assert!(t.contains("bemcm"));
+        assert!(t.contains("qbc"));
+        assert!(t.contains("random"));
+        assert!(t.contains("fewer data-generation runs"));
+    }
+}

@@ -1,0 +1,271 @@
+//! End-to-end orchestration of the three phases (Fig 1): characterize →
+//! select flags → tune, with the bookkeeping the experiments need
+//! (default-config baselines, per-algorithm results, timing).
+
+pub mod experiments;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::datagen::{self, CharacterizeResult, DataGenConfig, Strategy};
+use crate::featsel::{self, Selection, DEFAULT_LAMBDA};
+use crate::flags::{FlagConfig, GcMode};
+use crate::runtime::MlBackend;
+use crate::sparksim::SparkRunner;
+use crate::tuner::{
+    bo::BoConfig, sa::SaConfig, BoTuner, RboTuner, SaTuner, SimObjective, TuneResult,
+    TuneSpace, Tuner,
+};
+use crate::util::stats::{summarize, Summary};
+use crate::{Benchmark, Metric};
+
+/// Which phase-3 algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Bo,
+    Rbo,
+    BoWarm,
+    Sa,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Bo => "BO",
+            Algo::Rbo => "RBO",
+            Algo::BoWarm => "BO, warm start",
+            Algo::Sa => "SA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "bo" => Some(Algo::Bo),
+            "rbo" => Some(Algo::Rbo),
+            "bo-warm" | "bowarm" | "warm" | "bo_warm" => Some(Algo::BoWarm),
+            "sa" => Some(Algo::Sa),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Algo; 4] {
+        [Algo::Bo, Algo::Rbo, Algo::BoWarm, Algo::Sa]
+    }
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub datagen: DataGenConfig,
+    pub lambda: f64,
+    pub bo: BoConfig,
+    pub sa: SaConfig,
+    pub tune_iters: usize,
+    /// Repeats for the baseline/final measurement (paper: 10).
+    pub repeats: usize,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            datagen: DataGenConfig::default(),
+            lambda: DEFAULT_LAMBDA,
+            bo: BoConfig::default(),
+            sa: SaConfig::default(),
+            tune_iters: 20,
+            repeats: 10,
+            seed: 0x0057_0944,
+        }
+    }
+}
+
+/// Result of tuning one (benchmark, GC mode, metric) with one algorithm.
+#[derive(Clone, Debug)]
+pub struct AlgoOutcome {
+    pub algo: Algo,
+    pub tune: TuneResult,
+    /// Final measurement of the recommended config (paper: mean±std of 10).
+    pub tuned_summary: Summary,
+    /// Improvement factor default/tuned (speedup for time; >1 is better).
+    pub improvement: f64,
+    /// Total tuning time: simulated benchmark runs + optimizer wall time.
+    pub tuning_time_s: f64,
+}
+
+/// Full pipeline record for one (benchmark, mode, metric).
+#[derive(Clone, Debug)]
+pub struct PipelineOutcome {
+    pub bench: Benchmark,
+    pub mode: GcMode,
+    pub metric: Metric,
+    pub characterization: CharacterizeResult,
+    pub selection: Selection,
+    pub default_summary: Summary,
+    pub outcomes: Vec<AlgoOutcome>,
+}
+
+/// Measure a config `repeats` times and summarize the chosen metric.
+pub fn measure(
+    runner: &SparkRunner,
+    cfg: &FlagConfig,
+    metric: Metric,
+    repeats: usize,
+    seed: u64,
+) -> Summary {
+    let vals: Vec<f64> = (0..repeats.max(1))
+        .map(|i| metric.of(&runner.run(cfg, seed.wrapping_add(i as u64 * 7919))))
+        .collect();
+    summarize(&vals)
+}
+
+/// Run one algorithm on an already-characterized problem.
+#[allow(clippy::too_many_arguments)]
+pub fn run_algo(
+    algo: Algo,
+    runner: &SparkRunner,
+    space: &TuneSpace,
+    ch: &CharacterizeResult,
+    metric: Metric,
+    cfg: &PipelineConfig,
+    backend: &Arc<dyn MlBackend>,
+    default_mean: f64,
+) -> Result<AlgoOutcome> {
+    let mut objective = SimObjective::new(runner, metric, cfg.seed ^ algo as u64);
+    let mut tuner: Box<dyn Tuner> = match algo {
+        Algo::Bo => Box::new(BoTuner::new(backend.clone(), cfg.bo.clone())),
+        Algo::BoWarm => Box::new(BoTuner::warm_start(
+            backend.clone(),
+            cfg.bo.clone(),
+            space,
+            &ch.dataset,
+        )),
+        Algo::Rbo => Box::new(RboTuner::new(
+            backend.clone(),
+            cfg.bo.clone(),
+            ch.dataset.clone(),
+        )),
+        Algo::Sa => Box::new(SaTuner::new(cfg.sa.clone())),
+    };
+    let tune = tuner.tune(space, &mut objective, cfg.tune_iters)?;
+    let tuned_summary = measure(runner, &tune.best_config, metric, cfg.repeats, cfg.seed ^ 0xf17a1);
+    let improvement = default_mean / tuned_summary.mean.max(1e-9);
+    let tuning_time_s = tune.sim_time_s + tune.algo_wall_ms / 1e3;
+    Ok(AlgoOutcome { algo, tune, tuned_summary, improvement, tuning_time_s })
+}
+
+/// The whole pipeline for one (benchmark, GC mode, metric): phases 1-3 with
+/// every requested algorithm.
+pub fn run_pipeline(
+    bench: Benchmark,
+    mode: GcMode,
+    metric: Metric,
+    algos: &[Algo],
+    cfg: &PipelineConfig,
+    backend: &Arc<dyn MlBackend>,
+) -> Result<PipelineOutcome> {
+    let runner = SparkRunner::paper_default(bench);
+
+    let characterization = datagen::characterize(
+        &runner,
+        mode,
+        metric,
+        Strategy::Bemcm,
+        &cfg.datagen,
+        backend,
+    )?;
+    let selection = featsel::select_flags(&characterization.dataset, cfg.lambda, backend)?;
+    let space = TuneSpace::from_selection(mode, &selection);
+
+    let default_cfg = FlagConfig::default_for(mode);
+    let default_summary = measure(&runner, &default_cfg, metric, cfg.repeats, cfg.seed);
+
+    let mut outcomes = Vec::with_capacity(algos.len());
+    for &algo in algos {
+        outcomes.push(run_algo(
+            algo,
+            &runner,
+            &space,
+            &characterization,
+            metric,
+            cfg,
+            backend,
+            default_summary.mean,
+        )?);
+    }
+
+    Ok(PipelineOutcome {
+        bench,
+        mode,
+        metric,
+        characterization,
+        selection,
+        default_summary,
+        outcomes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    pub fn quick_config() -> PipelineConfig {
+        PipelineConfig {
+            datagen: DataGenConfig {
+                pool_size: 150,
+                seed_runs: 16,
+                test_runs: 8,
+                batch_k: 12,
+                max_rounds: 3,
+                rmse_rel_tol: 0.0,
+                ridge: 1e-3,
+                seed: 5,
+            },
+            lambda: 0.01,
+            bo: BoConfig { n_init: 5, n_candidates: 128, ..Default::default() },
+            sa: SaConfig { n_init: 4, ..Default::default() },
+            tune_iters: 6,
+            repeats: 3,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn full_pipeline_smoke() {
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        let out = run_pipeline(
+            Benchmark::Lda,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            &[Algo::Bo, Algo::Sa],
+            &quick_config(),
+            &backend,
+        )
+        .unwrap();
+        assert_eq!(out.outcomes.len(), 2);
+        assert!(out.selection.n_selected() > 0);
+        assert!(out.default_summary.mean > 0.0);
+        for o in &out.outcomes {
+            assert!(o.tuned_summary.mean > 0.0);
+            assert!(o.improvement > 0.5, "{:?} improvement {}", o.algo, o.improvement);
+            assert!(o.tuning_time_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn measure_summary_has_spread() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let s = measure(
+            &runner,
+            &FlagConfig::default_for(GcMode::G1GC),
+            Metric::ExecTime,
+            5,
+            1,
+        );
+        assert_eq!(s.n, 5);
+        assert!(s.std > 0.0);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+}

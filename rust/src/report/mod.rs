@@ -1,0 +1,177 @@
+//! Result rendering: aligned text tables (the paper's Tables II-IV), ASCII
+//! bar/line plots (Figs 3-7) and CSV/JSON persistence under `results/`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Aligned monospace table.
+pub struct TextTable {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        TextTable {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.title);
+        let sep: String = w.iter().map(|&x| "-".repeat(x + 2)).collect::<Vec<_>>().join("+");
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(w)
+                .map(|(c, &width)| format!(" {c:<width$} "))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let _ = writeln!(out, "{sep}");
+        let _ = writeln!(out, "{}", line(&self.header, &w));
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &w));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+}
+
+/// ASCII horizontal bar chart (for Fig 3/6/7-style default-vs-tuned plots).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], unit: &str) -> String {
+    assert_eq!(labels.len(), values.len());
+    let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(1e-9);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / max) * 48.0).round().max(0.0) as usize;
+        let _ = writeln!(out, "  {l:<lw$} | {:<48} {v:.2} {unit}", "#".repeat(n));
+    }
+    out
+}
+
+/// ASCII line plot for convergence curves (Fig 5-style), one series per
+/// label; x is the sample index.
+pub fn line_plot(title: &str, series: &[(String, Vec<f64>)], height: usize) -> String {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let width = series.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    for (_, v) in series {
+        for &x in v {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if !lo.is_finite() || width == 0 {
+        return format!("{title}\n(no data)\n");
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '@'];
+    for (si, (_, v)) in series.iter().enumerate() {
+        for (i, &x) in v.iter().enumerate() {
+            let r = ((hi - x) / span * (height - 1) as f64).round() as usize;
+            grid[r.min(height - 1)][i] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}   (y: {lo:.3} .. {hi:.3})\n");
+    for row in grid {
+        let _ = writeln!(out, "  |{}", row.into_iter().collect::<String>());
+    }
+    let _ = writeln!(out, "  +{}", "-".repeat(width));
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "   {} = {}", marks[si % marks.len()], name);
+    }
+    out
+}
+
+/// Write text to `results/<name>` (creating directories), echoing to stdout.
+pub fn save_result(dir: impl AsRef<Path>, name: &str, text: &str) -> io::Result<()> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join(name), text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new("T", &["a", "bench"]);
+        t.row(vec!["1".into(), "LDA".into()]);
+        t.row(vec!["22".into(), "DenseKMeans".into()]);
+        let s = t.render();
+        assert!(s.contains("bench"));
+        assert!(s.contains("DenseKMeans"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines same width
+        assert_eq!(lines[2].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_enforced() {
+        let mut t = TextTable::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "speed",
+            &["default".into(), "tuned".into()],
+            &[100.0, 50.0],
+            "s",
+        );
+        assert!(s.contains("default"));
+        let default_hashes = s.lines().nth(1).unwrap().matches('#').count();
+        let tuned_hashes = s.lines().nth(2).unwrap().matches('#').count();
+        assert!(default_hashes > tuned_hashes);
+    }
+
+    #[test]
+    fn line_plot_handles_series() {
+        let s = line_plot(
+            "rmse",
+            &[
+                ("bemcm".into(), vec![3.0, 2.0, 1.0]),
+                ("random".into(), vec![3.0, 2.8, 2.5]),
+            ],
+            8,
+        );
+        assert!(s.contains("bemcm"));
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+    }
+
+    #[test]
+    fn empty_line_plot_safe() {
+        let s = line_plot("x", &[], 5);
+        assert!(s.contains("no data"));
+    }
+}

@@ -1,0 +1,247 @@
+//! XlaEngine: compile the four HLO artifacts on the PJRT CPU client and run
+//! them with padded/masked f32 literals.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::{MlBackend, D_FEAT, M_CAND, N_TRAIN, Z_ENS};
+use crate::util::json::Json;
+
+pub struct XlaEngine {
+    /// PJRT executables are not documented thread-safe; serialize calls.
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    _client: xla::PjRtClient,
+    emcm: xla::PjRtLoadedExecutable,
+    gp_ei: xla::PjRtLoadedExecutable,
+    lr_fit: xla::PjRtLoadedExecutable,
+    lasso_fit: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the `xla` crate wraps PJRT handles in `Rc` purely to share them
+// between the client and its executables within one object graph; all of
+// those `Rc` clones live inside this `Inner` and are only ever touched
+// while holding the surrounding `Mutex`, so no reference count is ever
+// mutated concurrently.  The underlying TFRT CPU client itself is
+// thread-safe.
+unsafe impl Send for Inner {}
+
+impl XlaEngine {
+    /// Load and compile all artifacts from `dir` (validating the manifest
+    /// against the shape constants this runtime was built for).
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&manifest)
+            .map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let shapes = manifest
+            .get("shapes")
+            .context("manifest missing shapes")?;
+        let check = |key: &str, want: usize| -> Result<()> {
+            let got = shapes
+                .get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("manifest missing shapes.{key}"))?;
+            anyhow::ensure!(
+                got as usize == want,
+                "artifact shape {key}={got} but runtime expects {want}; re-run `make artifacts`"
+            );
+            Ok(())
+        };
+        check("d_feat", D_FEAT)?;
+        check("n_train", N_TRAIN)?;
+        check("m_cand", M_CAND)?;
+        check("z_ens", Z_ENS)?;
+
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+
+        Ok(XlaEngine {
+            inner: Mutex::new(Inner {
+                emcm: compile("emcm_score")?,
+                gp_ei: compile("gp_ei")?,
+                lr_fit: compile("lr_fit")?,
+                lasso_fit: compile("lasso_fit")?,
+                _client: client,
+            }),
+        })
+    }
+}
+
+// --- padding helpers -------------------------------------------------------
+
+/// Flatten rows into a zero-padded row-major f32 buffer of (n, d).
+fn pad_matrix(rows: &[Vec<f64>], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d];
+    for (i, r) in rows.iter().enumerate() {
+        for (j, &v) in r.iter().enumerate() {
+            out[i * d + j] = v as f32;
+        }
+    }
+    out
+}
+
+fn pad_vec(v: &[f64], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o = x as f32;
+    }
+    out
+}
+
+fn mask(live: usize, n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n];
+    for v in m.iter_mut().take(live) {
+        *v = 1.0;
+    }
+    m
+}
+
+fn lit_mat(buf: &[f32], n: usize, d: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(buf).reshape(&[n as i64, d as i64])?)
+}
+
+fn lit_vec(buf: &[f32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(buf))
+}
+
+fn run1(exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal]) -> Result<xla::Literal> {
+    let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
+    Ok(result)
+}
+
+impl MlBackend for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn emcm_score(
+        &self,
+        w_ens: &[Vec<f64>],
+        w0: &[f64],
+        x: &[Vec<f64>],
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(w_ens.len() == Z_ENS, "EMCM needs exactly {Z_ENS} ensembles");
+        let d_live = w0.len();
+        anyhow::ensure!(d_live <= D_FEAT, "feature dim {d_live} > {D_FEAT}");
+        let inner = self.inner.lock().unwrap();
+        let wens_lit = lit_mat(&pad_matrix(w_ens, Z_ENS, D_FEAT), Z_ENS, D_FEAT)?;
+        let w0_lit = lit_vec(&pad_vec(w0, D_FEAT))?;
+        let mask_lit = lit_vec(&mask(d_live, D_FEAT))?;
+
+        let mut scores = Vec::with_capacity(x.len());
+        for chunk in x.chunks(M_CAND) {
+            let x_lit = lit_mat(&pad_matrix(chunk, M_CAND, D_FEAT), M_CAND, D_FEAT)?;
+            let out = run1(&inner.emcm, &[&wens_lit, &w0_lit, &x_lit, &mask_lit])?
+            .to_tuple1()?;
+            let v = out.to_vec::<f32>()?;
+            scores.extend(v[..chunk.len()].iter().map(|&s| s as f64));
+        }
+        Ok(scores)
+    }
+
+    fn lr_fit(&self, x: &[Vec<f64>], y: &[f64], ridge: f64) -> Result<Vec<f64>> {
+        let n_live = x.len();
+        anyhow::ensure!(n_live <= N_TRAIN, "training rows {n_live} > {N_TRAIN}");
+        anyhow::ensure!(n_live == y.len());
+        let d_live = x.first().map(|r| r.len()).unwrap_or(0);
+        anyhow::ensure!(d_live <= D_FEAT);
+        let inner = self.inner.lock().unwrap();
+        let args = [
+            lit_mat(&pad_matrix(x, N_TRAIN, D_FEAT), N_TRAIN, D_FEAT)?,
+            lit_vec(&pad_vec(y, N_TRAIN))?,
+            lit_vec(&mask(n_live, N_TRAIN))?,
+            lit_vec(&mask(d_live, D_FEAT))?,
+            lit_vec(&[ridge as f32])?,
+        ];
+        let out = run1(&inner.lr_fit, &args.iter().collect::<Vec<_>>())?
+        .to_tuple1()?;
+        let w = out.to_vec::<f32>()?;
+        Ok(w[..d_live].iter().map(|&v| v as f64).collect())
+    }
+
+    fn lasso_fit(&self, x: &[Vec<f64>], y: &[f64], lam: f64) -> Result<Vec<f64>> {
+        let n_live = x.len();
+        anyhow::ensure!(n_live <= N_TRAIN, "training rows {n_live} > {N_TRAIN}");
+        anyhow::ensure!(n_live == y.len());
+        let d_live = x.first().map(|r| r.len()).unwrap_or(0);
+        anyhow::ensure!(d_live <= D_FEAT);
+        let inner = self.inner.lock().unwrap();
+        let args = [
+            lit_mat(&pad_matrix(x, N_TRAIN, D_FEAT), N_TRAIN, D_FEAT)?,
+            lit_vec(&pad_vec(y, N_TRAIN))?,
+            lit_vec(&mask(n_live, N_TRAIN))?,
+            lit_vec(&mask(d_live, D_FEAT))?,
+            lit_vec(&[lam as f32])?,
+        ];
+        let out = run1(&inner.lasso_fit, &args.iter().collect::<Vec<_>>())?
+        .to_tuple1()?;
+        let w = out.to_vec::<f32>()?;
+        Ok(w[..d_live].iter().map(|&v| v as f64).collect())
+    }
+
+    fn gp_ei(
+        &self,
+        xtr: &[Vec<f64>],
+        ytr: &[f64],
+        xc: &[Vec<f64>],
+        lengthscale: f64,
+        sigma_f2: f64,
+        sigma_n2: f64,
+        best: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let n_live = xtr.len();
+        anyhow::ensure!(n_live <= N_TRAIN, "GP training rows {n_live} > {N_TRAIN}");
+        anyhow::ensure!(n_live == ytr.len());
+        let d_live = xtr.first().map(|r| r.len()).unwrap_or(0);
+        anyhow::ensure!(d_live <= D_FEAT);
+        let inner = self.inner.lock().unwrap();
+        let xtr_lit = lit_mat(&pad_matrix(xtr, N_TRAIN, D_FEAT), N_TRAIN, D_FEAT)?;
+        let ytr_lit = lit_vec(&pad_vec(ytr, N_TRAIN))?;
+        let rmask_lit = lit_vec(&mask(n_live, N_TRAIN))?;
+        let fmask_lit = lit_vec(&mask(d_live, D_FEAT))?;
+        let theta = lit_vec(&[
+            lengthscale as f32,
+            sigma_f2 as f32,
+            sigma_n2 as f32,
+            best as f32,
+        ])?;
+
+        let mut ei = Vec::with_capacity(xc.len());
+        let mut mu = Vec::with_capacity(xc.len());
+        let mut sigma = Vec::with_capacity(xc.len());
+        for chunk in xc.chunks(M_CAND) {
+            let xc_lit = lit_mat(&pad_matrix(chunk, M_CAND, D_FEAT), M_CAND, D_FEAT)?;
+            let (e, m, s) = run1(
+                &inner.gp_ei,
+                &[&xtr_lit, &ytr_lit, &rmask_lit, &xc_lit, &fmask_lit, &theta],
+            )?
+            .to_tuple3()?;
+            let (e, m, s) = (e.to_vec::<f32>()?, m.to_vec::<f32>()?, s.to_vec::<f32>()?);
+            ei.extend(e[..chunk.len()].iter().map(|&v| v as f64));
+            mu.extend(m[..chunk.len()].iter().map(|&v| v as f64));
+            sigma.extend(s[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok((ei, mu, sigma))
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT runtime: load the AOT HLO artifacts produced by `make artifacts`
+//! and expose them as the `MlBackend` the pipeline calls.  Python never
+//! runs here — the artifacts are self-contained HLO text compiled once at
+//! engine construction.
+//!
+//! `NativeBackend` (pure rust, `native::ops`) implements the same trait;
+//! integration tests cross-check the two and benches compare them.
+
+pub mod engine;
+
+use anyhow::Result;
+
+/// The four ML operations the pipeline needs (mirrors python/compile/model
+/// exports).  All matrices are row-major `Vec<Vec<f64>>`.
+///
+/// Shape limits (from python/compile/shapes.py): feature dim <= 320,
+/// training rows <= 256 per fit, EMCM ensembles of exactly 8 models;
+/// candidate batches are chunked internally, so any M is accepted.
+pub trait MlBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// BEMCM scores for a candidate pool.
+    fn emcm_score(
+        &self,
+        w_ens: &[Vec<f64>],
+        w0: &[f64],
+        x: &[Vec<f64>],
+    ) -> Result<Vec<f64>>;
+
+    /// Ridge LR weights.
+    fn lr_fit(&self, x: &[Vec<f64>], y: &[f64], ridge: f64) -> Result<Vec<f64>>;
+
+    /// Lasso weights (ISTA, 400 iterations).
+    fn lasso_fit(&self, x: &[Vec<f64>], y: &[f64], lam: f64) -> Result<Vec<f64>>;
+
+    /// GP posterior + EI at candidates: (ei, mu, sigma).
+    #[allow(clippy::too_many_arguments)]
+    fn gp_ei(
+        &self,
+        xtr: &[Vec<f64>],
+        ytr: &[f64],
+        xc: &[Vec<f64>],
+        lengthscale: f64,
+        sigma_f2: f64,
+        sigma_n2: f64,
+        best: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)>;
+}
+
+/// Ensemble size every backend expects for EMCM (shapes.py Z_ENS).
+pub const Z_ENS: usize = 8;
+/// Max feature dimension (shapes.py D_FEAT).
+pub const D_FEAT: usize = 320;
+/// Max training rows per fit (shapes.py N_TRAIN).
+pub const N_TRAIN: usize = 256;
+/// Candidate chunk size (shapes.py M_CAND).
+pub const M_CAND: usize = 512;
+
+/// Pure-rust backend (native::ops).
+pub struct NativeBackend;
+
+impl MlBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn emcm_score(
+        &self,
+        w_ens: &[Vec<f64>],
+        w0: &[f64],
+        x: &[Vec<f64>],
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(w_ens.len() == Z_ENS, "EMCM needs exactly {Z_ENS} ensembles");
+        Ok(crate::native::ops::emcm_score(w_ens, w0, x))
+    }
+
+    fn lr_fit(&self, x: &[Vec<f64>], y: &[f64], ridge: f64) -> Result<Vec<f64>> {
+        Ok(crate::native::ops::lr_fit(x, y, ridge))
+    }
+
+    fn lasso_fit(&self, x: &[Vec<f64>], y: &[f64], lam: f64) -> Result<Vec<f64>> {
+        Ok(crate::native::ops::lasso_fit(x, y, lam, 400))
+    }
+
+    fn gp_ei(
+        &self,
+        xtr: &[Vec<f64>],
+        ytr: &[f64],
+        xc: &[Vec<f64>],
+        lengthscale: f64,
+        sigma_f2: f64,
+        sigma_n2: f64,
+        best: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        Ok(crate::native::ops::gp_ei(
+            xtr, ytr, xc, lengthscale, sigma_f2, sigma_n2, best,
+        ))
+    }
+}
+
+/// Load the best available backend: the XLA engine if `artifacts/` is
+/// present and loads cleanly, the native mirror otherwise.
+pub fn load_backend(artifacts_dir: &str) -> std::sync::Arc<dyn MlBackend> {
+    match engine::XlaEngine::load(artifacts_dir) {
+        Ok(e) => std::sync::Arc::new(e),
+        Err(err) => {
+            eprintln!(
+                "warning: XLA artifacts unavailable ({err:#}); using native backend"
+            );
+            std::sync::Arc::new(NativeBackend)
+        }
+    }
+}

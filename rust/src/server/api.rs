@@ -1,0 +1,371 @@
+//! REST API — the backend of the paper's ReactJS UI (Fig 2): "The backend
+//! houses the optimization algorithms ... exposed through a REST API."
+//!
+//! Endpoints:
+//!   GET  /api/health                         liveness + backend name
+//!   GET  /api/benchmarks                     Table I workload descriptions
+//!   GET  /api/flags?gc=g1|parallel           flag catalog for a GC group
+//!   POST /api/run          {bench, gc, seed?, flags?{name:value}}
+//!   POST /api/characterize {bench, gc, metric?, strategy?, pool?, rounds?}
+//!   POST /api/select       {dataset_id, lambda?}
+//!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?}
+//!   GET  /api/datasets                       characterization sessions
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::datagen::{self, DataGenConfig, Dataset, Strategy};
+use crate::featsel;
+use crate::flags::{FlagConfig, GcMode};
+use crate::pipeline::{self, Algo, PipelineConfig};
+use crate::runtime::MlBackend;
+use crate::server::http::{Request, Response};
+use crate::sparksim::SparkRunner;
+use crate::tuner::TuneSpace;
+use crate::util::json::Json;
+use crate::{Benchmark, Metric};
+
+/// Shared server state: the ML backend plus characterization sessions.
+pub struct ApiState {
+    pub backend: Arc<dyn MlBackend>,
+    pub datasets: Mutex<HashMap<u64, StoredDataset>>,
+    next_id: Mutex<u64>,
+}
+
+pub struct StoredDataset {
+    pub bench: Benchmark,
+    pub dataset: Dataset,
+    pub rmse_history: Vec<f64>,
+}
+
+impl ApiState {
+    pub fn new(backend: Arc<dyn MlBackend>) -> Arc<ApiState> {
+        Arc::new(ApiState {
+            backend,
+            datasets: Mutex::new(HashMap::new()),
+            next_id: Mutex::new(1),
+        })
+    }
+
+    fn store(&self, d: StoredDataset) -> u64 {
+        let mut id = self.next_id.lock().unwrap();
+        let this = *id;
+        *id += 1;
+        self.datasets.lock().unwrap().insert(this, d);
+        this
+    }
+}
+
+/// Route one request.
+pub fn handle(state: &Arc<ApiState>, req: &Request) -> Response {
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/api/health") => Ok(health(state)),
+        ("GET", "/api/benchmarks") => Ok(benchmarks()),
+        ("GET", "/api/flags") => flags(req),
+        ("POST", "/api/run") => run(req),
+        ("POST", "/api/characterize") => characterize(state, req),
+        ("POST", "/api/select") => select(state, req),
+        ("POST", "/api/tune") => tune(state, req),
+        ("GET", "/api/datasets") => Ok(datasets(state)),
+        _ => Err((404, "no such endpoint".to_string())),
+    };
+    match result {
+        Ok(json) => Response::json(200, json.to_string()),
+        Err((code, msg)) => Response::json(
+            code,
+            Json::obj(vec![("error", Json::str(msg))]).to_string(),
+        ),
+    }
+}
+
+type ApiResult = Result<Json, (u16, String)>;
+
+fn bad(msg: impl Into<String>) -> (u16, String) {
+    (400, msg.into())
+}
+
+fn body_json(req: &Request) -> Result<Json, (u16, String)> {
+    if req.body.trim().is_empty() {
+        return Ok(Json::obj(vec![]));
+    }
+    Json::parse(&req.body).map_err(|e| bad(format!("invalid json body: {e}")))
+}
+
+fn parse_bench(v: Option<&Json>) -> Result<Benchmark, (u16, String)> {
+    v.and_then(Json::as_str)
+        .and_then(Benchmark::parse)
+        .ok_or_else(|| bad("missing/unknown 'bench' (lda | densekmeans)"))
+}
+
+fn parse_gc(v: Option<&Json>) -> Result<GcMode, (u16, String)> {
+    v.and_then(Json::as_str)
+        .and_then(GcMode::parse)
+        .ok_or_else(|| bad("missing/unknown 'gc' (g1 | parallel)"))
+}
+
+fn parse_metric(v: Option<&Json>) -> Metric {
+    v.and_then(Json::as_str).and_then(Metric::parse).unwrap_or(Metric::ExecTime)
+}
+
+fn health(state: &Arc<ApiState>) -> Json {
+    Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("backend", Json::str(state.backend.name())),
+        ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+    ])
+}
+
+fn benchmarks() -> Json {
+    Json::Arr(
+        Benchmark::all()
+            .iter()
+            .map(|b| {
+                let s = b.spec();
+                Json::obj(vec![
+                    ("name", Json::str(s.name)),
+                    ("dataset", Json::str(s.dataset)),
+                    ("input_gb", Json::num(s.input_gb)),
+                    ("n_tasks", Json::num(s.n_tasks as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn flags(req: &Request) -> ApiResult {
+    let gc = req
+        .query_param("gc")
+        .and_then(GcMode::parse)
+        .ok_or_else(|| bad("query param gc=g1|parallel required"))?;
+    let cfg = FlagConfig::default_for(gc);
+    let arr = cfg
+        .defs()
+        .iter()
+        .map(|f| {
+            let (ty, min, max) = match f.kind {
+                crate::flags::Kind::Bool { .. } => ("bool", 0.0, 1.0),
+                crate::flags::Kind::Int { min, max, .. } => ("int", min, max),
+            };
+            Json::obj(vec![
+                ("name", Json::str(f.name)),
+                ("type", Json::str(ty)),
+                ("min", Json::num(min)),
+                ("max", Json::num(max)),
+                ("default", Json::num(f.default_value())),
+            ])
+        })
+        .collect();
+    Ok(Json::Arr(arr))
+}
+
+fn config_from_body(gc: GcMode, body: &Json) -> Result<FlagConfig, (u16, String)> {
+    let mut cfg = FlagConfig::default_for(gc);
+    if let Some(Json::Obj(flags)) = body.get("flags") {
+        for (name, v) in flags {
+            let v = v.as_f64().ok_or_else(|| bad(format!("flag {name} not numeric")))?;
+            if !cfg.defs().iter().any(|f| f.name == name.as_str()) {
+                return Err(bad(format!("unknown flag {name} for {}", gc.name())));
+            }
+            cfg.set(name, v);
+        }
+    }
+    Ok(cfg)
+}
+
+fn run(req: &Request) -> ApiResult {
+    let body = body_json(req)?;
+    let bench = parse_bench(body.get("bench"))?;
+    let gc = parse_gc(body.get("gc"))?;
+    let seed = body.get("seed").and_then(Json::as_f64).unwrap_or(1.0) as u64;
+    let cfg = config_from_body(gc, &body)?;
+    let m = SparkRunner::paper_default(bench).run(&cfg, seed);
+    Ok(Json::obj(vec![
+        ("exec_time_s", Json::num(m.exec_time_s)),
+        ("heap_usage_pct", Json::num(m.hu_avg_pct)),
+        ("minor_gcs", Json::num(m.gc.minor as f64)),
+        ("full_gcs", Json::num(m.gc.full as f64)),
+        ("total_pause_ms", Json::num(m.gc.total_pause_ms)),
+        ("failed", Json::Bool(m.timed_out)),
+    ]))
+}
+
+fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
+    let body = body_json(req)?;
+    let bench = parse_bench(body.get("bench"))?;
+    let gc = parse_gc(body.get("gc"))?;
+    let metric = parse_metric(body.get("metric"));
+    let strategy = body
+        .get("strategy")
+        .and_then(Json::as_str)
+        .and_then(Strategy::parse)
+        .unwrap_or(Strategy::Bemcm);
+    let mut dg = DataGenConfig::default();
+    if let Some(p) = body.get("pool").and_then(Json::as_f64) {
+        dg.pool_size = p as usize;
+    }
+    if let Some(r) = body.get("rounds").and_then(Json::as_f64) {
+        dg.max_rounds = r as usize;
+    }
+    if let Some(s) = body.get("seed").and_then(Json::as_f64) {
+        dg.seed = s as u64;
+    }
+    let runner = SparkRunner::paper_default(bench);
+    let r = datagen::characterize(&runner, gc, metric, strategy, &dg, &state.backend)
+        .map_err(|e| (500, format!("{e:#}")))?;
+    let id = state.store(StoredDataset {
+        bench,
+        dataset: r.dataset.clone(),
+        rmse_history: r.rmse_history.clone(),
+    });
+    Ok(Json::obj(vec![
+        ("dataset_id", Json::num(id as f64)),
+        ("samples", Json::num(r.dataset.len() as f64)),
+        ("runs_executed", Json::num(r.runs_executed as f64)),
+        ("rounds", Json::num(r.rounds as f64)),
+        ("rmse_history", Json::arr_f64(&r.rmse_history)),
+        ("sim_time_s", Json::num(r.sim_time_s)),
+    ]))
+}
+
+fn select(state: &Arc<ApiState>, req: &Request) -> ApiResult {
+    let body = body_json(req)?;
+    let id = body
+        .get("dataset_id")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| bad("dataset_id required"))? as u64;
+    let lambda = body.get("lambda").and_then(Json::as_f64).unwrap_or(featsel::DEFAULT_LAMBDA);
+    let store = state.datasets.lock().unwrap();
+    let stored = store.get(&id).ok_or_else(|| bad(format!("no dataset {id}")))?;
+    let sel = featsel::select_flags(&stored.dataset, lambda, &state.backend)
+        .map_err(|e| (500, format!("{e:#}")))?;
+    Ok(Json::obj(vec![
+        ("lambda", Json::num(sel.lambda)),
+        ("group_size", Json::num(sel.group_size as f64)),
+        ("n_selected", Json::num(sel.n_selected() as f64)),
+        (
+            "selected",
+            Json::Arr(sel.names.iter().map(|n| Json::str(n.clone())).collect()),
+        ),
+    ]))
+}
+
+fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
+    let body = body_json(req)?;
+    let bench = parse_bench(body.get("bench"))?;
+    let gc = parse_gc(body.get("gc"))?;
+    let metric = parse_metric(body.get("metric"));
+    let algo = body
+        .get("algo")
+        .and_then(Json::as_str)
+        .and_then(Algo::parse)
+        .ok_or_else(|| bad("missing/unknown 'algo' (bo | rbo | bo-warm | sa)"))?;
+    let iters = body.get("iters").and_then(Json::as_f64).unwrap_or(20.0) as usize;
+
+    let runner = SparkRunner::paper_default(bench);
+    let pc = PipelineConfig { tune_iters: iters, ..Default::default() };
+
+    // Get (or build) a characterization when the algorithm needs one.
+    let dataset_id = body.get("dataset_id").and_then(Json::as_f64).map(|v| v as u64);
+    let ch = match dataset_id {
+        Some(id) => {
+            let store = state.datasets.lock().unwrap();
+            let stored = store.get(&id).ok_or_else(|| bad(format!("no dataset {id}")))?;
+            if stored.dataset.mode != gc {
+                return Err(bad(format!(
+                    "dataset {id} is for {}",
+                    stored.dataset.mode.name()
+                )));
+            }
+            datagen::CharacterizeResult {
+                strategy: Strategy::Bemcm,
+                dataset: stored.dataset.clone(),
+                rmse_history: stored.rmse_history.clone(),
+                runs_executed: 0,
+                rounds: 0,
+                sim_time_s: 0.0,
+            }
+        }
+        None => {
+            if matches!(algo, Algo::Rbo | Algo::BoWarm) {
+                return Err(bad("algo needs a dataset_id from /api/characterize"));
+            }
+            datagen::CharacterizeResult {
+                strategy: Strategy::Bemcm,
+                dataset: Dataset {
+                    mode: gc,
+                    metric,
+                    unit_rows: vec![],
+                    feat_rows: vec![],
+                    y: vec![],
+                },
+                rmse_history: vec![],
+                runs_executed: 0,
+                rounds: 0,
+                sim_time_s: 0.0,
+            }
+        }
+    };
+
+    // Selected subspace: from the dataset when available, else the full group.
+    let space = if ch.dataset.is_empty() {
+        TuneSpace::full(gc)
+    } else {
+        let sel = featsel::select_flags(&ch.dataset, featsel::DEFAULT_LAMBDA, &state.backend)
+            .map_err(|e| (500, format!("{e:#}")))?;
+        TuneSpace::from_selection(gc, &sel)
+    };
+
+    let default_summary =
+        pipeline::measure(&runner, &FlagConfig::default_for(gc), metric, 5, pc.seed);
+    let out = pipeline::run_algo(
+        algo,
+        &runner,
+        &space,
+        &ch,
+        metric,
+        &pc,
+        &state.backend,
+        default_summary.mean,
+    )
+    .map_err(|e| (500, format!("{e:#}")))?;
+
+    let flags_obj: Vec<(String, Json)> = out
+        .tune
+        .best_config
+        .to_map()
+        .into_iter()
+        .map(|(k, v)| (k, Json::num(v)))
+        .collect();
+    Ok(Json::obj(vec![
+        ("algo", Json::str(out.algo.name())),
+        ("default_mean", Json::num(default_summary.mean)),
+        ("tuned_mean", Json::num(out.tuned_summary.mean)),
+        ("tuned_std", Json::num(out.tuned_summary.std)),
+        ("improvement", Json::num(out.improvement)),
+        ("tuning_time_s", Json::num(out.tuning_time_s)),
+        ("evals", Json::num(out.tune.evals as f64)),
+        (
+            "best_flags",
+            Json::Obj(flags_obj.into_iter().collect()),
+        ),
+        ("best_java_args", Json::str(out.tune.best_config.to_java_args())),
+    ]))
+}
+
+fn datasets(state: &Arc<ApiState>) -> Json {
+    let store = state.datasets.lock().unwrap();
+    Json::Arr(
+        store
+            .iter()
+            .map(|(id, d)| {
+                Json::obj(vec![
+                    ("dataset_id", Json::num(*id as f64)),
+                    ("bench", Json::str(d.bench.name())),
+                    ("gc", Json::str(d.dataset.mode.name())),
+                    ("metric", Json::str(d.dataset.metric.name())),
+                    ("samples", Json::num(d.dataset.len() as f64)),
+                ])
+            })
+            .collect(),
+    )
+}

@@ -1,0 +1,268 @@
+//! Minimal HTTP/1.1 server over std::net (no tokio/hyper in the offline
+//! image): thread-per-connection, enough for the REST API of Fig 2.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// A parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A response to send.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "application/json", body: body.into() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            201 => "201 Created",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            _ => "500 Internal Server Error",
+        }
+    }
+}
+
+pub type Handler = dyn Fn(&Request) -> Response + Send + Sync;
+
+/// Serve forever on `addr`, dispatching every request to `handler`.
+/// Returns the bound local address via the callback before blocking.
+pub fn serve(
+    addr: &str,
+    handler: Arc<Handler>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_bound(listener.local_addr()?);
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let handler = handler.clone();
+        std::thread::spawn(move || {
+            let _ = handle_connection(stream, &handler);
+        });
+    }
+    Ok(())
+}
+
+/// Spawn the server on a background thread, returning the bound address.
+pub fn spawn(addr: &str, handler: Arc<Handler>) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let handler = handler.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &handler);
+            });
+        }
+    });
+    Ok(bound)
+}
+
+fn handle_connection(mut stream: TcpStream, handler: &Arc<Handler>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("/").to_string();
+
+    // Headers (we only need Content-Length).
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(16 * 1024 * 1024)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target, Vec::new()),
+    };
+
+    let req = Request {
+        method,
+        path,
+        query,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    };
+    let resp = handler(&req);
+
+    let out = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len(),
+        resp.body
+    );
+    stream.write_all(out.as_bytes())?;
+    stream.flush()
+}
+
+fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|s| !s.is_empty())
+        .map(|pair| match pair.split_once('=') {
+            Some((k, v)) => (url_decode(k), url_decode(v)),
+            None => (url_decode(pair), String::new()),
+        })
+        .collect()
+}
+
+fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() => {
+                let hex = std::str::from_utf8(&bytes[i + 1..i + 3]).unwrap_or("");
+                if let Ok(v) = u8::from_str_radix(hex, 16) {
+                    out.push(v);
+                    i += 3;
+                } else {
+                    out.push(bytes[i]);
+                    i += 1;
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Tiny blocking HTTP client for tests and the CLI's `ping` convenience.
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> std::net::SocketAddr {
+        let handler: Arc<Handler> = Arc::new(|req: &Request| {
+            Response::json(
+                200,
+                format!(
+                    "{{\"method\":\"{}\",\"path\":\"{}\",\"q\":\"{}\",\"len\":{}}}",
+                    req.method,
+                    req.path,
+                    req.query_param("x").unwrap_or(""),
+                    req.body.len()
+                ),
+            )
+        });
+        spawn("127.0.0.1:0", handler).unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let addr = echo_server();
+        let (status, body) = http_request(addr, "GET", "/hello?x=42", "").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"path\":\"/hello\""), "{body}");
+        assert!(body.contains("\"q\":\"42\""));
+    }
+
+    #[test]
+    fn post_body_passed() {
+        let addr = echo_server();
+        let (status, body) =
+            http_request(addr, "POST", "/submit", "{\"a\": 1}").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"len\":8"), "{body}");
+    }
+
+    #[test]
+    fn url_decode_basics() {
+        assert_eq!(url_decode("a%20b+c"), "a b c");
+        assert_eq!(url_decode("plain"), "plain");
+        assert_eq!(url_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let addr = echo_server();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    http_request(addr, "GET", &format!("/r{i}"), "").unwrap().0
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+    }
+}

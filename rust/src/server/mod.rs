@@ -1,0 +1,38 @@
+//! REST API backend — the server side of the paper's ReactJS UI (Fig 2):
+//! the optimization algorithms "are exposed through a REST API".
+//!
+//! `http` is a minimal std-net HTTP/1.1 server (the offline image has no
+//! tokio/hyper); `api` implements the endpoints over the shared pipeline.
+
+pub mod api;
+pub mod http;
+
+use std::sync::Arc;
+
+pub use api::ApiState;
+pub use http::{http_request, Request, Response};
+
+/// Build the request handler for an API state.
+pub fn make_handler(state: Arc<ApiState>) -> Arc<http::Handler> {
+    Arc::new(move |req: &Request| api::handle(&state, req))
+}
+
+/// Serve the API forever on `addr` (e.g. "127.0.0.1:7878").
+pub fn serve_forever(
+    addr: &str,
+    backend: Arc<dyn crate::runtime::MlBackend>,
+) -> std::io::Result<()> {
+    let state = ApiState::new(backend);
+    http::serve(addr, make_handler(state), |bound| {
+        println!("onestoptuner REST API listening on http://{bound}");
+    })
+}
+
+/// Spawn the API on a background thread (tests, embedding).
+pub fn spawn(
+    addr: &str,
+    backend: Arc<dyn crate::runtime::MlBackend>,
+) -> std::io::Result<std::net::SocketAddr> {
+    let state = ApiState::new(backend);
+    http::spawn(addr, make_handler(state))
+}

@@ -1,0 +1,168 @@
+//! Cluster and executor topology (paper §IV: 3 nodes x 20 cores, 90 GB).
+
+/// Physical cluster description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    pub mem_per_node_mb: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's evaluation cluster.
+    pub fn paper() -> ClusterSpec {
+        ClusterSpec { nodes: 3, cores_per_node: 20, mem_per_node_mb: 92160.0 }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+}
+
+/// Spark executor fleet for one job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecutorSpec {
+    pub count: usize,
+    pub cores: usize,
+    pub mem_mb: f64,
+}
+
+impl ExecutorSpec {
+    /// Default single-benchmark deployment: one executor per node using the
+    /// full node (paper §IV-A: "3 Spark executors, one executor at each
+    /// node").
+    pub fn full_cluster(cluster: &ClusterSpec) -> ExecutorSpec {
+        ExecutorSpec {
+            count: cluster.nodes,
+            cores: cluster.cores_per_node,
+            mem_mb: cluster.mem_per_node_mb * 0.9,
+        }
+    }
+
+    /// Fig 6 (a, b): 2 executors, 15 cores, 60 GB each per benchmark.
+    pub fn parallel_2x15() -> ExecutorSpec {
+        ExecutorSpec { count: 2, cores: 15, mem_mb: 61440.0 }
+    }
+
+    /// Fig 6 (c, d): 3 executors, 10 cores each; 44 GB (LDA) / 50 GB (DK).
+    pub fn parallel_3x10(mem_gb: f64) -> ExecutorSpec {
+        ExecutorSpec { count: 3, cores: 10, mem_mb: mem_gb * 1024.0 }
+    }
+}
+
+/// Global round-robin executor placement over nodes (all fleets share the
+/// same counter, the way a cluster manager spreads containers).  Returns a
+/// node index per executor per fleet.
+pub fn placements(cluster: &ClusterSpec, fleets: &[ExecutorSpec]) -> Vec<Vec<usize>> {
+    let mut next = 0usize;
+    fleets
+        .iter()
+        .map(|f| {
+            (0..f.count)
+                .map(|_| {
+                    let n = next % cluster.nodes;
+                    next += 1;
+                    n
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-node total cores demanded under the global placement.
+pub fn node_core_demand(cluster: &ClusterSpec, fleets: &[ExecutorSpec]) -> Vec<f64> {
+    let mut demand = vec![0.0; cluster.nodes];
+    for (fleet, nodes) in fleets.iter().zip(placements(cluster, fleets)) {
+        for n in nodes {
+            demand[n] += fleet.cores as f64;
+        }
+    }
+    demand
+}
+
+/// Contention factor for a fleet: the worst oversubscription over the nodes
+/// hosting its executors, plus a small co-location penalty (shared LLC and
+/// memory bandwidth) when a node hosts executors of more than one job.
+pub fn contention_factor(
+    cluster: &ClusterSpec,
+    fleets: &[ExecutorSpec],
+    fleet_idx: usize,
+) -> f64 {
+    let place = placements(cluster, fleets);
+    let demand = node_core_demand(cluster, fleets);
+    let mut shared = vec![0usize; cluster.nodes];
+    for nodes in &place {
+        let mut seen = vec![false; cluster.nodes];
+        for &n in nodes {
+            if !seen[n] {
+                shared[n] += 1;
+                seen[n] = true;
+            }
+        }
+    }
+    let mut worst: f64 = 1.0;
+    for &node in &place[fleet_idx] {
+        let over = demand[node] / cluster.cores_per_node as f64;
+        let mut f = if over > 1.0 { 1.0 / over } else { 1.0 };
+        if shared[node] > 1 && fleets.len() > 1 {
+            f *= 0.955; // co-location penalty
+        }
+        worst = worst.min(f);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_dimensions() {
+        let c = ClusterSpec::paper();
+        assert_eq!(c.total_cores(), 60);
+        assert!(c.mem_per_node_mb > 90_000.0);
+    }
+
+    #[test]
+    fn full_cluster_fleet() {
+        let c = ClusterSpec::paper();
+        let f = ExecutorSpec::full_cluster(&c);
+        assert_eq!(f.count, 3);
+        assert_eq!(f.cores, 20);
+    }
+
+    #[test]
+    fn solo_fleet_no_contention() {
+        let c = ClusterSpec::paper();
+        let f = ExecutorSpec::full_cluster(&c);
+        assert_eq!(contention_factor(&c, &[f], 0), 1.0);
+    }
+
+    #[test]
+    fn parallel_fleets_contend() {
+        let c = ClusterSpec::paper();
+        let fleets = [ExecutorSpec::parallel_2x15(), ExecutorSpec::parallel_2x15()];
+        let f = contention_factor(&c, &fleets, 0);
+        assert!(f < 1.0, "expected co-location penalty, got {f}");
+        // 4 x 15-core executors on 3 x 20-core nodes: one node is 1.5x
+        // oversubscribed, so the affected fleet loses ~1/3 of its speed.
+        assert!(f > 0.55, "{f}");
+    }
+
+    #[test]
+    fn oversubscription_scales_down() {
+        let c = ClusterSpec::paper();
+        // 6 executors x 15 cores = 90 demanded vs 60 cores
+        let big = ExecutorSpec { count: 6, cores: 15, mem_mb: 30720.0 };
+        let f = contention_factor(&c, &[big], 0);
+        assert!(f < 0.7, "{f}");
+    }
+
+    #[test]
+    fn demand_round_robin() {
+        let c = ClusterSpec::paper();
+        let fleets = [ExecutorSpec { count: 4, cores: 10, mem_mb: 1.0 }];
+        let d = node_core_demand(&c, &fleets);
+        assert_eq!(d, vec![20.0, 10.0, 10.0]);
+    }
+}

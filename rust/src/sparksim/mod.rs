@@ -1,0 +1,14 @@
+//! Spark cluster + workload substrate (paper testbed substitution).
+//!
+//! Models the paper's evaluation cluster — 3 nodes x dual-socket Xeon
+//! E5-2650 (20 physical cores/node, 60 total), 90 GB per node — with
+//! executors hosting one simulated JVM each, the two HiBench workloads
+//! (Table I), and the parallel-run contention scenarios of Fig 6.
+
+pub mod cluster;
+pub mod runner;
+pub mod workloads;
+
+pub use cluster::{ClusterSpec, ExecutorSpec};
+pub use runner::{run_benchmark, run_parallel, RunMetrics, SparkRunner};
+pub use workloads::{Benchmark, WorkloadSpec};

@@ -1,0 +1,232 @@
+//! Job runner: executes a benchmark (or several in parallel) on the
+//! simulated cluster and reports the metrics the tuner optimizes.
+//!
+//! This is the objective function Q of the paper's eq. (1): flag config in,
+//! (execution time, heap usage %) out.
+
+use super::cluster::{contention_factor, ClusterSpec, ExecutorSpec};
+use super::workloads::Benchmark;
+use crate::flags::FlagConfig;
+use crate::jvmsim::{self, GcStats, JvmParams};
+use crate::util::rng::Pcg;
+
+/// Metrics recorded for one benchmark run (paper §IV-B).
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    /// Job execution time.  Failed runs (OOM / GC-thrash timeout) report
+    /// the timeout budget — a failed configuration can never look fast.
+    pub exec_time_s: f64,
+    /// Actual simulated wall-clock (short for an OOM crash) — what tuning
+    /// time accounting should charge.
+    pub wall_clock_s: f64,
+    pub hu_avg_pct: f64,
+    pub gc: GcStats,
+    pub timed_out: bool,
+}
+
+/// Fixed driver-side overhead per Spark job (scheduling, result collection).
+const DRIVER_OVERHEAD_S: f64 = 2.0;
+
+/// Run `bench` with `cfg` on a fleet, under an external contention factor
+/// (1.0 = exclusive cluster).  Deterministic in `seed`.
+pub fn run_benchmark_with_contention(
+    bench: Benchmark,
+    cfg: &FlagConfig,
+    exec: &ExecutorSpec,
+    contention: f64,
+    seed: u64,
+) -> RunMetrics {
+    let mut p = JvmParams::derive(cfg, exec.mem_mb, exec.cores as f64);
+    let load = bench.executor_load(exec.count);
+    let cores_eff = exec.cores as f64 * contention;
+    // Co-located jobs also contend for memory bandwidth during STW
+    // collections: GC copy/compact rates degrade super-linearly with the
+    // contention factor, which is why flag tuning pays off *more* in the
+    // shared-cluster scenarios (paper SectionV-E).
+    if contention < 1.0 {
+        let gc_penalty = contention.powf(0.7);
+        p.copy_rate *= gc_penalty;
+        p.compact_rate *= gc_penalty;
+    }
+
+    let mut worst_wall = 0.0f64;
+    let mut hu_sum = 0.0;
+    let mut gc = GcStats::default();
+    let mut timed_out = false;
+    let mut rng = Pcg::with_stream(seed, 0x5eed_0001);
+    for e in 0..exec.count {
+        let mut erng = rng.fork(e as u64 + 1);
+        let r = jvmsim::run(&p, &load, cores_eff, &mut erng);
+        worst_wall = worst_wall.max(r.wall_s);
+        hu_sum += r.hu_avg_pct;
+        gc.minor += r.gc.minor;
+        gc.mixed += r.gc.mixed;
+        gc.full += r.gc.full;
+        gc.conc_cycles += r.gc.conc_cycles;
+        gc.total_pause_ms += r.gc.total_pause_ms;
+        gc.max_pause_ms = gc.max_pause_ms.max(r.gc.max_pause_ms);
+        timed_out |= r.timed_out;
+    }
+
+    let wall_clock_s = worst_wall + DRIVER_OVERHEAD_S;
+    RunMetrics {
+        exec_time_s: if timed_out {
+            crate::jvmsim::MAX_WALL_S + DRIVER_OVERHEAD_S
+        } else {
+            wall_clock_s
+        },
+        wall_clock_s,
+        hu_avg_pct: hu_sum / exec.count.max(1) as f64,
+        gc,
+        timed_out,
+    }
+}
+
+/// Run one benchmark with exclusive use of the cluster (the paper's
+/// single-benchmark tuning setup).
+pub fn run_benchmark(
+    bench: Benchmark,
+    cfg: &FlagConfig,
+    exec: &ExecutorSpec,
+    seed: u64,
+) -> RunMetrics {
+    run_benchmark_with_contention(bench, cfg, exec, 1.0, seed)
+}
+
+/// Run several (benchmark, config, fleet) jobs concurrently on `cluster`
+/// (paper §V-E) and return each job's metrics.
+pub fn run_parallel(
+    cluster: &ClusterSpec,
+    jobs: &[(Benchmark, FlagConfig, ExecutorSpec)],
+    seed: u64,
+) -> Vec<RunMetrics> {
+    let fleets: Vec<ExecutorSpec> = jobs.iter().map(|(_, _, e)| *e).collect();
+    jobs.iter()
+        .enumerate()
+        .map(|(i, (bench, cfg, exec))| {
+            let contention = contention_factor(cluster, &fleets, i);
+            run_benchmark_with_contention(*bench, cfg, exec, contention, seed ^ (i as u64) << 32)
+        })
+        .collect()
+}
+
+/// Convenience handle bundling the cluster + fleet + benchmark + metric
+/// used throughout the pipeline ("run the application and record the
+/// metrics of interest", §III-A).
+#[derive(Clone, Debug)]
+pub struct SparkRunner {
+    pub cluster: ClusterSpec,
+    pub exec: ExecutorSpec,
+    pub bench: Benchmark,
+}
+
+impl SparkRunner {
+    pub fn paper_default(bench: Benchmark) -> SparkRunner {
+        let cluster = ClusterSpec::paper();
+        let exec = ExecutorSpec::full_cluster(&cluster);
+        SparkRunner { cluster, exec, bench }
+    }
+
+    pub fn run(&self, cfg: &FlagConfig, seed: u64) -> RunMetrics {
+        run_benchmark(self.bench, cfg, &self.exec, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flags::GcMode;
+
+    #[test]
+    fn default_runs_land_in_expected_band() {
+        // Defaults should produce O(100 s) jobs, not milliseconds or hours.
+        for bench in Benchmark::all() {
+            for mode in [GcMode::ParallelGC, GcMode::G1GC] {
+                let r = SparkRunner::paper_default(bench)
+                    .run(&FlagConfig::default_for(mode), 7);
+                assert!(
+                    r.exec_time_s > 40.0 && r.exec_time_s < 600.0,
+                    "{} {}: {}",
+                    bench.name(),
+                    mode.name(),
+                    r.exec_time_s
+                );
+                assert!(!r.timed_out);
+            }
+        }
+    }
+
+    #[test]
+    fn dk_parallelgc_is_gc_bound_by_default() {
+        let r = SparkRunner::paper_default(Benchmark::DenseKMeans)
+            .run(&FlagConfig::default_for(GcMode::ParallelGC), 11);
+        assert!(r.gc.full >= 2, "expected full-GC pressure: {:?}", r.gc);
+    }
+
+    #[test]
+    fn dk_g1_avoids_full_gcs_by_default() {
+        let r = SparkRunner::paper_default(Benchmark::DenseKMeans)
+            .run(&FlagConfig::default_for(GcMode::G1GC), 11);
+        assert!(r.gc.full <= 1, "G1 default should not thrash: {:?}", r.gc);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let a = runner.run(&cfg, 42);
+        let b = runner.run(&cfg, 42);
+        assert_eq!(a.exec_time_s, b.exec_time_s);
+        let c = runner.run(&cfg, 43);
+        assert_ne!(a.exec_time_s, c.exec_time_s);
+    }
+
+    #[test]
+    fn tuned_heap_beats_default_for_dk_parallel() {
+        let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+        let default = FlagConfig::default_for(GcMode::ParallelGC);
+        let mut tuned = default.clone();
+        tuned.set("MaxHeapSize", 32768.0);
+        tuned.set("ParallelGCThreads", 20.0);
+        let rd: f64 = (0..5)
+            .map(|s| runner.run(&default, s).exec_time_s)
+            .sum::<f64>()
+            / 5.0;
+        let rt: f64 = (0..5).map(|s| runner.run(&tuned, s).exec_time_s).sum::<f64>() / 5.0;
+        assert!(
+            rt < rd * 0.9,
+            "tuned {rt} should be well below default {rd}"
+        );
+    }
+
+    #[test]
+    fn parallel_jobs_slower_than_exclusive() {
+        let cluster = ClusterSpec::paper();
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let exclusive = run_benchmark(
+            Benchmark::Lda,
+            &cfg,
+            &ExecutorSpec::full_cluster(&cluster),
+            3,
+        );
+        let jobs = vec![
+            (Benchmark::Lda, cfg.clone(), ExecutorSpec::parallel_2x15()),
+            (Benchmark::DenseKMeans, cfg.clone(), ExecutorSpec::parallel_2x15()),
+        ];
+        let rs = run_parallel(&cluster, &jobs, 3);
+        assert_eq!(rs.len(), 2);
+        assert!(
+            rs[0].exec_time_s > exclusive.exec_time_s,
+            "{} vs {}",
+            rs[0].exec_time_s,
+            exclusive.exec_time_s
+        );
+    }
+
+    #[test]
+    fn hu_metric_in_bounds() {
+        let r = SparkRunner::paper_default(Benchmark::Lda)
+            .run(&FlagConfig::default_for(GcMode::G1GC), 5);
+        assert!(r.hu_avg_pct > 1.0 && r.hu_avg_pct < 100.0, "{}", r.hu_avg_pct);
+    }
+}

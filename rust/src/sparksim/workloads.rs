@@ -1,0 +1,139 @@
+//! The two HiBench workloads of the paper's Table I, as mutator models.
+//!
+//! Calibration targets (shape, not absolute numbers — see DESIGN.md):
+//!   * DenseKMeans under ParallelGC defaults is GC-bound (72 GB input,
+//!     1915 tasks, frequent long full-GC pauses) -> large tuning headroom.
+//!   * DenseKMeans under G1GC defaults is already fine -> ~1.0x headroom.
+//!   * LDA gains come from JIT warmup + compiler + young-gen sizing.
+
+use crate::jvmsim::MutatorLoad;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    /// HiBench LDAExample, large profile: 10 000 documents,
+    /// spark.driver.maxResultSize = 3 GB.
+    Lda,
+    /// HiBench DenseKMeans, large profile: 20 M samples, 20 dimensions
+    /// (72 GB input, 1915 tasks).
+    DenseKMeans,
+}
+
+/// Cluster-level workload description (split across executors at run time).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    pub input_gb: f64,
+    pub n_tasks: usize,
+    /// Total compute demand over the whole cluster, core-seconds.
+    pub total_work_core_s: f64,
+    /// Total long-lived data (cached input + model state), MB.
+    pub total_live_mb: f64,
+    pub alloc_mb_per_core_s: f64,
+    pub cache_work_frac: f64,
+    pub young_survival: f64,
+    pub promote_frac: f64,
+    pub humongous_mb_per_core_s: f64,
+}
+
+impl Benchmark {
+    pub fn spec(self) -> WorkloadSpec {
+        match self {
+            Benchmark::Lda => WorkloadSpec {
+                name: "LDA",
+                dataset: "HiBench LDAExample, large, 10000 documents, maxResultSize 3GB",
+                input_gb: 38.0,
+                n_tasks: 1200,
+                total_work_core_s: 5100.0,
+                total_live_mb: 15_000.0,
+                alloc_mb_per_core_s: 150.0,
+                cache_work_frac: 0.25,
+                young_survival: 0.09,
+                promote_frac: 0.16,
+                humongous_mb_per_core_s: 1.5,
+            },
+            Benchmark::DenseKMeans => WorkloadSpec {
+                name: "DenseKMeans",
+                dataset: "DenseKMeans, HiBench, large, 20M samples, 20 dimensions",
+                input_gb: 72.0,
+                n_tasks: 1915,
+                total_work_core_s: 6200.0,
+                total_live_mb: 36_000.0,
+                alloc_mb_per_core_s: 135.0,
+                cache_work_frac: 0.45,
+                young_survival: 0.11,
+                promote_frac: 0.28,
+                humongous_mb_per_core_s: 0.6,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        match s.to_ascii_lowercase().as_str() {
+            "lda" => Some(Benchmark::Lda),
+            "densekmeans" | "dk" | "kmeans" => Some(Benchmark::DenseKMeans),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Benchmark; 2] {
+        [Benchmark::Lda, Benchmark::DenseKMeans]
+    }
+
+    /// Per-executor mutator load for a fleet of `n_exec` executors.
+    pub fn executor_load(self, n_exec: usize) -> MutatorLoad {
+        let s = self.spec();
+        let n = n_exec.max(1) as f64;
+        MutatorLoad {
+            work_core_s: s.total_work_core_s / n,
+            alloc_mb_per_core_s: s.alloc_mb_per_core_s,
+            live_mb: s.total_live_mb / n,
+            cache_work_frac: s.cache_work_frac,
+            young_survival: s.young_survival,
+            promote_frac: s.promote_frac,
+            humongous_mb_per_core_s: s.humongous_mb_per_core_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_metadata() {
+        let lda = Benchmark::Lda.spec();
+        assert!(lda.dataset.contains("10000 documents"));
+        let dk = Benchmark::DenseKMeans.spec();
+        assert!(dk.dataset.contains("20M samples"));
+        assert_eq!(dk.n_tasks, 1915);
+        assert_eq!(dk.input_gb, 72.0);
+    }
+
+    #[test]
+    fn dk_heavier_than_lda() {
+        let lda = Benchmark::Lda.spec();
+        let dk = Benchmark::DenseKMeans.spec();
+        assert!(dk.total_live_mb > lda.total_live_mb);
+        assert!(dk.input_gb > lda.input_gb);
+    }
+
+    #[test]
+    fn executor_load_splits_across_fleet() {
+        let l3 = Benchmark::DenseKMeans.executor_load(3);
+        let l2 = Benchmark::DenseKMeans.executor_load(2);
+        assert!((l3.work_core_s * 3.0 - l2.work_core_s * 2.0).abs() < 1e-9);
+        assert!(l2.live_mb > l3.live_mb);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Benchmark::parse("lda"), Some(Benchmark::Lda));
+        assert_eq!(Benchmark::parse("DK"), Some(Benchmark::DenseKMeans));
+        assert_eq!(Benchmark::parse("sort"), None);
+    }
+}

@@ -1,0 +1,59 @@
+//! Phase 3 — recommending the best flag configuration (paper §III-D).
+//!
+//! Four optimizers over the lasso-selected flag subspace:
+//! * `BoTuner` — Bayesian Optimization: SOBOL init, GP surrogate + EI
+//!   acquisition evaluated through the `gp_ei` HLO artifact (Algorithm 2);
+//! * `BoTuner::warm_start` — GP seeded with the phase-1 AL data instead of
+//!   SOBOL points;
+//! * `RboTuner` — Regression-guided BO: the phase-1 LR model replaces the
+//!   benchmark as the objective (≈6x cheaper per the paper);
+//! * `SaTuner` — the Simulated Annealing + Latin-Hypercube baseline
+//!   (§IV-E).
+
+pub mod bo;
+pub mod objective;
+pub mod rbo;
+pub mod sa;
+pub mod space;
+
+pub use bo::BoTuner;
+pub use objective::{Objective, ParallelSimObjective, SimObjective};
+pub use rbo::RboTuner;
+pub use sa::SaTuner;
+pub use space::TuneSpace;
+
+use anyhow::Result;
+
+use crate::flags::FlagConfig;
+
+/// Result of one tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub algo: String,
+    pub best_config: FlagConfig,
+    pub best_y: f64,
+    /// Objective value observed at each iteration (evaluation order).
+    pub history: Vec<f64>,
+    /// Running best after each iteration.
+    pub best_history: Vec<f64>,
+    /// Number of real benchmark evaluations consumed.
+    pub evals: usize,
+    /// Simulated benchmark wall time consumed by those evaluations (s) —
+    /// the dominant term of the paper's §V-C tuning-time comparison.
+    pub sim_time_s: f64,
+    /// Optimizer-side wall time actually measured (ms).
+    pub algo_wall_ms: f64,
+}
+
+/// Common interface for all phase-3 optimizers.
+pub trait Tuner {
+    fn name(&self) -> String;
+
+    /// Run `iters` tuning iterations against `objective` over `space`.
+    fn tune(
+        &mut self,
+        space: &TuneSpace,
+        objective: &mut dyn Objective,
+        iters: usize,
+    ) -> Result<TuneResult>;
+}

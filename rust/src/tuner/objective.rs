@@ -1,0 +1,199 @@
+//! Objective functions for phase 3: the real benchmark (eq. 1's Q) and the
+//! LR-predictor surrogate used by RBO.
+
+use crate::flags::FlagConfig;
+use crate::sparksim::SparkRunner;
+use crate::util::stats::{Standardizer, TargetScaler};
+use crate::Metric;
+
+/// Minimization objective over flag configurations.
+pub trait Objective {
+    /// Evaluate one configuration.
+    fn eval(&mut self, cfg: &FlagConfig) -> f64;
+
+    /// Benchmark executions consumed so far.
+    fn evals(&self) -> usize;
+
+    /// Simulated benchmark wall time consumed so far (seconds).
+    fn sim_time_s(&self) -> f64;
+}
+
+/// The real objective: run the benchmark on the simulated cluster.
+pub struct SimObjective<'a> {
+    pub runner: &'a SparkRunner,
+    pub metric: Metric,
+    seed: u64,
+    count: usize,
+    sim_time_s: f64,
+}
+
+impl<'a> SimObjective<'a> {
+    pub fn new(runner: &'a SparkRunner, metric: Metric, seed: u64) -> Self {
+        SimObjective { runner, metric, seed, count: 0, sim_time_s: 0.0 }
+    }
+}
+
+impl Objective for SimObjective<'_> {
+    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+        self.count += 1;
+        let m = self.runner.run(cfg, self.seed.wrapping_add(self.count as u64));
+        self.sim_time_s += m.wall_clock_s;
+        let mut v = self.metric.of(&m);
+        if m.timed_out && self.metric == Metric::HeapUsage {
+            v += 50.0; // a crashing config must not win the memory race
+        }
+        v
+    }
+
+    fn evals(&self) -> usize {
+        self.count
+    }
+
+    fn sim_time_s(&self) -> f64 {
+        self.sim_time_s
+    }
+}
+
+/// Objective for the parallel-run scenario (paper §V-E / Fig 6): the tuned
+/// benchmark runs concurrently with a second job (at its default flags) on
+/// the shared cluster, and the tuned job's metric is returned.
+pub struct ParallelSimObjective {
+    pub cluster: crate::sparksim::ClusterSpec,
+    pub target: (crate::Benchmark, crate::sparksim::ExecutorSpec),
+    pub other: (crate::Benchmark, FlagConfig, crate::sparksim::ExecutorSpec),
+    pub metric: Metric,
+    seed: u64,
+    count: usize,
+    sim_time_s: f64,
+}
+
+impl ParallelSimObjective {
+    pub fn new(
+        cluster: crate::sparksim::ClusterSpec,
+        target: (crate::Benchmark, crate::sparksim::ExecutorSpec),
+        other: (crate::Benchmark, FlagConfig, crate::sparksim::ExecutorSpec),
+        metric: Metric,
+        seed: u64,
+    ) -> Self {
+        ParallelSimObjective { cluster, target, other, metric, seed, count: 0, sim_time_s: 0.0 }
+    }
+
+    /// Evaluate a concrete config (also used for the default baseline).
+    pub fn run_once(&mut self, cfg: &FlagConfig) -> crate::RunMetrics {
+        self.count += 1;
+        let jobs = vec![
+            (self.target.0, cfg.clone(), self.target.1),
+            (self.other.0, self.other.1.clone(), self.other.2),
+        ];
+        let rs = crate::sparksim::run_parallel(
+            &self.cluster,
+            &jobs,
+            self.seed.wrapping_add(self.count as u64),
+        );
+        // Tuning wall time is bounded by the slower of the two jobs.
+        self.sim_time_s += rs[0].wall_clock_s.max(rs[1].wall_clock_s);
+        rs.into_iter().next().unwrap()
+    }
+}
+
+impl Objective for ParallelSimObjective {
+    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+        let m = self.run_once(cfg);
+        let mut v = self.metric.of(&m);
+        if m.timed_out && self.metric == Metric::HeapUsage {
+            v += 50.0;
+        }
+        v
+    }
+
+    fn evals(&self) -> usize {
+        self.count
+    }
+
+    fn sim_time_s(&self) -> f64 {
+        self.sim_time_s
+    }
+}
+
+/// RBO's surrogate objective: the phase-1 LR model predicts the metric
+/// instead of running the benchmark ("we use a prediction model to predict
+/// the metric", §III-D).
+pub struct PredictorObjective {
+    pub weights: Vec<f64>,
+    pub xscaler: Standardizer,
+    pub yscaler: TargetScaler,
+    mode_encoder: crate::flags::FeatureEncoder,
+    count: usize,
+}
+
+impl PredictorObjective {
+    /// Fit from a phase-1 dataset through the given backend.
+    pub fn fit(
+        ds: &crate::datagen::Dataset,
+        ridge: f64,
+        backend: &std::sync::Arc<dyn crate::runtime::MlBackend>,
+    ) -> anyhow::Result<Self> {
+        let xscaler = Standardizer::fit(&ds.feat_rows);
+        let x = xscaler.transform(&ds.feat_rows);
+        let yscaler = TargetScaler::fit(&ds.y);
+        let y: Vec<f64> = ds.y.iter().map(|&v| yscaler.transform(v)).collect();
+        let weights = backend.lr_fit(&x, &y, ridge)?;
+        Ok(PredictorObjective {
+            weights,
+            xscaler,
+            yscaler,
+            mode_encoder: crate::flags::FeatureEncoder::new(ds.mode),
+            count: 0,
+        })
+    }
+
+    pub fn predict(&self, cfg: &FlagConfig) -> f64 {
+        let feats = self.mode_encoder.encode(cfg);
+        let std = self.xscaler.transform_row(&feats);
+        let z = crate::native::ops::lr_predict(&self.weights, &std);
+        self.yscaler.inverse(z)
+    }
+}
+
+impl Objective for PredictorObjective {
+    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+        self.count += 1;
+        self.predict(cfg)
+    }
+
+    fn evals(&self) -> usize {
+        self.count
+    }
+
+    fn sim_time_s(&self) -> f64 {
+        0.0 // predictions are free — that's RBO's selling point
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flags::GcMode;
+    use crate::Benchmark;
+
+    #[test]
+    fn sim_objective_accumulates_time_and_count() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let mut obj = SimObjective::new(&runner, Metric::ExecTime, 5);
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let a = obj.eval(&cfg);
+        let b = obj.eval(&cfg);
+        assert!(a > 0.0 && b > 0.0);
+        assert_ne!(a, b, "per-eval seeds must differ");
+        assert_eq!(obj.evals(), 2);
+        assert!(obj.sim_time_s() >= a + b - 1e-9);
+    }
+
+    #[test]
+    fn heap_metric_objective() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let mut obj = SimObjective::new(&runner, Metric::HeapUsage, 5);
+        let v = obj.eval(&FlagConfig::default_for(GcMode::G1GC));
+        assert!(v > 0.0 && v < 150.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! The tuning subspace: the lasso-selected flags vary, everything else
+//! stays at its JVM default (how the paper shrinks the search space).
+
+use crate::featsel::Selection;
+use crate::flags::{FeatureEncoder, FlagConfig, GcMode};
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct TuneSpace {
+    pub mode: GcMode,
+    /// Flag positions (within the GC group) being tuned.
+    pub selected: Vec<usize>,
+    base: FlagConfig,
+}
+
+impl TuneSpace {
+    /// Tune every flag in the group (feature selection skipped).
+    pub fn full(mode: GcMode) -> TuneSpace {
+        let enc = FeatureEncoder::new(mode);
+        TuneSpace {
+            mode,
+            selected: (0..enc.n_flags()).collect(),
+            base: FlagConfig::default_for(mode),
+        }
+    }
+
+    /// Tune only the lasso-selected flags.
+    pub fn from_selection(mode: GcMode, sel: &Selection) -> TuneSpace {
+        assert!(!sel.selected.is_empty(), "empty selection");
+        TuneSpace {
+            mode,
+            selected: sel.selected.clone(),
+            base: FlagConfig::default_for(mode),
+        }
+    }
+
+    /// Dimensionality of the search cube.
+    pub fn dim(&self) -> usize {
+        self.selected.len()
+    }
+
+    /// Materialize a point u in [0,1]^dim as a full flag configuration
+    /// (unselected flags keep their defaults).
+    pub fn to_config(&self, u: &[f64]) -> FlagConfig {
+        assert_eq!(u.len(), self.dim());
+        let mut unit = self.base.to_unit();
+        for (&pos, &v) in self.selected.iter().zip(u) {
+            unit[pos] = v.clamp(0.0, 1.0);
+        }
+        FlagConfig::from_unit(self.mode, &unit)
+    }
+
+    /// Project a full config onto the tuned dimensions.
+    pub fn project(&self, cfg: &FlagConfig) -> Vec<f64> {
+        assert_eq!(cfg.mode, self.mode);
+        let unit = cfg.to_unit();
+        self.selected.iter().map(|&p| unit[p]).collect()
+    }
+
+    /// Project a full-group unit row (e.g. a phase-1 dataset row).
+    pub fn project_unit(&self, unit: &[f64]) -> Vec<f64> {
+        self.selected.iter().map(|&p| unit[p]).collect()
+    }
+
+    /// The default configuration's position in the cube.
+    pub fn default_point(&self) -> Vec<f64> {
+        self.project(&self.base)
+    }
+
+    /// Uniform random point.
+    pub fn random_point(&self, rng: &mut Pcg) -> Vec<f64> {
+        (0..self.dim()).map(|_| rng.f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space3() -> TuneSpace {
+        TuneSpace {
+            mode: GcMode::G1GC,
+            selected: vec![0, 5, 17],
+            base: FlagConfig::default_for(GcMode::G1GC),
+        }
+    }
+
+    #[test]
+    fn full_space_covers_group() {
+        assert_eq!(TuneSpace::full(GcMode::ParallelGC).dim(), 126);
+        assert_eq!(TuneSpace::full(GcMode::G1GC).dim(), 141);
+    }
+
+    #[test]
+    fn to_config_touches_only_selected() {
+        let sp = space3();
+        let cfg = sp.to_config(&[0.0, 1.0, 0.5]);
+        let default = FlagConfig::default_for(GcMode::G1GC);
+        let mut diffs = 0;
+        for (i, (a, b)) in cfg.values.iter().zip(&default.values).enumerate() {
+            if (a - b).abs() > 1e-9 {
+                assert!(sp.selected.contains(&i), "flag {i} changed unexpectedly");
+                diffs += 1;
+            }
+        }
+        assert!(diffs >= 2); // 0.5 may round to the default for some flags
+    }
+
+    #[test]
+    fn project_roundtrip() {
+        let sp = space3();
+        let u = [0.25, 0.75, 0.5];
+        let cfg = sp.to_config(&u);
+        let back = sp.project(&cfg);
+        for (a, b) in u.iter().zip(&back) {
+            // quantization by integer flags allowed
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn default_point_maps_to_default_config() {
+        let sp = space3();
+        let cfg = sp.to_config(&sp.default_point());
+        let default = FlagConfig::default_for(GcMode::G1GC);
+        for (f, (a, b)) in cfg.defs().iter().zip(cfg.values.iter().zip(&default.values)) {
+            let tol = match f.kind {
+                crate::flags::Kind::Bool { .. } => 0.0,
+                crate::flags::Kind::Int { min, max, log, .. } => {
+                    if log { (b * 0.02).max(1.0) } else { ((max - min) * 2e-3).max(1.0) }
+                }
+            };
+            assert!((a - b).abs() <= tol, "{}: {a} vs {b}", f.name);
+        }
+    }
+
+    #[test]
+    fn random_points_in_cube() {
+        let sp = space3();
+        let mut rng = Pcg::new(3);
+        for _ in 0..50 {
+            let u = sp.random_point(&mut rng);
+            assert_eq!(u.len(), 3);
+            assert!(u.iter().all(|&x| (0.0..1.0).contains(&x)));
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! CSV reader/writer for the phase-1 data files ("the collected data is
+//! stored in a csv file", paper §III-A) and for result tables.
+//!
+//! Numeric-matrix oriented: a header row of column names, then f64 rows.
+//! Quoting is supported on read; we never emit values needing quotes.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: Vec<String>) -> Self {
+        Table { columns, rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.col_index(name)?;
+        Some(self.rows.iter().map(|r| r[i]).collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let mut first = true;
+            for v in row {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                let _ = write!(out, "{v}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    pub fn parse(text: &str) -> Result<Table, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().ok_or("empty csv")?;
+        let columns: Vec<String> =
+            split_csv_line(header).into_iter().map(|s| s.trim().to_string()).collect();
+        let mut rows = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            let fields = split_csv_line(line);
+            if fields.len() != columns.len() {
+                return Err(format!(
+                    "line {}: {} fields, expected {}",
+                    ln + 2,
+                    fields.len(),
+                    columns.len()
+                ));
+            }
+            let row: Result<Vec<f64>, _> = fields
+                .iter()
+                .map(|f| f.trim().parse::<f64>().map_err(|e| format!("line {}: {e}", ln + 2)))
+                .collect();
+            rows.push(row?);
+        }
+        Ok(Table { columns, rows })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Table, String> {
+        let text = fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Table::parse(&text)
+    }
+}
+
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(vec!["a".into(), "b".into()]);
+        t.push(vec![1.0, 2.5]);
+        t.push(vec![-3.0, 0.125]);
+        let parsed = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn column_access() {
+        let mut t = Table::new(vec!["x".into(), "y".into()]);
+        t.push(vec![1.0, 10.0]);
+        t.push(vec![2.0, 20.0]);
+        assert_eq!(t.column("y").unwrap(), vec![10.0, 20.0]);
+        assert!(t.column("z").is_none());
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let t = Table::parse("\"a\",\"b\"\n1,2\n").unwrap();
+        assert_eq!(t.columns, vec!["a", "b"]);
+        assert_eq!(t.rows, vec![vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        assert!(Table::parse("a\nxyz\n").is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let t = Table::parse("a\n\n1\n\n2\n").unwrap();
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_wrong_arity_panics() {
+        let mut t = Table::new(vec!["a".into()]);
+        t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn save_and_load(){
+        let dir = std::env::temp_dir().join("ost_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(vec!["m".into()]);
+        t.push(vec![42.0]);
+        t.save(&path).unwrap();
+        assert_eq!(Table::load(&path).unwrap(), t);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared substrates: deterministic RNG, quasi-random sequences, sampling
+//! designs, statistics, and the JSON/CSV codecs the offline image lacks
+//! crates for.
+
+pub mod csv;
+pub mod json;
+pub mod lhs;
+pub mod rng;
+pub mod sobol;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Pcg;
+pub use sobol::Sobol;
+pub use stats::{summarize, Summary};

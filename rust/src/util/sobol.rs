@@ -1,0 +1,218 @@
+//! Sobol low-discrepancy sequence for BO initialization (paper §III-D:
+//! "We generate initial samples using quasi-random SOBOL sequence for
+//! exploration").
+//!
+//! Direction numbers are built from an embedded table of primitive
+//! polynomials over GF(2) (degrees 1..=9, enough for 160 dimensions — the
+//! largest tuning space is the 141-flag G1 group) with deterministic valid
+//! initial numbers (m_i odd, m_i < 2^i).  Gray-code generation, 32 bits of
+//! resolution.
+
+/// Primitive polynomials over GF(2), encoded with the convention of
+/// Bratley & Fox: value = interior coefficient bits (a_1..a_{d-1}) of
+/// x^d + a_1 x^{d-1} + ... + a_{d-1} x + 1.  Grouped by degree.
+const PRIMITIVE_POLYS: &[(u32, u32)] = &[
+    // (degree, interior bits)
+    (1, 0),
+    (2, 1),
+    (3, 1), (3, 2),
+    (4, 1), (4, 4),
+    (5, 2), (5, 4), (5, 7), (5, 11), (5, 13), (5, 14),
+    (6, 1), (6, 13), (6, 16), (6, 19), (6, 22), (6, 25),
+    (7, 1), (7, 4), (7, 7), (7, 8), (7, 14), (7, 19), (7, 21), (7, 28),
+    (7, 31), (7, 32), (7, 37), (7, 41), (7, 42), (7, 50), (7, 55), (7, 56),
+    (7, 59), (7, 62),
+    (8, 14), (8, 21), (8, 22), (8, 38), (8, 47), (8, 49), (8, 50), (8, 52),
+    (8, 56), (8, 67), (8, 70), (8, 84), (8, 97), (8, 103), (8, 115), (8, 122),
+    (9, 8), (9, 13), (9, 16), (9, 22), (9, 25), (9, 44), (9, 47), (9, 52),
+    (9, 55), (9, 59), (9, 62), (9, 67), (9, 74), (9, 81), (9, 82), (9, 87),
+    (9, 91), (9, 94), (9, 103), (9, 104), (9, 109), (9, 122), (9, 124),
+    (9, 137), (9, 138), (9, 143), (9, 145), (9, 152), (9, 157), (9, 167),
+    (9, 173), (9, 176), (9, 181), (9, 182), (9, 185), (9, 191), (9, 194),
+    (9, 199), (9, 218), (9, 220), (9, 227), (9, 229), (9, 230), (9, 234),
+    (9, 236), (9, 241), (9, 244), (9, 253),
+];
+
+const BITS: usize = 32;
+
+/// Maximum supported dimensionality (dim 0 is van der Corput, the rest use
+/// the polynomial table, each polynomial twice via two init-number seeds).
+pub const MAX_DIM: usize = 1 + 2 * PRIMITIVE_POLYS.len();
+
+#[derive(Clone)]
+pub struct Sobol {
+    dim: usize,
+    /// direction numbers v[d][b], scaled into the top 32 bits
+    v: Vec<[u32; BITS]>,
+    x: Vec<u32>,
+    index: u64,
+}
+
+impl Sobol {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 1 && dim <= MAX_DIM, "sobol dim {dim} > {MAX_DIM}");
+        let mut v = Vec::with_capacity(dim);
+        // Dimension 0: van der Corput (v_i = 2^{-i}).
+        let mut v0 = [0u32; BITS];
+        for (i, slot) in v0.iter_mut().enumerate() {
+            *slot = 1u32 << (31 - i);
+        }
+        v.push(v0);
+        for d in 1..dim {
+            let (deg, poly) = PRIMITIVE_POLYS[(d - 1) % PRIMITIVE_POLYS.len()];
+            // Two variants per polynomial via different init-number seeds.
+            let variant = ((d - 1) / PRIMITIVE_POLYS.len()) as u32;
+            v.push(direction_numbers(deg, poly, d as u32, variant));
+        }
+        Sobol { dim, v, x: vec![0; dim], index: 0 }
+    }
+
+    /// Next point in [0,1)^dim (Gray-code order; first emitted point is the
+    /// sequence's index-1 point, i.e. 0.5 in every coordinate).
+    pub fn next_point(&mut self) -> Vec<f64> {
+        self.index += 1;
+        let c = self.index.trailing_zeros() as usize;
+        let c = c.min(BITS - 1);
+        for d in 0..self.dim {
+            self.x[d] ^= self.v[d][c];
+        }
+        self.x
+            .iter()
+            .map(|&xi| xi as f64 / (1u64 << 32) as f64)
+            .collect()
+    }
+
+    /// Generate n points as rows.
+    pub fn points(&mut self, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| self.next_point()).collect()
+    }
+}
+
+/// Build the 32 direction numbers for one dimension.
+fn direction_numbers(deg: u32, poly: u32, dim_tag: u32, variant: u32) -> [u32; BITS] {
+    let s = deg as usize;
+    // Initial m_1..m_s: odd, m_i < 2^i, chosen deterministically from a
+    // small hash so each (dimension, variant) differs.  Any valid choice
+    // yields a proper Sobol net; Joe-Kuo-style optimization only improves
+    // 2D projections.
+    let mut m = vec![0u64; s + 1];
+    let mut h = dim_tag
+        .wrapping_mul(0x9E37_79B9)
+        .wrapping_add(variant.wrapping_mul(0x85EB_CA6B))
+        .wrapping_add(poly.wrapping_mul(0xC2B2_AE35));
+    for i in 1..=s {
+        h ^= h >> 13;
+        h = h.wrapping_mul(0x5bd1_e995);
+        h ^= h >> 15;
+        let span = 1u64 << (i - 1); // number of odd values below 2^i
+        m[i] = 2 * (h as u64 % span) + 1;
+        debug_assert!(m[i] % 2 == 1 && m[i] < (1 << i));
+    }
+    // Recurrence: m_k = 2 a_1 m_{k-1} ^ 4 a_2 m_{k-2} ^ ... ^
+    //             2^{s-1} a_{s-1} m_{k-s+1} ^ 2^s m_{k-s} ^ m_{k-s}
+    let mut v = [0u32; BITS];
+    let mut mm = vec![0u64; BITS + 1];
+    mm[1..=s].copy_from_slice(&m[1..=s]);
+    for k in (s + 1)..=BITS {
+        let mut val = mm[k - s] ^ (mm[k - s] << s);
+        for j in 1..s {
+            let a_j = (poly >> (s - 1 - j)) & 1;
+            if a_j == 1 {
+                val ^= mm[k - j] << j;
+            }
+        }
+        mm[k] = val;
+    }
+    for (i, slot) in v.iter_mut().enumerate() {
+        let k = i + 1;
+        *slot = (mm[k] << (BITS - k)) as u32;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_dim_is_van_der_corput() {
+        let mut s = Sobol::new(1);
+        let got: Vec<f64> = (0..7).map(|_| s.next_point()[0]).collect();
+        // Gray-code order of the van der Corput sequence
+        let want = [0.5, 0.75, 0.25, 0.375, 0.875, 0.625, 0.125];
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-12, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn points_in_unit_cube() {
+        let mut s = Sobol::new(40);
+        for _ in 0..500 {
+            let p = s.next_point();
+            assert!(p.iter().all(|&x| (0.0..1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn supports_141_dims() {
+        let mut s = Sobol::new(141);
+        let p = s.points(64);
+        assert_eq!(p.len(), 64);
+        assert!(p.iter().all(|row| row.len() == 141));
+    }
+
+    #[test]
+    fn max_dim_constructs() {
+        let _ = Sobol::new(MAX_DIM);
+    }
+
+    #[test]
+    fn no_duplicate_points() {
+        let mut s = Sobol::new(8);
+        let pts = s.points(256);
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                assert_ne!(pts[i], pts[j], "dup at {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_first_256_per_dim() {
+        // A Sobol net is perfectly balanced across halves in each dim over
+        // any power-of-two prefix starting at index 1.
+        let mut s = Sobol::new(16);
+        let pts = s.points(256);
+        for d in 0..16 {
+            let lo = pts.iter().filter(|p| p[d] < 0.5).count();
+            assert!(
+                (120..=136).contains(&lo),
+                "dim {d} unbalanced: {lo}/256 below 0.5"
+            );
+        }
+    }
+
+    #[test]
+    fn lower_discrepancy_than_random_1d() {
+        // Star-discrepancy proxy in 1D: max gap between sorted neighbours.
+        let mut s = Sobol::new(4);
+        let n = 512;
+        let mut xs: Vec<f64> = s.points(n).into_iter().map(|p| p[3]).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let max_gap = xs.windows(2).map(|w| w[1] - w[0]).fold(0.0, f64::max);
+        assert!(max_gap < 0.02, "max gap {max_gap}");
+    }
+
+    #[test]
+    fn dims_not_identical() {
+        let mut s = Sobol::new(64);
+        let pts = s.points(32);
+        for d1 in 0..8 {
+            for d2 in (d1 + 1)..8 {
+                let same = pts.iter().filter(|p| (p[d1] - p[d2]).abs() < 1e-12).count();
+                assert!(same < pts.len(), "dims {d1},{d2} identical");
+            }
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Small statistics toolkit used across the pipeline: summary stats for
+//! repeated tuning runs (paper reports mean ± std over 10 repeats), RMSE for
+//! the AL convergence criterion, and standardization for lasso.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize on empty slice");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    summarize(xs).mean
+}
+
+pub fn rmse(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    assert!(!pred.is_empty());
+    let s: f64 = pred
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| (p - a) * (p - a))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Pearson correlation; 0 when either side is constant.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Column-wise standardization parameters for a row-major matrix.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Standardizer {
+    pub fn fit(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let n = rows.len() as f64;
+        let mut mean = vec![0.0; d];
+        for r in rows {
+            for (m, v) in mean.iter_mut().zip(r) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut std = vec![0.0; d];
+        for r in rows {
+            for j in 0..d {
+                let dv = r[j] - mean[j];
+                std[j] += dv * dv;
+            }
+        }
+        for s in &mut std {
+            *s = (*s / n).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0; // constant column -> leave centered at 0
+            }
+        }
+        Standardizer { mean, std }
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    pub fn transform(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.transform_row(r)).collect()
+    }
+}
+
+/// Scalar target standardization (zero mean, unit variance) with inverse.
+#[derive(Clone, Copy, Debug)]
+pub struct TargetScaler {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl TargetScaler {
+    pub fn fit(ys: &[f64]) -> Self {
+        let s = summarize(ys);
+        TargetScaler { mean: s.mean, std: if s.std < 1e-12 { 1.0 } else { s.std } }
+    }
+
+    pub fn transform(&self, y: f64) -> f64 {
+        (y - self.mean) / self.std
+    }
+
+    pub fn inverse(&self, z: f64) -> f64 {
+        z * self.std + self.mean
+    }
+}
+
+/// Arg-min / arg-max helpers over f64 slices (NaN-hostile: NaN never wins).
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_single_value_zero_std() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn rmse_zero_for_exact() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let r = rmse(&[0.0, 0.0], &[3.0, 4.0]);
+        assert!((r - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0];
+        assert!((pearson(&x, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &[-1.0, -2.0, -3.0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_var() {
+        let rows = vec![
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![4.0, 40.0],
+        ];
+        let st = Standardizer::fit(&rows);
+        let t = st.transform(&rows);
+        for j in 0..2 {
+            let col: Vec<f64> = t.iter().map(|r| r[j]).collect();
+            let m = col.iter().sum::<f64>() / col.len() as f64;
+            let v = col.iter().map(|x| x * x).sum::<f64>() / col.len() as f64;
+            assert!(m.abs() < 1e-12);
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn standardizer_constant_column_safe() {
+        let rows = vec![vec![5.0], vec![5.0], vec![5.0]];
+        let st = Standardizer::fit(&rows);
+        let t = st.transform(&rows);
+        assert!(t.iter().all(|r| r[0] == 0.0));
+    }
+
+    #[test]
+    fn target_scaler_roundtrip() {
+        let ys = [10.0, 20.0, 30.0];
+        let sc = TargetScaler::fit(&ys);
+        for y in ys {
+            assert!((sc.inverse(sc.transform(y)) - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn argminmax() {
+        let xs = [3.0, 1.0, 2.0, 5.0];
+        assert_eq!(argmin(&xs), 1);
+        assert_eq!(argmax(&xs), 3);
+    }
+}

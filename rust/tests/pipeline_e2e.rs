@@ -1,0 +1,180 @@
+//! End-to-end pipeline integration: all three phases composed, through the
+//! XLA backend when artifacts are present (falling back to native), with
+//! the paper's qualitative claims asserted at reduced budget:
+//!   * the pipeline improves (or at least does not regress) the benchmark,
+//!   * lasso prunes the flag group but keeps the dominant knobs,
+//!   * DenseKMeans/ParallelGC shows the largest headroom,
+//!   * RBO consumes far less benchmark time than iterating BO,
+//!   * AL (BEMCM) converges at least as well as random selection.
+
+use std::sync::Arc;
+
+use onestoptuner::datagen::{characterize, DataGenConfig, Strategy};
+use onestoptuner::pipeline::{run_pipeline, Algo, PipelineConfig};
+use onestoptuner::runtime::{engine::XlaEngine, MlBackend, NativeBackend};
+use onestoptuner::sparksim::SparkRunner;
+use onestoptuner::tuner::bo::BoConfig;
+use onestoptuner::tuner::sa::SaConfig;
+use onestoptuner::{Benchmark, GcMode, Metric};
+
+fn backend() -> Arc<dyn MlBackend> {
+    match XlaEngine::load("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(_) => Arc::new(NativeBackend),
+    }
+}
+
+fn small_config() -> PipelineConfig {
+    PipelineConfig {
+        datagen: DataGenConfig {
+            pool_size: 400,
+            seed_runs: 30,
+            test_runs: 12,
+            batch_k: 22,
+            max_rounds: 6,
+            rmse_rel_tol: 0.0,
+            ridge: 1e-3,
+            seed: 1234,
+        },
+        lambda: 0.01,
+        bo: BoConfig { n_init: 6, n_candidates: 512, ..Default::default() },
+        sa: SaConfig::default(),
+        tune_iters: 14,
+        repeats: 5,
+        seed: 99,
+    }
+}
+
+#[test]
+fn dk_parallelgc_pipeline_beats_default() {
+    let out = run_pipeline(
+        Benchmark::DenseKMeans,
+        GcMode::ParallelGC,
+        Metric::ExecTime,
+        &[Algo::BoWarm, Algo::Sa],
+        &small_config(),
+        &backend(),
+    )
+    .unwrap();
+
+    // Lasso pruned but kept a meaningful subset including a dominant
+    // heap/GC knob (otherwise the tuner cannot fix the full-GC pressure).
+    assert!(out.selection.n_selected() > 20);
+    assert!(out.selection.n_selected() < out.selection.group_size);
+    assert!(
+        out.selection.names.iter().any(|n| n == "MaxHeapSize"
+            || n == "MaxNewSize"
+            || n == "NewRatio"),
+        "no dominant heap flag kept: {:?}",
+        out.selection.names
+    );
+
+    // The GC-bound case must show real improvement even at reduced budget.
+    let warm = &out.outcomes[0];
+    assert!(
+        warm.improvement > 1.12,
+        "DK/ParallelGC BO-warm improvement only {:.2}x",
+        warm.improvement
+    );
+    // SA does not beat the BO-warm recommendation (paper shape; small
+    // slack for the reduced test budget).
+    assert!(out.outcomes[1].improvement <= warm.improvement + 0.2);
+}
+
+#[test]
+fn rbo_is_cheap_and_sane() {
+    let out = run_pipeline(
+        Benchmark::Lda,
+        GcMode::G1GC,
+        Metric::ExecTime,
+        &[Algo::Rbo],
+        &small_config(),
+        &backend(),
+    )
+    .unwrap();
+    let rbo = &out.outcomes[0];
+    // At most two real runs (surrogate pick + measured fallback).
+    assert!(rbo.tune.evals <= 2, "evals {}", rbo.tune.evals);
+    // Cheap: far less benchmark time than 10 BO iterations would burn.
+    assert!(rbo.tune.sim_time_s < 600.0, "sim time {}", rbo.tune.sim_time_s);
+    // Sane: not a catastrophic recommendation.
+    assert!(rbo.improvement > 0.85, "improvement {:.2}", rbo.improvement);
+}
+
+#[test]
+fn heap_usage_pipeline_reduces_hu() {
+    let out = run_pipeline(
+        Benchmark::DenseKMeans,
+        GcMode::G1GC,
+        Metric::HeapUsage,
+        &[Algo::BoWarm],
+        &small_config(),
+        &backend(),
+    )
+    .unwrap();
+    let warm = &out.outcomes[0];
+    assert!(
+        warm.tuned_summary.mean < out.default_summary.mean,
+        "HU not reduced: {} -> {}",
+        out.default_summary.mean,
+        warm.tuned_summary.mean
+    );
+    // Tuned config still finishes (no OOM exploit).
+    assert!(warm.tuned_summary.mean > 1.0);
+}
+
+#[test]
+fn bemcm_converges_no_worse_than_random() {
+    let runner = SparkRunner::paper_default(Benchmark::Lda);
+    let b = backend();
+    let dg = DataGenConfig {
+        pool_size: 240,
+        seed_runs: 24,
+        test_runs: 16,
+        batch_k: 18,
+        max_rounds: 5,
+        rmse_rel_tol: 0.0,
+        ridge: 1e-3,
+        seed: 777,
+    };
+    let al = characterize(&runner, GcMode::G1GC, Metric::ExecTime, Strategy::Bemcm, &dg, &b)
+        .unwrap();
+    let rnd = characterize(&runner, GcMode::G1GC, Metric::ExecTime, Strategy::Random, &dg, &b)
+        .unwrap();
+    // The paper's claim is about convergence *speed*: BEMCM must reach the
+    // random strategy's final RMSE in no more rounds than random took
+    // (usually far fewer — Fig 5 / the 70%-fewer-runs claim).
+    let rnd_final = *rnd.rmse_history.last().unwrap();
+    let al_reach = al
+        .rmse_history
+        .iter()
+        .position(|&r| r <= rnd_final * 1.05)
+        .unwrap_or(al.rmse_history.len());
+    assert!(
+        al_reach <= rnd.rmse_history.len() - 1,
+        "BEMCM never reached random's final RMSE {rnd_final:.2} (history {:?})",
+        al.rmse_history
+    );
+}
+
+#[test]
+fn characterization_runs_are_accounted() {
+    let runner = SparkRunner::paper_default(Benchmark::Lda);
+    let b = backend();
+    let dg = DataGenConfig {
+        pool_size: 100,
+        seed_runs: 10,
+        test_runs: 6,
+        batch_k: 8,
+        max_rounds: 2,
+        rmse_rel_tol: 0.0,
+        ridge: 1e-3,
+        seed: 5,
+    };
+    let r = characterize(&runner, GcMode::ParallelGC, Metric::ExecTime, Strategy::Qbc, &dg, &b)
+        .unwrap();
+    // runs = default (cap calibration) + seed + test + labelled batches
+    assert_eq!(r.runs_executed, 1 + 10 + 6 + r.rounds * 8);
+    assert_eq!(r.dataset.len(), 10 + r.rounds * 8);
+    assert!(r.sim_time_s > 0.0);
+}

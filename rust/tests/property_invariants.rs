@@ -1,0 +1,210 @@
+//! Property-based tests over the coordinator's core invariants (hand-rolled
+//! generator sweep — the offline image has no proptest crate): randomized
+//! inputs over many seeds, asserting the invariants the pipeline relies on.
+
+use onestoptuner::flags::{FeatureEncoder, FlagConfig, GcMode, Kind};
+use onestoptuner::jvmsim::{self, JvmParams, MutatorLoad};
+use onestoptuner::tuner::TuneSpace;
+use onestoptuner::util::json::Json;
+use onestoptuner::util::rng::Pcg;
+use onestoptuner::util::sobol::Sobol;
+use onestoptuner::{Benchmark, SparkRunner};
+
+const CASES: u64 = 60;
+
+fn modes() -> [GcMode; 2] {
+    [GcMode::ParallelGC, GcMode::G1GC]
+}
+
+#[test]
+fn prop_config_unit_roundtrip_is_projection() {
+    // from_unit(to_unit(c)) must be idempotent: applying it twice equals
+    // applying it once (quantization is a projection).
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(seed);
+        for mode in modes() {
+            let c = FlagConfig::random(mode, &mut rng);
+            let once = FlagConfig::from_unit(mode, &c.to_unit());
+            let twice = FlagConfig::from_unit(mode, &once.to_unit());
+            assert_eq!(once, twice, "seed {seed} {}", mode.name());
+        }
+    }
+}
+
+#[test]
+fn prop_encoded_features_bounded() {
+    // All features live in [0, 1]: unit values plus squares of unit values.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(1000 + seed);
+        for mode in modes() {
+            let enc = FeatureEncoder::new(mode);
+            let c = FlagConfig::random(mode, &mut rng);
+            let f = enc.encode(&c);
+            assert_eq!(f.len(), enc.n_features());
+            assert!(
+                f.iter().all(|&v| (-1e-12..=1.0 + 1e-12).contains(&v)),
+                "seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_flag_values_always_in_catalog_range() {
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(2000 + seed);
+        for mode in modes() {
+            let c = FlagConfig::random(mode, &mut rng);
+            for (f, &v) in c.defs().iter().zip(&c.values) {
+                match f.kind {
+                    Kind::Bool { .. } => assert!(v == 0.0 || v == 1.0),
+                    Kind::Int { min, max, .. } => {
+                        assert!((min..=max).contains(&v), "{} = {v}", f.name)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simulator_total_and_deterministic() {
+    // Any random configuration terminates with finite, positive outputs and
+    // identical results for identical seeds.
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg::new(3000 + seed);
+        for mode in modes() {
+            let cfg = FlagConfig::random(mode, &mut rng);
+            let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+            let a = runner.run(&cfg, seed);
+            let b = runner.run(&cfg, seed);
+            assert!(a.exec_time_s.is_finite() && a.exec_time_s > 0.0);
+            assert!(a.hu_avg_pct.is_finite() && a.hu_avg_pct >= 0.0);
+            assert!(a.wall_clock_s <= a.exec_time_s + 1e-9);
+            assert_eq!(a.exec_time_s, b.exec_time_s, "nondeterministic");
+            assert_eq!(a.gc, b.gc);
+        }
+    }
+}
+
+#[test]
+fn prop_jvm_pause_accounting_consistent() {
+    // Total pause never exceeds wall time; max pause never exceeds total.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(4000 + seed);
+        let cfg = FlagConfig::random(GcMode::ParallelGC, &mut rng);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        let load = MutatorLoad {
+            work_core_s: 800.0,
+            alloc_mb_per_core_s: 120.0,
+            live_mb: 8000.0,
+            cache_work_frac: 0.3,
+            young_survival: 0.1,
+            promote_frac: 0.2,
+            humongous_mb_per_core_s: 1.0,
+        };
+        let r = jvmsim::run(&p, &load, 20.0, &mut Pcg::new(seed));
+        assert!(r.gc.total_pause_ms / 1000.0 <= r.wall_s + 1e-6, "seed {seed}");
+        assert!(r.gc.max_pause_ms <= r.gc.total_pause_ms + 1e-9);
+        assert!(r.hu_avg_pct <= 100.0 + 1e-9, "HU {}", r.hu_avg_pct);
+    }
+}
+
+#[test]
+fn prop_tunespace_to_config_respects_unselected_flags() {
+    // Tuning must never move a flag outside the selected subspace.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(5000 + seed);
+        for mode in modes() {
+            let enc = FeatureEncoder::new(mode);
+            let k = 5 + rng.below(30);
+            let selected = rng.sample_indices(enc.n_flags(), k);
+            let mut space = TuneSpace::full(mode);
+            space.selected = selected.clone();
+            let u: Vec<f64> = (0..k).map(|_| rng.f64()).collect();
+            let cfg = space.to_config(&u);
+            let default = FlagConfig::default_for(mode);
+            for (i, (a, b)) in cfg.values.iter().zip(&default.values).enumerate() {
+                if !selected.contains(&i) {
+                    assert_eq!(a, b, "unselected flag {i} moved (seed {seed})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sobol_points_distinct_and_bounded() {
+    for dim in [1usize, 3, 17, 64, 141] {
+        let mut s = Sobol::new(dim);
+        let pts = s.points(128);
+        for (i, p) in pts.iter().enumerate() {
+            assert!(p.iter().all(|&x| (0.0..1.0).contains(&x)), "dim {dim}");
+            if i > 0 {
+                assert_ne!(pts[i - 1], *p, "dup at {i} (dim {dim})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    // Randomly generated JSON values survive emit -> parse.
+    fn gen(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..200 {
+        let mut rng = Pcg::new(seed);
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_dataset_csv_roundtrip_random() {
+    use onestoptuner::datagen::Dataset;
+    use onestoptuner::Metric;
+    for seed in 0..10 {
+        let mut rng = Pcg::new(7000 + seed);
+        let mode = if rng.bool() { GcMode::G1GC } else { GcMode::ParallelGC };
+        let enc = FeatureEncoder::new(mode);
+        let n = 5 + rng.below(20);
+        let mut unit_rows = Vec::new();
+        let mut feat_rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let c = FlagConfig::random(mode, &mut rng);
+            unit_rows.push(c.to_unit());
+            feat_rows.push(enc.encode(&c));
+            y.push(rng.uniform(10.0, 500.0));
+        }
+        let ds = Dataset { mode, metric: Metric::ExecTime, unit_rows, feat_rows, y };
+        let back = Dataset::from_table(&ds.to_table(), mode, Metric::ExecTime).unwrap();
+        assert_eq!(back.len(), ds.len());
+        for (a, b) in back.y.iter().zip(&ds.y) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // feature re-encoding from units must agree
+        for (a, b) in back.feat_rows.iter().zip(&ds.feat_rows) {
+            for (x, w) in a.iter().zip(b) {
+                assert!((x - w).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration tests for the REST API (Fig 2 backend): spin up the server
+//! on an ephemeral port and exercise every endpoint end-to-end.
+
+use std::sync::Arc;
+
+use onestoptuner::runtime::NativeBackend;
+use onestoptuner::server::{http_request, spawn};
+use onestoptuner::util::json::Json;
+
+fn server() -> std::net::SocketAddr {
+    spawn("127.0.0.1:0", Arc::new(NativeBackend)).expect("bind")
+}
+
+#[test]
+fn health_reports_backend() {
+    let addr = server();
+    let (code, body) = http_request(addr, "GET", "/api/health", "").unwrap();
+    assert_eq!(code, 200);
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(v.get("backend").unwrap().as_str().unwrap(), "native");
+}
+
+#[test]
+fn benchmarks_lists_table1() {
+    let addr = server();
+    let (code, body) = http_request(addr, "GET", "/api/benchmarks", "").unwrap();
+    assert_eq!(code, 200);
+    let v = Json::parse(&body).unwrap();
+    let arr = v.as_arr().unwrap();
+    assert_eq!(arr.len(), 2);
+    assert!(arr
+        .iter()
+        .any(|b| b.get("name").unwrap().as_str() == Some("DenseKMeans")));
+}
+
+#[test]
+fn flags_catalog_sizes() {
+    let addr = server();
+    let (_, body) = http_request(addr, "GET", "/api/flags?gc=g1", "").unwrap();
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.as_arr().unwrap().len(), 141);
+    let (_, body) = http_request(addr, "GET", "/api/flags?gc=parallel", "").unwrap();
+    assert_eq!(Json::parse(&body).unwrap().as_arr().unwrap().len(), 126);
+    let (code, _) = http_request(addr, "GET", "/api/flags", "").unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn run_endpoint_executes_benchmark() {
+    let addr = server();
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/run",
+        r#"{"bench": "lda", "gc": "g1", "seed": 3}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    let t = v.get("exec_time_s").unwrap().as_f64().unwrap();
+    assert!(t > 40.0 && t < 600.0, "{t}");
+    assert!(v.get("minor_gcs").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn run_with_custom_flags() {
+    let addr = server();
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/run",
+        r#"{"bench": "densekmeans", "gc": "parallel",
+            "flags": {"MaxHeapSize": 32768, "ParallelGCThreads": 20}}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    // unknown flag for the group is a client error
+    let (code, _) = http_request(
+        addr,
+        "POST",
+        "/api/run",
+        r#"{"bench": "lda", "gc": "parallel", "flags": {"G1ReservePercent": 5}}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn characterize_select_tune_flow() {
+    let addr = server();
+    // 1. characterize (small pool to stay fast)
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/characterize",
+        r#"{"bench": "lda", "gc": "g1", "pool": 120, "rounds": 2}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    let id = v.get("dataset_id").unwrap().as_f64().unwrap();
+    assert!(v.get("samples").unwrap().as_f64().unwrap() > 10.0);
+
+    // 2. datasets listing shows it
+    let (_, body) = http_request(addr, "GET", "/api/datasets", "").unwrap();
+    assert!(body.contains("dataset_id"));
+
+    // 3. select
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/select",
+        &format!(r#"{{"dataset_id": {id}}}"#),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("group_size").unwrap().as_f64().unwrap() as i64, 141);
+    assert!(v.get("n_selected").unwrap().as_f64().unwrap() > 0.0);
+
+    // 4. tune (few iterations, warm start reuses the dataset)
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        &format!(
+            r#"{{"bench": "lda", "gc": "g1", "algo": "bo-warm",
+                 "dataset_id": {id}, "iters": 3}}"#
+        ),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    assert!(v.get("improvement").unwrap().as_f64().unwrap() > 0.3);
+    assert!(v
+        .get("best_java_args")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("-XX:+UseG1GC"));
+}
+
+#[test]
+fn tune_without_dataset_requires_cold_algo() {
+    let addr = server();
+    let (code, _) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "rbo", "iters": 2}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn unknown_route_404s() {
+    let addr = server();
+    let (code, _) = http_request(addr, "GET", "/api/nope", "").unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = http_request(addr, "PUT", "/api/health", "").unwrap();
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn malformed_json_rejected() {
+    let addr = server();
+    let (code, _) = http_request(addr, "POST", "/api/run", "{not json").unwrap();
+    assert_eq!(code, 400);
+}
