@@ -1,5 +1,7 @@
 //! The Fig 2 backend in action: start the REST API, then act as the UI —
-//! characterize, select flags, and tune over HTTP.
+//! characterize, select flags, and tune over HTTP.  The long-running
+//! endpoints are asynchronous: POST returns `202 Accepted` + a job id and
+//! the client polls `/api/jobs/:id` until the job is done.
 //!
 //! Run with:  cargo run --release --example rest_server
 
@@ -15,6 +17,19 @@ fn main() -> anyhow::Result<()> {
     let get = |path: &str| http_request(addr, "GET", path, "").unwrap();
     let post = |path: &str, body: &str| http_request(addr, "POST", path, body).unwrap();
 
+    // Poll an async job until it finishes, returning its result payload.
+    let wait_done = |job_id: f64| -> Json {
+        loop {
+            let (_, body) = get(&format!("/api/jobs/{job_id}"));
+            let v = Json::parse(&body).unwrap();
+            match v.get("status").and_then(Json::as_str) {
+                Some("done") => return v.get("result").unwrap().clone(),
+                Some("failed") => panic!("job {job_id} failed: {body}"),
+                _ => std::thread::sleep(std::time::Duration::from_millis(250)),
+            }
+        }
+    };
+
     let (_, body) = get("/api/health");
     println!("GET /api/health\n  {body}\n");
 
@@ -28,14 +43,16 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  {body}\n");
 
-    println!("POST /api/characterize (LDA, G1GC — this runs the AL loop)");
-    let (_, body) = post(
+    println!("POST /api/characterize (LDA, G1GC — the AL loop runs as an async job)");
+    let (code, body) = post(
         "/api/characterize",
         r#"{"bench":"lda","gc":"g1","pool":200,"rounds":3}"#,
     );
-    println!("  {body}\n");
-    let v = Json::parse(&body).unwrap();
-    let id = v.get("dataset_id").unwrap().as_f64().unwrap();
+    println!("  {code} {body}");
+    let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    let result = wait_done(job);
+    println!("  job {job} done: {result}\n");
+    let id = result.get("dataset_id").unwrap().as_f64().unwrap();
 
     println!("POST /api/select (lasso on dataset {id})");
     let (_, body) = post("/api/select", &format!(r#"{{"dataset_id":{id}}}"#));
@@ -46,12 +63,14 @@ fn main() -> anyhow::Result<()> {
         sel.get("group_size").unwrap()
     );
 
-    println!("POST /api/tune (BO warm start, 10 iterations)");
-    let (_, body) = post(
+    println!("POST /api/tune (BO warm start, 10 iterations, async)");
+    let (code, body) = post(
         "/api/tune",
         &format!(r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":10}}"#),
     );
-    let v = Json::parse(&body).unwrap();
+    println!("  {code} {body}");
+    let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    let v = wait_done(job);
     println!(
         "  improvement {}x, tuning time {} s",
         v.get("improvement").unwrap(),

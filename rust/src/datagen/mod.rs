@@ -14,9 +14,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::exec::{self, ExecPool};
 use crate::flags::{FeatureEncoder, FlagConfig, GcMode};
 use crate::runtime::{MlBackend, N_TRAIN, Z_ENS};
-use crate::sparksim::SparkRunner;
+use crate::sparksim::{RunMetrics, SparkRunner};
 use crate::util::csv::Table;
 use crate::util::rng::Pcg;
 use crate::util::stats::{self, TargetScaler};
@@ -157,7 +158,14 @@ pub struct CharacterizeResult {
     pub sim_time_s: f64,
 }
 
-/// Labelled pool entry.
+/// Labels pool entries by running the benchmark on the simulated cluster.
+///
+/// Config `i` of a batch gets the seed `seed + count + 1 + i` — the seed
+/// the old strictly-sequential labeller (one mutable `count`, incremented
+/// per run) would have assigned.  Deriving it from the batch-start index
+/// *before* dispatch is what makes batches safe to label in parallel:
+/// labels depend only on (config, index), never on evaluation order, so
+/// serial and parallel labelling produce bit-identical datasets.
 struct Labeller<'a> {
     runner: &'a SparkRunner,
     metric: Metric,
@@ -172,27 +180,80 @@ struct Labeller<'a> {
 }
 
 impl<'a> Labeller<'a> {
-    fn label(&mut self, cfg: &FlagConfig) -> f64 {
-        self.count += 1;
-        let m = self.runner.run(cfg, self.seed.wrapping_add(self.count as u64));
-        self.sim_time_s += m.wall_clock_s;
-        let mut v = self.metric.of(&m);
-        match self.metric {
-            Metric::ExecTime => v = v.min(self.cap),
-            Metric::HeapUsage => {
-                if m.timed_out {
-                    // Failed configurations must not look memory-efficient.
-                    v += 50.0;
+    /// Run every config of the batch on `pool` and return their labels in
+    /// batch order.
+    fn label_batch(&mut self, pool: &ExecPool, cfgs: &[FlagConfig]) -> Vec<f64> {
+        let runner = self.runner;
+        let seed = self.seed;
+        let base = self.count as u64;
+        // The batch owns the fan-out; each run simulates its executors
+        // serially rather than nesting a second pool per run.
+        let inner = ExecPool::serial();
+        let runs: Vec<RunMetrics> = pool.par_map(cfgs, |i, cfg| {
+            runner.run_on(&inner, cfg, seed.wrapping_add(base + 1 + i as u64))
+        });
+        // Bookkeeping and label post-processing stay in batch order so the
+        // floating-point `sim_time_s` accumulation matches a serial run.
+        let mut labels = Vec::with_capacity(runs.len());
+        for m in &runs {
+            self.count += 1;
+            self.sim_time_s += m.wall_clock_s;
+            let mut v = self.metric.of(m);
+            match self.metric {
+                Metric::ExecTime => v = v.min(self.cap),
+                Metric::HeapUsage => {
+                    if m.timed_out {
+                        // Failed configurations must not look memory-efficient.
+                        v += 50.0;
+                    }
                 }
             }
+            labels.push(v);
         }
-        v
+        labels
     }
 }
 
+/// Indices of the `k` highest scores, descending.  NaN scores (a
+/// degenerate bootstrap resample can produce one) rank strictly last
+/// instead of poisoning the comparator — `partial_cmp().unwrap()` here
+/// used to abort the whole characterization.
+fn select_top_k(scores: &[f64], k: usize) -> Vec<usize> {
+    let key = |i: usize| {
+        let s = scores[i];
+        if s.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            s
+        }
+    };
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
+    order.truncate(k);
+    order
+}
+
 /// Run phase 1: characterize `runner`'s benchmark for `metric` under the
-/// given GC mode, returning the dataset + convergence history.
+/// given GC mode, returning the dataset + convergence history.  Runs on
+/// the process-global execution pool.
 pub fn characterize(
+    runner: &SparkRunner,
+    mode: GcMode,
+    metric: Metric,
+    strategy: Strategy,
+    cfg: &DataGenConfig,
+    backend: &Arc<dyn MlBackend>,
+) -> Result<CharacterizeResult> {
+    characterize_on(exec::global(), runner, mode, metric, strategy, cfg, backend)
+}
+
+/// `characterize` on an explicit pool.  Benchmark labelling batches and the
+/// bootstrap-ensemble fits fan out on `pool`; all seeds are index-derived
+/// and all reductions run in index order, so the result is bit-identical
+/// for every pool width (guarded by `tests/exec_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn characterize_on(
+    epool: &ExecPool,
     runner: &SparkRunner,
     mode: GcMode,
     metric: Metric,
@@ -228,25 +289,29 @@ pub fn characterize(
     let pool_feats_raw: Vec<Vec<f64>> = pool.iter().map(|(_, f)| f.clone()).collect();
     let fstd = stats::Standardizer::fit(&pool_feats_raw);
 
-    // Seed set (10% of the labelling budget) + held-out test set.
+    // Seed set (10% of the labelling budget) + held-out test set.  Both
+    // are drawn serially (the RNG stream is order-sensitive) and labelled
+    // as a parallel batch (labels touch no shared state).
     let mut unit_rows = Vec::new();
     let mut feat_rows = Vec::new();
-    let mut y = Vec::new();
+    let mut seed_cfgs = Vec::with_capacity(cfg.seed_runs);
     for _ in 0..cfg.seed_runs {
         let idx = rng.below(pool.len());
         let (u, f) = pool.swap_remove(idx);
-        let c = FlagConfig::from_unit(mode, &u);
-        y.push(labeller.label(&c));
+        seed_cfgs.push(FlagConfig::from_unit(mode, &u));
         unit_rows.push(u);
         feat_rows.push(f);
     }
+    let mut y = labeller.label_batch(epool, &seed_cfgs);
+
     let mut test_x = Vec::new();
-    let mut test_y = Vec::new();
+    let mut test_cfgs = Vec::with_capacity(cfg.test_runs);
     for _ in 0..cfg.test_runs {
         let c = FlagConfig::random(mode, &mut rng);
         test_x.push(enc.encode(&c));
-        test_y.push(labeller.label(&c));
+        test_cfgs.push(c);
     }
+    let test_y = labeller.label_batch(epool, &test_cfgs);
 
     let ridge = cfg.ridge;
     let test_std: Vec<Vec<f64>> = test_x.iter().map(|x| fstd.transform_row(x)).collect();
@@ -278,17 +343,24 @@ pub fn characterize(
         }
         rounds = round + 1;
 
-        // Fit central model + bootstrap ensemble on the labelled set.
+        // Fit central model + bootstrap ensemble on the labelled set.  The
+        // Z_ENS resamples are drawn serially from the main RNG stream (the
+        // fork order is the serial loop's), then fit concurrently — each
+        // fit is a pure function of its resample.
         let scaler = TargetScaler::fit(&y);
         let ys: Vec<f64> = y.iter().map(|&v| scaler.transform(v)).collect();
         let w0 = backend.lr_fit(&feat_std_rows, &ys, cfg.ridge)?;
-        let mut w_ens = Vec::with_capacity(Z_ENS);
-        for z in 0..Z_ENS {
-            let mut brng = rng.fork(0xb007 + z as u64);
-            let idx = brng.bootstrap_indices(y.len());
+        let resamples: Vec<Vec<usize>> = (0..Z_ENS)
+            .map(|z| rng.fork(0xb007 + z as u64).bootstrap_indices(y.len()))
+            .collect();
+        let fits = epool.par_map(&resamples, |_, idx| {
             let bx: Vec<Vec<f64>> = idx.iter().map(|&i| feat_std_rows[i].clone()).collect();
             let by: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
-            w_ens.push(backend.lr_fit(&bx, &by, cfg.ridge)?);
+            backend.lr_fit(&bx, &by, cfg.ridge)
+        });
+        let mut w_ens = Vec::with_capacity(Z_ENS);
+        for fit in fits {
+            w_ens.push(fit?);
         }
 
         // Score the pool (standardized feature space).
@@ -300,19 +372,18 @@ pub fn characterize(
             Strategy::Random => (0..pool.len()).map(|_| rng.f64()).collect(),
         };
 
-        // Select and label the top-k batch.
-        let mut order: Vec<usize> = (0..pool.len()).collect();
-        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
-        let mut batch: Vec<usize> = order.into_iter().take(cfg.batch_k).collect();
+        // Select the top-k batch, then label it as one parallel batch.
+        let mut batch = select_top_k(&scores, cfg.batch_k);
         batch.sort_unstable_by(|a, b| b.cmp(a)); // remove from the back
+        let mut batch_cfgs = Vec::with_capacity(batch.len());
         for i in batch {
             let (u, f) = pool.swap_remove(i);
-            let c = FlagConfig::from_unit(mode, &u);
-            y.push(labeller.label(&c));
+            batch_cfgs.push(FlagConfig::from_unit(mode, &u));
             unit_rows.push(u);
             feat_std_rows.push(fstd.transform_row(&f));
             feat_rows.push(f);
         }
+        y.extend(labeller.label_batch(epool, &batch_cfgs));
 
         // Convergence check on validation RMSE.
         let (_, _, r) = fit_and_rmse(&feat_std_rows, &y, backend)?;
@@ -368,6 +439,23 @@ mod tests {
 
     fn backend() -> Arc<dyn MlBackend> {
         Arc::new(NativeBackend)
+    }
+
+    #[test]
+    fn select_top_k_is_descending_and_nan_safe() {
+        // plain descending selection
+        assert_eq!(select_top_k(&[0.1, 3.0, 2.0, 5.0], 2), vec![3, 1]);
+        // an injected NaN (degenerate bootstrap resample) must neither
+        // panic nor be selected while finite scores remain
+        let scores = [1.0, f64::NAN, 2.0, f64::NAN, 0.5];
+        assert_eq!(select_top_k(&scores, 3), vec![2, 0, 4]);
+        // NaNs fill the tail only once finite scores are exhausted
+        let picked = select_top_k(&scores, 5);
+        assert_eq!(&picked[..3], &[2, 0, 4]);
+        assert_eq!(picked.len(), 5);
+        // degenerate inputs
+        assert!(select_top_k(&[], 3).is_empty());
+        assert_eq!(select_top_k(&[f64::NAN; 4], 2).len(), 2);
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! `exec` — the evaluation execution subsystem.
+//!
+//! Everything expensive in this crate is an embarrassingly-parallel batch
+//! of *deterministic* simulations or fits: per-executor JVM runs inside one
+//! Spark job, AL batch labelling, the bootstrap-ensemble `lr_fit`s,
+//! repeated measurements, and whole experiment-grid cells.  This module
+//! provides the two primitives those hot paths share:
+//!
+//! * [`ExecPool`] — a scoped-thread fork/join pool.  `par_map`/`par_run`
+//!   hand out work by index and return results **in index order**, so any
+//!   computation whose per-item seed derives from its index (see
+//!   [`index_seed`]) produces bit-identical results at every pool size,
+//!   including 1.  Determinism is a hard invariant here: the paper's
+//!   experiments must reproduce exactly whether they ran on a laptop core
+//!   or a 64-way box (guarded by `tests/exec_parallel.rs`).
+//! * [`JobRunner`] — a small detached worker pool for fire-and-forget
+//!   background jobs; the REST server's async `/api/jobs` queue runs on
+//!   it.
+//!
+//! Pools are cheap value types (`ExecPool` is just a thread count; threads
+//! are scoped per call), so nesting `par_map` inside a `par_map` worker is
+//! safe — there is no shared queue to deadlock on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::rng::splitmix64;
+
+/// Environment variable overriding the global pool width.
+pub const THREADS_ENV: &str = "ONESTOPTUNER_THREADS";
+
+/// Derive the seed for item `index` of a batch keyed by `base`.
+///
+/// A splitmix64 finalizer on both operands keeps streams for neighbouring
+/// indices (and for `base ^ small_int` style call sites) decorrelated —
+/// plain `base + index` or `base ^ index` leaves low-bit lattice structure
+/// and, worse, collides across components (`seed ^ 0` == `seed`).
+pub fn index_seed(base: u64, index: u64) -> u64 {
+    splitmix64(base ^ splitmix64(index.wrapping_add(1)))
+}
+
+/// A fork/join pool of scoped worker threads.
+///
+/// `par_run(n, f)` evaluates `f(0..n)` on up to `threads` workers and
+/// returns the results in index order; with `threads == 1` (or `n <= 1`)
+/// it degenerates to a plain serial loop on the caller's thread.  Worker
+/// panics propagate to the caller when the scope joins.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecPool {
+    threads: usize,
+}
+
+impl ExecPool {
+    /// Pool with an explicit width (clamped to >= 1).
+    pub fn new(threads: usize) -> ExecPool {
+        ExecPool { threads: threads.max(1) }
+    }
+
+    /// Strictly serial pool (useful as the determinism baseline in tests).
+    pub fn serial() -> ExecPool {
+        ExecPool::new(1)
+    }
+
+    /// Width from `ONESTOPTUNER_THREADS`, else the machine's parallelism.
+    pub fn from_env() -> ExecPool {
+        let n = std::env::var(THREADS_ENV)
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ExecPool::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(i)` for `i in 0..n` and return results in index order.
+    pub fn par_run<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads <= 1 || n == 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        // One slot per item; workers write their own slot, so the only
+        // contention is the per-slot lock each index takes exactly once.
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let workers = self.threads.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                // Handles are dropped: the scope itself joins every worker
+                // (and re-raises any worker panic) before returning.
+                let _ = scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("exec worker poisoned a result slot")
+                    .expect("exec worker skipped a slot")
+            })
+            .collect()
+    }
+
+    /// Evaluate `f(i, &items[i])` for every item, results in item order.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.par_run(items.len(), |i| f(i, &items[i]))
+    }
+}
+
+impl Default for ExecPool {
+    fn default() -> Self {
+        ExecPool::from_env()
+    }
+}
+
+/// The process-wide pool the public pipeline entry points run on.
+/// Width comes from `ONESTOPTUNER_THREADS` / the machine; results never
+/// depend on it (see module docs), so there is no per-call override on the
+/// public API — tests that exercise pool-width invariance use the `*_on`
+/// function variants with explicit pools instead.
+pub fn global() -> &'static ExecPool {
+    static POOL: OnceLock<ExecPool> = OnceLock::new();
+    POOL.get_or_init(ExecPool::from_env)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Detached background worker pool for fire-and-forget jobs.
+///
+/// Workers live until the `JobRunner` is dropped (closing the channel);
+/// submitted closures run in FIFO order across `workers` threads.  Worker
+/// threads swallow nothing: panic isolation is the submitter's job (the
+/// server's job queue wraps work in `catch_unwind`).
+pub struct JobRunner {
+    // Mutex-wrapped so JobRunner is Sync on every toolchain (bare
+    // mpsc::Sender only became Sync with the 1.72 mpsc rewrite);
+    // submission is a hashmap-insert-scale critical section.
+    tx: Mutex<mpsc::Sender<Job>>,
+}
+
+impl JobRunner {
+    pub fn new(workers: usize) -> JobRunner {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            // Workers are detached on purpose: they die when the channel
+            // closes (runner dropped) or the process exits.
+            let _ = std::thread::Builder::new()
+                .name(format!("ost-job-{i}"))
+                .spawn(move || loop {
+                    // Take the lock only to receive; release before running.
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed: runner dropped
+                    }
+                })
+                .expect("spawn job worker");
+        }
+        JobRunner { tx: Mutex::new(tx) }
+    }
+
+    /// Enqueue `job`; returns immediately.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        // Send only fails when every worker is gone (process teardown);
+        // dropping the job then is the right behavior.
+        let _ = self.tx.lock().unwrap().send(Box::new(job));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_run_returns_in_index_order() {
+        let pool = ExecPool::new(4);
+        let out = pool.par_run(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_run_matches_serial_for_any_width() {
+        let work = |i: usize| {
+            let mut rng = crate::util::rng::Pcg::new(index_seed(42, i as u64));
+            (0..50).map(|_| rng.f64()).sum::<f64>()
+        };
+        let serial = ExecPool::serial().par_run(17, work);
+        for threads in [2, 3, 8] {
+            let parallel = ExecPool::new(threads).par_run(17, work);
+            assert_eq!(serial, parallel, "width {threads} changed results");
+        }
+    }
+
+    #[test]
+    fn par_map_passes_items_and_indices() {
+        let pool = ExecPool::new(3);
+        let items = vec!["a", "bb", "ccc"];
+        let out = pool.par_map(&items, |i, s| (i, s.len()));
+        assert_eq!(out, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn par_run_actually_uses_multiple_threads() {
+        use std::collections::HashSet;
+        let pool = ExecPool::new(4);
+        let ids = Mutex::new(HashSet::new());
+        pool.par_run(64, |_| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(ids.into_inner().unwrap().len() > 1, "never left the main thread");
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let pool = ExecPool::new(8);
+        assert!(pool.par_run(0, |i| i).is_empty());
+        assert_eq!(pool.par_run(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn index_seed_decorrelates_neighbours() {
+        let a = index_seed(1, 0);
+        let b = index_seed(1, 1);
+        let c = index_seed(2, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // xor-style collisions (seed ^ 0 == seed) must not survive mixing
+        assert_ne!(index_seed(7, 0), 7);
+    }
+
+    #[test]
+    fn job_runner_executes_submissions() {
+        let runner = JobRunner::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            runner.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while counter.load(Ordering::SeqCst) < 10 {
+            assert!(std::time::Instant::now() < deadline, "jobs never ran");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+}

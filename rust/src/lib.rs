@@ -15,6 +15,7 @@
 //!   never runs on the tuning path.
 
 pub mod datagen;
+pub mod exec;
 pub mod featsel;
 pub mod flags;
 pub mod jvmsim;

@@ -8,8 +8,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{Algo, PipelineConfig};
+use super::{Algo, PipelineConfig, PipelineOutcome};
 use crate::datagen::{self, DataGenConfig, Strategy};
+use crate::exec::ExecPool;
 use crate::featsel;
 use crate::flags::{FlagConfig, GcMode};
 use crate::report::{bar_chart, line_plot, save_result, TextTable};
@@ -24,11 +25,26 @@ pub struct ExperimentCtx {
     pub backend: Arc<dyn MlBackend>,
     pub cfg: PipelineConfig,
     pub out_dir: PathBuf,
+    /// Fan-out pool for independent experiment cells (GRID cases, AL
+    /// strategies, Fig 6 panels).  Every cell is seeded independently, so
+    /// rendered artifacts are identical at every pool width.
+    pub pool: ExecPool,
 }
 
 impl ExperimentCtx {
     pub fn new(backend: Arc<dyn MlBackend>, out_dir: impl Into<PathBuf>) -> Self {
-        ExperimentCtx { backend, cfg: PipelineConfig::default(), out_dir: out_dir.into() }
+        ExperimentCtx {
+            backend,
+            cfg: PipelineConfig::default(),
+            out_dir: out_dir.into(),
+            pool: ExecPool::from_env(),
+        }
+    }
+
+    /// Override the cell fan-out pool (serial/parallel equivalence tests).
+    pub fn with_pool(mut self, pool: ExecPool) -> Self {
+        self.pool = pool;
+        self
     }
 
     /// Reduced-budget settings for smoke runs (`repro --fast`).
@@ -84,7 +100,10 @@ pub fn run_table2(ctx: &ExperimentCtx) -> Result<String> {
         "heap_flags".into(),
         "group_size".into(),
     ]);
-    for (bench, mode) in GRID {
+    // One GRID cell = two characterizations + selections; cells are
+    // independent, so they fan out on the ctx pool and are rendered in
+    // GRID order below.
+    let cell_counts = ctx.pool.par_map(&GRID, |_, &(bench, mode)| -> Result<Vec<(usize, usize)>> {
         let runner = SparkRunner::paper_default(bench);
         let mut counts = Vec::new();
         for metric in [Metric::ExecTime, Metric::HeapUsage] {
@@ -99,6 +118,10 @@ pub fn run_table2(ctx: &ExperimentCtx) -> Result<String> {
             let sel = featsel::select_flags(&ch.dataset, ctx.cfg.lambda, &ctx.backend)?;
             counts.push((sel.n_selected(), sel.group_size));
         }
+        Ok(counts)
+    });
+    for ((bench, mode), counts) in GRID.into_iter().zip(cell_counts) {
+        let counts = counts?;
         table.row(vec![
             case_name(bench, mode),
             counts[0].0.to_string(),
@@ -142,15 +165,14 @@ pub fn run_exec_time(ctx: &ExperimentCtx) -> Result<String> {
     let mut figs = String::new();
     let mut timing_rows: Vec<(String, f64, f64)> = Vec::new();
 
-    for (i, (bench, mode)) in GRID.iter().enumerate() {
-        let out = super::run_pipeline(
-            *bench,
-            *mode,
-            Metric::ExecTime,
-            &algos,
-            &ctx.cfg,
-            &ctx.backend,
-        )?;
+    // The 4 GRID pipelines are independent end-to-end runs: fan them out
+    // on the ctx pool, then render rows/figures in GRID order.
+    let outs = ctx.pool.par_map(&GRID, |_, &(bench, mode)| {
+        super::run_pipeline(bench, mode, Metric::ExecTime, &algos, &ctx.cfg, &ctx.backend)
+    });
+    let outs: Vec<PipelineOutcome> = outs.into_iter().collect::<Result<_>>()?;
+
+    for (i, ((bench, mode), out)) in GRID.iter().zip(&outs).enumerate() {
         let sp: Vec<f64> = out.outcomes.iter().map(|o| o.improvement).collect();
         table.row(vec![
             case_name(*bench, *mode),
@@ -231,15 +253,11 @@ pub fn run_heap_usage(ctx: &ExperimentCtx) -> Result<String> {
         "sa".into(),
     ]);
     let mut figs = String::new();
-    for (i, (bench, mode)) in GRID.iter().enumerate() {
-        let out = super::run_pipeline(
-            *bench,
-            *mode,
-            Metric::HeapUsage,
-            &algos,
-            &ctx.cfg,
-            &ctx.backend,
-        )?;
+    let outs = ctx.pool.par_map(&GRID, |_, &(bench, mode)| {
+        super::run_pipeline(bench, mode, Metric::HeapUsage, &algos, &ctx.cfg, &ctx.backend)
+    });
+    let outs: Vec<PipelineOutcome> = outs.into_iter().collect::<Result<_>>()?;
+    for (i, ((bench, mode), out)) in GRID.iter().zip(&outs).enumerate() {
         // Improvement = % reduction of average HU.
         let impr: Vec<f64> = out
             .outcomes
@@ -423,19 +441,16 @@ pub fn run_fig5(ctx: &ExperimentCtx) -> Result<String> {
     let mut dg = ctx.cfg.datagen.clone();
     dg.rmse_rel_tol = 0.0; // run all rounds so the curves are comparable
 
+    // The three selection strategies are independent characterizations of
+    // the same problem; fan them out and keep strategy order.
+    let strategies = [Strategy::Bemcm, Strategy::Qbc, Strategy::Random];
+    let runs = ctx.pool.par_map(&strategies, |_, &strategy| {
+        datagen::characterize(&runner, mode, Metric::ExecTime, strategy, &dg, &ctx.backend)
+    });
     let mut series = Vec::new();
-    let mut results = Vec::new();
-    for strategy in [Strategy::Bemcm, Strategy::Qbc, Strategy::Random] {
-        let r = datagen::characterize(
-            &runner,
-            mode,
-            Metric::ExecTime,
-            strategy,
-            &dg,
-            &ctx.backend,
-        )?;
+    for (strategy, r) in strategies.iter().zip(runs) {
+        let r = r?;
         series.push((strategy.name().to_string(), r.rmse_history.clone()));
-        results.push(r);
     }
 
     let mut text = line_plot(
@@ -521,9 +536,15 @@ pub fn run_fig6(ctx: &ExperimentCtx) -> Result<String> {
         ),
     ];
 
-    for (pi, (panel, bench, mode, exec, other_bench, other_exec)) in
-        setups.iter().enumerate()
-    {
+    // Each Fig 6 panel is an independent characterize-then-tune run under
+    // contention; panels fan out on the ctx pool and render in order.
+    struct PanelOut {
+        labels: Vec<String>,
+        vals: Vec<f64>,
+        base_mean: f64,
+    }
+    let panel_results = ctx.pool.par_map(&setups, |pi, setup| -> Result<PanelOut> {
+        let (_, bench, mode, exec, other_bench, other_exec) = setup;
         // Characterize on the exclusive cluster (phase 1 is per-benchmark),
         // then tune under the parallel-run objective.
         let runner = SparkRunner::paper_default(*bench);
@@ -591,6 +612,12 @@ pub fn run_fig6(ctx: &ExperimentCtx) -> Result<String> {
             labels.push(algo.name().to_string());
         }
 
+        Ok(PanelOut { labels, vals, base_mean })
+    });
+
+    for (pi, (setup, panel_out)) in setups.iter().zip(panel_results).enumerate() {
+        let PanelOut { labels, vals, base_mean } = panel_out?;
+        let panel = setup.0;
         text.push_str(&bar_chart(
             &format!(
                 "Fig 6({panel}) — exec time, speedups: BO {:.2}x, warm {:.2}x",

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::datagen::{self, CharacterizeResult, DataGenConfig, Strategy};
+use crate::exec::{self, ExecPool};
 use crate::featsel::{self, Selection, DEFAULT_LAMBDA};
 use crate::flags::{FlagConfig, GcMode};
 use crate::runtime::MlBackend;
@@ -107,6 +108,7 @@ pub struct PipelineOutcome {
 }
 
 /// Measure a config `repeats` times and summarize the chosen metric.
+/// Runs on the process-global execution pool.
 pub fn measure(
     runner: &SparkRunner,
     cfg: &FlagConfig,
@@ -114,13 +116,31 @@ pub fn measure(
     repeats: usize,
     seed: u64,
 ) -> Summary {
-    let vals: Vec<f64> = (0..repeats.max(1))
-        .map(|i| metric.of(&runner.run(cfg, seed.wrapping_add(i as u64 * 7919))))
-        .collect();
+    measure_on(exec::global(), runner, cfg, metric, repeats, seed)
+}
+
+/// `measure` on an explicit pool.  Each repeat's seed derives from its
+/// index alone, so the summary is bit-identical at every pool width.
+pub fn measure_on(
+    pool: &ExecPool,
+    runner: &SparkRunner,
+    cfg: &FlagConfig,
+    metric: Metric,
+    repeats: usize,
+    seed: u64,
+) -> Summary {
+    // Repeats own the fan-out; each run simulates its executors serially
+    // rather than nesting a second pool per run.
+    let inner = ExecPool::serial();
+    let vals = pool.par_run(repeats.max(1), |i| {
+        metric.of(&runner.run_on(&inner, cfg, seed.wrapping_add(i as u64 * 7919)))
+    });
     summarize(&vals)
 }
 
-/// Run one algorithm on an already-characterized problem.
+/// Run one algorithm on an already-characterized problem, with the
+/// per-run executor fan-out on the global pool (right for a lone tuning
+/// job, e.g. one `/api/tune` request).
 #[allow(clippy::too_many_arguments)]
 pub fn run_algo(
     algo: Algo,
@@ -132,7 +152,31 @@ pub fn run_algo(
     backend: &Arc<dyn MlBackend>,
     default_mean: f64,
 ) -> Result<AlgoOutcome> {
-    let mut objective = SimObjective::new(runner, metric, cfg.seed ^ algo as u64);
+    run_algo_on(exec::global(), algo, runner, space, ch, metric, cfg, backend, default_mean)
+}
+
+/// `run_algo` with an explicit pool for the objective's per-run executor
+/// fan-out and the final measurement.  Callers that already fan several
+/// algorithms out in parallel pass `ExecPool::serial()` — the sweep owns
+/// the cores, and nesting a second fan-out per simulated run would only
+/// pay thread churn.  Results are identical either way.
+#[allow(clippy::too_many_arguments)]
+pub fn run_algo_on(
+    epool: &ExecPool,
+    algo: Algo,
+    runner: &SparkRunner,
+    space: &TuneSpace,
+    ch: &CharacterizeResult,
+    metric: Metric,
+    cfg: &PipelineConfig,
+    backend: &Arc<dyn MlBackend>,
+    default_mean: f64,
+) -> Result<AlgoOutcome> {
+    // Per-algo objective stream via a splitmix on the discriminant:
+    // `cfg.seed ^ algo as u64` left Algo::Bo (discriminant 0) sharing the
+    // pipeline's baseline-measurement stream.
+    let mut objective =
+        SimObjective::new_on(runner, metric, exec::index_seed(cfg.seed, algo as u64), *epool);
     let mut tuner: Box<dyn Tuner> = match algo {
         Algo::Bo => Box::new(BoTuner::new(backend.clone(), cfg.bo.clone())),
         Algo::BoWarm => Box::new(BoTuner::warm_start(
@@ -149,7 +193,8 @@ pub fn run_algo(
         Algo::Sa => Box::new(SaTuner::new(cfg.sa.clone())),
     };
     let tune = tuner.tune(space, &mut objective, cfg.tune_iters)?;
-    let tuned_summary = measure(runner, &tune.best_config, metric, cfg.repeats, cfg.seed ^ 0xf17a1);
+    let tuned_summary =
+        measure_on(epool, runner, &tune.best_config, metric, cfg.repeats, cfg.seed ^ 0xf17a1);
     let improvement = default_mean / tuned_summary.mean.max(1e-9);
     let tuning_time_s = tune.sim_time_s + tune.algo_wall_ms / 1e3;
     Ok(AlgoOutcome { algo, tune, tuned_summary, improvement, tuning_time_s })
@@ -181,9 +226,16 @@ pub fn run_pipeline(
     let default_cfg = FlagConfig::default_for(mode);
     let default_summary = measure(&runner, &default_cfg, metric, cfg.repeats, cfg.seed);
 
-    let mut outcomes = Vec::with_capacity(algos.len());
-    for &algo in algos {
-        outcomes.push(run_algo(
+    // Algorithms are independent (each owns its objective stream), so the
+    // phase-3 sweep fans out on the global pool; outcomes keep `algos`
+    // order and per-algo results are unaffected by the fan-out.  When the
+    // sweep is actually parallel, each algorithm simulates its runs
+    // serially (the sweep owns the cores); a single algorithm keeps the
+    // per-run executor fan-out instead.
+    let obj_pool = if algos.len() > 1 { ExecPool::serial() } else { *exec::global() };
+    let algo_results = exec::global().par_map(algos, |_, &algo| {
+        run_algo_on(
+            &obj_pool,
             algo,
             &runner,
             &space,
@@ -192,7 +244,11 @@ pub fn run_pipeline(
             cfg,
             backend,
             default_summary.mean,
-        )?);
+        )
+    });
+    let mut outcomes = Vec::with_capacity(algos.len());
+    for r in algo_results {
+        outcomes.push(r?);
     }
 
     Ok(PipelineOutcome {

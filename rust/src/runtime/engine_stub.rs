@@ -1,0 +1,66 @@
+//! Stub `XlaEngine` for builds without the `xla` feature.
+//!
+//! The offline image does not ship the PJRT `xla` crate, so the real
+//! engine (engine.rs) only compiles behind `--features xla`.  This stub
+//! keeps the public surface — `XlaEngine::load` and the `MlBackend`
+//! impl — so callers (`load_backend`, the cross-check tests, the
+//! benches) compile unchanged; `load` always fails and every caller
+//! falls back to `NativeBackend`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::MlBackend;
+
+/// Placeholder for the PJRT engine; cannot be constructed.
+pub struct XlaEngine {
+    _private: (),
+}
+
+impl XlaEngine {
+    /// Always fails: this build has no PJRT runtime.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        anyhow::bail!(
+            "built without the `xla` feature — cannot load PJRT artifacts from {} \
+             (rebuild with `--features xla` on an image that ships the `xla` crate)",
+            dir.as_ref().display()
+        )
+    }
+}
+
+impl MlBackend for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla-unavailable"
+    }
+
+    fn emcm_score(
+        &self,
+        _w_ens: &[Vec<f64>],
+        _w0: &[f64],
+        _x: &[Vec<f64>],
+    ) -> Result<Vec<f64>> {
+        unreachable!("XlaEngine cannot be constructed without the `xla` feature")
+    }
+
+    fn lr_fit(&self, _x: &[Vec<f64>], _y: &[f64], _ridge: f64) -> Result<Vec<f64>> {
+        unreachable!("XlaEngine cannot be constructed without the `xla` feature")
+    }
+
+    fn lasso_fit(&self, _x: &[Vec<f64>], _y: &[f64], _lam: f64) -> Result<Vec<f64>> {
+        unreachable!("XlaEngine cannot be constructed without the `xla` feature")
+    }
+
+    fn gp_ei(
+        &self,
+        _xtr: &[Vec<f64>],
+        _ytr: &[f64],
+        _xc: &[Vec<f64>],
+        _lengthscale: f64,
+        _sigma_f2: f64,
+        _sigma_n2: f64,
+        _best: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        unreachable!("XlaEngine cannot be constructed without the `xla` feature")
+    }
+}

@@ -6,6 +6,13 @@
 //! `NativeBackend` (pure rust, `native::ops`) implements the same trait;
 //! integration tests cross-check the two and benches compare them.
 
+/// The real PJRT engine needs the `xla` crate (artifact-build image only);
+/// plain builds get a stub whose `load` always fails, so `load_backend`
+/// falls back to the native mirror.
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 use anyhow::Result;

@@ -1,14 +1,26 @@
 //! REST API — the backend of the paper's ReactJS UI (Fig 2): "The backend
 //! houses the optimization algorithms ... exposed through a REST API."
 //!
+//! Cheap endpoints respond synchronously; the two long-running ones
+//! (`characterize`, `tune`) are **asynchronous jobs**: the POST validates
+//! the request, enqueues the work on the server's job queue (executed by
+//! the `exec` worker pool) and returns `202 Accepted` with a job id
+//! immediately; clients poll `/api/jobs/:id` until `status` is `done`
+//! (the `result` field then carries exactly the payload the old blocking
+//! endpoint returned) or `failed`.
+//!
 //! Endpoints:
 //!   GET  /api/health                         liveness + backend name
 //!   GET  /api/benchmarks                     Table I workload descriptions
 //!   GET  /api/flags?gc=g1|parallel           flag catalog for a GC group
 //!   POST /api/run          {bench, gc, seed?, flags?{name:value}}
 //!   POST /api/characterize {bench, gc, metric?, strategy?, pool?, rounds?}
+//!                          -> 202 {job_id, status, poll}
 //!   POST /api/select       {dataset_id, lambda?}
 //!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?}
+//!                          -> 202 {job_id, status, poll}
+//!   GET  /api/jobs                           all jobs, ascending id
+//!   GET  /api/jobs/:id     {job_id, kind, status, result?|error?, elapsed_s?}
 //!   GET  /api/datasets                       characterization sessions
 
 use std::collections::HashMap;
@@ -20,15 +32,18 @@ use crate::flags::{FlagConfig, GcMode};
 use crate::pipeline::{self, Algo, PipelineConfig};
 use crate::runtime::MlBackend;
 use crate::server::http::{Request, Response};
+use crate::server::jobs::JobQueue;
 use crate::sparksim::SparkRunner;
 use crate::tuner::TuneSpace;
 use crate::util::json::Json;
 use crate::{Benchmark, Metric};
 
-/// Shared server state: the ML backend plus characterization sessions.
+/// Shared server state: the ML backend, characterization sessions, and
+/// the async job queue.
 pub struct ApiState {
     pub backend: Arc<dyn MlBackend>,
     pub datasets: Mutex<HashMap<u64, StoredDataset>>,
+    pub jobs: Arc<JobQueue>,
     next_id: Mutex<u64>,
 }
 
@@ -40,9 +55,20 @@ pub struct StoredDataset {
 
 impl ApiState {
     pub fn new(backend: Arc<dyn MlBackend>) -> Arc<ApiState> {
+        // Two job workers, not one per core: each job already saturates
+        // the cores through the global exec pool, so a wide queue would
+        // only oversubscribe the CPU and slow every job down.  Two give
+        // pipeline overlap (one job's serial tail alongside another's
+        // parallel phase) with fair FIFO ordering.
+        Self::with_workers(backend, 2)
+    }
+
+    /// Explicit worker count for the background job queue.
+    pub fn with_workers(backend: Arc<dyn MlBackend>, workers: usize) -> Arc<ApiState> {
         Arc::new(ApiState {
             backend,
             datasets: Mutex::new(HashMap::new()),
+            jobs: JobQueue::new(workers),
             next_id: Mutex::new(1),
         })
     }
@@ -59,18 +85,20 @@ impl ApiState {
 /// Route one request.
 pub fn handle(state: &Arc<ApiState>, req: &Request) -> Response {
     let result = match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/api/health") => Ok(health(state)),
-        ("GET", "/api/benchmarks") => Ok(benchmarks()),
+        ("GET", "/api/health") => Ok((200, health(state))),
+        ("GET", "/api/benchmarks") => Ok((200, benchmarks())),
         ("GET", "/api/flags") => flags(req),
         ("POST", "/api/run") => run(req),
         ("POST", "/api/characterize") => characterize(state, req),
         ("POST", "/api/select") => select(state, req),
         ("POST", "/api/tune") => tune(state, req),
-        ("GET", "/api/datasets") => Ok(datasets(state)),
+        ("GET", "/api/jobs") => Ok((200, state.jobs.list())),
+        ("GET", path) if path.starts_with("/api/jobs/") => job_status(state, path),
+        ("GET", "/api/datasets") => Ok((200, datasets(state))),
         _ => Err((404, "no such endpoint".to_string())),
     };
     match result {
-        Ok(json) => Response::json(200, json.to_string()),
+        Ok((status, json)) => Response::json(status, json.to_string()),
         Err((code, msg)) => Response::json(
             code,
             Json::obj(vec![("error", Json::str(msg))]).to_string(),
@@ -78,7 +106,7 @@ pub fn handle(state: &Arc<ApiState>, req: &Request) -> Response {
     }
 }
 
-type ApiResult = Result<Json, (u16, String)>;
+type ApiResult = Result<(u16, Json), (u16, String)>;
 
 fn bad(msg: impl Into<String>) -> (u16, String) {
     (400, msg.into())
@@ -105,6 +133,29 @@ fn parse_gc(v: Option<&Json>) -> Result<GcMode, (u16, String)> {
 
 fn parse_metric(v: Option<&Json>) -> Metric {
     v.and_then(Json::as_str).and_then(Metric::parse).unwrap_or(Metric::ExecTime)
+}
+
+/// The `202 Accepted` submission payload.
+fn accepted(id: u64) -> (u16, Json) {
+    (
+        202,
+        Json::obj(vec![
+            ("job_id", Json::num(id as f64)),
+            ("status", Json::str("queued")),
+            ("poll", Json::str(format!("/api/jobs/{id}"))),
+        ]),
+    )
+}
+
+fn job_status(state: &Arc<ApiState>, path: &str) -> ApiResult {
+    let id: u64 = path
+        .trim_start_matches("/api/jobs/")
+        .parse()
+        .map_err(|_| bad("job id must be an integer"))?;
+    match state.jobs.get(id) {
+        Some(snapshot) => Ok((200, snapshot)),
+        None => Err((404, format!("no job {id}"))),
+    }
 }
 
 fn health(state: &Arc<ApiState>) -> Json {
@@ -155,7 +206,7 @@ fn flags(req: &Request) -> ApiResult {
             ])
         })
         .collect();
-    Ok(Json::Arr(arr))
+    Ok((200, Json::Arr(arr)))
 }
 
 fn config_from_body(gc: GcMode, body: &Json) -> Result<FlagConfig, (u16, String)> {
@@ -179,16 +230,20 @@ fn run(req: &Request) -> ApiResult {
     let seed = body.get("seed").and_then(Json::as_f64).unwrap_or(1.0) as u64;
     let cfg = config_from_body(gc, &body)?;
     let m = SparkRunner::paper_default(bench).run(&cfg, seed);
-    Ok(Json::obj(vec![
-        ("exec_time_s", Json::num(m.exec_time_s)),
-        ("heap_usage_pct", Json::num(m.hu_avg_pct)),
-        ("minor_gcs", Json::num(m.gc.minor as f64)),
-        ("full_gcs", Json::num(m.gc.full as f64)),
-        ("total_pause_ms", Json::num(m.gc.total_pause_ms)),
-        ("failed", Json::Bool(m.timed_out)),
-    ]))
+    Ok((
+        200,
+        Json::obj(vec![
+            ("exec_time_s", Json::num(m.exec_time_s)),
+            ("heap_usage_pct", Json::num(m.hu_avg_pct)),
+            ("minor_gcs", Json::num(m.gc.minor as f64)),
+            ("full_gcs", Json::num(m.gc.full as f64)),
+            ("total_pause_ms", Json::num(m.gc.total_pause_ms)),
+            ("failed", Json::Bool(m.timed_out)),
+        ]),
+    ))
 }
 
+/// Validate, enqueue the AL characterization, answer 202 + job id.
 fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     let body = body_json(req)?;
     let bench = parse_bench(body.get("bench"))?;
@@ -209,22 +264,27 @@ fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     if let Some(s) = body.get("seed").and_then(Json::as_f64) {
         dg.seed = s as u64;
     }
-    let runner = SparkRunner::paper_default(bench);
-    let r = datagen::characterize(&runner, gc, metric, strategy, &dg, &state.backend)
-        .map_err(|e| (500, format!("{e:#}")))?;
-    let id = state.store(StoredDataset {
-        bench,
-        dataset: r.dataset.clone(),
-        rmse_history: r.rmse_history.clone(),
+
+    let job_state = Arc::clone(state);
+    let id = state.jobs.submit("characterize", move || {
+        let runner = SparkRunner::paper_default(bench);
+        let r = datagen::characterize(&runner, gc, metric, strategy, &dg, &job_state.backend)
+            .map_err(|e| format!("{e:#}"))?;
+        let id = job_state.store(StoredDataset {
+            bench,
+            dataset: r.dataset.clone(),
+            rmse_history: r.rmse_history.clone(),
+        });
+        Ok(Json::obj(vec![
+            ("dataset_id", Json::num(id as f64)),
+            ("samples", Json::num(r.dataset.len() as f64)),
+            ("runs_executed", Json::num(r.runs_executed as f64)),
+            ("rounds", Json::num(r.rounds as f64)),
+            ("rmse_history", Json::arr_f64(&r.rmse_history)),
+            ("sim_time_s", Json::num(r.sim_time_s)),
+        ]))
     });
-    Ok(Json::obj(vec![
-        ("dataset_id", Json::num(id as f64)),
-        ("samples", Json::num(r.dataset.len() as f64)),
-        ("runs_executed", Json::num(r.runs_executed as f64)),
-        ("rounds", Json::num(r.rounds as f64)),
-        ("rmse_history", Json::arr_f64(&r.rmse_history)),
-        ("sim_time_s", Json::num(r.sim_time_s)),
-    ]))
+    Ok(accepted(id))
 }
 
 fn select(state: &Arc<ApiState>, req: &Request) -> ApiResult {
@@ -238,17 +298,21 @@ fn select(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     let stored = store.get(&id).ok_or_else(|| bad(format!("no dataset {id}")))?;
     let sel = featsel::select_flags(&stored.dataset, lambda, &state.backend)
         .map_err(|e| (500, format!("{e:#}")))?;
-    Ok(Json::obj(vec![
-        ("lambda", Json::num(sel.lambda)),
-        ("group_size", Json::num(sel.group_size as f64)),
-        ("n_selected", Json::num(sel.n_selected() as f64)),
-        (
-            "selected",
-            Json::Arr(sel.names.iter().map(|n| Json::str(n.clone())).collect()),
-        ),
-    ]))
+    Ok((
+        200,
+        Json::obj(vec![
+            ("lambda", Json::num(sel.lambda)),
+            ("group_size", Json::num(sel.group_size as f64)),
+            ("n_selected", Json::num(sel.n_selected() as f64)),
+            (
+                "selected",
+                Json::Arr(sel.names.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+        ]),
+    ))
 }
 
+/// Validate, enqueue the tuning run, answer 202 + job id.
 fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     let body = body_json(req)?;
     let bench = parse_bench(body.get("bench"))?;
@@ -261,10 +325,8 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         .ok_or_else(|| bad("missing/unknown 'algo' (bo | rbo | bo-warm | sa)"))?;
     let iters = body.get("iters").and_then(Json::as_f64).unwrap_or(20.0) as usize;
 
-    let runner = SparkRunner::paper_default(bench);
-    let pc = PipelineConfig { tune_iters: iters, ..Default::default() };
-
-    // Get (or build) a characterization when the algorithm needs one.
+    // Dataset checks stay synchronous so bad requests fail with 400 now,
+    // not with a failed job later; the dataset is snapshotted into the job.
     let dataset_id = body.get("dataset_id").and_then(Json::as_f64).map(|v| v as u64);
     let ch = match dataset_id {
         Some(id) => {
@@ -306,50 +368,56 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         }
     };
 
-    // Selected subspace: from the dataset when available, else the full group.
-    let space = if ch.dataset.is_empty() {
-        TuneSpace::full(gc)
-    } else {
-        let sel = featsel::select_flags(&ch.dataset, featsel::DEFAULT_LAMBDA, &state.backend)
-            .map_err(|e| (500, format!("{e:#}")))?;
-        TuneSpace::from_selection(gc, &sel)
-    };
+    let job_state = Arc::clone(state);
+    let id = state.jobs.submit("tune", move || {
+        let runner = SparkRunner::paper_default(bench);
+        let pc = PipelineConfig { tune_iters: iters, ..Default::default() };
 
-    let default_summary =
-        pipeline::measure(&runner, &FlagConfig::default_for(gc), metric, 5, pc.seed);
-    let out = pipeline::run_algo(
-        algo,
-        &runner,
-        &space,
-        &ch,
-        metric,
-        &pc,
-        &state.backend,
-        default_summary.mean,
-    )
-    .map_err(|e| (500, format!("{e:#}")))?;
+        // Selected subspace: from the dataset when available, else the
+        // full group.
+        let space = if ch.dataset.is_empty() {
+            TuneSpace::full(gc)
+        } else {
+            let sel =
+                featsel::select_flags(&ch.dataset, featsel::DEFAULT_LAMBDA, &job_state.backend)
+                    .map_err(|e| format!("{e:#}"))?;
+            TuneSpace::from_selection(gc, &sel)
+        };
 
-    let flags_obj: Vec<(String, Json)> = out
-        .tune
-        .best_config
-        .to_map()
-        .into_iter()
-        .map(|(k, v)| (k, Json::num(v)))
-        .collect();
-    Ok(Json::obj(vec![
-        ("algo", Json::str(out.algo.name())),
-        ("default_mean", Json::num(default_summary.mean)),
-        ("tuned_mean", Json::num(out.tuned_summary.mean)),
-        ("tuned_std", Json::num(out.tuned_summary.std)),
-        ("improvement", Json::num(out.improvement)),
-        ("tuning_time_s", Json::num(out.tuning_time_s)),
-        ("evals", Json::num(out.tune.evals as f64)),
-        (
-            "best_flags",
-            Json::Obj(flags_obj.into_iter().collect()),
-        ),
-        ("best_java_args", Json::str(out.tune.best_config.to_java_args())),
-    ]))
+        let default_summary =
+            pipeline::measure(&runner, &FlagConfig::default_for(gc), metric, 5, pc.seed);
+        let out = pipeline::run_algo(
+            algo,
+            &runner,
+            &space,
+            &ch,
+            metric,
+            &pc,
+            &job_state.backend,
+            default_summary.mean,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+
+        let flags_obj: Vec<(String, Json)> = out
+            .tune
+            .best_config
+            .to_map()
+            .into_iter()
+            .map(|(k, v)| (k, Json::num(v)))
+            .collect();
+        Ok(Json::obj(vec![
+            ("algo", Json::str(out.algo.name())),
+            ("default_mean", Json::num(default_summary.mean)),
+            ("tuned_mean", Json::num(out.tuned_summary.mean)),
+            ("tuned_std", Json::num(out.tuned_summary.std)),
+            ("improvement", Json::num(out.improvement)),
+            ("tuning_time_s", Json::num(out.tuning_time_s)),
+            ("evals", Json::num(out.tune.evals as f64)),
+            ("best_flags", Json::Obj(flags_obj.into_iter().collect())),
+            ("best_java_args", Json::str(out.tune.best_config.to_java_args())),
+        ]))
+    });
+    Ok(accepted(id))
 }
 
 fn datasets(state: &Arc<ApiState>) -> Json {

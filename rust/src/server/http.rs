@@ -44,13 +44,19 @@ impl Response {
         match self.status {
             200 => "200 OK",
             201 => "201 Created",
+            202 => "202 Accepted",
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            413 => "413 Payload Too Large",
             _ => "500 Internal Server Error",
         }
     }
 }
+
+/// Largest request body accepted (16 MiB); anything larger is refused with
+/// 413 before a single body byte is read.
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
 
 pub type Handler = dyn Fn(&Request) -> Response + Send + Sync;
 
@@ -66,7 +72,7 @@ pub fn serve(
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let handler = handler.clone();
-        std::thread::spawn(move || {
+        let _ = std::thread::spawn(move || {
             let _ = handle_connection(stream, &handler);
         });
     }
@@ -77,11 +83,11 @@ pub fn serve(
 pub fn spawn(addr: &str, handler: Arc<Handler>) -> std::io::Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let bound = listener.local_addr()?;
-    std::thread::spawn(move || {
+    let _ = std::thread::spawn(move || {
         for stream in listener.incoming() {
             let Ok(stream) = stream else { continue };
             let handler = handler.clone();
-            std::thread::spawn(move || {
+            let _ = std::thread::spawn(move || {
                 let _ = handle_connection(stream, &handler);
             });
         }
@@ -111,12 +117,39 @@ fn handle_connection(mut stream: TcpStream, handler: &Arc<Handler>) -> std::io::
             break;
         }
         if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+            match v.trim().parse::<usize>() {
+                Ok(n) => content_length = n,
+                Err(_) => {
+                    // A garbled length used to be silently treated as 0,
+                    // desynchronizing the connection from the body.
+                    return refuse(
+                        &mut stream,
+                        &mut reader,
+                        Response::json(400, r#"{"error":"invalid Content-Length header"}"#),
+                    );
+                }
+            }
         }
     }
-    let mut body = vec![0u8; content_length.min(16 * 1024 * 1024)];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
+    if content_length > MAX_BODY_BYTES {
+        // Refuse before reading the body: truncating the buffer and
+        // read_exact-ing the wrong length (the old behavior) corrupted
+        // the request.
+        return refuse(
+            &mut stream,
+            &mut reader,
+            Response::json(413, r#"{"error":"request body exceeds 16 MiB limit"}"#),
+        );
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 && reader.read_exact(&mut body).is_err() {
+        // Short body (client closed early) or read timeout on an
+        // overstated Content-Length: tell the client instead of hanging
+        // up silently.
+        return write_response(
+            &mut stream,
+            &Response::json(400, r#"{"error":"request body shorter than Content-Length"}"#),
+        );
     }
 
     let (path, query) = match target.split_once('?') {
@@ -131,7 +164,36 @@ fn handle_connection(mut stream: TcpStream, handler: &Arc<Handler>) -> std::io::
         body: String::from_utf8_lossy(&body).into_owned(),
     };
     let resp = handler(&req);
+    write_response(&mut stream, &resp)
+}
 
+/// Answer an early protocol error: send `resp`, then drain (a bounded
+/// amount of) whatever body the client is still sending before closing.
+/// Closing with unread data queued can turn into a TCP RST that destroys
+/// the response before the client sees it.
+fn refuse(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    resp: Response,
+) -> std::io::Result<()> {
+    write_response(stream, &resp)?;
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+    let mut sink = [0u8; 8192];
+    let mut drained = 0usize;
+    // Drain up to the largest body a well-formed client could still be
+    // mid-send on (the 16 MiB cap plus slack): a write-then-read client
+    // that posted at or near the limit must get its error response, not a
+    // reset.  Beyond that the sender is abusive and a reset is fine.
+    while drained <= MAX_BODY_BYTES {
+        match reader.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => drained += n,
+        }
+    }
+    Ok(())
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
     let out = format!(
         "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
         resp.status_line(),
@@ -249,6 +311,65 @@ mod tests {
         assert_eq!(url_decode("a%20b+c"), "a b c");
         assert_eq!(url_decode("plain"), "plain");
         assert_eq!(url_decode("%zz"), "%zz");
+    }
+
+    /// Send raw bytes and read the full response (for malformed requests
+    /// `http_request` cannot express).
+    fn raw_roundtrip(addr: std::net::SocketAddr, bytes: &[u8], close_write: bool) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(bytes).unwrap();
+        if close_write {
+            stream.shutdown(std::net::Shutdown::Write).unwrap();
+        }
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf).unwrap();
+        let status = buf.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+        let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, body)
+    }
+
+    #[test]
+    fn oversized_content_length_rejected_with_413() {
+        let addr = echo_server();
+        let req = format!(
+            "POST /submit HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let (status, body) = raw_roundtrip(addr, req.as_bytes(), false);
+        assert_eq!(status, 413, "{body}");
+        assert!(body.contains("16 MiB"), "{body}");
+    }
+
+    #[test]
+    fn body_at_exact_limit_boundary_is_not_rejected_as_oversized() {
+        // A Content-Length of exactly MAX_BODY_BYTES passes the size gate
+        // (the old code truncated anything >= the cap and then mis-read).
+        let addr = echo_server();
+        let req = format!(
+            "POST /submit HTTP/1.1\r\nHost: x\r\nContent-Length: {MAX_BODY_BYTES}\r\n\r\n"
+        );
+        // We close without sending the body, so the server reports the
+        // short body — but crucially as 400, not 413 and not a mis-read.
+        let (status, _) = raw_roundtrip(addr, req.as_bytes(), true);
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn short_body_rejected_with_400() {
+        let addr = echo_server();
+        let req = b"POST /submit HTTP/1.1\r\nHost: x\r\nContent-Length: 10\r\n\r\nabc";
+        let (status, body) = raw_roundtrip(addr, req, true);
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("shorter than Content-Length"), "{body}");
+    }
+
+    #[test]
+    fn invalid_content_length_rejected_with_400() {
+        let addr = echo_server();
+        let req = b"POST /submit HTTP/1.1\r\nHost: x\r\nContent-Length: banana\r\n\r\n";
+        let (status, body) = raw_roundtrip(addr, req, true);
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("invalid Content-Length"), "{body}");
     }
 
     #[test]

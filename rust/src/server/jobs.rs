@@ -1,0 +1,236 @@
+//! Async job queue behind the REST API's `202 Accepted` endpoints.
+//!
+//! Long-running work (`/api/characterize`, `/api/tune`) used to block the
+//! HTTP connection for its full duration — minutes of simulated cluster
+//! time per request.  Service-style tuners treat tuning as asynchronous
+//! jobs over a parallel measurement backend; this module is that queue:
+//!
+//! * [`JobQueue::submit`] records a job (`queued`), hands the work closure
+//!   to an [`exec::JobRunner`] worker, and returns the job id immediately;
+//! * workers flip the record to `running`, then `done` (with the result
+//!   payload the old blocking endpoint would have returned) or `failed`;
+//! * `GET /api/jobs/:id` polls the record; `GET /api/jobs` lists them.
+//!
+//! Work closures are wrapped in `catch_unwind` so a panicking job marks
+//! itself `failed` instead of killing its worker thread.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::exec::JobRunner;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    /// Terminal states carry a result or an error and never change again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed)
+    }
+}
+
+/// One submitted job and (eventually) its outcome.
+pub struct JobRecord {
+    pub id: u64,
+    /// Endpoint kind, e.g. "characterize" | "tune".
+    pub kind: &'static str,
+    pub status: JobStatus,
+    pub result: Option<Json>,
+    pub error: Option<String>,
+    pub submitted: Instant,
+    pub finished: Option<Instant>,
+}
+
+impl JobRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("job_id", Json::num(self.id as f64)),
+            ("kind", Json::str(self.kind)),
+            ("status", Json::str(self.status.name())),
+        ];
+        if let Some(fin) = self.finished {
+            pairs.push((
+                "elapsed_s",
+                Json::num(fin.duration_since(self.submitted).as_secs_f64()),
+            ));
+        }
+        if let Some(r) = &self.result {
+            pairs.push(("result", r.clone()));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e.clone())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The queue: job records + the detached worker pool executing them.
+pub struct JobQueue {
+    runner: JobRunner,
+    jobs: Mutex<HashMap<u64, JobRecord>>,
+    next_id: Mutex<u64>,
+}
+
+impl JobQueue {
+    pub fn new(workers: usize) -> Arc<JobQueue> {
+        Arc::new(JobQueue {
+            runner: JobRunner::new(workers),
+            jobs: Mutex::new(HashMap::new()),
+            next_id: Mutex::new(1),
+        })
+    }
+
+    /// Enqueue `work` and return its job id without waiting.  `work` runs
+    /// on a queue worker; its `Ok` payload becomes the job's `result`,
+    /// its `Err` (or a panic) the job's `error`.
+    pub fn submit(
+        self: &Arc<Self>,
+        kind: &'static str,
+        work: impl FnOnce() -> Result<Json, String> + Send + 'static,
+    ) -> u64 {
+        let id = {
+            let mut next = self.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        self.jobs.lock().unwrap().insert(
+            id,
+            JobRecord {
+                id,
+                kind,
+                status: JobStatus::Queued,
+                result: None,
+                error: None,
+                submitted: Instant::now(),
+                finished: None,
+            },
+        );
+        let queue = Arc::clone(self);
+        self.runner.submit(move || {
+            queue.set_status(id, JobStatus::Running);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work))
+                .unwrap_or_else(|_| Err("job panicked".to_string()));
+            queue.finish(id, outcome);
+        });
+        id
+    }
+
+    fn set_status(&self, id: u64, status: JobStatus) {
+        if let Some(rec) = self.jobs.lock().unwrap().get_mut(&id) {
+            rec.status = status;
+        }
+    }
+
+    fn finish(&self, id: u64, outcome: Result<Json, String>) {
+        if let Some(rec) = self.jobs.lock().unwrap().get_mut(&id) {
+            rec.finished = Some(Instant::now());
+            match outcome {
+                Ok(json) => {
+                    rec.status = JobStatus::Done;
+                    rec.result = Some(json);
+                }
+                Err(msg) => {
+                    rec.status = JobStatus::Failed;
+                    rec.error = Some(msg);
+                }
+            }
+        }
+    }
+
+    /// Snapshot of one job, if it exists.
+    pub fn get(&self, id: u64) -> Option<Json> {
+        self.jobs.lock().unwrap().get(&id).map(JobRecord::to_json)
+    }
+
+    /// Snapshot of every job, ascending by id.
+    pub fn list(&self) -> Json {
+        let jobs = self.jobs.lock().unwrap();
+        let mut ids: Vec<u64> = jobs.keys().copied().collect();
+        ids.sort_unstable();
+        Json::Arr(ids.iter().map(|id| jobs[id].to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn wait_terminal(q: &Arc<JobQueue>, id: u64) -> Json {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let snap = q.get(id).expect("job exists");
+            let status = snap.get("status").unwrap().as_str().unwrap();
+            if status == "done" || status == "failed" {
+                return snap;
+            }
+            assert!(Instant::now() < deadline, "job {id} never finished");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn job_runs_to_done_with_result() {
+        let q = JobQueue::new(2);
+        let id = q.submit("test", || Ok(Json::obj(vec![("answer", Json::num(42.0))])));
+        let snap = wait_terminal(&q, id);
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(
+            snap.get("result").unwrap().get("answer").unwrap().as_f64(),
+            Some(42.0)
+        );
+        assert!(snap.get("elapsed_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn failing_job_reports_error() {
+        let q = JobQueue::new(1);
+        let id = q.submit("test", || Err("boom".to_string()));
+        let snap = wait_terminal(&q, id);
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("failed"));
+        assert_eq!(snap.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn panicking_job_fails_without_killing_workers() {
+        let q = JobQueue::new(1);
+        let id = q.submit("test", || panic!("kaboom"));
+        let snap = wait_terminal(&q, id);
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("failed"));
+        // The single worker must survive to run the next job.
+        let id2 = q.submit("test", || Ok(Json::num(1.0)));
+        let snap2 = wait_terminal(&q, id2);
+        assert_eq!(snap2.get("status").unwrap().as_str(), Some("done"));
+    }
+
+    #[test]
+    fn list_orders_by_id_and_get_unknown_is_none() {
+        let q = JobQueue::new(2);
+        let a = q.submit("test", || Ok(Json::num(1.0)));
+        let b = q.submit("test", || Ok(Json::num(2.0)));
+        wait_terminal(&q, a);
+        wait_terminal(&q, b);
+        let listed = q.list();
+        let arr = listed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr[0].get("job_id").unwrap().as_f64() < arr[1].get("job_id").unwrap().as_f64());
+        assert!(q.get(999).is_none());
+    }
+}

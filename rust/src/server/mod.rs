@@ -2,15 +2,19 @@
 //! the optimization algorithms "are exposed through a REST API".
 //!
 //! `http` is a minimal std-net HTTP/1.1 server (the offline image has no
-//! tokio/hyper); `api` implements the endpoints over the shared pipeline.
+//! tokio/hyper); `api` implements the endpoints over the shared pipeline;
+//! `jobs` is the async queue behind the 202-Accepted endpoints
+//! (`/api/characterize`, `/api/tune` -> poll `/api/jobs/:id`).
 
 pub mod api;
 pub mod http;
+pub mod jobs;
 
 use std::sync::Arc;
 
 pub use api::ApiState;
 pub use http::{http_request, Request, Response};
+pub use jobs::{JobQueue, JobStatus};
 
 /// Build the request handler for an API state.
 pub fn make_handler(state: Arc<ApiState>) -> Arc<http::Handler> {

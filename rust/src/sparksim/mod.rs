@@ -10,5 +10,8 @@ pub mod runner;
 pub mod workloads;
 
 pub use cluster::{ClusterSpec, ExecutorSpec};
-pub use runner::{run_benchmark, run_parallel, RunMetrics, SparkRunner};
+pub use runner::{
+    run_benchmark, run_benchmark_with_contention, run_benchmark_with_contention_on,
+    run_parallel, run_parallel_on, RunMetrics, SparkRunner,
+};
 pub use workloads::{Benchmark, WorkloadSpec};

@@ -6,12 +6,13 @@
 
 use super::cluster::{contention_factor, ClusterSpec, ExecutorSpec};
 use super::workloads::Benchmark;
+use crate::exec::{self, ExecPool};
 use crate::flags::FlagConfig;
 use crate::jvmsim::{self, GcStats, JvmParams};
 use crate::util::rng::Pcg;
 
 /// Metrics recorded for one benchmark run (paper §IV-B).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunMetrics {
     /// Job execution time.  Failed runs (OOM / GC-thrash timeout) report
     /// the timeout budget — a failed configuration can never look fast.
@@ -28,8 +29,13 @@ pub struct RunMetrics {
 const DRIVER_OVERHEAD_S: f64 = 2.0;
 
 /// Run `bench` with `cfg` on a fleet, under an external contention factor
-/// (1.0 = exclusive cluster).  Deterministic in `seed`.
-pub fn run_benchmark_with_contention(
+/// (1.0 = exclusive cluster), with the per-executor JVM simulations fanned
+/// out on `pool`.  Deterministic in `seed` and independent of the pool
+/// width: every executor's RNG is forked from the job stream *before*
+/// dispatch (fork order is the serial loop's), and the metrics are reduced
+/// in executor order, so pool size 1 and N produce bit-identical results.
+pub fn run_benchmark_with_contention_on(
+    pool: &ExecPool,
     bench: Benchmark,
     cfg: &FlagConfig,
     exec: &ExecutorSpec,
@@ -49,14 +55,18 @@ pub fn run_benchmark_with_contention(
         p.compact_rate *= gc_penalty;
     }
 
+    let mut rng = Pcg::with_stream(seed, 0x5eed_0001);
+    let erngs: Vec<Pcg> = (0..exec.count).map(|e| rng.fork(e as u64 + 1)).collect();
+    let results = pool.par_map(&erngs, |_, erng| {
+        let mut erng = erng.clone();
+        jvmsim::run(&p, &load, cores_eff, &mut erng)
+    });
+
     let mut worst_wall = 0.0f64;
     let mut hu_sum = 0.0;
     let mut gc = GcStats::default();
     let mut timed_out = false;
-    let mut rng = Pcg::with_stream(seed, 0x5eed_0001);
-    for e in 0..exec.count {
-        let mut erng = rng.fork(e as u64 + 1);
-        let r = jvmsim::run(&p, &load, cores_eff, &mut erng);
+    for r in &results {
         worst_wall = worst_wall.max(r.wall_s);
         hu_sum += r.hu_avg_pct;
         gc.minor += r.gc.minor;
@@ -82,6 +92,17 @@ pub fn run_benchmark_with_contention(
     }
 }
 
+/// `run_benchmark_with_contention_on` on the process-global pool.
+pub fn run_benchmark_with_contention(
+    bench: Benchmark,
+    cfg: &FlagConfig,
+    exec: &ExecutorSpec,
+    contention: f64,
+    seed: u64,
+) -> RunMetrics {
+    run_benchmark_with_contention_on(exec::global(), bench, cfg, exec, contention, seed)
+}
+
 /// Run one benchmark with exclusive use of the cluster (the paper's
 /// single-benchmark tuning setup).
 pub fn run_benchmark(
@@ -94,20 +115,38 @@ pub fn run_benchmark(
 }
 
 /// Run several (benchmark, config, fleet) jobs concurrently on `cluster`
-/// (paper §V-E) and return each job's metrics.
-pub fn run_parallel(
+/// (paper §V-E) and return each job's metrics.  Jobs fan out on `pool`;
+/// each job's seed and contention factor depend only on its index, so the
+/// result vector is identical at every pool width.
+pub fn run_parallel_on(
+    pool: &ExecPool,
     cluster: &ClusterSpec,
     jobs: &[(Benchmark, FlagConfig, ExecutorSpec)],
     seed: u64,
 ) -> Vec<RunMetrics> {
     let fleets: Vec<ExecutorSpec> = jobs.iter().map(|(_, _, e)| *e).collect();
-    jobs.iter()
-        .enumerate()
-        .map(|(i, (bench, cfg, exec))| {
-            let contention = contention_factor(cluster, &fleets, i);
-            run_benchmark_with_contention(*bench, cfg, exec, contention, seed ^ (i as u64) << 32)
-        })
-        .collect()
+    // The job fan-out owns the cores; each job's executors run serially.
+    let inner = ExecPool::serial();
+    pool.par_map(jobs, |i, (bench, cfg, exec)| {
+        let contention = contention_factor(cluster, &fleets, i);
+        run_benchmark_with_contention_on(
+            &inner,
+            *bench,
+            cfg,
+            exec,
+            contention,
+            seed ^ ((i as u64) << 32),
+        )
+    })
+}
+
+/// `run_parallel_on` on the process-global pool.
+pub fn run_parallel(
+    cluster: &ClusterSpec,
+    jobs: &[(Benchmark, FlagConfig, ExecutorSpec)],
+    seed: u64,
+) -> Vec<RunMetrics> {
+    run_parallel_on(exec::global(), cluster, jobs, seed)
 }
 
 /// Convenience handle bundling the cluster + fleet + benchmark + metric
@@ -127,8 +166,20 @@ impl SparkRunner {
         SparkRunner { cluster, exec, bench }
     }
 
+    /// Run on the process-global pool (per-executor fan-out) — right for
+    /// sequential call sites (one-off runs, `/api/run`).
     pub fn run(&self, cfg: &FlagConfig, seed: u64) -> RunMetrics {
         run_benchmark(self.bench, cfg, &self.exec, seed)
+    }
+
+    /// Run with an explicit pool for the per-executor fan-out.  Callers
+    /// already running *inside* a pool worker (batch labelling, repeated
+    /// measurements) pass `ExecPool::serial()` here: the outer batch owns
+    /// the cores, and nesting another fan-out per simulated run would just
+    /// pay thread churn for oversubscription.  Results are identical
+    /// either way.
+    pub fn run_on(&self, pool: &ExecPool, cfg: &FlagConfig, seed: u64) -> RunMetrics {
+        run_benchmark_with_contention_on(pool, self.bench, cfg, &self.exec, 1.0, seed)
     }
 }
 

@@ -191,7 +191,7 @@ impl Tuner for BoTuner {
         }
         anyhow::ensure!(!xs.is_empty(), "BO needs initial data");
 
-        let mut best_i = crate::util::stats::argmin(&ys);
+        let best_i = crate::util::stats::argmin(&ys);
         let mut best_x = xs[best_i].clone();
         let mut best_y = ys[best_i];
         let mut best_history: Vec<f64> = history.iter().fold(Vec::new(), |mut acc, &y| {
@@ -234,8 +234,6 @@ impl Tuner for BoTuner {
             best_history.push(best_y);
             xs.push(x_next);
             ys.push(y_next);
-            best_i = crate::util::stats::argmin(&ys);
-            let _ = best_i;
         }
 
         Ok(TuneResult {

@@ -1,6 +1,7 @@
 //! Objective functions for phase 3: the real benchmark (eq. 1's Q) and the
 //! LR-predictor surrogate used by RBO.
 
+use crate::exec::{self, ExecPool};
 use crate::flags::FlagConfig;
 use crate::sparksim::SparkRunner;
 use crate::util::stats::{Standardizer, TargetScaler};
@@ -25,18 +26,29 @@ pub struct SimObjective<'a> {
     seed: u64,
     count: usize,
     sim_time_s: f64,
+    /// Pool for the per-executor fan-out inside each run.  The global pool
+    /// when this objective is the only thing running (a lone tuning job);
+    /// serial when the caller already fans several tuners out in parallel
+    /// (`run_pipeline`'s algorithm sweep) — results are identical either
+    /// way, only thread scheduling differs.
+    pool: ExecPool,
 }
 
 impl<'a> SimObjective<'a> {
     pub fn new(runner: &'a SparkRunner, metric: Metric, seed: u64) -> Self {
-        SimObjective { runner, metric, seed, count: 0, sim_time_s: 0.0 }
+        Self::new_on(runner, metric, seed, *exec::global())
+    }
+
+    /// `new` with an explicit per-run executor fan-out pool.
+    pub fn new_on(runner: &'a SparkRunner, metric: Metric, seed: u64, pool: ExecPool) -> Self {
+        SimObjective { runner, metric, seed, count: 0, sim_time_s: 0.0, pool }
     }
 }
 
 impl Objective for SimObjective<'_> {
     fn eval(&mut self, cfg: &FlagConfig) -> f64 {
         self.count += 1;
-        let m = self.runner.run(cfg, self.seed.wrapping_add(self.count as u64));
+        let m = self.runner.run_on(&self.pool, cfg, self.seed.wrapping_add(self.count as u64));
         self.sim_time_s += m.wall_clock_s;
         let mut v = self.metric.of(&m);
         if m.timed_out && self.metric == Metric::HeapUsage {

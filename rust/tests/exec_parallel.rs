@@ -1,0 +1,155 @@
+//! Serial/parallel equivalence: every hot path routed through the `exec`
+//! pool must produce **bit-identical** results at pool width 1 and N.
+//! Seeds are index-derived and reductions run in index order, so pool
+//! width can never leak into metrics, datasets, or rendered experiment
+//! artifacts — these tests are the guard on that invariant.
+
+use std::sync::Arc;
+
+use onestoptuner::datagen::{characterize_on, DataGenConfig, Strategy};
+use onestoptuner::exec::ExecPool;
+use onestoptuner::flags::{FlagConfig, GcMode};
+use onestoptuner::pipeline::experiments::{run_table2, ExperimentCtx};
+use onestoptuner::pipeline::measure_on;
+use onestoptuner::runtime::{MlBackend, NativeBackend};
+use onestoptuner::sparksim::{
+    run_benchmark_with_contention_on, run_parallel_on, ClusterSpec, ExecutorSpec,
+};
+use onestoptuner::{Benchmark, Metric, SparkRunner};
+
+fn backend() -> Arc<dyn MlBackend> {
+    Arc::new(NativeBackend)
+}
+
+const WIDTHS: [usize; 2] = [4, 7];
+
+#[test]
+fn run_benchmark_identical_across_pool_widths() {
+    let cluster = ClusterSpec::paper();
+    let exec = ExecutorSpec::full_cluster(&cluster);
+    for mode in [GcMode::ParallelGC, GcMode::G1GC] {
+        let cfg = FlagConfig::default_for(mode);
+        for seed in [1u64, 42, 0xdead] {
+            let serial = run_benchmark_with_contention_on(
+                &ExecPool::serial(),
+                Benchmark::Lda,
+                &cfg,
+                &exec,
+                1.0,
+                seed,
+            );
+            for width in WIDTHS {
+                let parallel = run_benchmark_with_contention_on(
+                    &ExecPool::new(width),
+                    Benchmark::Lda,
+                    &cfg,
+                    &exec,
+                    1.0,
+                    seed,
+                );
+                assert_eq!(serial, parallel, "seed {seed} width {width}");
+            }
+        }
+    }
+}
+
+#[test]
+fn run_parallel_jobs_identical_across_pool_widths() {
+    let cluster = ClusterSpec::paper();
+    let cfg = FlagConfig::default_for(GcMode::G1GC);
+    let jobs = vec![
+        (Benchmark::Lda, cfg.clone(), ExecutorSpec::parallel_2x15()),
+        (Benchmark::DenseKMeans, cfg.clone(), ExecutorSpec::parallel_2x15()),
+    ];
+    let serial = run_parallel_on(&ExecPool::serial(), &cluster, &jobs, 3);
+    for width in WIDTHS {
+        let parallel = run_parallel_on(&ExecPool::new(width), &cluster, &jobs, 3);
+        assert_eq!(serial, parallel, "width {width}");
+    }
+}
+
+#[test]
+fn measure_identical_across_pool_widths() {
+    let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+    let cfg = FlagConfig::default_for(GcMode::ParallelGC);
+    let serial = measure_on(&ExecPool::serial(), &runner, &cfg, Metric::ExecTime, 10, 7);
+    for width in WIDTHS {
+        let parallel = measure_on(&ExecPool::new(width), &runner, &cfg, Metric::ExecTime, 10, 7);
+        assert_eq!(serial.n, parallel.n);
+        assert_eq!(serial.mean.to_bits(), parallel.mean.to_bits(), "width {width}");
+        assert_eq!(serial.std.to_bits(), parallel.std.to_bits());
+        assert_eq!(serial.min.to_bits(), parallel.min.to_bits());
+        assert_eq!(serial.max.to_bits(), parallel.max.to_bits());
+    }
+}
+
+#[test]
+fn characterize_identical_across_pool_widths() {
+    let runner = SparkRunner::paper_default(Benchmark::Lda);
+    let b = backend();
+    let dg = DataGenConfig {
+        pool_size: 100,
+        seed_runs: 10,
+        test_runs: 6,
+        batch_k: 8,
+        max_rounds: 2,
+        rmse_rel_tol: 0.0,
+        ridge: 1e-3,
+        seed: 11,
+    };
+    let serial = characterize_on(
+        &ExecPool::serial(),
+        &runner,
+        GcMode::G1GC,
+        Metric::ExecTime,
+        Strategy::Bemcm,
+        &dg,
+        &b,
+    )
+    .unwrap();
+    for width in WIDTHS {
+        let parallel = characterize_on(
+            &ExecPool::new(width),
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &dg,
+            &b,
+        )
+        .unwrap();
+        assert_eq!(serial.dataset.unit_rows, parallel.dataset.unit_rows, "width {width}");
+        assert_eq!(serial.dataset.feat_rows, parallel.dataset.feat_rows);
+        let sy: Vec<u64> = serial.dataset.y.iter().map(|v| v.to_bits()).collect();
+        let py: Vec<u64> = parallel.dataset.y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sy, py, "labels differ at width {width}");
+        let sr: Vec<u64> = serial.rmse_history.iter().map(|v| v.to_bits()).collect();
+        let pr: Vec<u64> = parallel.rmse_history.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sr, pr, "rmse history differs at width {width}");
+        assert_eq!(serial.runs_executed, parallel.runs_executed);
+        assert_eq!(serial.rounds, parallel.rounds);
+        assert_eq!(serial.sim_time_s.to_bits(), parallel.sim_time_s.to_bits());
+    }
+}
+
+/// The experiment drivers must render identical artifacts whatever the
+/// cell fan-out width (`bench_experiments` exercises the same drivers for
+/// wall-clock speedup; this guards that the speedup changes nothing).
+#[test]
+fn table2_output_identical_across_pool_widths() {
+    fn tiny(pool: ExecPool, dir: &str) -> ExperimentCtx {
+        let dir = std::env::temp_dir().join(dir);
+        let mut ctx = ExperimentCtx::new(Arc::new(NativeBackend), dir)
+            .fast()
+            .with_pool(pool);
+        ctx.cfg.datagen.pool_size = 60;
+        ctx.cfg.datagen.seed_runs = 12;
+        ctx.cfg.datagen.test_runs = 6;
+        ctx.cfg.datagen.batch_k = 6;
+        ctx.cfg.datagen.max_rounds = 1;
+        ctx
+    }
+    let serial = run_table2(&tiny(ExecPool::serial(), "ost_detser")).unwrap();
+    let parallel = run_table2(&tiny(ExecPool::new(4), "ost_detpar")).unwrap();
+    assert_eq!(serial, parallel);
+}

@@ -1,7 +1,9 @@
 //! Integration tests for the REST API (Fig 2 backend): spin up the server
-//! on an ephemeral port and exercise every endpoint end-to-end.
+//! on an ephemeral port and exercise every endpoint end-to-end, including
+//! the async job contract of /api/characterize and /api/tune.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use onestoptuner::runtime::NativeBackend;
 use onestoptuner::server::{http_request, spawn};
@@ -9,6 +11,40 @@ use onestoptuner::util::json::Json;
 
 fn server() -> std::net::SocketAddr {
     spawn("127.0.0.1:0", Arc::new(NativeBackend)).expect("bind")
+}
+
+/// Poll /api/jobs/:id until the job reaches a terminal state; panics on
+/// `failed` (tests that expect failure inspect the snapshot themselves).
+fn wait_done(addr: std::net::SocketAddr, job_id: f64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let (code, body) =
+            http_request(addr, "GET", &format!("/api/jobs/{job_id}"), "").unwrap();
+        assert_eq!(code, 200, "{body}");
+        let v = Json::parse(&body).unwrap();
+        match v.get("status").and_then(Json::as_str) {
+            Some("done") => return v.get("result").unwrap().clone(),
+            Some("failed") => panic!("job {job_id} failed: {body}"),
+            _ => {
+                assert!(Instant::now() < deadline, "job {job_id} never finished");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// Submit an async endpoint, assert the 202 contract, return the job id.
+fn submit(addr: std::net::SocketAddr, path: &str, body: &str) -> f64 {
+    let (code, resp) = http_request(addr, "POST", path, body).unwrap();
+    assert_eq!(code, 202, "{resp}");
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("queued"));
+    let id = v.get("job_id").unwrap().as_f64().unwrap();
+    assert_eq!(
+        v.get("poll").unwrap().as_str().unwrap(),
+        format!("/api/jobs/{id}")
+    );
+    id
 }
 
 #[test]
@@ -89,24 +125,22 @@ fn run_with_custom_flags() {
 #[test]
 fn characterize_select_tune_flow() {
     let addr = server();
-    // 1. characterize (small pool to stay fast)
-    let (code, body) = http_request(
+    // 1. characterize is now an async job (small pool to stay fast)
+    let job = submit(
         addr,
-        "POST",
         "/api/characterize",
         r#"{"bench": "lda", "gc": "g1", "pool": 120, "rounds": 2}"#,
-    )
-    .unwrap();
-    assert_eq!(code, 200, "{body}");
-    let v = Json::parse(&body).unwrap();
-    let id = v.get("dataset_id").unwrap().as_f64().unwrap();
-    assert!(v.get("samples").unwrap().as_f64().unwrap() > 10.0);
+    );
+    let result = wait_done(addr, job);
+    let id = result.get("dataset_id").unwrap().as_f64().unwrap();
+    assert!(result.get("samples").unwrap().as_f64().unwrap() > 10.0);
+    assert!(result.get("runs_executed").unwrap().as_f64().unwrap() > 10.0);
 
     // 2. datasets listing shows it
     let (_, body) = http_request(addr, "GET", "/api/datasets", "").unwrap();
     assert!(body.contains("dataset_id"));
 
-    // 3. select
+    // 3. select (stays synchronous — it is a single fast fit)
     let (code, body) = http_request(
         addr,
         "POST",
@@ -119,19 +153,16 @@ fn characterize_select_tune_flow() {
     assert_eq!(v.get("group_size").unwrap().as_f64().unwrap() as i64, 141);
     assert!(v.get("n_selected").unwrap().as_f64().unwrap() > 0.0);
 
-    // 4. tune (few iterations, warm start reuses the dataset)
-    let (code, body) = http_request(
+    // 4. tune: 202 + job id, result carries the old blocking payload
+    let job = submit(
         addr,
-        "POST",
         "/api/tune",
         &format!(
             r#"{{"bench": "lda", "gc": "g1", "algo": "bo-warm",
                  "dataset_id": {id}, "iters": 3}}"#
         ),
-    )
-    .unwrap();
-    assert_eq!(code, 200, "{body}");
-    let v = Json::parse(&body).unwrap();
+    );
+    let v = wait_done(addr, job);
     assert!(v.get("improvement").unwrap().as_f64().unwrap() > 0.3);
     assert!(v
         .get("best_java_args")
@@ -142,13 +173,60 @@ fn characterize_select_tune_flow() {
 }
 
 #[test]
+fn tune_submission_is_immediate() {
+    let addr = server();
+    // Submitting a full 20-iteration tuning run must return the moment the
+    // job is queued, not after minutes of simulated benchmarks.
+    let t0 = Instant::now();
+    let job = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "densekmeans", "gc": "parallel", "algo": "sa", "iters": 8}"#,
+    );
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(2),
+        "submission took {elapsed:?} — endpoint is blocking again"
+    );
+    // The job must show up in the queue listing immediately...
+    let (code, body) = http_request(addr, "GET", "/api/jobs", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("\"kind\":\"tune\""), "{body}");
+    // ...and still complete with a real result.
+    let v = wait_done(addr, job);
+    assert!(v.get("tuned_mean").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn job_endpoint_edge_cases() {
+    let addr = server();
+    let (code, _) = http_request(addr, "GET", "/api/jobs/999", "").unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = http_request(addr, "GET", "/api/jobs/banana", "").unwrap();
+    assert_eq!(code, 400);
+    // empty queue lists as an empty array
+    let (code, body) = http_request(addr, "GET", "/api/jobs", "").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body.trim(), "[]");
+}
+
+#[test]
 fn tune_without_dataset_requires_cold_algo() {
     let addr = server();
+    // validation failures are synchronous 400s, not failed jobs
     let (code, _) = http_request(
         addr,
         "POST",
         "/api/tune",
         r#"{"bench": "lda", "gc": "g1", "algo": "rbo", "iters": 2}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+    let (code, _) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo-warm", "dataset_id": 42, "iters": 2}"#,
     )
     .unwrap();
     assert_eq!(code, 400);
