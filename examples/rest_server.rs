@@ -3,13 +3,27 @@
 //! endpoints are asynchronous: POST returns `202 Accepted` + a job id and
 //! the client polls `/api/jobs/:id` until the job is done.
 //!
-//! Run with:  cargo run --release --example rest_server
+//! Run with:  cargo run --release --example rest_server [-- --threads N]
 
 use onestoptuner::runtime::load_backend;
 use onestoptuner::server::{http_request, spawn};
 use onestoptuner::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
+    // Same global flag as the CLI: pin the execution-pool width (the
+    // default is the auto-detected core count; results never depend on it).
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        let n: usize = args
+            .get(i + 1)
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| anyhow::anyhow!("--threads needs a positive integer"))?;
+        if !onestoptuner::exec::set_global_threads(n) {
+            eprintln!("warning: execution pool already initialized; --threads {n} ignored");
+        }
+    }
+
     let backend = load_backend("artifacts");
     let addr = spawn("127.0.0.1:0", backend)?;
     println!("REST API up on http://{addr}\n");

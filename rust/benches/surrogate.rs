@@ -1,0 +1,136 @@
+//! Acquisition-loop benchmark: one-shot serial `gp_ei` (kernel rebuilt +
+//! O(n³) Cholesky + serial candidate scoring every iteration) vs the
+//! incremental surrogate session (cached Cholesky extended in place,
+//! candidates sharded over the exec pool in blocked solves).  Both paths
+//! replay the same observation/candidate streams and are asserted
+//! bit-identical before timing.
+//!
+//! Emits `BENCH_surrogate.json` at the repo root.  `--smoke` runs reduced
+//! sizes for CI.
+//!
+//! Run with:  cargo bench --bench surrogate [-- --smoke]
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{section, Bench};
+use onestoptuner::exec::{self, ExecPool};
+use onestoptuner::runtime::{one_shot_gp, GpConfig, GpSession, MlBackend, NativeBackend, N_TRAIN};
+use onestoptuner::util::json::Json;
+use onestoptuner::util::rng::Pcg;
+
+/// Tuning-subspace dimension (lasso typically keeps 10-25 flags).
+const D: usize = 16;
+
+fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
+}
+
+/// One pre-generated acquisition loop: the initial design plus, per
+/// iteration, a candidate pool and the observation appended afterwards.
+struct Scenario {
+    init_x: Vec<Vec<f64>>,
+    init_y: Vec<f64>,
+    iters: Vec<(Vec<Vec<f64>>, Vec<f64>, f64)>, // (candidates, next x, next y)
+}
+
+fn synth_y(x: &[f64]) -> f64 {
+    (x[0] * 3.0).sin() + x[1] * x[2] - 0.5 * x[D - 1]
+}
+
+fn scenario(n_final: usize, m: usize, iters: usize, seed: u64) -> Scenario {
+    let mut rng = Pcg::new(seed);
+    let n0 = n_final - iters;
+    let init_x = rand_rows(n0, D, &mut rng);
+    let init_y: Vec<f64> = init_x.iter().map(|r| synth_y(r)).collect();
+    let iters = (0..iters)
+        .map(|_| {
+            let cands = rand_rows(m, D, &mut rng);
+            let next: Vec<f64> = (0..D).map(|_| rng.f64()).collect();
+            let y = synth_y(&next);
+            (cands, next, y)
+        })
+        .collect();
+    Scenario { init_x, init_y, iters }
+}
+
+/// Replay the whole loop on a session; returns the last iteration's EI
+/// (the cross-check payload).
+fn replay(mut gp: Box<dyn GpSession + '_>, epool: &ExecPool, sc: &Scenario) -> Vec<f64> {
+    for (x, &y) in sc.init_x.iter().zip(&sc.init_y) {
+        gp.observe(x, y).unwrap();
+    }
+    let mut best = sc.init_y.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut last_ei = Vec::new();
+    for (cands, next, y) in &sc.iters {
+        let (ei, _, _) = gp.acquire(epool, cands, best).unwrap();
+        last_ei = ei;
+        gp.observe(next, *y).unwrap();
+        best = best.min(*y);
+    }
+    last_ei
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (ns, m, iters): (&[usize], usize, usize) =
+        if smoke { (&[32, 64], 128, 4) } else { (&[64, 128, 256], 1024, 12) };
+
+    let backend = NativeBackend;
+    let epool = *exec::global();
+    let serial = ExecPool::serial();
+    let mut rows = Vec::new();
+
+    for &n in ns {
+        assert!(n <= N_TRAIN);
+        let cfg = GpConfig {
+            dim: D,
+            lengthscale: 0.30 * (D as f64).sqrt(),
+            sigma_f2: 1.0,
+            sigma_n2: 0.01,
+            cap: N_TRAIN,
+        };
+        let sc = scenario(n, m, iters, 0x5eed ^ n as u64);
+
+        // Cross-check: both paths must agree bitwise before we time them.
+        let a = replay(one_shot_gp(&backend, &cfg), &serial, &sc);
+        let b = replay(backend.gp_open(&cfg).unwrap(), &epool, &sc);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b), "one-shot and incremental EI diverged (n={n})");
+
+        section(&format!("acquisition loop: {iters} iters ending at n={n}, m={m} candidates"));
+        let one = Bench::new(format!("one_shot/{n}tr_{m}c/serial"))
+            .iters(1, if smoke { 2 } else { 3 })
+            .run(|| replay(one_shot_gp(&backend, &cfg), &serial, &sc));
+        let inc = Bench::new(format!("incremental/{n}tr_{m}c/pool{}", epool.threads()))
+            .iters(1, if smoke { 2 } else { 3 })
+            .run(|| replay(backend.gp_open(&cfg).unwrap(), &epool, &sc));
+        let speedup = one.mean_ns / inc.mean_ns;
+        println!("  speedup: {speedup:.2}x");
+
+        rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
+            ("iters", Json::num(iters as f64)),
+            ("one_shot_ms", Json::num(one.mean_ns / 1e6)),
+            ("incremental_ms", Json::num(inc.mean_ns / 1e6)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("surrogate_acquisition")),
+        ("threads", Json::num(epool.threads() as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("results", Json::Arr(rows)),
+    ]);
+    // Smoke runs (reduced sizes) go to a sibling file so they never
+    // clobber full-size acceptance numbers at the repo root.
+    let path = if smoke {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_surrogate_smoke.json")
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_surrogate.json")
+    };
+    std::fs::write(path, format!("{doc}\n")).expect("write surrogate bench json");
+    println!("\nwrote {path}");
+}

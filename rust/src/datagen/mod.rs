@@ -214,6 +214,13 @@ impl<'a> Labeller<'a> {
     }
 }
 
+/// Pool-scoring chunk size for backends that prefer sharded scoring
+/// (`MlBackend::prefers_sharded_scoring`): per-candidate scores are
+/// independent, so the fixed size only tiles the fan-out — chunking (and
+/// pool width) can never change a value.  Batched backends (XLA: padded
+/// fixed-shape executable behind an engine lock) keep one call instead.
+const SCORE_CHUNK: usize = 64;
+
 /// Indices of the `k` highest scores, descending.  NaN scores (a
 /// degenerate bootstrap resample can produce one) rank strictly last
 /// instead of poisoning the comparator — `partial_cmp().unwrap()` here
@@ -247,10 +254,11 @@ pub fn characterize(
     characterize_on(exec::global(), runner, mode, metric, strategy, cfg, backend)
 }
 
-/// `characterize` on an explicit pool.  Benchmark labelling batches and the
-/// bootstrap-ensemble fits fan out on `pool`; all seeds are index-derived
-/// and all reductions run in index order, so the result is bit-identical
-/// for every pool width (guarded by `tests/exec_parallel.rs`).
+/// `characterize` on an explicit pool.  Benchmark labelling batches, the
+/// bootstrap-ensemble fits, and the per-round EMCM/QBC pool scoring fan
+/// out on `pool`; all seeds are index-derived and all reductions run in
+/// index order, so the result is bit-identical for every pool width
+/// (guarded by `tests/exec_parallel.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn characterize_on(
     epool: &ExecPool,
@@ -289,15 +297,24 @@ pub fn characterize_on(
     let pool_feats_raw: Vec<Vec<f64>> = pool.iter().map(|(_, f)| f.clone()).collect();
     let fstd = stats::Standardizer::fit(&pool_feats_raw);
 
+    // Standardized pool features, cached once and kept in lockstep with
+    // `pool` (which only ever shrinks — `swap_remove` both) instead of
+    // being recomputed from scratch every AL round.
+    let mut pool_std: Vec<Vec<f64>> =
+        pool_feats_raw.iter().map(|f| fstd.transform_row(f)).collect();
+    drop(pool_feats_raw);
+
     // Seed set (10% of the labelling budget) + held-out test set.  Both
     // are drawn serially (the RNG stream is order-sensitive) and labelled
     // as a parallel batch (labels touch no shared state).
     let mut unit_rows = Vec::new();
     let mut feat_rows = Vec::new();
+    let mut feat_std_rows = Vec::new();
     let mut seed_cfgs = Vec::with_capacity(cfg.seed_runs);
     for _ in 0..cfg.seed_runs {
         let idx = rng.below(pool.len());
         let (u, f) = pool.swap_remove(idx);
+        feat_std_rows.push(pool_std.swap_remove(idx));
         seed_cfgs.push(FlagConfig::from_unit(mode, &u));
         unit_rows.push(u);
         feat_rows.push(f);
@@ -330,9 +347,6 @@ pub fn characterize_on(
         Ok((w, scaler, r))
     };
 
-    let mut feat_std_rows: Vec<Vec<f64>> =
-        feat_rows.iter().map(|x| fstd.transform_row(x)).collect();
-
     let (_, _, rmse0) = fit_and_rmse(&feat_std_rows, &y, backend)?;
     let mut rmse_history = vec![rmse0];
 
@@ -363,12 +377,22 @@ pub fn characterize_on(
             w_ens.push(fit?);
         }
 
-        // Score the pool (standardized feature space).
-        let pool_std: Vec<Vec<f64>> =
-            pool.iter().map(|(_, f)| fstd.transform_row(f)).collect();
+        // Score the pool (cached standardized features), sharded over the
+        // exec pool in fixed-size chunks with index-ordered results.
         let scores: Vec<f64> = match strategy {
+            Strategy::Bemcm if backend.prefers_sharded_scoring() => {
+                let chunks: Vec<&[Vec<f64>]> = pool_std.chunks(SCORE_CHUNK).collect();
+                let per = epool.par_map(&chunks, |_, c| backend.emcm_score(&w_ens, &w0, c));
+                let mut s = Vec::with_capacity(pool_std.len());
+                for r in per {
+                    s.extend(r?);
+                }
+                s
+            }
             Strategy::Bemcm => backend.emcm_score(&w_ens, &w0, &pool_std)?,
-            Strategy::Qbc => qbc_scores(&w_ens, &pool_std),
+            Strategy::Qbc => {
+                epool.par_chunks(&pool_std, SCORE_CHUNK, |_, c| qbc_scores(&w_ens, c))
+            }
             Strategy::Random => (0..pool.len()).map(|_| rng.f64()).collect(),
         };
 
@@ -378,9 +402,9 @@ pub fn characterize_on(
         let mut batch_cfgs = Vec::with_capacity(batch.len());
         for i in batch {
             let (u, f) = pool.swap_remove(i);
+            feat_std_rows.push(pool_std.swap_remove(i));
             batch_cfgs.push(FlagConfig::from_unit(mode, &u));
             unit_rows.push(u);
-            feat_std_rows.push(fstd.transform_row(&f));
             feat_rows.push(f);
         }
         y.extend(labeller.label_batch(epool, &batch_cfgs));

@@ -128,6 +128,21 @@ impl ExecPool {
     {
         self.par_run(items.len(), |i| f(i, &items[i]))
     }
+
+    /// Evaluate `f(chunk_index, chunk)` over fixed-size `chunk`-item
+    /// slices of `items` (the last may be short) and concatenate the
+    /// results in item order.  The chunk size is part of the call
+    /// contract — never derived from the pool width — so outputs stay
+    /// width-invariant by construction.
+    pub fn par_chunks<T, R, F>(&self, items: &[T], chunk: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &[T]) -> Vec<R> + Sync,
+    {
+        let chunks: Vec<&[T]> = items.chunks(chunk.max(1)).collect();
+        self.par_map(&chunks, |i, c| f(i, c)).into_iter().flatten().collect()
+    }
 }
 
 impl Default for ExecPool {
@@ -136,14 +151,23 @@ impl Default for ExecPool {
     }
 }
 
+static GLOBAL_POOL: OnceLock<ExecPool> = OnceLock::new();
+
 /// The process-wide pool the public pipeline entry points run on.
-/// Width comes from `ONESTOPTUNER_THREADS` / the machine; results never
-/// depend on it (see module docs), so there is no per-call override on the
-/// public API — tests that exercise pool-width invariance use the `*_on`
+/// Width comes from `--threads`/[`set_global_threads`], else
+/// `ONESTOPTUNER_THREADS`, else the machine; results never depend on it
+/// (see module docs), so there is no per-call override on the public
+/// API — tests that exercise pool-width invariance use the `*_on`
 /// function variants with explicit pools instead.
 pub fn global() -> &'static ExecPool {
-    static POOL: OnceLock<ExecPool> = OnceLock::new();
-    POOL.get_or_init(ExecPool::from_env)
+    GLOBAL_POOL.get_or_init(ExecPool::from_env)
+}
+
+/// Pin the global pool width (the CLI's `--threads` flag).  Must run
+/// before the first `global()` use; returns false — width unchanged —
+/// once the pool already exists.
+pub fn set_global_threads(threads: usize) -> bool {
+    GLOBAL_POOL.set(ExecPool::new(threads)).is_ok()
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -226,6 +250,24 @@ mod tests {
         let items = vec!["a", "bb", "ccc"];
         let out = pool.par_map(&items, |i, s| (i, s.len()));
         assert_eq!(out, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn par_chunks_concatenates_in_item_order() {
+        let items: Vec<u64> = (0..23).collect();
+        let work = |ci: usize, c: &[u64]| -> Vec<u64> {
+            c.iter().map(|&v| v * 10 + ci as u64).collect()
+        };
+        let serial = ExecPool::serial().par_chunks(&items, 5, work);
+        assert_eq!(serial.len(), 23);
+        for width in [2, 4, 9] {
+            let parallel = ExecPool::new(width).par_chunks(&items, 5, work);
+            assert_eq!(serial, parallel, "width {width}");
+        }
+        // chunk index is the fixed-size chunk number, not a pool artifact
+        assert_eq!(serial[0], 0);
+        assert_eq!(serial[22], 224);
+        assert!(ExecPool::new(3).par_chunks(&[] as &[u64], 4, work).is_empty());
     }
 
     #[test]

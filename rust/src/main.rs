@@ -12,6 +12,10 @@
 //!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
 //!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
 //!   serve           [--port 7878]
+//!
+//! global options:
+//!   --threads N     execution-pool width (default: auto-detected cores;
+//!                   results never depend on it)
 //! ```
 
 use std::collections::HashMap;
@@ -93,6 +97,18 @@ impl Opts {
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
+    // `--threads` is a global flag: accept it before or after the
+    // subcommand, and strip it so command parsing never sees it.
+    let mut args = args.to_vec();
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        anyhow::ensure!(i + 1 < args.len(), "--threads needs a value");
+        let n: usize = args[i + 1].parse().context("--threads must be a positive integer")?;
+        anyhow::ensure!(n >= 1, "--threads must be >= 1");
+        if !onestoptuner::exec::set_global_threads(n) {
+            eprintln!("warning: execution pool already initialized; --threads {n} ignored");
+        }
+        args.drain(i..=i + 1);
+    }
     let Some(cmd) = args.first().map(|s| s.as_str()) else {
         print_usage();
         return Ok(());
@@ -127,7 +143,9 @@ fn print_usage() {
          \x20 select        --data data.csv --gc G [--metric M] [--lambda 0.01] [--grid]\n\
          \x20 tune          --bench B --gc G [--metric M] [--algo bo|rbo|bo-warm|sa|all] [--iters 20]\n\
          \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
-         \x20 serve         [--port 7878]\n"
+         \x20 serve         [--port 7878]\n\n\
+         global options:\n\
+         \x20 --threads N   execution-pool width (default: auto-detected cores; results never depend on it)\n"
     );
 }
 

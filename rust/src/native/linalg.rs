@@ -15,6 +15,28 @@ impl Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Empty matrix that can grow to `rows` rows without reallocating —
+    /// the backing store for incremental row pushes (GP training set,
+    /// flattened kernel blocks).
+    pub fn with_row_capacity(rows: usize, cols: usize) -> Mat {
+        Mat { rows: 0, cols, data: Vec::with_capacity(rows * cols) }
+    }
+
+    /// Append one row (must match `cols`).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Remove row `i`, shifting later rows up (`Vec::remove` semantics).
+    pub fn remove_row(&mut self, i: usize) {
+        assert!(i < self.rows);
+        let c = self.cols;
+        self.data.drain(i * c..(i + 1) * c);
+        self.rows -= 1;
+    }
+
     pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
         assert!(!rows.is_empty());
         let cols = rows[0].len();
@@ -93,6 +115,152 @@ impl Mat {
         }
         g
     }
+}
+
+/// Packed lower-triangular matrix: row `i` occupies
+/// `data[i(i+1)/2 .. i(i+1)/2 + i + 1]`.  Backs the incremental GP
+/// surrogate's kernel cache and Cholesky factor: appending a row is a plain
+/// `extend`, and evicting observation `idx` splices its row and column out
+/// of every later row without re-laying-out the live prefix.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PackedLower {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl PackedLower {
+    pub fn new() -> PackedLower {
+        PackedLower::default()
+    }
+
+    #[inline]
+    fn off(i: usize) -> usize {
+        i * (i + 1) / 2
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j <= i && i < self.n);
+        self.data[Self::off(i) + j]
+    }
+
+    /// Row `i` (length `i + 1`; last element is the diagonal).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[Self::off(i)..Self::off(i) + i + 1]
+    }
+
+    /// Append a row (must have length `n + 1`).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.n + 1);
+        self.data.extend_from_slice(row);
+        self.n += 1;
+    }
+
+    /// Remove row and column `idx` (`Vec::remove` semantics: the order of
+    /// the remaining indices is preserved).
+    pub fn remove(&mut self, idx: usize) {
+        assert!(idx < self.n);
+        let mut w = Self::off(idx);
+        for r in idx + 1..self.n {
+            let start = Self::off(r);
+            for c in 0..=r {
+                if c == idx {
+                    continue;
+                }
+                self.data[w] = self.data[start + c];
+                w += 1;
+            }
+        }
+        self.n -= 1;
+        self.data.truncate(w);
+    }
+
+    pub fn clear(&mut self) {
+        self.n = 0;
+        self.data.clear();
+    }
+
+    /// Solve `L x = b` — arithmetic identical to the free [`solve_lower`].
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = vec![0.0; n];
+        for i in 0..n {
+            let row = self.row(i);
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= row[k] * x[k];
+            }
+            x[i] = sum / row[i];
+        }
+        x
+    }
+
+    /// Solve `L^T x = b` — arithmetic identical to [`solve_lower_t`].
+    pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = b[i];
+            for k in (i + 1)..n {
+                sum -= self.at(k, i) * x[k];
+            }
+            x[i] = sum / self.at(i, i);
+        }
+        x
+    }
+}
+
+/// Extend a Cholesky factor by one observation: given the next kernel row
+/// `krow` (`k(x_new, x_0..=x_new)`, diagonal — noise included — last),
+/// append row `n` of the factor in O(n²).  The arithmetic is exactly row
+/// `n` of [`cholesky`] — a row only reads *prior* rows, so the result is
+/// bit-identical to refactoring from scratch.  Returns false (factor
+/// untouched) if the extended matrix is not positive definite.
+pub fn cholesky_push(l: &mut PackedLower, krow: &[f64]) -> bool {
+    let n = l.n();
+    assert_eq!(krow.len(), n + 1);
+    let mut row = Vec::with_capacity(n + 1);
+    for j in 0..n {
+        let lj = l.row(j);
+        let mut sum = krow[j];
+        for k in 0..j {
+            sum -= row[k] * lj[k];
+        }
+        row.push(sum / lj[j]);
+    }
+    let mut sum = krow[n];
+    for v in &row {
+        sum -= v * v;
+    }
+    if sum <= 0.0 {
+        return false;
+    }
+    row.push(sum.sqrt());
+    l.push_row(&row);
+    true
+}
+
+/// Refactor `l` from a packed kernel matrix `k` (noise on the diagonal) —
+/// the full O(n³) path the incremental surrogate falls back to after an
+/// eviction, where the factor's prefix property breaks.  Row-by-row
+/// `cholesky_push` in index order is exactly [`cholesky`]'s loop.
+pub fn cholesky_rebuild(k: &PackedLower, l: &mut PackedLower) -> bool {
+    l.clear();
+    for i in 0..k.n() {
+        if !cholesky_push(l, k.row(i)) {
+            return false;
+        }
+    }
+    true
 }
 
 /// In-place Cholesky: returns lower-triangular L with A = L L^T.
@@ -224,6 +392,132 @@ mod tests {
         for (xi, ti) in x.iter().zip(&x_true) {
             assert!((xi - ti).abs() < 1e-8);
         }
+    }
+
+    /// Pack the lower triangle (diag included) of a dense matrix.
+    fn pack(a: &Mat) -> PackedLower {
+        let mut p = PackedLower::new();
+        for i in 0..a.rows {
+            let row: Vec<f64> = (0..=i).map(|j| a.at(i, j)).collect();
+            p.push_row(&row);
+        }
+        p
+    }
+
+    #[test]
+    fn mat_push_and_remove_rows() {
+        let mut m = Mat::with_row_capacity(4, 3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        m.push_row(&[7.0, 8.0, 9.0]);
+        assert_eq!(m.rows, 3);
+        m.remove_row(1);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn packed_lower_roundtrips_dense() {
+        let mut rng = Pcg::new(11);
+        let a = random_spd(9, &mut rng);
+        let p = pack(&a);
+        for i in 0..9 {
+            for j in 0..=i {
+                assert_eq!(p.at(i, j), a.at(i, j));
+            }
+        }
+        assert_eq!(p.row(4).len(), 5);
+    }
+
+    #[test]
+    fn packed_remove_matches_dense_removal() {
+        let mut rng = Pcg::new(12);
+        let a = random_spd(8, &mut rng);
+        for idx in [0usize, 3, 7] {
+            let mut p = pack(&a);
+            p.remove(idx);
+            assert_eq!(p.n(), 7);
+            let keep: Vec<usize> = (0..8).filter(|&r| r != idx).collect();
+            for (i, &ri) in keep.iter().enumerate() {
+                for (j, &rj) in keep.iter().take(i + 1).enumerate() {
+                    assert_eq!(p.at(i, j), a.at(ri, rj), "idx {idx} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_push_bit_identical_to_scratch() {
+        let mut rng = Pcg::new(13);
+        let a = random_spd(14, &mut rng);
+        let dense = cholesky(&a).unwrap();
+        let mut l = PackedLower::new();
+        for i in 0..14 {
+            let krow: Vec<f64> = (0..=i).map(|j| a.at(i, j)).collect();
+            assert!(cholesky_push(&mut l, &krow));
+        }
+        for i in 0..14 {
+            for j in 0..=i {
+                assert_eq!(
+                    l.at(i, j).to_bits(),
+                    dense.at(i, j).to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_push_rejects_indefinite_untouched() {
+        let mut l = PackedLower::new();
+        assert!(cholesky_push(&mut l, &[4.0]));
+        // second row making the matrix indefinite: [[4, 5], [5, 4]]
+        assert!(!cholesky_push(&mut l, &[5.0, 4.0]));
+        assert_eq!(l.n(), 1, "failed push must leave the factor untouched");
+    }
+
+    #[test]
+    fn cholesky_rebuild_after_eviction_matches_scratch() {
+        let mut rng = Pcg::new(14);
+        let a = random_spd(10, &mut rng);
+        let mut k = pack(&a);
+        k.remove(4);
+        let mut l = PackedLower::new();
+        assert!(cholesky_rebuild(&k, &mut l));
+        // dense reference on the same 9x9 submatrix
+        let keep: Vec<usize> = (0..10).filter(|&r| r != 4).collect();
+        let mut sub = Mat::zeros(9, 9);
+        for (i, &ri) in keep.iter().enumerate() {
+            for (j, &rj) in keep.iter().enumerate() {
+                *sub.at_mut(i, j) = a.at(ri, rj);
+            }
+        }
+        let dense = cholesky(&sub).unwrap();
+        for i in 0..9 {
+            for j in 0..=i {
+                assert_eq!(l.at(i, j).to_bits(), dense.at(i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_solves_match_dense_bitwise() {
+        let mut rng = Pcg::new(15);
+        let a = random_spd(11, &mut rng);
+        let dense = cholesky(&a).unwrap();
+        let packed = pack(&dense);
+        let b: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
+        let (xd, xp) = (solve_lower(&dense, &b), packed.solve_lower(&b));
+        assert_eq!(
+            xd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            xp.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let (td, tp) = (solve_lower_t(&dense, &b), packed.solve_lower_t(&b));
+        assert_eq!(
+            td.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            tp.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

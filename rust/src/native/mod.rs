@@ -1,4 +1,5 @@
 //! Pure-rust mirrors of the L1/L2 compute (cross-check + fallback backend).
 
+pub mod gp;
 pub mod linalg;
 pub mod ops;

@@ -118,20 +118,21 @@ pub fn lasso_fit(x: &[Vec<f64>], y: &[f64], lam: f64, iters: usize) -> Vec<f64> 
     w
 }
 
-/// RBF kernel row block: K[i][j] = sf2 exp(-||a_i-b_j||^2/(2 l^2)).
-pub fn rbf(a: &[Vec<f64>], b: &[Vec<f64>], lengthscale: f64, sf2: f64) -> Vec<Vec<f64>> {
+/// RBF kernel row block: K[i][j] = sf2 exp(-||a_i-b_j||^2/(2 l^2)),
+/// returned as one flat `Mat` (one contiguous row per `a` row — no
+/// per-row allocations on the kernel hot path).
+pub fn rbf(a: &[Vec<f64>], b: &[Vec<f64>], lengthscale: f64, sf2: f64) -> Mat {
     let inv = 1.0 / (2.0 * lengthscale * lengthscale);
-    a.iter()
-        .map(|ai| {
-            b.iter()
-                .map(|bj| {
-                    let sq: f64 =
-                        ai.iter().zip(bj).map(|(x, y)| (x - y) * (x - y)).sum();
-                    sf2 * (-sq * inv).exp()
-                })
-                .collect()
-        })
-        .collect()
+    let mut k = Mat::with_row_capacity(a.len(), b.len());
+    let mut row = vec![0.0; b.len()];
+    for ai in a {
+        for (o, bj) in row.iter_mut().zip(b) {
+            let sq: f64 = ai.iter().zip(bj).map(|(x, y)| (x - y) * (x - y)).sum();
+            *o = sf2 * (-sq * inv).exp();
+        }
+        k.push_row(&row);
+    }
+    k
 }
 
 /// GP posterior + EI at candidates (mirror of gp_ei):
@@ -147,11 +148,10 @@ pub fn gp_ei(
 ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
     let n = xtr.len();
     assert_eq!(ytr.len(), n);
-    let mut k = rbf(xtr, xtr, lengthscale, sigma_f2);
-    for (i, row) in k.iter_mut().enumerate() {
-        row[i] += sigma_n2;
+    let mut km = rbf(xtr, xtr, lengthscale, sigma_f2);
+    for i in 0..n {
+        *km.at_mut(i, i) += sigma_n2;
     }
-    let km = Mat::from_rows(&k);
     let l = cholesky(&km).expect("GP kernel matrix must be PD (jitter too small?)");
     let alpha = solve_lower_t(&l, &solve_lower(&l, ytr));
 
@@ -159,7 +159,7 @@ pub fn gp_ei(
     let mut mu = Vec::with_capacity(xc.len());
     let mut sigma = Vec::with_capacity(xc.len());
     let mut ei = Vec::with_capacity(xc.len());
-    for kci in &kc {
+    for kci in (0..xc.len()).map(|i| kc.row(i)) {
         let m: f64 = kci.iter().zip(&alpha).map(|(a, b)| a * b).sum();
         let v = solve_lower(&l, kci);
         let var = (sigma_f2 - v.iter().map(|a| a * a).sum::<f64>()).max(1e-12);
@@ -280,7 +280,7 @@ mod tests {
         let x = rand_rows(5, 3, &mut rng);
         let k = rbf(&x, &x, 1.0, 2.5);
         for i in 0..5 {
-            assert!((k[i][i] - 2.5).abs() < 1e-12);
+            assert!((k.at(i, i) - 2.5).abs() < 1e-12);
         }
     }
 }

@@ -10,7 +10,7 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use super::{MlBackend, D_FEAT, M_CAND, N_TRAIN, Z_ENS};
+use super::{GpConfig, GpSession, MlBackend, D_FEAT, M_CAND, N_TRAIN, Z_ENS};
 use crate::util::json::Json;
 
 pub struct XlaEngine {
@@ -243,5 +243,11 @@ impl MlBackend for XlaEngine {
             sigma.extend(s[..chunk.len()].iter().map(|&v| v as f64));
         }
         Ok((ei, mu, sigma))
+    }
+
+    /// No incremental artifact exists for the AOT `gp_ei` executable, so
+    /// XLA sessions re-run it per acquire (the one-shot path).
+    fn gp_open(&self, cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>> {
+        Ok(super::one_shot_gp(self, cfg))
     }
 }

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::MlBackend;
+use super::{GpConfig, GpSession, MlBackend};
 
 /// Placeholder for the PJRT engine; cannot be constructed.
 pub struct XlaEngine {
@@ -61,6 +61,10 @@ impl MlBackend for XlaEngine {
         _sigma_n2: f64,
         _best: f64,
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        unreachable!("XlaEngine cannot be constructed without the `xla` feature")
+    }
+
+    fn gp_open(&self, _cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>> {
         unreachable!("XlaEngine cannot be constructed without the `xla` feature")
     }
 }

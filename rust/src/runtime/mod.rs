@@ -17,6 +17,56 @@ pub mod engine;
 
 use anyhow::Result;
 
+use crate::exec::ExecPool;
+
+/// Hyper-parameters + shape of a GP surrogate session.
+#[derive(Clone, Copy, Debug)]
+pub struct GpConfig {
+    /// Input dimension (the tuning subspace, not the encoded feature dim).
+    pub dim: usize,
+    pub lengthscale: f64,
+    pub sigma_f2: f64,
+    pub sigma_n2: f64,
+    /// Training-row budget (`observe` past it errors) — [`N_TRAIN`] for
+    /// the artifact-backed pipeline.
+    pub cap: usize,
+}
+
+/// A stateful GP surrogate that persists across BO iterations, so the
+/// per-iteration cost is an incremental update instead of a from-scratch
+/// refit.  Obtained from [`MlBackend::gp_open`] (backend's best
+/// implementation) or [`one_shot_gp`] (the cross-check reference that
+/// re-fits through `gp_ei` every call).  Both paths are bit-identical —
+/// guarded by `tests/gp_incremental.rs`.
+pub trait GpSession: Send {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw (unstandardized) targets, in observation order.
+    fn ys(&self) -> &[f64];
+
+    /// Append one observation.
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()>;
+
+    /// Drop observation `i` (`Vec::remove` semantics: the order of the
+    /// remaining observations is preserved).
+    fn forget(&mut self, i: usize) -> Result<()>;
+
+    /// Expected improvement, posterior mean and std (all in
+    /// standardized-target space) at the candidates, sharded over `pool`
+    /// in fixed-size blocks — results are index-ordered, so pool width
+    /// never changes a value.  `best` is the *raw* incumbent objective.
+    fn acquire(
+        &self,
+        pool: &ExecPool,
+        xc: &[Vec<f64>],
+        best: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)>;
+}
+
 /// The four ML operations the pipeline needs (mirrors python/compile/model
 /// exports).  All matrices are row-major `Vec<Vec<f64>>`.
 ///
@@ -52,6 +102,22 @@ pub trait MlBackend: Send + Sync {
         sigma_n2: f64,
         best: f64,
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)>;
+
+    /// Open a stateful GP surrogate session.  The native backend returns
+    /// the incremental cached-Cholesky surrogate (`native::gp`); the XLA
+    /// engine has no incremental artifact and returns the [`one_shot_gp`]
+    /// wrapper over its `gp_ei` executable.
+    fn gp_open(&self, cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>>;
+
+    /// Whether callers should shard `emcm_score` into small chunks for
+    /// the exec pool.  True for the per-row native mirror; false (the
+    /// default) for backends like the XLA engine, whose executable pads
+    /// every call to [`M_CAND`] rows and serializes on an engine lock —
+    /// there one batched call is strictly cheaper.  Chunking never
+    /// changes values (scores are per-row), only the fan-out shape.
+    fn prefers_sharded_scoring(&self) -> bool {
+        false
+    }
 }
 
 /// Ensemble size every backend expects for EMCM (shapes.py Z_ENS).
@@ -102,6 +168,85 @@ impl MlBackend for NativeBackend {
         Ok(crate::native::ops::gp_ei(
             xtr, ytr, xc, lengthscale, sigma_f2, sigma_n2, best,
         ))
+    }
+
+    fn gp_open(&self, cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>> {
+        Ok(Box::new(crate::native::gp::GpSurrogate::new(cfg)))
+    }
+
+    fn prefers_sharded_scoring(&self) -> bool {
+        true
+    }
+}
+
+/// [`GpSession`] over any backend's one-shot `gp_ei`: the training set is
+/// kept as plain rows and every `acquire` re-fits from scratch.  This is
+/// the cross-check reference for the incremental surrogate and the session
+/// the XLA engine serves (its `gp_ei` executable is a fixed-shape AOT
+/// artifact with no incremental variant).
+struct OneShotGp<'a> {
+    backend: &'a dyn MlBackend,
+    cfg: GpConfig,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+}
+
+/// Open a one-shot (refit-per-acquire) session over `backend`'s `gp_ei`.
+pub fn one_shot_gp<'a>(backend: &'a dyn MlBackend, cfg: &GpConfig) -> Box<dyn GpSession + 'a> {
+    Box::new(OneShotGp { backend, cfg: *cfg, xs: Vec::new(), ys: Vec::new() })
+}
+
+impl GpSession for OneShotGp<'_> {
+    fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    fn ys(&self) -> &[f64] {
+        &self.ys
+    }
+
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.cfg.dim,
+            "GP point dim {} != {}",
+            x.len(),
+            self.cfg.dim
+        );
+        anyhow::ensure!(
+            self.ys.len() < self.cfg.cap,
+            "GP training rows at cap {}",
+            self.cfg.cap
+        );
+        self.xs.push(x.to_vec());
+        self.ys.push(y);
+        Ok(())
+    }
+
+    fn forget(&mut self, i: usize) -> Result<()> {
+        anyhow::ensure!(i < self.ys.len(), "forget({i}) of {} rows", self.ys.len());
+        self.xs.remove(i);
+        self.ys.remove(i);
+        Ok(())
+    }
+
+    fn acquire(
+        &self,
+        _pool: &ExecPool,
+        xc: &[Vec<f64>],
+        best: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        anyhow::ensure!(!self.ys.is_empty(), "GP needs observations before acquisition");
+        let scaler = crate::util::stats::TargetScaler::fit(&self.ys);
+        let ysc: Vec<f64> = self.ys.iter().map(|&v| scaler.transform(v)).collect();
+        self.backend.gp_ei(
+            &self.xs,
+            &ysc,
+            xc,
+            self.cfg.lengthscale,
+            self.cfg.sigma_f2,
+            self.cfg.sigma_n2,
+            scaler.transform(best),
+        )
     }
 }
 

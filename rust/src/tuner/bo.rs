@@ -2,7 +2,12 @@
 //!
 //! SOBOL-initialized GP with Expected Improvement; each acquisition sweep
 //! evaluates EI over a candidate pool (quasi-random global points + local
-//! perturbations of the incumbent) through the `gp_ei` HLO artifact.
+//! perturbations of the incumbent) through the backend's GP surrogate
+//! *session* ([`MlBackend::gp_open`]): observations accumulate across
+//! iterations (native backend: incremental cached Cholesky, candidates
+//! sharded on the exec pool), instead of refitting the kernel from scratch
+//! every sweep.  [`SurrogateMode::OneShot`] keeps the old refit-per-sweep
+//! `gp_ei` path as the bit-identical cross-check reference.
 
 use std::time::Instant;
 
@@ -11,10 +16,11 @@ use anyhow::Result;
 use super::objective::Objective;
 use super::space::TuneSpace;
 use super::{TuneResult, Tuner};
-use crate::runtime::{MlBackend, N_TRAIN};
+use crate::exec::{self, ExecPool};
+use crate::runtime::{GpConfig, GpSession, MlBackend, N_TRAIN};
 use crate::util::rng::Pcg;
 use crate::util::sobol::Sobol;
-use crate::util::stats::{argmax, TargetScaler};
+use crate::util::stats::argmax;
 
 /// GP hyper-parameters (y is standardized before fitting, so the signal
 /// variance is ~1; the lengthscale scales with sqrt(dim) because distances
@@ -30,6 +36,18 @@ impl Default for GpHypers {
     fn default() -> Self {
         GpHypers { lengthscale_per_sqrt_dim: 0.30, sigma_f2: 1.0, sigma_n2: 0.01 }
     }
+}
+
+/// Which surrogate implementation the BO loop drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SurrogateMode {
+    /// The backend's stateful session (native: incremental cached
+    /// Cholesky + pool-sharded acquisition).
+    Session,
+    /// Re-fit from scratch through one-shot `gp_ei` every iteration —
+    /// the cross-check reference (`tests/gp_incremental.rs` proves both
+    /// modes bit-identical).
+    OneShot,
 }
 
 #[derive(Clone, Debug)]
@@ -52,6 +70,11 @@ pub struct BoConfig {
     /// Seed the initial design with the JVM default configuration (real
     /// tuning always knows where it starts from).
     pub include_default: bool,
+    /// Surrogate implementation (session vs one-shot cross-check).
+    pub surrogate: SurrogateMode,
+    /// Pool the acquisition scoring shards on; width never changes
+    /// results (index-ordered fixed-size blocks).
+    pub epool: ExecPool,
 }
 
 impl Default for BoConfig {
@@ -66,6 +89,8 @@ impl Default for BoConfig {
             anchors: None,
             anchor_sigma: 0.06,
             include_default: true,
+            surrogate: SurrogateMode::Session,
+            epool: *exec::global(),
         }
     }
 }
@@ -200,29 +225,37 @@ impl Tuner for BoTuner {
             acc
         });
 
+        // Surrogate session: initial data is fed once, then each
+        // iteration appends one observation instead of refitting.
         let ls = self.cfg.hypers.lengthscale_per_sqrt_dim * (space.dim() as f64).sqrt();
-        for _ in 0..iters {
-            // Cap the GP training set at the artifact budget.
-            if xs.len() >= N_TRAIN {
-                // drop the worst old point
-                let worst = argmax(&ys);
-                xs.remove(worst);
-                ys.remove(worst);
-            }
-            let scaler = TargetScaler::fit(&ys);
-            let ysc: Vec<f64> = ys.iter().map(|&v| scaler.transform(v)).collect();
-            let best_sc = scaler.transform(best_y);
+        let gpcfg = GpConfig {
+            dim: space.dim(),
+            lengthscale: ls,
+            sigma_f2: self.cfg.hypers.sigma_f2,
+            sigma_n2: self.cfg.hypers.sigma_n2,
+            // An oversized initial design (n_init > N_TRAIN) is allowed,
+            // exactly as the pre-session code was: the loop below still
+            // evicts one worst point per iteration while over N_TRAIN.
+            cap: N_TRAIN.max(xs.len()),
+        };
+        let backend = std::sync::Arc::clone(&self.backend);
+        let mut gp = match self.cfg.surrogate {
+            SurrogateMode::Session => backend.gp_open(&gpcfg)?,
+            SurrogateMode::OneShot => crate::runtime::one_shot_gp(backend.as_ref(), &gpcfg),
+        };
+        for (x, &y) in xs.iter().zip(&ys) {
+            gp.observe(x, y)?;
+        }
+        drop((xs, ys));
 
+        for _ in 0..iters {
+            // Cap the GP training set at the artifact budget: drop the
+            // worst old point (kernel-cache eviction + factor rebuild).
+            if gp.len() >= N_TRAIN {
+                gp.forget(argmax(gp.ys()))?;
+            }
             let cands = self.candidates(space, &best_x, &mut rng);
-            let (ei, _, _) = self.backend.gp_ei(
-                &xs,
-                &ysc,
-                &cands,
-                ls,
-                self.cfg.hypers.sigma_f2,
-                self.cfg.hypers.sigma_n2,
-                best_sc,
-            )?;
+            let (ei, _, _) = gp.acquire(&self.cfg.epool, &cands, best_y)?;
             let pick = argmax(&ei);
             let x_next = cands[pick].clone();
             let y_next = objective.eval(&space.to_config(&x_next));
@@ -232,8 +265,7 @@ impl Tuner for BoTuner {
                 best_x = x_next.clone();
             }
             best_history.push(best_y);
-            xs.push(x_next);
-            ys.push(y_next);
+            gp.observe(&x_next, y_next)?;
         }
 
         Ok(TuneResult {

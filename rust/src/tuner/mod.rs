@@ -1,8 +1,10 @@
 //! Phase 3 — recommending the best flag configuration (paper §III-D).
 //!
 //! Four optimizers over the lasso-selected flag subspace:
-//! * `BoTuner` — Bayesian Optimization: SOBOL init, GP surrogate + EI
-//!   acquisition evaluated through the `gp_ei` HLO artifact (Algorithm 2);
+//! * `BoTuner` — Bayesian Optimization: SOBOL init, stateful GP surrogate
+//!   session (incremental cached Cholesky on the native backend, the
+//!   `gp_ei` HLO artifact on XLA) + pool-sharded EI acquisition
+//!   (Algorithm 2);
 //! * `BoTuner::warm_start` — GP seeded with the phase-1 AL data instead of
 //!   SOBOL points;
 //! * `RboTuner` — Regression-guided BO: the phase-1 LR model replaces the

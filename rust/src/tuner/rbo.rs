@@ -3,7 +3,9 @@
 //! benchmark run — "instead of running the application to evaluate the
 //! chosen flag configurations, we use a prediction model to predict the
 //! metric".  The recommended configuration is validated with one real run
-//! at the end.
+//! at the end.  The inner loop inherits `BoConfig`'s surrogate session and
+//! exec pool, so RBO's many cheap predictor iterations ride the same
+//! incremental cached-Cholesky surrogate as plain BO.
 
 use std::time::Instant;
 

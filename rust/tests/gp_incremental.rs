@@ -1,0 +1,144 @@
+//! Incremental-surrogate regression guard: the stateful GP session
+//! (cached kernel + incrementally-extended Cholesky, pool-sharded
+//! acquisition) must be **bit-identical** to the one-shot `gp_ei` path —
+//! per-candidate (ei, mu, sigma) and whole `TuneResult`s — at every pool
+//! width, including across an N_TRAIN eviction (where the surrogate falls
+//! back to a full refactor of its kernel cache).
+
+use std::sync::Arc;
+
+use onestoptuner::exec::ExecPool;
+use onestoptuner::flags::GcMode;
+use onestoptuner::runtime::{one_shot_gp, GpConfig, GpSession, MlBackend, NativeBackend, N_TRAIN};
+use onestoptuner::tuner::bo::{BoConfig, BoTuner, SurrogateMode};
+use onestoptuner::tuner::objective::Objective;
+use onestoptuner::tuner::{TuneResult, TuneSpace, Tuner};
+use onestoptuner::util::rng::Pcg;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
+}
+
+fn gp_cfg(d: usize) -> GpConfig {
+    GpConfig { dim: d, lengthscale: 0.7, sigma_f2: 1.0, sigma_n2: 0.01, cap: N_TRAIN }
+}
+
+/// Drive an incremental and a one-shot session through the same history of
+/// observe/forget/acquire operations and assert every acquisition is
+/// bitwise equal, at pool widths 1, 2 and 8.
+#[test]
+fn session_matches_one_shot_at_every_pool_width() {
+    let backend = NativeBackend;
+    let d = 6;
+    let cfg = gp_cfg(d);
+    let mut rng = Pcg::new(0x61);
+    let xs = rand_rows(48, d, &mut rng);
+    let ys: Vec<f64> = xs.iter().map(|r| (r[0] * 4.0).sin() + r[1] * r[2] - r[5]).collect();
+    let cands = rand_rows(200, d, &mut rng);
+
+    for width in [1usize, 2, 8] {
+        let epool = ExecPool::new(width);
+        let mut inc = backend.gp_open(&cfg).unwrap();
+        let mut one = one_shot_gp(&backend, &cfg);
+        let mut best = f64::INFINITY;
+        for (i, (x, &y)) in xs.iter().zip(&ys).enumerate() {
+            inc.observe(x, y).unwrap();
+            one.observe(x, y).unwrap();
+            best = best.min(y);
+            // interleave evictions to cross the full-refactor path
+            if i == 20 || i == 33 {
+                inc.forget(i / 2).unwrap();
+                one.forget(i / 2).unwrap();
+            }
+            if i % 7 == 0 {
+                let a = inc.acquire(&epool, &cands, best).unwrap();
+                let b = one.acquire(&epool, &cands, best).unwrap();
+                assert_eq!(bits(&a.0), bits(&b.0), "ei, step {i} width {width}");
+                assert_eq!(bits(&a.1), bits(&b.1), "mu, step {i} width {width}");
+                assert_eq!(bits(&a.2), bits(&b.2), "sigma, step {i} width {width}");
+            }
+        }
+        assert_eq!(inc.len(), one.len());
+        assert_eq!(bits(inc.ys()), bits(one.ys()));
+    }
+}
+
+/// Cheap synthetic objective: quadratic bowl in the unit cube.
+struct Bowl {
+    space: TuneSpace,
+    count: usize,
+}
+
+impl Objective for Bowl {
+    fn eval(&mut self, cfg: &onestoptuner::flags::FlagConfig) -> f64 {
+        self.count += 1;
+        let u = self.space.project(cfg);
+        u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum()
+    }
+    fn evals(&self) -> usize {
+        self.count
+    }
+    fn sim_time_s(&self) -> f64 {
+        self.count as f64
+    }
+}
+
+fn small_space() -> TuneSpace {
+    let mut sp = TuneSpace::full(GcMode::ParallelGC);
+    sp.selected.truncate(6);
+    sp
+}
+
+fn run_bo(surrogate: SurrogateMode, width: usize, n_init: usize, iters: usize) -> TuneResult {
+    let space = small_space();
+    let mut obj = Bowl { space: space.clone(), count: 0 };
+    let mut bo = BoTuner::new(
+        Arc::new(NativeBackend),
+        BoConfig {
+            n_init,
+            n_candidates: 64,
+            surrogate,
+            epool: ExecPool::new(width),
+            ..Default::default()
+        },
+    );
+    bo.tune(&space, &mut obj, iters).unwrap()
+}
+
+fn assert_results_identical(a: &TuneResult, b: &TuneResult, tag: &str) {
+    assert_eq!(a.best_y.to_bits(), b.best_y.to_bits(), "best_y ({tag})");
+    assert_eq!(a.best_config, b.best_config, "best_config ({tag})");
+    assert_eq!(bits(&a.history), bits(&b.history), "history ({tag})");
+    assert_eq!(bits(&a.best_history), bits(&b.best_history), "best_history ({tag})");
+    assert_eq!(a.evals, b.evals, "evals ({tag})");
+}
+
+/// Whole-tuner equivalence at a small size: session vs one-shot, widths
+/// 1/2/8.
+#[test]
+fn bo_tune_result_identical_across_paths_and_widths() {
+    let reference = run_bo(SurrogateMode::OneShot, 1, 8, 10);
+    for width in [1usize, 2, 8] {
+        let inc = run_bo(SurrogateMode::Session, width, 8, 10);
+        assert_results_identical(&reference, &inc, &format!("width {width}"));
+    }
+}
+
+/// Same equivalence across the N_TRAIN cap: n_init 250 + 10 iterations
+/// forces evictions (kernel-cache removal + Cholesky rebuild) from
+/// iteration 7 on.
+#[test]
+fn bo_tune_result_identical_across_n_train_eviction() {
+    let n_init = N_TRAIN - 6;
+    let iters = 10; // crosses the cap at iteration 7
+    let reference = run_bo(SurrogateMode::OneShot, 1, n_init, iters);
+    assert_eq!(reference.history.len(), n_init + iters);
+    for width in [1usize, 2, 8] {
+        let inc = run_bo(SurrogateMode::Session, width, n_init, iters);
+        assert_results_identical(&reference, &inc, &format!("eviction width {width}"));
+    }
+}
