@@ -1,12 +1,20 @@
 //! The Fig 2 backend in action: start the REST API, then act as the UI —
-//! characterize, select flags, and tune over HTTP.  The long-running
-//! endpoints are asynchronous: POST returns `202 Accepted` + a job id and
-//! the client polls `/api/jobs/:id` until the job is done.
+//! characterize (watching live progress), select flags, tune, cancel a
+//! running tune mid-flight, and finally "restart" the backend on the same
+//! state directory to show the datasets and terminal job records survive.
 //!
-//! Run with:  cargo run --release --example rest_server [-- --threads N]
+//! The long-running endpoints are asynchronous: POST returns
+//! `202 Accepted` + a job id; the client polls `/api/jobs/:id` (which
+//! carries a `progress` object while running) and can abort with
+//! `DELETE /api/jobs/:id`.
+//!
+//! Run with:  cargo run --release --example rest_server [-- --threads N] [--state-dir DIR]
+//!
+//! Exits non-zero if any lifecycle invariant breaks — CI runs this as the
+//! end-to-end check of the job subsystem.
 
 use onestoptuner::runtime::load_backend;
-use onestoptuner::server::{http_request, spawn};
+use onestoptuner::server::{http_request, persist, spawn_with, ApiOptions};
 use onestoptuner::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -23,32 +31,47 @@ fn main() -> anyhow::Result<()> {
             eprintln!("warning: execution pool already initialized; --threads {n} ignored");
         }
     }
+    let state_dir = args
+        .iter()
+        .position(|a| a == "--state-dir")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join("onestoptuner-rest-demo"));
+    // Fresh demo every run: drop any state file a previous run left.
+    let _ = std::fs::remove_file(state_dir.join(persist::STATE_FILE));
 
-    let backend = load_backend("artifacts");
-    let addr = spawn("127.0.0.1:0", backend)?;
-    println!("REST API up on http://{addr}\n");
+    let opts = ApiOptions { state_dir: Some(state_dir.clone()), ..Default::default() };
+    let addr = spawn_with("127.0.0.1:0", load_backend("artifacts"), opts)?;
+    println!("REST API up on http://{addr}  (state dir: {})\n", state_dir.display());
 
-    let get = |path: &str| http_request(addr, "GET", path, "").unwrap();
-    let post = |path: &str, body: &str| http_request(addr, "POST", path, body).unwrap();
+    let get = move |path: &str| http_request(addr, "GET", path, "").unwrap();
+    let post = move |path: &str, body: &str| http_request(addr, "POST", path, body).unwrap();
 
-    // Poll an async job until it finishes, returning its result payload.
-    let wait_done = |job_id: f64| -> Json {
+    // Poll an async job until it reaches a terminal state, printing each
+    // new progress snapshot along the way; returns the final record.
+    let watch = move |job_id: f64| -> anyhow::Result<Json> {
+        let mut last_progress = String::new();
         loop {
-            let (_, body) = get(&format!("/api/jobs/{job_id}"));
-            let v = Json::parse(&body).unwrap();
-            match v.get("status").and_then(Json::as_str) {
-                Some("done") => return v.get("result").unwrap().clone(),
-                Some("failed") => panic!("job {job_id} failed: {body}"),
-                _ => std::thread::sleep(std::time::Duration::from_millis(250)),
+            let (code, body) = get(&format!("/api/jobs/{job_id}"));
+            anyhow::ensure!(code == 200, "poll {job_id}: {code} {body}");
+            let v = Json::parse(&body).map_err(|e| anyhow::anyhow!(e))?;
+            let status = v.get("status").and_then(Json::as_str).unwrap_or("?").to_string();
+            if let Some(p) = v.get("progress") {
+                let line = p.to_string();
+                if line != last_progress {
+                    println!("  job {job_id} [{status}] progress: {line}");
+                    last_progress = line;
+                }
+            }
+            match status.as_str() {
+                "done" | "failed" | "cancelled" => return Ok(v),
+                _ => std::thread::sleep(std::time::Duration::from_millis(100)),
             }
         }
     };
 
     let (_, body) = get("/api/health");
     println!("GET /api/health\n  {body}\n");
-
-    let (_, body) = get("/api/benchmarks");
-    println!("GET /api/benchmarks\n  {body}\n");
 
     println!("POST /api/run (DenseKMeans, ParallelGC, 32G heap)");
     let (_, body) = post(
@@ -57,14 +80,21 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  {body}\n");
 
+    // ---- characterize: async job with live AL-round progress ----------
     println!("POST /api/characterize (LDA, G1GC — the AL loop runs as an async job)");
     let (code, body) = post(
         "/api/characterize",
         r#"{"bench":"lda","gc":"g1","pool":200,"rounds":3}"#,
     );
     println!("  {code} {body}");
+    anyhow::ensure!(code == 202, "characterize must answer 202");
     let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
-    let result = wait_done(job);
+    let rec = watch(job)?;
+    anyhow::ensure!(
+        rec.get("status").and_then(Json::as_str) == Some("done"),
+        "characterize job failed: {rec}"
+    );
+    let result = rec.get("result").unwrap().clone();
     println!("  job {job} done: {result}\n");
     let id = result.get("dataset_id").unwrap().as_f64().unwrap();
 
@@ -84,11 +114,93 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  {code} {body}");
     let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
-    let v = wait_done(job);
+    let rec = watch(job)?;
+    anyhow::ensure!(rec.get("status").and_then(Json::as_str) == Some("done"));
+    let v = rec.get("result").unwrap();
     println!(
-        "  improvement {}x, tuning time {} s",
+        "  improvement {}x, tuning time {} s\n",
         v.get("improvement").unwrap(),
         v.get("tuning_time_s").unwrap()
     );
+
+    // ---- cancellation: abort a long tune mid-flight -------------------
+    println!("POST /api/tune (BO, 500 iterations — then DELETE it mid-run)");
+    let (code, body) = post(
+        "/api/tune",
+        r#"{"bench":"densekmeans","gc":"parallel","algo":"bo","iters":500}"#,
+    );
+    anyhow::ensure!(code == 202, "tune must answer 202: {body}");
+    let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    // Wait until the loop reports progress, so the cancel lands mid-run.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    loop {
+        let (_, body) = get(&format!("/api/jobs/{job}"));
+        let v = Json::parse(&body).unwrap();
+        let iter = v
+            .get("progress")
+            .and_then(|p| p.get("iteration"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if iter >= 1.0 {
+            println!("  job {job} running at iteration {iter}; cancelling");
+            break;
+        }
+        anyhow::ensure!(std::time::Instant::now() < deadline, "tune never reported progress");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let (code, body) = http_request(addr, "DELETE", &format!("/api/jobs/{job}"), "").unwrap();
+    println!("  DELETE /api/jobs/{job} -> {code} {body}");
+    anyhow::ensure!(code == 202, "cancel must answer 202");
+    let rec = watch(job)?;
+    anyhow::ensure!(
+        rec.get("status").and_then(Json::as_str) == Some("cancelled"),
+        "cancelled tune must land in 'cancelled': {rec}"
+    );
+    anyhow::ensure!(
+        rec.get("result").is_some(),
+        "cancelled tune must carry its best-so-far partial result"
+    );
+    println!("  job {job} cancelled with best-so-far partial result\n");
+
+    // ---- restart: a second backend on the same state dir --------------
+    println!("restarting the backend on the same --state-dir ...");
+    // The terminal hook persists *after* the record turns visible over
+    // HTTP, so wait until the cancelled record actually reached the state
+    // file — the file merely existing only proves the earlier dataset
+    // store ran.
+    let state_file = state_dir.join(persist::STATE_FILE);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let has_cancelled = std::fs::read_to_string(&state_file)
+            .ok()
+            .is_some_and(|s| s.contains("\"status\":\"cancelled\""));
+        if has_cancelled {
+            break;
+        }
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "cancelled job never reached the state file"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let opts = ApiOptions { state_dir: Some(state_dir.clone()), ..Default::default() };
+    let addr2 = spawn_with("127.0.0.1:0", load_backend("artifacts"), opts)?;
+    println!("  second instance on http://{addr2}");
+
+    let (_, body) = http_request(addr2, "GET", "/api/datasets", "").unwrap();
+    anyhow::ensure!(
+        body.contains(&format!("\"dataset_id\":{id}")),
+        "dataset {id} did not survive the restart: {body}"
+    );
+    println!("  GET /api/datasets\n    {body}");
+    let (code, body) = http_request(addr2, "GET", &format!("/api/jobs/{job}"), "").unwrap();
+    anyhow::ensure!(code == 200, "terminal job records did not survive the restart");
+    anyhow::ensure!(body.contains("\"status\":\"cancelled\""), "restored job lost its state: {body}");
+    println!("  GET /api/jobs/{job}\n    {body}");
+    // The restored dataset is live, not just listed: select works on it.
+    let (code, _) =
+        http_request(addr2, "POST", "/api/select", &format!(r#"{{"dataset_id":{id}}}"#)).unwrap();
+    anyhow::ensure!(code == 200, "select on a restored dataset failed");
+    println!("\njob lifecycle demo complete: progress, cancellation, and restart persistence OK");
     Ok(())
 }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::exec::{self, ExecPool};
+use crate::exec::{self, ExecPool, JobControl};
 use crate::flags::{FeatureEncoder, FlagConfig, GcMode};
 use crate::runtime::{MlBackend, N_TRAIN, Z_ENS};
 use crate::sparksim::{RunMetrics, SparkRunner};
@@ -269,6 +269,25 @@ pub fn characterize_on(
     cfg: &DataGenConfig,
     backend: &Arc<dyn MlBackend>,
 ) -> Result<CharacterizeResult> {
+    characterize_ctl(epool, runner, mode, metric, strategy, cfg, backend, &JobControl::default())
+}
+
+/// `characterize_on` under a [`JobControl`]: after the seed/test fit and
+/// after every AL round the loop publishes progress (completed `round`,
+/// `runs_executed`, `last_rmse`) and polls for cooperative cancellation at
+/// round boundaries.  A cancelled characterization is not an error — it
+/// returns the partial dataset labelled so far.
+#[allow(clippy::too_many_arguments)]
+pub fn characterize_ctl(
+    epool: &ExecPool,
+    runner: &SparkRunner,
+    mode: GcMode,
+    metric: Metric,
+    strategy: Strategy,
+    cfg: &DataGenConfig,
+    backend: &Arc<dyn MlBackend>,
+    ctl: &JobControl,
+) -> Result<CharacterizeResult> {
     let enc = FeatureEncoder::new(mode);
     let mut rng = Pcg::new(cfg.seed);
     // One default-config run fixes the adaptive label cap (5x default).
@@ -349,9 +368,19 @@ pub fn characterize_on(
 
     let (_, _, rmse0) = fit_and_rmse(&feat_std_rows, &y, backend)?;
     let mut rmse_history = vec![rmse0];
+    ctl.update(|p| {
+        p.round = Some(0);
+        p.max_rounds = Some(cfg.max_rounds);
+        p.runs_executed = Some(labeller.count);
+        p.last_rmse = Some(rmse0);
+    });
 
     let mut rounds = 0;
     for round in 0..cfg.max_rounds {
+        // Cancelled: keep the rounds already labelled as a partial dataset.
+        if ctl.is_cancelled() {
+            break;
+        }
         if pool.is_empty() || y.len() + cfg.batch_k > N_TRAIN {
             break;
         }
@@ -413,6 +442,11 @@ pub fn characterize_on(
         let (_, _, r) = fit_and_rmse(&feat_std_rows, &y, backend)?;
         let prev = *rmse_history.last().unwrap();
         rmse_history.push(r);
+        ctl.update(|p| {
+            p.round = Some(rounds);
+            p.runs_executed = Some(labeller.count);
+            p.last_rmse = Some(r);
+        });
         if (prev - r).abs() / prev.max(1e-9) < cfg.rmse_rel_tol {
             break;
         }
@@ -583,6 +617,35 @@ mod tests {
         )
         .unwrap();
         assert!(r.dataset.y.iter().all(|&v| v > 0.0 && v < 150.0));
+    }
+
+    #[test]
+    fn cancelled_characterization_returns_partial_dataset_and_progress() {
+        let runner = SparkRunner::paper_default(Benchmark::Lda);
+        let ctl = JobControl::default();
+        ctl.cancel();
+        let cfg = quick_cfg();
+        let r = characterize_ctl(
+            &ExecPool::serial(),
+            &runner,
+            GcMode::G1GC,
+            Metric::ExecTime,
+            Strategy::Bemcm,
+            &cfg,
+            &backend(),
+            &ctl,
+        )
+        .unwrap();
+        // Cancelled before round 1: seed set only, no AL rounds.
+        assert_eq!(r.rounds, 0);
+        assert_eq!(r.dataset.len(), cfg.seed_runs);
+        assert_eq!(r.rmse_history.len(), 1);
+        // The seed fit still published its progress snapshot.
+        let p = ctl.progress();
+        assert_eq!(p.round, Some(0));
+        assert_eq!(p.max_rounds, Some(cfg.max_rounds));
+        assert!(p.last_rmse.unwrap().is_finite());
+        assert!(p.runs_executed.unwrap() >= cfg.seed_runs);
     }
 
     #[test]

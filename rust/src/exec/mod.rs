@@ -21,7 +21,7 @@
 //! are scoped per call), so nesting `par_map` inside a `par_map` worker is
 //! safe — there is no shared queue to deadlock on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -170,6 +170,72 @@ pub fn set_global_threads(threads: usize) -> bool {
     GLOBAL_POOL.set(ExecPool::new(threads)).is_ok()
 }
 
+/// Live progress counters a long-running job publishes for pollers.
+///
+/// Each producer fills only the fields that make sense for it: the AL
+/// characterization loop reports `round`/`runs_executed`/`last_rmse`, the
+/// phase-3 tuner loops report `iteration`/`best_y`.  All fields are
+/// optional so one snapshot type serves every job kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Progress {
+    /// Completed AL rounds (0 after the seed fit).
+    pub round: Option<usize>,
+    /// Round budget (`DataGenConfig::max_rounds`).
+    pub max_rounds: Option<usize>,
+    /// Completed tuning iterations.
+    pub iteration: Option<usize>,
+    /// Iteration budget for the tuning loop.
+    pub iters: Option<usize>,
+    /// Benchmark runs executed so far.
+    pub runs_executed: Option<usize>,
+    /// Validation RMSE after the most recent fit.
+    pub last_rmse: Option<f64>,
+    /// Best objective value seen so far (minimization).
+    pub best_y: Option<f64>,
+}
+
+impl Progress {
+    pub fn is_empty(&self) -> bool {
+        *self == Progress::default()
+    }
+}
+
+/// Shared control cell between a job's owner (the REST queue) and the
+/// loops doing the work: the owner reads [`Progress`] snapshots and can
+/// request cooperative cancellation; the worker publishes progress at
+/// round/iteration boundaries and polls [`JobControl::is_cancelled`] at
+/// the same boundaries, returning its best-so-far partial result when the
+/// flag is set.  A default (unattached) control is free to construct and
+/// turns both sides into no-ops, so library callers that don't care about
+/// lifecycle pay nothing.
+#[derive(Debug, Default)]
+pub struct JobControl {
+    cancelled: AtomicBool,
+    progress: Mutex<Progress>,
+}
+
+impl JobControl {
+    /// Request cooperative cancellation; the running loop notices at its
+    /// next round/iteration boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Publish a progress update (workers mutate only their own fields).
+    pub fn update(&self, f: impl FnOnce(&mut Progress)) {
+        f(&mut self.progress.lock().unwrap());
+    }
+
+    /// Snapshot the current progress.
+    pub fn progress(&self) -> Progress {
+        *self.progress.lock().unwrap()
+    }
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Detached background worker pool for fire-and-forget jobs.
@@ -298,6 +364,26 @@ mod tests {
         assert_ne!(a, c);
         // xor-style collisions (seed ^ 0 == seed) must not survive mixing
         assert_ne!(index_seed(7, 0), 7);
+    }
+
+    #[test]
+    fn job_control_flags_and_progress() {
+        let ctl = JobControl::default();
+        assert!(!ctl.is_cancelled());
+        assert!(ctl.progress().is_empty());
+        ctl.update(|p| {
+            p.iteration = Some(2);
+            p.best_y = Some(0.5);
+        });
+        let p = ctl.progress();
+        assert_eq!(p.iteration, Some(2));
+        assert_eq!(p.best_y, Some(0.5));
+        assert!(!p.is_empty());
+        // updates merge: a later writer touching other fields keeps mine
+        ctl.update(|p| p.runs_executed = Some(7));
+        assert_eq!(ctl.progress().iteration, Some(2));
+        ctl.cancel();
+        assert!(ctl.is_cancelled());
     }
 
     #[test]

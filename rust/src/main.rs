@@ -11,7 +11,7 @@
 //!   select          --data F.csv --gc G [--metric M] [--lambda L] [--grid]
 //!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
 //!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
-//!   serve           [--port 7878]
+//!   serve           [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]
 //!
 //! global options:
 //!   --threads N     execution-pool width (default: auto-detected cores;
@@ -143,7 +143,7 @@ fn print_usage() {
          \x20 select        --data data.csv --gc G [--metric M] [--lambda 0.01] [--grid]\n\
          \x20 tune          --bench B --gc G [--metric M] [--algo bo|rbo|bo-warm|sa|all] [--iters 20]\n\
          \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
-         \x20 serve         [--port 7878]\n\n\
+         \x20 serve         [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]\n\n\
          global options:\n\
          \x20 --threads N   execution-pool width (default: auto-detected cores; results never depend on it)\n"
     );
@@ -376,6 +376,15 @@ fn cmd_repro(opts: &Opts) -> Result<()> {
 fn cmd_serve(opts: &Opts) -> Result<()> {
     let port: u16 = opts.get("port").map(|s| s.parse()).transpose()?.unwrap_or(7878);
     let backend = load_backend("artifacts");
-    onestoptuner::server::serve_forever(&format!("127.0.0.1:{port}"), backend)?;
+    let mut api = onestoptuner::server::ApiOptions::default();
+    if let Some(dir) = opts.get("state-dir") {
+        api.state_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(secs) = opts.get("job-ttl-s") {
+        let secs: u64 = secs.parse().context("--job-ttl-s must be a positive integer")?;
+        anyhow::ensure!(secs >= 1, "--job-ttl-s must be >= 1");
+        api.job_ttl = std::time::Duration::from_secs(secs);
+    }
+    onestoptuner::server::serve_forever_with(&format!("127.0.0.1:{port}"), backend, api)?;
     Ok(())
 }

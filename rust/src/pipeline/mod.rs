@@ -9,7 +9,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::datagen::{self, CharacterizeResult, DataGenConfig, Strategy};
-use crate::exec::{self, ExecPool};
+use crate::exec::{self, ExecPool, JobControl};
 use crate::featsel::{self, Selection, DEFAULT_LAMBDA};
 use crate::flags::{FlagConfig, GcMode};
 use crate::runtime::MlBackend;
@@ -172,27 +172,65 @@ pub fn run_algo_on(
     backend: &Arc<dyn MlBackend>,
     default_mean: f64,
 ) -> Result<AlgoOutcome> {
+    run_algo_ctl(
+        epool,
+        algo,
+        runner,
+        space,
+        ch,
+        metric,
+        cfg,
+        backend,
+        default_mean,
+        &JobControl::default(),
+    )
+}
+
+/// `run_algo_on` under a [`JobControl`] (the REST server's async tune
+/// jobs): the tuner loop publishes per-iteration progress and honours
+/// cooperative cancellation, returning the best-so-far configuration —
+/// which is then still measured for the final summary, so a cancelled
+/// tune reports a real partial result.
+#[allow(clippy::too_many_arguments)]
+pub fn run_algo_ctl(
+    epool: &ExecPool,
+    algo: Algo,
+    runner: &SparkRunner,
+    space: &TuneSpace,
+    ch: &CharacterizeResult,
+    metric: Metric,
+    cfg: &PipelineConfig,
+    backend: &Arc<dyn MlBackend>,
+    default_mean: f64,
+    ctl: &JobControl,
+) -> Result<AlgoOutcome> {
     // Per-algo objective stream via a splitmix on the discriminant:
     // `cfg.seed ^ algo as u64` left Algo::Bo (discriminant 0) sharing the
     // pipeline's baseline-measurement stream.
     let mut objective =
         SimObjective::new_on(runner, metric, exec::index_seed(cfg.seed, algo as u64), *epool);
+    // The acquisition sweep shards on the same pool as the objective:
+    // `BoConfig::default()` captures the *global* pool at construction
+    // time, which would oversubscribe the CPU whenever the caller fans
+    // several algorithms out and hands us a serial pool.  Pool width
+    // never changes results (exec module invariant), only scheduling.
+    let bo_cfg = BoConfig { epool: *epool, ..cfg.bo.clone() };
     let mut tuner: Box<dyn Tuner> = match algo {
-        Algo::Bo => Box::new(BoTuner::new(backend.clone(), cfg.bo.clone())),
+        Algo::Bo => Box::new(BoTuner::new(backend.clone(), bo_cfg)),
         Algo::BoWarm => Box::new(BoTuner::warm_start(
             backend.clone(),
-            cfg.bo.clone(),
+            bo_cfg,
             space,
             &ch.dataset,
         )),
         Algo::Rbo => Box::new(RboTuner::new(
             backend.clone(),
-            cfg.bo.clone(),
+            bo_cfg,
             ch.dataset.clone(),
         )),
         Algo::Sa => Box::new(SaTuner::new(cfg.sa.clone())),
     };
-    let tune = tuner.tune(space, &mut objective, cfg.tune_iters)?;
+    let tune = tuner.tune_ctl(space, &mut objective, cfg.tune_iters, ctl)?;
     let tuned_summary =
         measure_on(epool, runner, &tune.best_config, metric, cfg.repeats, cfg.seed ^ 0xf17a1);
     let improvement = default_mean / tuned_summary.mean.max(1e-9);

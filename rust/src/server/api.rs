@@ -20,23 +20,65 @@
 //!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?}
 //!                          -> 202 {job_id, status, poll}
 //!   GET  /api/jobs                           all jobs, ascending id
-//!   GET  /api/jobs/:id     {job_id, kind, status, result?|error?, elapsed_s?}
+//!   GET  /api/jobs/:id     {job_id, kind, status, elapsed_s,
+//!                           progress?, result?|error?}
+//!   DELETE /api/jobs/:id   cancel a queued/running job -> 202 snapshot
+//!                          (404 unknown, 409 already terminal)
 //!   GET  /api/datasets                       characterization sessions
+//!
+//! Job lifecycle: while a job is `running`, its snapshot carries a live
+//! `progress` object (AL: `round`/`max_rounds`/`runs_executed`/
+//! `last_rmse`; tuning: `iteration`/`iters`/`best_y`) plus `elapsed_s`
+//! since submission.  `DELETE /api/jobs/:id` requests cooperative
+//! cancellation — a *running* job lands in `cancelled` at its next
+//! round/iteration boundary, still carrying its best-so-far partial
+//! `result`; a job cancelled while still *queued* never started, so its
+//! `cancelled` record has no `result`.  Terminal records (`done` | `failed` |
+//! `cancelled`) never change again and are evicted lazily after the
+//! queue's TTL.  With a state directory configured ([`ApiOptions`],
+//! `serve --state-dir`), stored datasets and terminal job records are
+//! persisted to a JSON state file on every completion and reloaded on
+//! restart.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
 
 use crate::datagen::{self, DataGenConfig, Dataset, Strategy};
+use crate::exec;
 use crate::featsel;
 use crate::flags::{FlagConfig, GcMode};
 use crate::pipeline::{self, Algo, PipelineConfig};
 use crate::runtime::MlBackend;
 use crate::server::http::{Request, Response};
-use crate::server::jobs::JobQueue;
+use crate::server::jobs::{self, CancelOutcome, JobQueue};
+use crate::server::persist;
 use crate::sparksim::SparkRunner;
 use crate::tuner::TuneSpace;
 use crate::util::json::Json;
 use crate::{Benchmark, Metric};
+
+/// Server construction options.
+#[derive(Clone, Debug)]
+pub struct ApiOptions {
+    /// Background job-queue workers.  Two by default, not one per core:
+    /// each job already saturates the cores through the global exec pool,
+    /// so a wide queue would only oversubscribe the CPU; two give
+    /// pipeline overlap with fair FIFO ordering.
+    pub workers: usize,
+    /// Lifetime of terminal job records before lazy eviction.
+    pub job_ttl: Duration,
+    /// Directory for the restart-persistence state file; `None` keeps
+    /// everything in memory (tests, throwaway servers).
+    pub state_dir: Option<PathBuf>,
+}
+
+impl Default for ApiOptions {
+    fn default() -> Self {
+        ApiOptions { workers: 2, job_ttl: jobs::DEFAULT_TTL, state_dir: None }
+    }
+}
 
 /// Shared server state: the ML backend, characterization sessions, and
 /// the async job queue.
@@ -45,8 +87,15 @@ pub struct ApiState {
     pub datasets: Mutex<HashMap<u64, StoredDataset>>,
     pub jobs: Arc<JobQueue>,
     next_id: Mutex<u64>,
+    state_dir: Option<PathBuf>,
+    /// Serializes state-file writes: `persist` is reached both from the
+    /// queue's terminal hook and directly from `store` on (multiple)
+    /// worker threads, and concurrent writers would race on the shared
+    /// temp file, tearing the state they are trying to save.
+    persist_lock: Mutex<()>,
 }
 
+#[derive(Clone)]
 pub struct StoredDataset {
     pub bench: Benchmark,
     pub dataset: Dataset,
@@ -55,30 +104,80 @@ pub struct StoredDataset {
 
 impl ApiState {
     pub fn new(backend: Arc<dyn MlBackend>) -> Arc<ApiState> {
-        // Two job workers, not one per core: each job already saturates
-        // the cores through the global exec pool, so a wide queue would
-        // only oversubscribe the CPU and slow every job down.  Two give
-        // pipeline overlap (one job's serial tail alongside another's
-        // parallel phase) with fair FIFO ordering.
-        Self::with_workers(backend, 2)
+        Self::with_options(backend, ApiOptions::default())
     }
 
     /// Explicit worker count for the background job queue.
     pub fn with_workers(backend: Arc<dyn MlBackend>, workers: usize) -> Arc<ApiState> {
-        Arc::new(ApiState {
+        Self::with_options(backend, ApiOptions { workers, ..Default::default() })
+    }
+
+    /// Full construction: reloads persisted datasets + terminal job
+    /// records when `opts.state_dir` holds a state file, and hooks
+    /// persistence onto every subsequent completion.
+    pub fn with_options(backend: Arc<dyn MlBackend>, opts: ApiOptions) -> Arc<ApiState> {
+        let jobs = JobQueue::with_ttl(opts.workers, opts.job_ttl);
+        let mut datasets = HashMap::new();
+        let mut next_id = 1u64;
+        if let Some(dir) = &opts.state_dir {
+            if let Some(saved) = persist::load(dir) {
+                next_id = saved.next_dataset_id;
+                for (id, d) in saved.datasets {
+                    datasets.insert(id, d);
+                }
+                jobs.restore(saved.jobs);
+            }
+        }
+        let state = Arc::new(ApiState {
             backend,
-            datasets: Mutex::new(HashMap::new()),
-            jobs: JobQueue::new(workers),
-            next_id: Mutex::new(1),
-        })
+            datasets: Mutex::new(datasets),
+            jobs,
+            next_id: Mutex::new(next_id),
+            state_dir: opts.state_dir,
+            persist_lock: Mutex::new(()),
+        });
+        if state.state_dir.is_some() {
+            // Weak: the queue outlives request handlers but must not keep
+            // the state alive in a cycle (state -> jobs -> hook -> state).
+            let weak: Weak<ApiState> = Arc::downgrade(&state);
+            state.jobs.set_on_terminal(move || {
+                if let Some(s) = weak.upgrade() {
+                    s.persist();
+                }
+            });
+        }
+        state
     }
 
     fn store(&self, d: StoredDataset) -> u64 {
-        let mut id = self.next_id.lock().unwrap();
-        let this = *id;
-        *id += 1;
+        let this = {
+            let mut id = self.next_id.lock().unwrap();
+            let this = *id;
+            *id += 1;
+            this
+        };
         self.datasets.lock().unwrap().insert(this, d);
+        // No persist here: store is only reached from inside a job whose
+        // terminal transition fires the persist hook moments later, and
+        // writing the full state twice per characterize gains nothing.
         this
+    }
+
+    /// Write datasets + terminal job records to the state file (no-op
+    /// without a state dir).  The data locks are taken one at a time,
+    /// never nested, so this is safe to call from the queue's terminal
+    /// hook; `persist_lock` is held across the snapshot + write so
+    /// concurrent completions serialize instead of tearing the temp file.
+    fn persist(&self) {
+        let Some(dir) = &self.state_dir else { return };
+        let _write_guard = self.persist_lock.lock().unwrap();
+        let next_dataset_id = *self.next_id.lock().unwrap();
+        let datasets = persist::dataset_snapshot(&self.datasets.lock().unwrap());
+        let jobs = self.jobs.terminal_snapshot();
+        let state = persist::PersistedState { next_dataset_id, datasets, jobs };
+        if let Err(e) = persist::save(dir, &state) {
+            eprintln!("warning: failed to persist server state to {}: {e}", dir.display());
+        }
     }
 }
 
@@ -94,6 +193,7 @@ pub fn handle(state: &Arc<ApiState>, req: &Request) -> Response {
         ("POST", "/api/tune") => tune(state, req),
         ("GET", "/api/jobs") => Ok((200, state.jobs.list())),
         ("GET", path) if path.starts_with("/api/jobs/") => job_status(state, path),
+        ("DELETE", path) if path.starts_with("/api/jobs/") => cancel_job(state, path),
         ("GET", "/api/datasets") => Ok((200, datasets(state))),
         _ => Err((404, "no such endpoint".to_string())),
     };
@@ -131,8 +231,17 @@ fn parse_gc(v: Option<&Json>) -> Result<GcMode, (u16, String)> {
         .ok_or_else(|| bad("missing/unknown 'gc' (g1 | parallel)"))
 }
 
-fn parse_metric(v: Option<&Json>) -> Metric {
-    v.and_then(Json::as_str).and_then(Metric::parse).unwrap_or(Metric::ExecTime)
+/// Absent means the default objective; *present but unparseable* is a
+/// client error — silently tuning `exec_time` because the caller typo'd
+/// `"exectime "` would optimize the wrong objective with no signal.
+fn parse_metric(v: Option<&Json>) -> Result<Metric, (u16, String)> {
+    match v {
+        None => Ok(Metric::ExecTime),
+        Some(j) => j
+            .as_str()
+            .and_then(Metric::parse)
+            .ok_or_else(|| bad("unknown 'metric' (exec_time | heap_usage)")),
+    }
 }
 
 /// The `202 Accepted` submission payload.
@@ -147,14 +256,37 @@ fn accepted(id: u64) -> (u16, Json) {
     )
 }
 
-fn job_status(state: &Arc<ApiState>, path: &str) -> ApiResult {
-    let id: u64 = path
-        .trim_start_matches("/api/jobs/")
+fn job_id_from(path: &str) -> Result<u64, (u16, String)> {
+    path.trim_start_matches("/api/jobs/")
         .parse()
-        .map_err(|_| bad("job id must be an integer"))?;
+        .map_err(|_| bad("job id must be an integer"))
+}
+
+fn job_status(state: &Arc<ApiState>, path: &str) -> ApiResult {
+    let id = job_id_from(path)?;
     match state.jobs.get(id) {
         Some(snapshot) => Ok((200, snapshot)),
         None => Err((404, format!("no job {id}"))),
+    }
+}
+
+/// `DELETE /api/jobs/:id` — cooperative cancellation.  Answers 202 with
+/// the post-request snapshot (a queued job is already `cancelled`; a
+/// running one flips at its next checkpoint), 409 for terminal jobs.
+fn cancel_job(state: &Arc<ApiState>, path: &str) -> ApiResult {
+    let id = job_id_from(path)?;
+    match state.jobs.cancel(id) {
+        CancelOutcome::NotFound => Err((404, format!("no job {id}"))),
+        CancelOutcome::AlreadyTerminal => {
+            Err((409, format!("job {id} already reached a terminal state")))
+        }
+        CancelOutcome::Cancelled | CancelOutcome::Requested => {
+            let snapshot = state
+                .jobs
+                .get(id)
+                .unwrap_or_else(|| Json::obj(vec![("job_id", Json::num(id as f64))]));
+            Ok((202, snapshot))
+        }
     }
 }
 
@@ -248,7 +380,7 @@ fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     let body = body_json(req)?;
     let bench = parse_bench(body.get("bench"))?;
     let gc = parse_gc(body.get("gc"))?;
-    let metric = parse_metric(body.get("metric"));
+    let metric = parse_metric(body.get("metric"))?;
     let strategy = body
         .get("strategy")
         .and_then(Json::as_str)
@@ -266,10 +398,19 @@ fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     }
 
     let job_state = Arc::clone(state);
-    let id = state.jobs.submit("characterize", move || {
+    let id = state.jobs.submit_ctl("characterize", move |ctl| {
         let runner = SparkRunner::paper_default(bench);
-        let r = datagen::characterize(&runner, gc, metric, strategy, &dg, &job_state.backend)
-            .map_err(|e| format!("{e:#}"))?;
+        let r = datagen::characterize_ctl(
+            exec::global(),
+            &runner,
+            gc,
+            metric,
+            strategy,
+            &dg,
+            &job_state.backend,
+            ctl,
+        )
+        .map_err(|e| format!("{e:#}"))?;
         let id = job_state.store(StoredDataset {
             bench,
             dataset: r.dataset.clone(),
@@ -317,7 +458,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     let body = body_json(req)?;
     let bench = parse_bench(body.get("bench"))?;
     let gc = parse_gc(body.get("gc"))?;
-    let metric = parse_metric(body.get("metric"));
+    let metric = parse_metric(body.get("metric"))?;
     let algo = body
         .get("algo")
         .and_then(Json::as_str)
@@ -369,7 +510,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     };
 
     let job_state = Arc::clone(state);
-    let id = state.jobs.submit("tune", move || {
+    let id = state.jobs.submit_ctl("tune", move |ctl| {
         let runner = SparkRunner::paper_default(bench);
         let pc = PipelineConfig { tune_iters: iters, ..Default::default() };
 
@@ -386,7 +527,8 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
 
         let default_summary =
             pipeline::measure(&runner, &FlagConfig::default_for(gc), metric, 5, pc.seed);
-        let out = pipeline::run_algo(
+        let out = pipeline::run_algo_ctl(
+            exec::global(),
             algo,
             &runner,
             &space,
@@ -395,6 +537,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             &pc,
             &job_state.backend,
             default_summary.mean,
+            ctl,
         )
         .map_err(|e| format!("{e:#}"))?;
 

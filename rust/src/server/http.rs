@@ -48,6 +48,7 @@ impl Response {
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            409 => "409 Conflict",
             413 => "413 Payload Too Large",
             _ => "500 Internal Server Error",
         }
@@ -221,7 +222,8 @@ fn url_decode(s: &str) -> String {
     let mut i = 0;
     while i < bytes.len() {
         match bytes[i] {
-            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() => {
+            // A full escape needs two hex digits after the '%'.
+            b'%' if i + 2 < bytes.len() => {
                 let hex = std::str::from_utf8(&bytes[i + 1..i + 3]).unwrap_or("");
                 if let Ok(v) = u8::from_str_radix(hex, 16) {
                     out.push(v);
@@ -311,6 +313,17 @@ mod tests {
         assert_eq!(url_decode("a%20b+c"), "a b c");
         assert_eq!(url_decode("plain"), "plain");
         assert_eq!(url_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn url_decode_truncated_trailing_escape() {
+        // An escape cut off by the end of the string stays literal
+        // instead of reading out of bounds or eating the digit.
+        assert_eq!(url_decode("a%4"), "a%4");
+        assert_eq!(url_decode("a%"), "a%");
+        assert_eq!(url_decode("%"), "%");
+        // ...while a complete trailing escape still decodes.
+        assert_eq!(url_decode("a%41"), "aA");
     }
 
     /// Send raw bytes and read the full response (for malformed requests

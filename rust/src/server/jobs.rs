@@ -1,24 +1,36 @@
-//! Async job queue behind the REST API's `202 Accepted` endpoints.
+//! Async job queue behind the REST API's `202 Accepted` endpoints — the
+//! job *lifecycle* subsystem.
 //!
 //! Long-running work (`/api/characterize`, `/api/tune`) used to block the
 //! HTTP connection for its full duration — minutes of simulated cluster
 //! time per request.  Service-style tuners treat tuning as asynchronous
 //! jobs over a parallel measurement backend; this module is that queue:
 //!
-//! * [`JobQueue::submit`] records a job (`queued`), hands the work closure
-//!   to an [`exec::JobRunner`] worker, and returns the job id immediately;
-//! * workers flip the record to `running`, then `done` (with the result
-//!   payload the old blocking endpoint would have returned) or `failed`;
-//! * `GET /api/jobs/:id` polls the record; `GET /api/jobs` lists them.
+//! * [`JobQueue::submit_ctl`] records a job (`queued`), hands the work
+//!   closure (plus a fresh [`JobControl`]) to an [`exec::JobRunner`]
+//!   worker, and returns the job id immediately;
+//! * workers flip the record to `running`, then to a terminal state:
+//!   `done` (result payload), `failed` (error), or `cancelled`;
+//! * `GET /api/jobs/:id` polls the record — while `running` it carries a
+//!   live `progress` object and an `elapsed_s` since submission;
+//! * [`JobQueue::cancel`] requests cooperative cancellation: a queued job
+//!   lands in `cancelled` immediately (it never started, so no result),
+//!   a running one at its next round/iteration boundary — still carrying
+//!   its best-so-far partial result;
+//! * terminal records never change again ([`JobStatus::is_terminal`]) and
+//!   are evicted lazily once older than the queue's TTL, bounding memory
+//!   without a background reaper thread;
+//! * [`JobQueue::terminal_snapshot`] / [`JobQueue::restore`] move terminal
+//!   records across a server restart (see `server::persist`).
 //!
 //! Work closures are wrapped in `catch_unwind` so a panicking job marks
 //! itself `failed` instead of killing its worker thread.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::exec::JobRunner;
+use crate::exec::{JobControl, JobRunner, Progress};
 use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +39,7 @@ pub enum JobStatus {
     Running,
     Done,
     Failed,
+    Cancelled,
 }
 
 impl JobStatus {
@@ -36,12 +49,25 @@ impl JobStatus {
             JobStatus::Running => "running",
             JobStatus::Done => "done",
             JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
         }
     }
 
-    /// Terminal states carry a result or an error and never change again.
+    pub fn parse(s: &str) -> Option<JobStatus> {
+        match s {
+            "queued" => Some(JobStatus::Queued),
+            "running" => Some(JobStatus::Running),
+            "done" => Some(JobStatus::Done),
+            "failed" => Some(JobStatus::Failed),
+            "cancelled" => Some(JobStatus::Cancelled),
+            _ => None,
+        }
+    }
+
+    /// Terminal states carry a result or an error and never change again
+    /// (enforced by every queue mutation, tested below).
     pub fn is_terminal(self) -> bool {
-        matches!(self, JobStatus::Done | JobStatus::Failed)
+        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
     }
 }
 
@@ -49,26 +75,42 @@ impl JobStatus {
 pub struct JobRecord {
     pub id: u64,
     /// Endpoint kind, e.g. "characterize" | "tune".
-    pub kind: &'static str,
+    pub kind: String,
     pub status: JobStatus,
     pub result: Option<Json>,
     pub error: Option<String>,
     pub submitted: Instant,
     pub finished: Option<Instant>,
+    /// Elapsed seconds carried over from a previous process: restored
+    /// records have no meaningful [`Instant`]s, so `to_json` reports this
+    /// instead of a computed duration.
+    pub elapsed_restored: Option<f64>,
+    /// Progress/cancellation cell shared with the running work closure.
+    pub ctl: Arc<JobControl>,
 }
 
 impl JobRecord {
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("job_id", Json::num(self.id as f64)),
-            ("kind", Json::str(self.kind)),
+            ("kind", Json::str(self.kind.clone())),
             ("status", Json::str(self.status.name())),
         ];
-        if let Some(fin) = self.finished {
-            pairs.push((
-                "elapsed_s",
-                Json::num(fin.duration_since(self.submitted).as_secs_f64()),
-            ));
+        // Elapsed-since-submit is reported for *every* state: a polling
+        // client needs to see how long a running job has been going, not
+        // only the final duration once it finishes.
+        let elapsed = self.elapsed_restored.unwrap_or_else(|| {
+            self.finished
+                .unwrap_or_else(Instant::now)
+                .duration_since(self.submitted)
+                .as_secs_f64()
+        });
+        pairs.push(("elapsed_s", Json::num(elapsed)));
+        if self.status == JobStatus::Running {
+            let p = self.ctl.progress();
+            if !p.is_empty() {
+                pairs.push(("progress", progress_json(&p)));
+            }
         }
         if let Some(r) = &self.result {
             pairs.push(("result", r.clone()));
@@ -80,30 +122,128 @@ impl JobRecord {
     }
 }
 
+fn progress_json(p: &Progress) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if let Some(v) = p.round {
+        pairs.push(("round", Json::num(v as f64)));
+    }
+    if let Some(v) = p.max_rounds {
+        pairs.push(("max_rounds", Json::num(v as f64)));
+    }
+    if let Some(v) = p.iteration {
+        pairs.push(("iteration", Json::num(v as f64)));
+    }
+    if let Some(v) = p.iters {
+        pairs.push(("iters", Json::num(v as f64)));
+    }
+    if let Some(v) = p.runs_executed {
+        pairs.push(("runs_executed", Json::num(v as f64)));
+    }
+    if let Some(v) = p.last_rmse {
+        pairs.push(("last_rmse", Json::num(v)));
+    }
+    if let Some(v) = p.best_y {
+        pairs.push(("best_y", Json::num(v)));
+    }
+    Json::obj(pairs)
+}
+
+/// A terminal job snapshot that can cross a process restart
+/// (`server::persist` serializes these to the state file).
+#[derive(Clone, Debug)]
+pub struct PersistedJob {
+    pub id: u64,
+    pub kind: String,
+    pub status: JobStatus,
+    pub result: Option<Json>,
+    pub error: Option<String>,
+    pub elapsed_s: f64,
+}
+
+/// What [`JobQueue::cancel`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The job was still queued: it is `cancelled` (terminal) now.
+    Cancelled,
+    /// The job is running: cancellation was requested; the loop lands in
+    /// `cancelled` at its next round/iteration boundary.
+    Requested,
+    /// The job already reached a terminal state; nothing to cancel.
+    AlreadyTerminal,
+    NotFound,
+}
+
+/// Default lifetime of terminal records before lazy eviction.
+pub const DEFAULT_TTL: Duration = Duration::from_secs(3600);
+
+type TerminalHook = Box<dyn Fn() + Send + Sync>;
+
 /// The queue: job records + the detached worker pool executing them.
 pub struct JobQueue {
     runner: JobRunner,
     jobs: Mutex<HashMap<u64, JobRecord>>,
     next_id: Mutex<u64>,
+    /// Terminal records older than this are evicted on access (submit /
+    /// get / list) — no background reaper thread needed to bound memory.
+    ttl: Duration,
+    /// Called (lock-free) after a record turns terminal; the server hooks
+    /// state persistence here.
+    on_terminal: Mutex<Option<TerminalHook>>,
 }
 
 impl JobQueue {
     pub fn new(workers: usize) -> Arc<JobQueue> {
+        Self::with_ttl(workers, DEFAULT_TTL)
+    }
+
+    /// Explicit TTL for terminal-record eviction.
+    pub fn with_ttl(workers: usize, ttl: Duration) -> Arc<JobQueue> {
         Arc::new(JobQueue {
             runner: JobRunner::new(workers),
             jobs: Mutex::new(HashMap::new()),
             next_id: Mutex::new(1),
+            ttl,
+            on_terminal: Mutex::new(None),
         })
     }
 
+    /// Install the hook called after any record turns terminal.  The hook
+    /// runs on the worker (or cancelling) thread with no queue lock held,
+    /// so it may call back into the queue (e.g. [`Self::terminal_snapshot`]).
+    pub fn set_on_terminal(&self, hook: impl Fn() + Send + Sync + 'static) {
+        *self.on_terminal.lock().unwrap() = Some(Box::new(hook));
+    }
+
+    fn notify_terminal(&self) {
+        if let Some(hook) = &*self.on_terminal.lock().unwrap() {
+            hook();
+        }
+    }
+
+    /// Drop terminal records whose age (since finishing) exceeds the TTL.
+    fn evict_expired(&self) {
+        let now = Instant::now();
+        self.jobs.lock().unwrap().retain(|_, rec| {
+            let expired = rec.status.is_terminal()
+                && rec.finished.is_some_and(|f| now.duration_since(f) > self.ttl);
+            !expired
+        });
+    }
+
     /// Enqueue `work` and return its job id without waiting.  `work` runs
-    /// on a queue worker; its `Ok` payload becomes the job's `result`,
-    /// its `Err` (or a panic) the job's `error`.
-    pub fn submit(
+    /// on a queue worker with a [`JobControl`] shared with the record; its
+    /// `Ok` payload becomes the job's `result`, its `Err` (or a panic) the
+    /// job's `error`.  If cancellation was requested and the work returned
+    /// `Ok` (a cooperative loop handing back its partial payload), the
+    /// terminal state is `cancelled` with that payload as `result`; an
+    /// `Err` is always `failed`, cancel requested or not.
+    pub fn submit_ctl(
         self: &Arc<Self>,
-        kind: &'static str,
-        work: impl FnOnce() -> Result<Json, String> + Send + 'static,
+        kind: &str,
+        work: impl FnOnce(&JobControl) -> Result<Json, String> + Send + 'static,
     ) -> u64 {
+        self.evict_expired();
+        let ctl = Arc::new(JobControl::default());
         let id = {
             let mut next = self.next_id.lock().unwrap();
             let id = *next;
@@ -114,71 +254,195 @@ impl JobQueue {
             id,
             JobRecord {
                 id,
-                kind,
+                kind: kind.to_string(),
                 status: JobStatus::Queued,
                 result: None,
                 error: None,
                 submitted: Instant::now(),
                 finished: None,
+                elapsed_restored: None,
+                ctl: Arc::clone(&ctl),
             },
         );
         let queue = Arc::clone(self);
         self.runner.submit(move || {
-            queue.set_status(id, JobStatus::Running);
-            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work))
+            // Cancelled while queued: the record is already terminal; a
+            // late worker must not run the work or touch the record.
+            if ctl.is_cancelled() || !queue.set_running(id) {
+                return;
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(&ctl)))
                 .unwrap_or_else(|_| Err("job panicked".to_string()));
             queue.finish(id, outcome);
         });
         id
     }
 
-    fn set_status(&self, id: u64, status: JobStatus) {
-        if let Some(rec) = self.jobs.lock().unwrap().get_mut(&id) {
-            rec.status = status;
+    /// `submit_ctl` for work that ignores the control cell.
+    pub fn submit(
+        self: &Arc<Self>,
+        kind: &str,
+        work: impl FnOnce() -> Result<Json, String> + Send + 'static,
+    ) -> u64 {
+        self.submit_ctl(kind, move |_| work())
+    }
+
+    /// Flip `queued` -> `running`; false if the record is gone or already
+    /// terminal (terminal records are immutable).
+    fn set_running(&self, id: u64) -> bool {
+        match self.jobs.lock().unwrap().get_mut(&id) {
+            Some(rec) if rec.status == JobStatus::Queued => {
+                rec.status = JobStatus::Running;
+                true
+            }
+            _ => false,
         }
     }
 
     fn finish(&self, id: u64, outcome: Result<Json, String>) {
-        if let Some(rec) = self.jobs.lock().unwrap().get_mut(&id) {
-            rec.finished = Some(Instant::now());
-            match outcome {
-                Ok(json) => {
-                    rec.status = JobStatus::Done;
-                    rec.result = Some(json);
+        let became_terminal = {
+            let mut jobs = self.jobs.lock().unwrap();
+            match jobs.get_mut(&id) {
+                // Terminal records never change again, whatever a late
+                // worker tries to write.
+                Some(rec) if !rec.status.is_terminal() => {
+                    rec.finished = Some(Instant::now());
+                    match outcome {
+                        Ok(json) => {
+                            // Ok under a requested cancel is the cooperative
+                            // loop handing back its best-so-far payload, so
+                            // `cancelled` always implies a `result`.
+                            rec.status = if rec.ctl.is_cancelled() {
+                                JobStatus::Cancelled
+                            } else {
+                                JobStatus::Done
+                            };
+                            rec.result = Some(json);
+                        }
+                        Err(msg) => {
+                            // An error is `failed` even if a cancel was also
+                            // requested: the work died before reaching a
+                            // checkpoint and has no partial result to keep.
+                            rec.status = JobStatus::Failed;
+                            rec.error = Some(msg);
+                        }
+                    }
+                    true
                 }
-                Err(msg) => {
-                    rec.status = JobStatus::Failed;
-                    rec.error = Some(msg);
-                }
+                _ => false,
             }
+        };
+        if became_terminal {
+            self.notify_terminal();
         }
     }
 
-    /// Snapshot of one job, if it exists.
+    /// Request cancellation of a job.  Queued jobs turn terminal at once;
+    /// running jobs get the flag and land in `cancelled` (with their
+    /// best-so-far partial result) at the next cooperative checkpoint.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let (outcome, became_terminal) = {
+            let mut jobs = self.jobs.lock().unwrap();
+            match jobs.get_mut(&id) {
+                None => (CancelOutcome::NotFound, false),
+                Some(rec) if rec.status.is_terminal() => (CancelOutcome::AlreadyTerminal, false),
+                Some(rec) if rec.status == JobStatus::Queued => {
+                    rec.ctl.cancel();
+                    rec.status = JobStatus::Cancelled;
+                    rec.finished = Some(Instant::now());
+                    (CancelOutcome::Cancelled, true)
+                }
+                Some(rec) => {
+                    rec.ctl.cancel();
+                    (CancelOutcome::Requested, false)
+                }
+            }
+        };
+        if became_terminal {
+            self.notify_terminal();
+        }
+        outcome
+    }
+
+    /// Snapshot of one job, if it exists (and has not been TTL-evicted).
     pub fn get(&self, id: u64) -> Option<Json> {
+        self.evict_expired();
         self.jobs.lock().unwrap().get(&id).map(JobRecord::to_json)
     }
 
     /// Snapshot of every job, ascending by id.
     pub fn list(&self) -> Json {
+        self.evict_expired();
         let jobs = self.jobs.lock().unwrap();
         let mut ids: Vec<u64> = jobs.keys().copied().collect();
         ids.sort_unstable();
         Json::Arr(ids.iter().map(|id| jobs[id].to_json()).collect())
+    }
+
+    /// Terminal records as restart-safe snapshots, ascending by id.
+    pub fn terminal_snapshot(&self) -> Vec<PersistedJob> {
+        let jobs = self.jobs.lock().unwrap();
+        let mut out: Vec<PersistedJob> = jobs
+            .values()
+            .filter(|r| r.status.is_terminal())
+            .map(|r| PersistedJob {
+                id: r.id,
+                kind: r.kind.clone(),
+                status: r.status,
+                result: r.result.clone(),
+                error: r.error.clone(),
+                elapsed_s: r.elapsed_restored.unwrap_or_else(|| {
+                    r.finished
+                        .map_or(0.0, |f| f.duration_since(r.submitted).as_secs_f64())
+                }),
+            })
+            .collect();
+        out.sort_by_key(|j| j.id);
+        out
+    }
+
+    /// Re-insert terminal records from a previous process and advance the
+    /// id counter past them so new submissions never collide.  Their TTL
+    /// clock restarts now (the original wall-clock is not preserved).
+    pub fn restore(&self, records: Vec<PersistedJob>) {
+        let now = Instant::now();
+        let mut jobs = self.jobs.lock().unwrap();
+        let mut next = self.next_id.lock().unwrap();
+        for pj in records {
+            if !pj.status.is_terminal() {
+                continue; // a live job cannot cross a restart
+            }
+            *next = (*next).max(pj.id + 1);
+            jobs.insert(
+                pj.id,
+                JobRecord {
+                    id: pj.id,
+                    kind: pj.kind,
+                    status: pj.status,
+                    result: pj.result,
+                    error: pj.error,
+                    submitted: now,
+                    finished: Some(now),
+                    elapsed_restored: Some(pj.elapsed_s),
+                    ctl: Arc::new(JobControl::default()),
+                },
+            );
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc;
 
     fn wait_terminal(q: &Arc<JobQueue>, id: u64) -> Json {
         let deadline = Instant::now() + Duration::from_secs(10);
         loop {
             let snap = q.get(id).expect("job exists");
             let status = snap.get("status").unwrap().as_str().unwrap();
-            if status == "done" || status == "failed" {
+            if JobStatus::parse(status).unwrap().is_terminal() {
                 return snap;
             }
             assert!(Instant::now() < deadline, "job {id} never finished");
@@ -232,5 +496,219 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert!(arr[0].get("job_id").unwrap().as_f64() < arr[1].get("job_id").unwrap().as_f64());
         assert!(q.get(999).is_none());
+    }
+
+    #[test]
+    fn running_job_exposes_progress_and_elapsed() {
+        let q = JobQueue::new(1);
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = q.submit_ctl("test", move |ctl| {
+            ctl.update(|p| {
+                p.iteration = Some(3);
+                p.iters = Some(10);
+                p.best_y = Some(1.5);
+            });
+            let _ = rx.recv_timeout(Duration::from_secs(10));
+            Ok(Json::num(1.0))
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let snap = q.get(id).expect("job exists");
+            if snap.get("status").unwrap().as_str() == Some("running") {
+                if let Some(p) = snap.get("progress") {
+                    assert_eq!(p.get("iteration").unwrap().as_f64(), Some(3.0));
+                    assert_eq!(p.get("iters").unwrap().as_f64(), Some(10.0));
+                    assert_eq!(p.get("best_y").unwrap().as_f64(), Some(1.5));
+                    // A *running* job reports elapsed-since-submit too.
+                    assert!(snap.get("elapsed_s").unwrap().as_f64().unwrap() >= 0.0);
+                    break;
+                }
+            }
+            assert!(Instant::now() < deadline, "progress never surfaced");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        tx.send(()).unwrap();
+        let done = wait_terminal(&q, id);
+        assert!(done.get("progress").is_none(), "terminal snapshots drop progress");
+    }
+
+    #[test]
+    fn cancel_running_job_lands_cancelled_with_partial_result() {
+        let q = JobQueue::new(1);
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = q.submit_ctl("test", move |ctl| {
+            tx.send(()).unwrap(); // signal: running
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !ctl.is_cancelled() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(Json::obj(vec![("partial", Json::Bool(true))]))
+        });
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(q.cancel(id), CancelOutcome::Requested);
+        let snap = wait_terminal(&q, id);
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("cancelled"));
+        // The cooperative loop still handed back its best-so-far payload.
+        assert_eq!(
+            snap.get("result").unwrap().get("partial").unwrap().as_bool(),
+            Some(true)
+        );
+        // Cancelling again (or an unknown id) is refused cleanly.
+        assert_eq!(q.cancel(id), CancelOutcome::AlreadyTerminal);
+        assert_eq!(q.cancel(999), CancelOutcome::NotFound);
+    }
+
+    #[test]
+    fn error_after_cancel_request_is_failed_not_cancelled() {
+        let q = JobQueue::new(1);
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = q.submit_ctl("test", move |ctl| {
+            tx.send(()).unwrap(); // signal: running
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !ctl.is_cancelled() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // Died before reaching a checkpoint: no partial payload.
+            Err("boom mid-round".to_string())
+        });
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(q.cancel(id), CancelOutcome::Requested);
+        let snap = wait_terminal(&q, id);
+        // `cancelled` must imply a result, so an error stays `failed`.
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("failed"));
+        assert_eq!(snap.get("error").unwrap().as_str(), Some("boom mid-round"));
+        assert!(snap.get("result").is_none());
+    }
+
+    #[test]
+    fn cancelled_queued_job_is_immutable_against_late_worker_write() {
+        let q = JobQueue::new(1);
+        let (tx, rx) = mpsc::channel::<()>();
+        // The blocker occupies the only worker...
+        let blocker = q.submit("test", move || {
+            let _ = rx.recv_timeout(Duration::from_secs(10));
+            Ok(Json::num(0.0))
+        });
+        // ...so the victim sits queued when we cancel it: terminal at once.
+        let victim = q.submit("test", || Ok(Json::num(99.0)));
+        assert_eq!(q.cancel(victim), CancelOutcome::Cancelled);
+        let snap = q.get(victim).unwrap();
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("cancelled"));
+        // Release the worker; it dequeues the victim next and must not
+        // run it or touch the terminal record.
+        tx.send(()).unwrap();
+        wait_terminal(&q, blocker);
+        std::thread::sleep(Duration::from_millis(50));
+        let snap2 = q.get(victim).unwrap();
+        assert_eq!(snap2, snap, "terminal record mutated by a late worker");
+        assert!(snap2.get("result").is_none());
+    }
+
+    #[test]
+    fn concurrent_submit_and_list_are_safe() {
+        let q = JobQueue::new(4);
+        let stop = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let listed = q.list();
+                    let arr = listed.as_arr().unwrap();
+                    // ids stay strictly ascending in every snapshot
+                    for w in arr.windows(2) {
+                        assert!(
+                            w[0].get("job_id").unwrap().as_f64()
+                                < w[1].get("job_id").unwrap().as_f64()
+                        );
+                    }
+                }
+            })
+        };
+        let submitters: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        q.submit("test", || Ok(Json::num(1.0)));
+                    }
+                })
+            })
+            .collect();
+        for h in submitters {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::SeqCst);
+        reader.join().unwrap();
+        assert_eq!(q.list().as_arr().unwrap().len(), 100, "all submissions recorded");
+    }
+
+    #[test]
+    fn terminal_records_evicted_after_ttl_but_live_ones_survive() {
+        let q = JobQueue::with_ttl(1, Duration::from_millis(20));
+        let id = q.submit("test", || Ok(Json::num(1.0)));
+        wait_terminal(&q, id);
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(q.get(id).is_none(), "terminal record outlived its TTL");
+        assert!(q.list().as_arr().unwrap().is_empty());
+        // A still-running record is never evicted, however old.
+        let (tx, rx) = mpsc::channel::<()>();
+        let id2 = q.submit("test", move || {
+            let _ = rx.recv_timeout(Duration::from_secs(10));
+            Ok(Json::num(2.0))
+        });
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(q.get(id2).is_some(), "live record must survive the TTL");
+        let _ = tx.send(());
+    }
+
+    #[test]
+    fn terminal_snapshot_restore_roundtrip_and_id_continuation() {
+        let q = JobQueue::new(1);
+        let id = q.submit("tune", || Ok(Json::num(7.0)));
+        wait_terminal(&q, id);
+        let snap = q.terminal_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].id, id);
+        assert_eq!(snap[0].status, JobStatus::Done);
+
+        let q2 = JobQueue::new(1);
+        q2.restore(snap);
+        let rec = q2.get(id).unwrap();
+        assert_eq!(rec.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(rec.get("kind").unwrap().as_str(), Some("tune"));
+        assert_eq!(rec.get("result").unwrap().as_f64(), Some(7.0));
+        assert!(rec.get("elapsed_s").unwrap().as_f64().unwrap() >= 0.0);
+        // New submissions continue past the restored id.
+        let id2 = q2.submit("test", || Ok(Json::num(1.0)));
+        assert!(id2 > id, "restored ids must not be reused");
+        wait_terminal(&q2, id2);
+    }
+
+    #[test]
+    fn on_terminal_hook_fires_for_finish_and_queued_cancel() {
+        use std::sync::atomic::AtomicUsize;
+        let q = JobQueue::new(1);
+        let fired = Arc::new(AtomicUsize::new(0));
+        {
+            let fired = Arc::clone(&fired);
+            q.set_on_terminal(move || {
+                fired.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let id = q.submit("test", || Ok(Json::num(1.0)));
+        wait_terminal(&q, id);
+        assert!(fired.load(Ordering::SeqCst) >= 1);
+        let before = fired.load(Ordering::SeqCst);
+        // Block the worker, cancel a queued job: the hook fires again.
+        let (tx, rx) = mpsc::channel::<()>();
+        let _blocker = q.submit("test", move || {
+            let _ = rx.recv_timeout(Duration::from_secs(10));
+            Ok(Json::num(0.0))
+        });
+        let victim = q.submit("test", || Ok(Json::num(2.0)));
+        assert_eq!(q.cancel(victim), CancelOutcome::Cancelled);
+        assert!(fired.load(Ordering::SeqCst) > before);
+        let _ = tx.send(());
     }
 }

@@ -3,18 +3,21 @@
 //!
 //! `http` is a minimal std-net HTTP/1.1 server (the offline image has no
 //! tokio/hyper); `api` implements the endpoints over the shared pipeline;
-//! `jobs` is the async queue behind the 202-Accepted endpoints
-//! (`/api/characterize`, `/api/tune` -> poll `/api/jobs/:id`).
+//! `jobs` is the lifecycle-aware async queue behind the 202-Accepted
+//! endpoints (`/api/characterize`, `/api/tune` -> poll `/api/jobs/:id`,
+//! cancel with `DELETE /api/jobs/:id`); `persist` carries stored datasets
+//! and terminal job records across server restarts via a JSON state file.
 
 pub mod api;
 pub mod http;
 pub mod jobs;
+pub mod persist;
 
 use std::sync::Arc;
 
-pub use api::ApiState;
+pub use api::{ApiOptions, ApiState};
 pub use http::{http_request, Request, Response};
-pub use jobs::{JobQueue, JobStatus};
+pub use jobs::{CancelOutcome, JobQueue, JobStatus};
 
 /// Build the request handler for an API state.
 pub fn make_handler(state: Arc<ApiState>) -> Arc<http::Handler> {
@@ -26,7 +29,16 @@ pub fn serve_forever(
     addr: &str,
     backend: Arc<dyn crate::runtime::MlBackend>,
 ) -> std::io::Result<()> {
-    let state = ApiState::new(backend);
+    serve_forever_with(addr, backend, ApiOptions::default())
+}
+
+/// `serve_forever` with explicit [`ApiOptions`] (job TTL, state dir).
+pub fn serve_forever_with(
+    addr: &str,
+    backend: Arc<dyn crate::runtime::MlBackend>,
+    opts: ApiOptions,
+) -> std::io::Result<()> {
+    let state = ApiState::with_options(backend, opts);
     http::serve(addr, make_handler(state), |bound| {
         println!("onestoptuner REST API listening on http://{bound}");
     })
@@ -37,6 +49,15 @@ pub fn spawn(
     addr: &str,
     backend: Arc<dyn crate::runtime::MlBackend>,
 ) -> std::io::Result<std::net::SocketAddr> {
-    let state = ApiState::new(backend);
+    spawn_with(addr, backend, ApiOptions::default())
+}
+
+/// `spawn` with explicit [`ApiOptions`].
+pub fn spawn_with(
+    addr: &str,
+    backend: Arc<dyn crate::runtime::MlBackend>,
+    opts: ApiOptions,
+) -> std::io::Result<std::net::SocketAddr> {
+    let state = ApiState::with_options(backend, opts);
     http::spawn(addr, make_handler(state))
 }

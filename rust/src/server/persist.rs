@@ -1,0 +1,290 @@
+//! Restart persistence for the REST server: stored datasets and terminal
+//! job records are serialized to a JSON state file (via `util::json` — no
+//! serde in the offline image) after every completion, and reloaded when
+//! an [`super::ApiState`] is built with a state directory.
+//!
+//! Only restart-safe data crosses the file boundary: `StoredDataset`s
+//! (whose `feat_rows` are *recomputed* from the unit rows on load, exactly
+//! like `Dataset::from_table`) and terminal job snapshots
+//! ([`PersistedJob`]).  Live jobs cannot survive a process death, so they
+//! are simply dropped.  A missing or corrupt state file is treated as a
+//! fresh start, never an error — a tuning service must come up even if
+//! its scratch state was truncated mid-write (the write itself goes
+//! through a temp file + rename to make that window as small as possible).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::datagen::Dataset;
+use crate::flags::{FeatureEncoder, FlagConfig, GcMode};
+use crate::server::api::StoredDataset;
+use crate::server::jobs::{JobStatus, PersistedJob};
+use crate::util::json::Json;
+use crate::{Benchmark, Metric};
+
+/// File name inside the state directory.
+pub const STATE_FILE: &str = "onestoptuner_state.json";
+
+/// Everything the server persists across restarts.
+pub struct PersistedState {
+    pub next_dataset_id: u64,
+    pub datasets: Vec<(u64, StoredDataset)>,
+    pub jobs: Vec<PersistedJob>,
+}
+
+fn dataset_json(id: u64, d: &StoredDataset) -> Json {
+    Json::obj(vec![
+        ("dataset_id", Json::num(id as f64)),
+        ("bench", Json::str(d.bench.name())),
+        ("gc", Json::str(d.dataset.mode.name())),
+        ("metric", Json::str(d.dataset.metric.name())),
+        ("rmse_history", Json::arr_f64(&d.rmse_history)),
+        (
+            "unit_rows",
+            Json::Arr(d.dataset.unit_rows.iter().map(|r| Json::arr_f64(r)).collect()),
+        ),
+        ("y", Json::arr_f64(&d.dataset.y)),
+    ])
+}
+
+fn job_json(j: &PersistedJob) -> Json {
+    let mut pairs = vec![
+        ("job_id", Json::num(j.id as f64)),
+        ("kind", Json::str(j.kind.clone())),
+        ("status", Json::str(j.status.name())),
+        ("elapsed_s", Json::num(j.elapsed_s)),
+    ];
+    if let Some(r) = &j.result {
+        pairs.push(("result", r.clone()));
+    }
+    if let Some(e) = &j.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(pairs)
+}
+
+/// Write the state file atomically (temp file + rename) under `dir`,
+/// creating the directory if needed.
+pub fn save(dir: &Path, state: &PersistedState) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let json = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("next_dataset_id", Json::num(state.next_dataset_id as f64)),
+        (
+            "datasets",
+            Json::Arr(state.datasets.iter().map(|(id, d)| dataset_json(*id, d)).collect()),
+        ),
+        ("jobs", Json::Arr(state.jobs.iter().map(job_json).collect())),
+    ]);
+    let tmp = dir.join(format!("{STATE_FILE}.tmp"));
+    std::fs::write(&tmp, json.to_string())?;
+    std::fs::rename(&tmp, dir.join(STATE_FILE))
+}
+
+fn f64_rows(v: &Json) -> Option<Vec<Vec<f64>>> {
+    v.as_arr()?
+        .iter()
+        .map(|row| row.as_arr().map(|r| r.iter().filter_map(Json::as_f64).collect()))
+        .collect()
+}
+
+fn f64_vec(v: &Json) -> Option<Vec<f64>> {
+    Some(v.as_arr()?.iter().filter_map(Json::as_f64).collect())
+}
+
+fn load_dataset(v: &Json) -> Option<(u64, StoredDataset)> {
+    let id = v.get("dataset_id")?.as_f64()? as u64;
+    let bench = Benchmark::parse(v.get("bench")?.as_str()?)?;
+    let mode = GcMode::parse(v.get("gc")?.as_str()?)?;
+    let metric = Metric::parse(v.get("metric")?.as_str()?)?;
+    let rmse_history = f64_vec(v.get("rmse_history")?)?;
+    let unit_rows = f64_rows(v.get("unit_rows")?)?;
+    let y = f64_vec(v.get("y")?)?;
+    if unit_rows.len() != y.len() {
+        return None;
+    }
+    // feat_rows are a pure function of the unit rows — recompute instead
+    // of persisting them (same as Dataset::from_table).
+    let enc = FeatureEncoder::new(mode);
+    let feat_rows = unit_rows
+        .iter()
+        .map(|u| enc.encode(&FlagConfig::from_unit(mode, u)))
+        .collect();
+    Some((
+        id,
+        StoredDataset {
+            bench,
+            dataset: Dataset { mode, metric, unit_rows, feat_rows, y },
+            rmse_history,
+        },
+    ))
+}
+
+fn load_job(v: &Json) -> Option<PersistedJob> {
+    let status = JobStatus::parse(v.get("status")?.as_str()?)?;
+    if !status.is_terminal() {
+        return None;
+    }
+    Some(PersistedJob {
+        id: v.get("job_id")?.as_f64()? as u64,
+        kind: v.get("kind")?.as_str()?.to_string(),
+        status,
+        result: v.get("result").cloned(),
+        error: v.get("error").and_then(Json::as_str).map(str::to_string),
+        elapsed_s: v.get("elapsed_s").and_then(Json::as_f64).unwrap_or(0.0),
+    })
+}
+
+/// Load the state file under `dir`.  Missing, unreadable, or malformed
+/// state yields `None` (fresh start); individually malformed entries are
+/// skipped rather than poisoning the rest.
+pub fn load(dir: &Path) -> Option<PersistedState> {
+    let raw = std::fs::read_to_string(dir.join(STATE_FILE)).ok()?;
+    let v = Json::parse(&raw).ok()?;
+    let datasets: Vec<(u64, StoredDataset)> = v
+        .get("datasets")?
+        .as_arr()?
+        .iter()
+        .filter_map(load_dataset)
+        .collect();
+    let jobs: Vec<PersistedJob> =
+        v.get("jobs")?.as_arr()?.iter().filter_map(load_job).collect();
+    // The persisted counter wins, but never hand out an id a stored
+    // dataset already uses (e.g. a state file written by a newer build).
+    let max_ds = datasets.iter().map(|(id, _)| *id).max().unwrap_or(0);
+    let next_dataset_id = v
+        .get("next_dataset_id")
+        .and_then(Json::as_f64)
+        .map(|n| n as u64)
+        .unwrap_or(1)
+        .max(max_ds + 1);
+    Some(PersistedState { next_dataset_id, datasets, jobs })
+}
+
+/// Snapshot helper for `ApiState::persist`: clone the dataset map into a
+/// stable, id-ordered vector.  `feat_rows` are left empty — [`save`]
+/// never serializes them (they are recomputed from the unit rows on
+/// load), and they are the bulk of a dataset, so skipping them keeps the
+/// time spent under the datasets lock small.
+pub fn dataset_snapshot(map: &HashMap<u64, StoredDataset>) -> Vec<(u64, StoredDataset)> {
+    let mut out: Vec<(u64, StoredDataset)> = map
+        .iter()
+        .map(|(id, d)| {
+            (
+                *id,
+                StoredDataset {
+                    bench: d.bench,
+                    dataset: Dataset {
+                        mode: d.dataset.mode,
+                        metric: d.dataset.metric,
+                        unit_rows: d.dataset.unit_rows.clone(),
+                        feat_rows: Vec::new(),
+                        y: d.dataset.y.clone(),
+                    },
+                    rmse_history: d.rmse_history.clone(),
+                },
+            )
+        })
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ost-persist-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_dataset() -> StoredDataset {
+        let mode = GcMode::G1GC;
+        let enc = FeatureEncoder::new(mode);
+        let mut rng = crate::util::rng::Pcg::new(11);
+        let mut unit_rows = Vec::new();
+        let mut feat_rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..5 {
+            let cfg = FlagConfig::random(mode, &mut rng);
+            feat_rows.push(enc.encode(&cfg));
+            unit_rows.push(cfg.to_unit());
+            y.push(100.0 + i as f64);
+        }
+        StoredDataset {
+            bench: Benchmark::Lda,
+            dataset: Dataset { mode, metric: Metric::ExecTime, unit_rows, feat_rows, y },
+            rmse_history: vec![3.0, 2.0],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_recomputes_features() {
+        let dir = tmp_dir("roundtrip");
+        let ds = sample_dataset();
+        let jobs = vec![PersistedJob {
+            id: 4,
+            kind: "tune".into(),
+            status: JobStatus::Cancelled,
+            result: Some(Json::obj(vec![("best", Json::num(1.5))])),
+            error: None,
+            elapsed_s: 12.25,
+        }];
+        save(&dir, &PersistedState { next_dataset_id: 3, datasets: vec![(2, ds.clone())], jobs })
+            .unwrap();
+
+        let loaded = load(&dir).expect("state loads");
+        assert_eq!(loaded.next_dataset_id, 3);
+        assert_eq!(loaded.datasets.len(), 1);
+        let (id, back) = &loaded.datasets[0];
+        assert_eq!(*id, 2);
+        assert_eq!(back.dataset.len(), ds.dataset.len());
+        assert_eq!(back.dataset.mode, ds.dataset.mode);
+        assert_eq!(back.rmse_history, ds.rmse_history);
+        for (a, b) in back.dataset.y.iter().zip(&ds.dataset.y) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // feat_rows were rebuilt from the unit rows, not stored.
+        assert_eq!(back.dataset.feat_rows.len(), ds.dataset.feat_rows.len());
+        for (a, b) in back.dataset.feat_rows.iter().zip(&ds.dataset.feat_rows) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-9, "feature recompute drifted");
+            }
+        }
+        assert_eq!(loaded.jobs.len(), 1);
+        assert_eq!(loaded.jobs[0].status, JobStatus::Cancelled);
+        assert_eq!(loaded.jobs[0].elapsed_s, 12.25);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_or_corrupt_state_is_a_fresh_start() {
+        let dir = tmp_dir("corrupt");
+        assert!(load(&dir).is_none(), "missing dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load(&dir).is_none(), "missing file");
+        std::fs::write(dir.join(STATE_FILE), "{truncated").unwrap();
+        assert!(load(&dir).is_none(), "corrupt file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn next_dataset_id_never_collides_with_stored_ids() {
+        let dir = tmp_dir("nextid");
+        // A counter *behind* the stored ids (as a stale file could have).
+        save(
+            &dir,
+            &PersistedState {
+                next_dataset_id: 1,
+                datasets: vec![(7, sample_dataset())],
+                jobs: vec![],
+            },
+        )
+        .unwrap();
+        let loaded = load(&dir).unwrap();
+        assert!(loaded.next_dataset_id > 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

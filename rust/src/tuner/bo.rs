@@ -16,7 +16,7 @@ use anyhow::Result;
 use super::objective::Objective;
 use super::space::TuneSpace;
 use super::{TuneResult, Tuner};
-use crate::exec::{self, ExecPool};
+use crate::exec::{self, ExecPool, JobControl};
 use crate::runtime::{GpConfig, GpSession, MlBackend, N_TRAIN};
 use crate::util::rng::Pcg;
 use crate::util::sobol::Sobol;
@@ -174,11 +174,12 @@ impl Tuner for BoTuner {
         }
     }
 
-    fn tune(
+    fn tune_ctl(
         &mut self,
         space: &TuneSpace,
         objective: &mut dyn Objective,
         iters: usize,
+        ctl: &JobControl,
     ) -> Result<TuneResult> {
         let t0 = Instant::now();
         let mut rng = Pcg::new(self.cfg.seed);
@@ -248,7 +249,13 @@ impl Tuner for BoTuner {
         }
         drop((xs, ys));
 
-        for _ in 0..iters {
+        for it in 0..iters {
+            // Cooperative cancellation at the iteration boundary: keep
+            // everything observed so far and return the best-so-far
+            // result below.
+            if ctl.is_cancelled() {
+                break;
+            }
             // Cap the GP training set at the artifact budget: drop the
             // worst old point (kernel-cache eviction + factor rebuild).
             if gp.len() >= N_TRAIN {
@@ -266,6 +273,12 @@ impl Tuner for BoTuner {
             }
             best_history.push(best_y);
             gp.observe(&x_next, y_next)?;
+            ctl.update(|p| {
+                p.iteration = Some(it + 1);
+                p.iters = Some(iters);
+                p.runs_executed = Some(objective.evals());
+                p.best_y = Some(best_y);
+            });
         }
 
         Ok(TuneResult {
@@ -349,6 +362,43 @@ mod tests {
         // best_y consistent with history
         let min_hist = r.history.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!((r.best_y - min_hist).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pre_cancelled_tune_returns_init_best_without_iterating() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 5,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let ctl = JobControl::default();
+        ctl.cancel();
+        let r = bo.tune_ctl(&space, &mut obj, 12, &ctl).unwrap();
+        // Only the init design ran; the best-so-far partial result stands.
+        assert_eq!(r.evals, 5, "cancelled loop must not consume iterations");
+        assert_eq!(r.history.len(), 5);
+        let min_init = r.history.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((r.best_y - min_init).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tune_ctl_publishes_monotone_iteration_progress() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 4,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let ctl = JobControl::default();
+        bo.tune_ctl(&space, &mut obj, 7, &ctl).unwrap();
+        let p = ctl.progress();
+        assert_eq!(p.iteration, Some(7));
+        assert_eq!(p.iters, Some(7));
+        assert_eq!(p.runs_executed, Some(4 + 7));
+        assert!(p.best_y.unwrap().is_finite());
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub use space::TuneSpace;
 
 use anyhow::Result;
 
+use crate::exec::JobControl;
 use crate::flags::FlagConfig;
 
 /// Result of one tuning run.
@@ -57,5 +58,19 @@ pub trait Tuner {
         space: &TuneSpace,
         objective: &mut dyn Objective,
         iters: usize,
+    ) -> Result<TuneResult> {
+        self.tune_ctl(space, objective, iters, &JobControl::default())
+    }
+
+    /// [`Tuner::tune`] under a [`JobControl`]: the loop publishes progress
+    /// (`iteration`, `best_y`) and polls for cooperative cancellation at
+    /// every iteration boundary.  A cancelled run is not an error — it
+    /// returns the best-so-far partial [`TuneResult`].
+    fn tune_ctl(
+        &mut self,
+        space: &TuneSpace,
+        objective: &mut dyn Objective,
+        iters: usize,
+        ctl: &JobControl,
     ) -> Result<TuneResult>;
 }

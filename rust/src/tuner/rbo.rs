@@ -16,6 +16,7 @@ use super::objective::{Objective, PredictorObjective};
 use super::space::TuneSpace;
 use super::{TuneResult, Tuner};
 use crate::datagen::Dataset;
+use crate::exec::JobControl;
 use crate::runtime::MlBackend;
 
 pub struct RboTuner {
@@ -41,12 +42,16 @@ impl Tuner for RboTuner {
     }
 
     /// `objective` here is the *real* objective; it is consulted only once,
-    /// to validate the predictor-chosen configuration.
-    fn tune(
+    /// to validate the predictor-chosen configuration.  The inner
+    /// surrogate loop inherits `ctl`, so cancellation lands between its
+    /// (cheap) predictor iterations; the final validation runs still
+    /// execute so a cancelled RBO reports a *measured* best-so-far.
+    fn tune_ctl(
         &mut self,
         space: &TuneSpace,
         objective: &mut dyn Objective,
         iters: usize,
+        ctl: &JobControl,
     ) -> Result<TuneResult> {
         let t0 = Instant::now();
         let mut predictor = PredictorObjective::fit(&self.dataset, self.ridge, &self.backend)?;
@@ -62,7 +67,7 @@ impl Tuner for RboTuner {
                 .collect(),
         );
         let mut inner = BoTuner::new(self.backend.clone(), cfg);
-        let surrogate_result = inner.tune(space, &mut predictor, iters)?;
+        let surrogate_result = inner.tune_ctl(space, &mut predictor, iters, ctl)?;
 
         // Guard against predictor over-optimism (a linear model happily
         // extrapolates into OOM territory): validate the surrogate's pick

@@ -9,6 +9,7 @@ use anyhow::Result;
 use super::objective::Objective;
 use super::space::TuneSpace;
 use super::{TuneResult, Tuner};
+use crate::exec::JobControl;
 use crate::util::lhs::lhs;
 use crate::util::rng::Pcg;
 
@@ -55,11 +56,12 @@ impl Tuner for SaTuner {
         "sa".into()
     }
 
-    fn tune(
+    fn tune_ctl(
         &mut self,
         space: &TuneSpace,
         objective: &mut dyn Objective,
         iters: usize,
+        ctl: &JobControl,
     ) -> Result<TuneResult> {
         let t0 = Instant::now();
         let mut rng = Pcg::new(self.cfg.seed);
@@ -95,7 +97,11 @@ impl Tuner for SaTuner {
         let spread = crate::util::stats::summarize(&init_vals).std.max(best_y.abs() * 0.02).max(1e-9);
         let mut temp = self.cfg.t0;
 
-        for _ in 0..iters {
+        for it in 0..iters {
+            // Cancelled: return the best-so-far partial result.
+            if ctl.is_cancelled() {
+                break;
+            }
             // Propose a neighbour.
             let sigma = self.cfg.mut_sigma * (temp / self.cfg.t0).max(0.05);
             let mut prop = cur_x.clone();
@@ -127,6 +133,12 @@ impl Tuner for SaTuner {
             }
             best_history.push(best_y);
             temp *= self.cfg.cooling;
+            ctl.update(|p| {
+                p.iteration = Some(it + 1);
+                p.iters = Some(iters);
+                p.runs_executed = Some(objective.evals());
+                p.best_y = Some(best_y);
+            });
         }
 
         Ok(TuneResult {
@@ -194,6 +206,21 @@ mod tests {
         for w in r.best_history.windows(2) {
             assert!(w[1] <= w[0] + 1e-12);
         }
+    }
+
+    #[test]
+    fn cancellation_keeps_best_so_far() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut sa = SaTuner::new(SaConfig::default());
+        let ctl = JobControl::default();
+        ctl.cancel();
+        let r = sa.tune_ctl(&space, &mut obj, 25, &ctl).unwrap();
+        // Only the LHS init ran; best-so-far is the init minimum.
+        assert_eq!(r.evals, 5);
+        let min_init = r.history.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((r.best_y - min_init).abs() < 1e-12);
+        assert_eq!(ctl.progress().iteration, None, "no iteration completed");
     }
 
     #[test]

@@ -136,25 +136,37 @@ impl TargetScaler {
     }
 }
 
-/// Arg-min / arg-max helpers over f64 slices (NaN-hostile: NaN never wins).
+/// Arg-min / arg-max helpers over f64 slices (NaN-hostile: NaN never
+/// wins).  NaN entries are skipped outright — the old "compare against
+/// `xs[best]`" form let a NaN at index 0 win every time, because every
+/// comparison against NaN is false and `best` never moved.  The result is
+/// the first non-NaN optimum; an all-NaN (or empty) slice returns 0.
 pub fn argmin(xs: &[f64]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, x) in xs.iter().enumerate() {
-        if *x < xs[best] {
-            best = i;
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if xs[b] <= *x => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 pub fn argmax(xs: &[f64]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, x) in xs.iter().enumerate() {
-        if *x > xs[best] {
-            best = i;
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if xs[b] >= *x => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -241,5 +253,30 @@ mod tests {
         let xs = [3.0, 1.0, 2.0, 5.0];
         assert_eq!(argmin(&xs), 1);
         assert_eq!(argmax(&xs), 3);
+    }
+
+    #[test]
+    fn argminmax_skip_nan_in_first_position() {
+        // The old form let a leading NaN win unconditionally.
+        assert_eq!(argmin(&[f64::NAN, 1.0, 2.0]), 1);
+        assert_eq!(argmax(&[f64::NAN, 1.0, 2.0]), 2);
+    }
+
+    #[test]
+    fn argminmax_skip_nan_in_middle_and_last_position() {
+        assert_eq!(argmin(&[3.0, f64::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[3.0, f64::NAN, 2.0]), 0);
+        assert_eq!(argmin(&[3.0, 2.0, f64::NAN]), 1);
+        assert_eq!(argmax(&[3.0, 2.0, f64::NAN]), 0);
+    }
+
+    #[test]
+    fn argminmax_degenerate_inputs() {
+        // All-NaN falls back to index 0 rather than panicking.
+        assert_eq!(argmin(&[f64::NAN, f64::NAN]), 0);
+        assert_eq!(argmax(&[f64::NAN, f64::NAN]), 0);
+        // Ties keep the first occurrence (the old strict-compare behavior).
+        assert_eq!(argmin(&[1.0, 1.0, 2.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0);
     }
 }

@@ -6,11 +6,30 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use onestoptuner::runtime::NativeBackend;
-use onestoptuner::server::{http_request, spawn};
+use onestoptuner::server::{http_request, persist, spawn, spawn_with, ApiOptions};
 use onestoptuner::util::json::Json;
 
 fn server() -> std::net::SocketAddr {
     spawn("127.0.0.1:0", Arc::new(NativeBackend)).expect("bind")
+}
+
+/// Poll /api/jobs/:id until the job reaches any terminal state and return
+/// the full record (status + result/error).
+fn wait_terminal(addr: std::net::SocketAddr, job_id: f64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let (code, body) =
+            http_request(addr, "GET", &format!("/api/jobs/{job_id}"), "").unwrap();
+        assert_eq!(code, 200, "{body}");
+        let v = Json::parse(&body).unwrap();
+        match v.get("status").and_then(Json::as_str) {
+            Some("done") | Some("failed") | Some("cancelled") => return v,
+            _ => {
+                assert!(Instant::now() < deadline, "job {job_id} never finished");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
 }
 
 /// Poll /api/jobs/:id until the job reaches a terminal state; panics on
@@ -246,4 +265,178 @@ fn malformed_json_rejected() {
     let addr = server();
     let (code, _) = http_request(addr, "POST", "/api/run", "{not json").unwrap();
     assert_eq!(code, 400);
+}
+
+#[test]
+fn unknown_metric_is_a_400_while_absent_metric_defaults() {
+    let addr = server();
+    // A typo'd metric used to silently fall back to exec_time — the
+    // client would tune the wrong objective with no signal at all.
+    for path in ["/api/characterize", "/api/tune"] {
+        let (code, body) = http_request(
+            addr,
+            "POST",
+            path,
+            r#"{"bench": "lda", "gc": "g1", "algo": "sa", "metric": "exectime "}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 400, "{path}: {body}");
+        assert!(body.contains("metric"), "{body}");
+    }
+    // Absent metric still means the default objective: the submission is
+    // accepted as an async job (we don't wait for it).
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+}
+
+#[test]
+fn running_tune_reports_progress_and_cancels_with_partial_result() {
+    let addr = server();
+    // A long cold BO run: enough iterations that the DELETE lands mid-run.
+    let job = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "densekmeans", "gc": "parallel", "algo": "bo", "iters": 300}"#,
+    );
+
+    // Progress must surface and advance monotonically while running.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut seen: Vec<f64> = Vec::new();
+    while seen.len() < 2 {
+        let (code, body) =
+            http_request(addr, "GET", &format!("/api/jobs/{job}"), "").unwrap();
+        assert_eq!(code, 200);
+        let v = Json::parse(&body).unwrap();
+        let status = v.get("status").unwrap().as_str().unwrap().to_string();
+        assert!(
+            status == "queued" || status == "running",
+            "300-iteration tune finished before progress was observed: {body}"
+        );
+        // Non-terminal jobs report elapsed-since-submit too (the old code
+        // only emitted elapsed_s once finished).
+        assert!(v.get("elapsed_s").unwrap().as_f64().unwrap() >= 0.0, "{body}");
+        if let Some(it) = v
+            .get("progress")
+            .and_then(|p| p.get("iteration"))
+            .and_then(Json::as_f64)
+        {
+            if seen.last() != Some(&it) {
+                seen.push(it);
+            }
+        }
+        assert!(Instant::now() < deadline, "progress never advanced: {seen:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(seen.windows(2).all(|w| w[0] < w[1]), "iteration regressed: {seen:?}");
+
+    // Cancel mid-run: 202, then the job lands in `cancelled` with its
+    // best-so-far partial result.
+    let (code, body) =
+        http_request(addr, "DELETE", &format!("/api/jobs/{job}"), "").unwrap();
+    assert_eq!(code, 202, "{body}");
+    let rec = wait_terminal(addr, job);
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("cancelled"), "{rec}");
+    let result = rec.get("result").expect("cancelled tune keeps a partial result");
+    assert!(result.get("tuned_mean").unwrap().as_f64().unwrap() > 0.0);
+    assert!(result.get("best_java_args").is_some());
+
+    // A second DELETE is refused: the record is terminal and immutable.
+    let (code, _) = http_request(addr, "DELETE", &format!("/api/jobs/{job}"), "").unwrap();
+    assert_eq!(code, 409);
+}
+
+#[test]
+fn cancel_endpoint_edge_cases() {
+    let addr = server();
+    let (code, _) = http_request(addr, "DELETE", "/api/jobs/999", "").unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = http_request(addr, "DELETE", "/api/jobs/banana", "").unwrap();
+    assert_eq!(code, 400);
+    // Cancelling a finished job answers 409 Conflict.
+    let job = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1}"#,
+    );
+    wait_done(addr, job);
+    let (code, body) = http_request(addr, "DELETE", &format!("/api/jobs/{job}"), "").unwrap();
+    assert_eq!(code, 409, "{body}");
+}
+
+#[test]
+fn datasets_and_terminal_jobs_survive_a_restart() {
+    let dir = std::env::temp_dir().join(format!("ost-restart-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // First server: characterize a small dataset, then "crash".
+    let opts = ApiOptions { state_dir: Some(dir.clone()), ..Default::default() };
+    let addr = spawn_with("127.0.0.1:0", Arc::new(NativeBackend), opts).unwrap();
+    let job = submit(
+        addr,
+        "/api/characterize",
+        r#"{"bench": "lda", "gc": "g1", "pool": 100, "rounds": 1}"#,
+    );
+    let result = wait_done(addr, job);
+    let ds_id = result.get("dataset_id").unwrap().as_f64().unwrap();
+
+    // The terminal hook persists synchronously on the worker thread; give
+    // the write a moment in case our poll raced it.
+    let state_file = dir.join(persist::STATE_FILE);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let has_job = std::fs::read_to_string(&state_file)
+            .ok()
+            .is_some_and(|s| s.contains("\"job_id\""));
+        if has_job {
+            break;
+        }
+        assert!(Instant::now() < deadline, "state file never written");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Second server on the same state dir: everything is back.
+    let opts = ApiOptions { state_dir: Some(dir.clone()), ..Default::default() };
+    let addr2 = spawn_with("127.0.0.1:0", Arc::new(NativeBackend), opts).unwrap();
+
+    let (code, body) = http_request(addr2, "GET", "/api/datasets", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains(&format!("\"dataset_id\":{ds_id}")), "{body}");
+
+    let (code, body) = http_request(addr2, "GET", &format!("/api/jobs/{job}"), "").unwrap();
+    assert_eq!(code, 200, "terminal job record lost in restart");
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("done"));
+    assert_eq!(v.get("kind").unwrap().as_str(), Some("characterize"));
+    assert!(v.get("elapsed_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(v.get("result").is_some(), "restored record kept its payload");
+
+    // The restored dataset is usable, not just listed: select and a
+    // warm-started tune both run against it.
+    let (code, body) = http_request(
+        addr2,
+        "POST",
+        "/api/select",
+        &format!(r#"{{"dataset_id": {ds_id}}}"#),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+
+    // New jobs on the restarted server get ids past the restored ones.
+    let job2 = submit(
+        addr2,
+        "/api/tune",
+        &format!(
+            r#"{{"bench": "lda", "gc": "g1", "algo": "bo-warm", "dataset_id": {ds_id}, "iters": 1}}"#
+        ),
+    );
+    assert!(job2 > job, "restored job ids must not be reused (old {job}, new {job2})");
+    wait_done(addr2, job2);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
