@@ -107,10 +107,12 @@ fn main() -> anyhow::Result<()> {
         sel.get("group_size").unwrap()
     );
 
-    println!("POST /api/tune (BO warm start, 10 iterations, async)");
+    println!("POST /api/tune (BO warm start, adaptive GP hypers, 10 iterations, async)");
     let (code, body) = post(
         "/api/tune",
-        &format!(r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":10}}"#),
+        &format!(
+            r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":10,"gp_hypers":"adapt"}}"#
+        ),
     );
     println!("  {code} {body}");
     let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();

@@ -1,12 +1,26 @@
-//! Acquisition-loop benchmark: one-shot serial `gp_ei` (kernel rebuilt +
-//! O(n³) Cholesky + serial candidate scoring every iteration) vs the
-//! incremental surrogate session (cached Cholesky extended in place,
-//! candidates sharded over the exec pool in blocked solves).  Both paths
-//! replay the same observation/candidate streams and are asserted
-//! bit-identical before timing.
+//! Surrogate benchmark, three scenarios behind one JSON writer:
 //!
-//! Emits `BENCH_surrogate.json` at the repo root.  `--smoke` runs reduced
-//! sizes for CI.
+//! * `acquisition` — one-shot serial `gp_ei` (kernel rebuilt + O(n³)
+//!   Cholesky + serial candidate scoring every iteration) vs the
+//!   incremental surrogate session (cached Cholesky extended in place,
+//!   candidates sharded over the exec pool in blocked solves).  Both
+//!   paths replay the same observation/candidate streams and are
+//!   asserted bit-identical before timing.
+//! * `eviction` — an eviction-heavy loop at the N_TRAIN-style cap (one
+//!   worst-point eviction per iteration): `HyperMode::Fixed` (O(n³)
+//!   `cholesky_rebuild` per eviction) vs the O(n²) rank-1
+//!   `cholesky_downdate` path, asserted equal within 1e-8 before timing.
+//! * `adaptation` — the acquisition loop with marginal-likelihood
+//!   hyper-parameter adaptation on vs off (overhead of the ascent
+//!   rounds), reporting where the hypers moved.
+//!
+//! Emits `BENCH_surrogate.json` at the repo root; `--smoke` runs reduced
+//! sizes for CI and writes `BENCH_surrogate_smoke.json`.  Both files come
+//! from the same writer ([`write_doc`]) and therefore always share the
+//! same schema — after writing, the bench re-parses its own output and
+//! asserts every [`SCENARIO_KEYS`] entry is present, so the committed
+//! full-size file and the CI smoke file cannot drift apart silently (CI
+//! re-asserts the keys on the smoke JSON with `jq`).
 //!
 //! Run with:  cargo bench --bench surrogate [-- --smoke]
 
@@ -15,19 +29,27 @@ mod harness;
 
 use harness::{section, Bench};
 use onestoptuner::exec::{self, ExecPool};
-use onestoptuner::runtime::{one_shot_gp, GpConfig, GpSession, MlBackend, NativeBackend, N_TRAIN};
+use onestoptuner::native::gp::GpSurrogate;
+use onestoptuner::runtime::{
+    one_shot_gp, GpConfig, GpSession, HyperMode, MlBackend, NativeBackend, N_TRAIN,
+};
 use onestoptuner::util::json::Json;
 use onestoptuner::util::rng::Pcg;
+use onestoptuner::util::stats::argmax;
 
 /// Tuning-subspace dimension (lasso typically keeps 10-25 flags).
 const D: usize = 16;
+
+/// Scenario keys the output document must always carry — shared between
+/// the builder and the post-write assertion so they cannot drift.
+const SCENARIO_KEYS: [&str; 3] = ["acquisition", "eviction", "adaptation"];
 
 fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
     (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
 }
 
-/// One pre-generated acquisition loop: the initial design plus, per
-/// iteration, a candidate pool and the observation appended afterwards.
+/// One pre-generated loop: the initial design plus, per iteration, a
+/// candidate pool and the observation appended afterwards.
 struct Scenario {
     init_x: Vec<Vec<f64>>,
     init_y: Vec<f64>,
@@ -38,9 +60,8 @@ fn synth_y(x: &[f64]) -> f64 {
     (x[0] * 3.0).sin() + x[1] * x[2] - 0.5 * x[D - 1]
 }
 
-fn scenario(n_final: usize, m: usize, iters: usize, seed: u64) -> Scenario {
+fn scenario(n0: usize, m: usize, iters: usize, seed: u64) -> Scenario {
     let mut rng = Pcg::new(seed);
-    let n0 = n_final - iters;
     let init_x = rand_rows(n0, D, &mut rng);
     let init_y: Vec<f64> = init_x.iter().map(|r| synth_y(r)).collect();
     let iters = (0..iters)
@@ -54,9 +75,20 @@ fn scenario(n_final: usize, m: usize, iters: usize, seed: u64) -> Scenario {
     Scenario { init_x, init_y, iters }
 }
 
-/// Replay the whole loop on a session; returns the last iteration's EI
-/// (the cross-check payload).
-fn replay(mut gp: Box<dyn GpSession + '_>, epool: &ExecPool, sc: &Scenario) -> Vec<f64> {
+fn gp_cfg(cap: usize, hyper: HyperMode) -> GpConfig {
+    GpConfig {
+        dim: D,
+        lengthscale: 0.30 * (D as f64).sqrt(),
+        sigma_f2: 1.0,
+        sigma_n2: 0.01,
+        cap,
+        hyper,
+    }
+}
+
+/// Replay an append-only acquisition loop; returns the last iteration's
+/// EI (the cross-check payload).
+fn replay(gp: &mut dyn GpSession, epool: &ExecPool, sc: &Scenario) -> Vec<f64> {
     for (x, &y) in sc.init_x.iter().zip(&sc.init_y) {
         gp.observe(x, y).unwrap();
     }
@@ -71,44 +103,63 @@ fn replay(mut gp: Box<dyn GpSession + '_>, epool: &ExecPool, sc: &Scenario) -> V
     last_ei
 }
 
+/// Replay an eviction-heavy loop: the session starts at its cap, so every
+/// iteration evicts the worst point before observing the next one —
+/// exactly the BO loop's behaviour past N_TRAIN.
+fn replay_evict(gp: &mut dyn GpSession, epool: &ExecPool, sc: &Scenario) -> Vec<f64> {
+    for (x, &y) in sc.init_x.iter().zip(&sc.init_y) {
+        gp.observe(x, y).unwrap();
+    }
+    let mut best = sc.init_y.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut last_ei = Vec::new();
+    for (cands, next, y) in &sc.iters {
+        gp.forget(argmax(gp.ys())).unwrap();
+        let (ei, _, _) = gp.acquire(epool, cands, best).unwrap();
+        last_ei = ei;
+        gp.observe(next, *y).unwrap();
+        best = best.min(*y);
+    }
+    last_ei
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let (ns, m, iters): (&[usize], usize, usize) =
-        if smoke { (&[32, 64], 128, 4) } else { (&[64, 128, 256], 1024, 12) };
-
     let backend = NativeBackend;
     let epool = *exec::global();
     let serial = ExecPool::serial();
-    let mut rows = Vec::new();
+    let reps = if smoke { (1, 2) } else { (1, 3) };
 
+    // ---- acquisition: one-shot vs incremental session ----------------
+    let (ns, m, iters): (&[usize], usize, usize) =
+        if smoke { (&[32, 64], 128, 4) } else { (&[64, 128, 256], 1024, 12) };
+    let mut acq_rows = Vec::new();
     for &n in ns {
         assert!(n <= N_TRAIN);
-        let cfg = GpConfig {
-            dim: D,
-            lengthscale: 0.30 * (D as f64).sqrt(),
-            sigma_f2: 1.0,
-            sigma_n2: 0.01,
-            cap: N_TRAIN,
-        };
-        let sc = scenario(n, m, iters, 0x5eed ^ n as u64);
+        let cfg = gp_cfg(N_TRAIN, HyperMode::Fixed);
+        let sc = scenario(n - iters, m, iters, 0x5eed ^ n as u64);
 
         // Cross-check: both paths must agree bitwise before we time them.
-        let a = replay(one_shot_gp(&backend, &cfg), &serial, &sc);
-        let b = replay(backend.gp_open(&cfg).unwrap(), &epool, &sc);
+        let a = replay(&mut *one_shot_gp(&backend, &cfg), &serial, &sc);
+        let b = replay(&mut *backend.gp_open(&cfg).unwrap(), &epool, &sc);
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a), bits(&b), "one-shot and incremental EI diverged (n={n})");
 
         section(&format!("acquisition loop: {iters} iters ending at n={n}, m={m} candidates"));
         let one = Bench::new(format!("one_shot/{n}tr_{m}c/serial"))
-            .iters(1, if smoke { 2 } else { 3 })
-            .run(|| replay(one_shot_gp(&backend, &cfg), &serial, &sc));
+            .iters(reps.0, reps.1)
+            .run(|| replay(&mut *one_shot_gp(&backend, &cfg), &serial, &sc));
         let inc = Bench::new(format!("incremental/{n}tr_{m}c/pool{}", epool.threads()))
-            .iters(1, if smoke { 2 } else { 3 })
-            .run(|| replay(backend.gp_open(&cfg).unwrap(), &epool, &sc));
+            .iters(reps.0, reps.1)
+            .run(|| replay(&mut *backend.gp_open(&cfg).unwrap(), &epool, &sc));
         let speedup = one.mean_ns / inc.mean_ns;
         println!("  speedup: {speedup:.2}x");
 
-        rows.push(Json::obj(vec![
+        acq_rows.push(Json::obj(vec![
             ("n", Json::num(n as f64)),
             ("m", Json::num(m as f64)),
             ("iters", Json::num(iters as f64)),
@@ -118,11 +169,105 @@ fn main() {
         ]));
     }
 
+    // ---- eviction-heavy: rebuild-per-eviction vs rank-1 downdate ------
+    // Small candidate pools keep the factor maintenance (the thing under
+    // test) dominant over acquisition scoring.
+    let (ev_ns, ev_m, ev_iters): (&[usize], usize, usize) =
+        if smoke { (&[32, 48], 32, 6) } else { (&[128, 256], 32, 16) };
+    let mut ev_rows = Vec::new();
+    for &n in ev_ns {
+        let fixed_cfg = gp_cfg(n, HyperMode::Fixed);
+        // Adaptation disabled (`every` unreachable): isolates the
+        // downdate eviction path.
+        let down_cfg = gp_cfg(n, HyperMode::Adapt { every: usize::MAX });
+        let sc = scenario(n, ev_m, ev_iters, 0xe71c ^ n as u64);
+
+        let a = replay_evict(&mut *backend.gp_open(&fixed_cfg).unwrap(), &epool, &sc);
+        let b = replay_evict(&mut GpSurrogate::new(&down_cfg), &epool, &sc);
+        let diff = max_abs_diff(&a, &b);
+        assert!(diff <= 1e-8, "downdate diverged from rebuild: max |Δei| = {diff:e} (n={n})");
+
+        section(&format!(
+            "eviction-heavy loop: {ev_iters} evictions at cap n={n}, m={ev_m} candidates"
+        ));
+        let rebuild = Bench::new(format!("evict_rebuild/{n}tr_{ev_m}c"))
+            .iters(reps.0, reps.1)
+            .run(|| replay_evict(&mut *backend.gp_open(&fixed_cfg).unwrap(), &epool, &sc));
+        let downdate = Bench::new(format!("evict_downdate/{n}tr_{ev_m}c"))
+            .iters(reps.0, reps.1)
+            .run(|| replay_evict(&mut GpSurrogate::new(&down_cfg), &epool, &sc));
+        let speedup = rebuild.mean_ns / downdate.mean_ns;
+        println!("  speedup: {speedup:.2}x  (max |Δei| = {diff:.2e})");
+
+        ev_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("m", Json::num(ev_m as f64)),
+            ("iters", Json::num(ev_iters as f64)),
+            ("rebuild_ms", Json::num(rebuild.mean_ns / 1e6)),
+            ("downdate_ms", Json::num(downdate.mean_ns / 1e6)),
+            ("speedup", Json::num(speedup)),
+            ("max_abs_ei_diff", Json::num(diff)),
+        ]));
+    }
+
+    // ---- adaptation on/off: overhead of the ascent rounds -------------
+    let (ad_n, ad_m, ad_iters) = if smoke { (48, 64, 6) } else { (128, 256, 12) };
+    let mut ad_rows = Vec::new();
+    {
+        let fixed_cfg = gp_cfg(N_TRAIN, HyperMode::Fixed);
+        let adapt_cfg = gp_cfg(N_TRAIN, HyperMode::Adapt { every: 4 });
+        let sc = scenario(ad_n - ad_iters, ad_m, ad_iters, 0xada7 ^ ad_n as u64);
+
+        section(&format!(
+            "adaptation on/off: {ad_iters} iters ending at n={ad_n}, m={ad_m} candidates"
+        ));
+        let fixed = Bench::new(format!("hypers_fixed/{ad_n}tr_{ad_m}c"))
+            .iters(reps.0, reps.1)
+            .run(|| replay(&mut *backend.gp_open(&fixed_cfg).unwrap(), &epool, &sc));
+        let mut final_hypers = (adapt_cfg.lengthscale, adapt_cfg.sigma_n2);
+        let adapt = Bench::new(format!("hypers_adapt/{ad_n}tr_{ad_m}c")).iters(reps.0, reps.1).run(
+            || {
+                let mut gp = GpSurrogate::new(&adapt_cfg);
+                let ei = replay(&mut gp, &epool, &sc);
+                final_hypers = gp.hypers();
+                ei
+            },
+        );
+        let overhead = adapt.mean_ns / fixed.mean_ns;
+        println!(
+            "  overhead: {overhead:.2}x  (lengthscale {:.3} -> {:.3}, noise {:.4} -> {:.4})",
+            adapt_cfg.lengthscale, final_hypers.0, adapt_cfg.sigma_n2, final_hypers.1
+        );
+
+        ad_rows.push(Json::obj(vec![
+            ("n", Json::num(ad_n as f64)),
+            ("m", Json::num(ad_m as f64)),
+            ("iters", Json::num(ad_iters as f64)),
+            ("adapt_every", Json::num(4.0)),
+            ("fixed_ms", Json::num(fixed.mean_ns / 1e6)),
+            ("adapt_ms", Json::num(adapt.mean_ns / 1e6)),
+            ("overhead", Json::num(overhead)),
+            ("adapted_lengthscale", Json::num(final_hypers.0)),
+            ("adapted_noise", Json::num(final_hypers.1)),
+        ]));
+    }
+
+    let path = write_doc(smoke, epool.threads(), [acq_rows, ev_rows, ad_rows]);
+    println!("\nwrote {path}");
+}
+
+/// The single writer both output files go through: the scenario keys come
+/// from [`SCENARIO_KEYS`], and the written file is parsed back and
+/// re-checked against the same constant, so the full-size and smoke
+/// documents cannot diverge in shape.
+fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 3]) -> &'static str {
+    let scenarios: Vec<(&str, Json)> =
+        SCENARIO_KEYS.iter().zip(rows).map(|(&k, r)| (k, Json::Arr(r))).collect();
     let doc = Json::obj(vec![
-        ("bench", Json::str("surrogate_acquisition")),
-        ("threads", Json::num(epool.threads() as f64)),
+        ("bench", Json::str("surrogate")),
+        ("threads", Json::num(threads as f64)),
         ("smoke", Json::Bool(smoke)),
-        ("results", Json::Arr(rows)),
+        ("scenarios", Json::obj(scenarios)),
     ]);
     // Smoke runs (reduced sizes) go to a sibling file so they never
     // clobber full-size acceptance numbers at the repo root.
@@ -132,5 +277,11 @@ fn main() {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_surrogate.json")
     };
     std::fs::write(path, format!("{doc}\n")).expect("write surrogate bench json");
-    println!("\nwrote {path}");
+    let back = Json::parse(&std::fs::read_to_string(path).expect("re-read bench json"))
+        .expect("bench json must parse back");
+    let sc = back.get("scenarios").expect("bench json must carry 'scenarios'");
+    for key in SCENARIO_KEYS {
+        assert!(sc.get(key).is_some(), "bench json lost scenario key '{key}'");
+    }
+    path
 }

@@ -10,6 +10,7 @@
 //!   characterize    --bench B --gc G [--metric M] [--strategy S] [--out F.csv]
 //!   select          --data F.csv --gc G [--metric M] [--lambda L] [--grid]
 //!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
+//!                   [--gp-hypers fixed|adapt] [--gp-adapt-every K]
 //!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
 //!   serve           [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]
 //!
@@ -142,6 +143,7 @@ fn print_usage() {
          \x20 characterize  --bench B --gc G [--metric M] [--strategy bemcm|qbc|random] [--out data.csv]\n\
          \x20 select        --data data.csv --gc G [--metric M] [--lambda 0.01] [--grid]\n\
          \x20 tune          --bench B --gc G [--metric M] [--algo bo|rbo|bo-warm|sa|all] [--iters 20]\n\
+         \x20               [--gp-hypers fixed|adapt] [--gp-adapt-every K]   GP surrogate hyper-parameter policy\n\
          \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
          \x20 serve         [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]\n\n\
          global options:\n\
@@ -310,6 +312,24 @@ fn cmd_tune(opts: &Opts) -> Result<()> {
     let backend = load_backend("artifacts");
     let mut cfg = PipelineConfig { tune_iters: iters, ..Default::default() };
     cfg.datagen = datagen_config(opts);
+    // GP surrogate hyper-parameter policy: fixed (bit-reproducible,
+    // default) or adaptive (marginal-likelihood ascent + O(n²) downdate
+    // evictions in the native session).
+    if let Some(s) = opts.get("gp-hypers") {
+        cfg.bo.hypers.mode =
+            onestoptuner::runtime::HyperMode::parse(s).context("--gp-hypers fixed|adapt")?;
+    }
+    if let Some(v) = opts.get("gp-adapt-every") {
+        let every: usize = v.parse().context("--gp-adapt-every must be a positive integer")?;
+        anyhow::ensure!(every >= 1, "--gp-adapt-every must be >= 1");
+        // A cadence never implies adaptation: the fixed default stays
+        // bit-reproducible unless --gp-hypers adapt asks otherwise.
+        anyhow::ensure!(
+            matches!(cfg.bo.hypers.mode, onestoptuner::runtime::HyperMode::Adapt { .. }),
+            "--gp-adapt-every requires --gp-hypers adapt"
+        );
+        cfg.bo.hypers.mode = onestoptuner::runtime::HyperMode::Adapt { every };
+    }
 
     let out = pipeline::run_pipeline(bench, gc, metric, &algos, &cfg, &backend)?;
     println!(

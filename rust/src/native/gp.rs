@@ -8,11 +8,30 @@
 //! * **Kernel cache** (`PackedLower`): appending an observation computes
 //!   one kernel row in O(nd); evicting one splices a row/column out in
 //!   O(n²).  Entries are pure functions of the point pair, so cached and
-//!   freshly-built kernels are the same f64s.
+//!   freshly-built kernels are the same f64s.  A parallel
+//!   squared-distance cache (hyper-parameter independent) lets the whole
+//!   kernel be re-materialized for *new* hyper-parameters in O(n²)
+//!   instead of O(n²d).
 //! * **Cached Cholesky** (`cholesky_push`): row-wise Cholesky only reads
 //!   *prior* rows, so extending the factor by the new kernel row in O(n²)
-//!   is bit-identical to refactoring from scratch.  Only an eviction
-//!   breaks the prefix property and triggers the O(n³) `cholesky_rebuild`.
+//!   is bit-identical to refactoring from scratch.  Eviction depends on
+//!   the session's [`HyperMode`]: `Fixed` refactors the cached kernel
+//!   from scratch (O(n³), keeps the bitwise contract below); `Adapt`
+//!   runs the O(n²) Givens `cholesky_downdate`, whose factor matches a
+//!   refactor only to rotation round-off.
+//! * **Hyper-parameter adaptation** (`Adapt` only): every `every`
+//!   appends on an actively-driven session (acquires interleaving the
+//!   appends), amortized to one round per ~25% training-set growth
+//!   during a bulk feed (warm start — nothing reads the intermediate
+//!   hypers, so O(log n) rounds suffice), the session takes up to
+//!   [`MAX_ADAPT_STEPS`] backtracking
+//!   ascent steps on the log marginal likelihood over
+//!   (log length-scale, log noise), with the analytic gradient
+//!   `∂L/∂θ = ½ tr((ααᵀ − K⁻¹) ∂K/∂θ)` computed from the cached factor.
+//!   A step is accepted only if the marginal likelihood increases (the
+//!   trace is monotone by construction — `tests/gp_downdate.rs`), and the
+//!   session's kernel + factor are swapped once, at the end, only when
+//!   the hyper-parameters actually moved.
 //! * **Sharded acquisition**: candidates are scored in fixed
 //!   [`EI_BLOCK`]-wide blocks fanned out on an [`ExecPool`], results in
 //!   index order.  Within a block the forward solves are interleaved —
@@ -24,18 +43,30 @@
 //!   width — the same guarantee the exec subsystem gives the evaluation
 //!   paths (guarded by `tests/gp_incremental.rs`).
 //!
-//! `cargo bench --bench surrogate` times the two paths head-to-head
-//! (n∈{64,128,256} train, m=1024 candidates) and writes the measured
-//! speedups to `BENCH_surrogate.json` at the repo root; the design target
-//! at n=256 is ≥5x from the incremental factor + sharding + blocked
-//! solves.
+//! **Equality contract** (the Fixed-vs-Adapt line the tests pin):
+//! `HyperMode::Fixed` is bitwise-equal to the one-shot `gp_ei` reference
+//! at every pool width, including across evictions
+//! (`tests/gp_incremental.rs`).  `HyperMode::Adapt` keeps the same
+//! per-candidate scoring arithmetic but evicts via downdate — predictions
+//! after any eviction sequence match the rebuild path within 1e-8
+//! (`tests/gp_downdate.rs`) — and, once adaptation fires, intentionally
+//! diverges from the fixed-hyper reference (a better-fitting model, not a
+//! numerical error).
+//!
+//! `cargo bench --bench surrogate` times three scenarios — one-shot vs
+//! incremental acquisition (n∈{64,128,256}, m=1024; design target ≥5x at
+//! n=256), eviction-heavy downdate vs rebuild-per-eviction at the cap
+//! (downdate designed to win at n=256), and adaptation on/off overhead —
+//! and writes them to `BENCH_surrogate.json` at the repo root.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
-use super::linalg::{cholesky_push, cholesky_rebuild, Mat, PackedLower};
+use super::linalg::{cholesky_downdate, cholesky_push, cholesky_rebuild, Mat, PackedLower};
 use super::ops::expected_improvement;
 use crate::exec::ExecPool;
-use crate::runtime::{GpConfig, GpSession};
+use crate::runtime::{GpConfig, GpSession, HyperMode};
 use crate::util::stats::TargetScaler;
 
 /// Candidates per pool task.  One block shares each streamed factor row
@@ -45,12 +76,56 @@ use crate::util::stats::TargetScaler;
 /// into results.
 const EI_BLOCK: usize = 16;
 
+/// Adaptation starts once the training set can support a likelihood
+/// gradient that is more signal than noise.
+const MIN_ADAPT_OBS: usize = 8;
+/// Accepted ascent steps per adaptation round ("a few bounded steps").
+pub const MAX_ADAPT_STEPS: usize = 4;
+/// Backtracking halvings per step before the round gives up.
+const ADAPT_BACKTRACKS: usize = 6;
+/// Initial step along the normalized gradient, in log-hyper space: each
+/// accepted step moves the hypers by at most `e^0.5 ≈ 1.65x`.
+const ADAPT_STEP0: f64 = 0.5;
+/// Length-scale box (unit-cube inputs: anything outside is degenerate).
+const LS_BOUNDS: (f64, f64) = (1e-2, 1e2);
+/// Noise-variance box (targets are standardized before fitting).
+const NOISE_BOUNDS: (f64, f64) = (1e-8, 1.0);
+
+/// Squared euclidean distance — the exact summation order `ops::rbf` and
+/// the old inline `kval` used, so kernels built from cached distances
+/// stay bitwise-equal to fresh builds.
+#[inline]
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// What one adaptation round did — returned by [`GpSurrogate::adapt`] so
+/// the differential tests can assert monotonicity directly.
+#[derive(Clone, Debug)]
+pub struct AdaptOutcome {
+    /// Marginal-likelihood trace: the starting value, then one entry per
+    /// *accepted* ascent step.  Non-decreasing by construction.
+    pub ml: Vec<f64>,
+    /// Accepted steps this round.
+    pub steps: usize,
+    /// Whether the hyper-parameters moved (and the cached kernel +
+    /// factor were therefore swapped for refactored ones).
+    pub moved: bool,
+}
+
+impl AdaptOutcome {
+    fn unchanged() -> AdaptOutcome {
+        AdaptOutcome { ml: Vec::new(), steps: 0, moved: false }
+    }
+}
+
 /// Stateful GP surrogate with cached kernel + Cholesky factor.
 pub struct GpSurrogate {
     lengthscale: f64,
     sigma_f2: f64,
     sigma_n2: f64,
     cap: usize,
+    hyper: HyperMode,
     /// Training inputs, one flat row each.
     x: Mat,
     /// Raw (unstandardized) targets, observation order.
@@ -59,6 +134,21 @@ pub struct GpSurrogate {
     k: PackedLower,
     /// Cholesky factor of `k`.
     l: PackedLower,
+    /// Squared-distance cache (zero diagonal) — hyper-parameter free, so
+    /// adaptation can rebuild `k` for trial hypers in O(n²).  Maintained
+    /// only under [`HyperMode::Adapt`]; `Fixed` sessions never read it,
+    /// so they skip its storage and splice costs entirely.
+    d2: PackedLower,
+    /// Appends since the last adaptation round.
+    appends: usize,
+    /// Acquisitions served so far (atomic: `acquire` takes `&self` and
+    /// is shared across pool threads; incremented once per call on the
+    /// calling thread, so it stays deterministic).
+    acquires: AtomicUsize,
+    /// `acquires` value when the last adaptation round ran — appends
+    /// with no acquire in between are a *bulk feed*, whose intermediate
+    /// hyper-parameters nothing ever reads.
+    acquires_at_adapt: usize,
 }
 
 impl GpSurrogate {
@@ -68,20 +158,195 @@ impl GpSurrogate {
             sigma_f2: cfg.sigma_f2,
             sigma_n2: cfg.sigma_n2,
             cap: cfg.cap,
+            hyper: cfg.hyper,
             x: Mat::with_row_capacity(cfg.cap, cfg.dim),
             y: Vec::new(),
             k: PackedLower::new(),
             l: PackedLower::new(),
+            d2: PackedLower::new(),
+            appends: 0,
+            acquires: AtomicUsize::new(0),
+            acquires_at_adapt: 0,
         }
+    }
+
+    /// Current (lengthscale, noise variance) — moves under
+    /// [`HyperMode::Adapt`], frozen otherwise.
+    pub fn hypers(&self) -> (f64, f64) {
+        (self.lengthscale, self.sigma_n2)
     }
 
     /// k(a, b) — the same expression (same evaluation order) as
     /// `ops::rbf`, so cached entries match a fresh kernel build bitwise.
     #[inline]
     fn kval(&self, a: &[f64], b: &[f64]) -> f64 {
+        self.kval_from_sq(sqdist(a, b))
+    }
+
+    /// The kernel value for a cached squared distance — identical
+    /// arithmetic to `kval`, factored out so observe fills both caches
+    /// from one distance pass.
+    #[inline]
+    fn kval_from_sq(&self, sq: f64) -> f64 {
         let inv = 1.0 / (2.0 * self.lengthscale * self.lengthscale);
-        let sq: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
         self.sigma_f2 * (-sq * inv).exp()
+    }
+
+    /// Log marginal likelihood of the *standardized* targets under the
+    /// current hyper-parameters, evaluated from the cached factor:
+    /// `-½ yᵀα − Σᵢ ln Lᵢᵢ − (n/2) ln 2π`.  `-inf` on an empty session.
+    pub fn log_marginal(&self) -> f64 {
+        if self.y.is_empty() {
+            return f64::NEG_INFINITY;
+        }
+        let scaler = TargetScaler::fit(&self.y);
+        let ysc: Vec<f64> = self.y.iter().map(|&v| scaler.transform(v)).collect();
+        log_marginal_of(&self.l, &ysc)
+    }
+
+    /// Rebuild the packed kernel (noise on the diagonal) and its factor
+    /// at trial hyper-parameters, from the distance cache.  `None` if the
+    /// trial kernel is not positive definite (trial rejected).
+    fn kernel_at(&self, ls: f64, s2n: f64) -> Option<(PackedLower, PackedLower)> {
+        let inv = 1.0 / (2.0 * ls * ls);
+        let n = self.y.len();
+        let mut k = PackedLower::new();
+        for i in 0..n {
+            let mut row: Vec<f64> =
+                self.d2.row(i).iter().map(|&sq| self.sigma_f2 * (-sq * inv).exp()).collect();
+            row[i] += s2n; // d2 diagonal is 0, so row[i] was exactly sigma_f2
+            k.push_row(&row);
+        }
+        let mut l = PackedLower::new();
+        if cholesky_rebuild(&k, &mut l) {
+            Some((k, l))
+        } else {
+            None
+        }
+    }
+
+    /// Analytic gradient of the log marginal likelihood w.r.t.
+    /// (log lengthscale, log noise variance), from a factor of `k`:
+    /// `∂L/∂θ = ½ Σᵢⱼ (αᵢαⱼ − K⁻¹ᵢⱼ) ∂Kᵢⱼ/∂θ`, with
+    /// `∂K/∂(ln ℓ) = K̃ ∘ D²/ℓ²` (zero diagonal) and
+    /// `∂K/∂(ln σₙ²) = σₙ² I`.  Cost O(n³/2) for the explicit `K⁻¹`,
+    /// paid only once per adaptation round per accepted step.
+    fn ml_gradient(
+        &self,
+        k: &PackedLower,
+        l: &PackedLower,
+        ysc: &[f64],
+        ls: f64,
+        s2n: f64,
+    ) -> (f64, f64) {
+        let n = k.n();
+        let alpha = l.solve_lower_t(&l.solve_lower(ysc));
+        // W = L⁻¹ as a dense lower triangle: column j solves L w = e_j.
+        let mut w = vec![0.0; n * n];
+        for j in 0..n {
+            for i in j..n {
+                let row = l.row(i);
+                let mut sum = if i == j { 1.0 } else { 0.0 };
+                for t in j..i {
+                    sum -= row[t] * w[t * n + j];
+                }
+                w[i * n + j] = sum / row[i];
+            }
+        }
+        // K⁻¹ = Wᵀ W; only the entries the two traces touch are formed.
+        let kinv = |i: usize, j: usize| -> f64 {
+            let lo = i.max(j);
+            let mut s = 0.0;
+            for t in lo..n {
+                s += w[t * n + i] * w[t * n + j];
+            }
+            s
+        };
+        let mut g_ls = 0.0;
+        for i in 0..n {
+            for j in 0..i {
+                // Off-diagonal cache entries are pure kernel values (noise
+                // only sits on the diagonal); the symmetric pair halves
+                // cancel the ½ in front of the trace.
+                g_ls += (alpha[i] * alpha[j] - kinv(i, j)) * k.at(i, j) * self.d2.at(i, j);
+            }
+        }
+        g_ls /= ls * ls;
+        let mut g_noise = 0.0;
+        for (i, a) in alpha.iter().enumerate() {
+            g_noise += a * a - kinv(i, i);
+        }
+        g_noise *= 0.5 * s2n;
+        (g_ls, g_noise)
+    }
+
+    /// One adaptation round: up to [`MAX_ADAPT_STEPS`] backtracking ascent
+    /// steps on the log marginal likelihood over (ln ℓ, ln σₙ²), each
+    /// accepted only if the likelihood strictly increases.  The session
+    /// commits the final kernel + factor once, at the end, and only when
+    /// the hyper-parameters actually moved; a round that accepts nothing
+    /// leaves the session bit-for-bit untouched.  No-op below
+    /// [`MIN_ADAPT_OBS`] observations, and on [`HyperMode::Fixed`]
+    /// sessions (which keep no distance cache to rebuild trial kernels
+    /// from — Fixed means fixed).
+    pub fn adapt(&mut self) -> AdaptOutcome {
+        let n = self.y.len();
+        if n < MIN_ADAPT_OBS || !matches!(self.hyper, HyperMode::Adapt { .. }) {
+            return AdaptOutcome::unchanged();
+        }
+        let scaler = TargetScaler::fit(&self.y);
+        let ysc: Vec<f64> = self.y.iter().map(|&v| scaler.transform(v)).collect();
+
+        let (ls0, s2n0) = (self.lengthscale, self.sigma_n2);
+        let mut ls = ls0;
+        let mut s2n = s2n0;
+        let mut k = self.k.clone();
+        let mut l = self.l.clone();
+        let mut ml = log_marginal_of(&l, &ysc);
+        let mut trace = vec![ml];
+        let mut steps = 0;
+
+        while steps < MAX_ADAPT_STEPS {
+            let (g_ls, g_noise) = self.ml_gradient(&k, &l, &ysc, ls, s2n);
+            let norm = g_ls.hypot(g_noise);
+            if !norm.is_finite() || norm < 1e-10 {
+                break;
+            }
+            let (dir_ls, dir_noise) = (g_ls / norm, g_noise / norm);
+            let mut accepted = false;
+            let mut step = ADAPT_STEP0;
+            for _ in 0..ADAPT_BACKTRACKS {
+                let t_ls = (ls.ln() + step * dir_ls).exp().clamp(LS_BOUNDS.0, LS_BOUNDS.1);
+                let t_s2n =
+                    (s2n.ln() + step * dir_noise).exp().clamp(NOISE_BOUNDS.0, NOISE_BOUNDS.1);
+                if t_ls == ls && t_s2n == s2n {
+                    break; // clamped into a no-op: the box is binding
+                }
+                if let Some((tk, tl)) = self.kernel_at(t_ls, t_s2n) {
+                    let t_ml = log_marginal_of(&tl, &ysc);
+                    if t_ml.is_finite() && t_ml > ml {
+                        (ls, s2n, k, l, ml) = (t_ls, t_s2n, tk, tl, t_ml);
+                        trace.push(ml);
+                        steps += 1;
+                        accepted = true;
+                        break;
+                    }
+                }
+                step *= 0.5;
+            }
+            if !accepted {
+                break;
+            }
+        }
+
+        let moved = ls != ls0 || s2n != s2n0;
+        if moved {
+            self.lengthscale = ls;
+            self.sigma_n2 = s2n;
+            self.k = k;
+            self.l = l;
+        }
+        AdaptOutcome { ml: trace, steps, moved }
     }
 
     /// Score one candidate block: kernel rows, interleaved forward solves
@@ -135,6 +400,16 @@ impl GpSurrogate {
     }
 }
 
+/// `-½ yᵀα − Σᵢ ln Lᵢᵢ − (n/2) ln 2π` from a cached factor (the second
+/// term is `-½ ln|K|`).
+fn log_marginal_of(l: &PackedLower, ysc: &[f64]) -> f64 {
+    let n = l.n();
+    let alpha = l.solve_lower_t(&l.solve_lower(ysc));
+    let fit: f64 = ysc.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+    let half_logdet: f64 = (0..n).map(|i| l.at(i, i).ln()).sum();
+    -0.5 * fit - half_logdet - 0.5 * (n as f64) * (2.0 * std::f64::consts::PI).ln()
+}
+
 impl GpSession for GpSurrogate {
     fn len(&self) -> usize {
         self.y.len()
@@ -153,36 +428,84 @@ impl GpSession for GpSurrogate {
         );
         anyhow::ensure!(self.y.len() < self.cap, "GP training rows at cap {}", self.cap);
         let n = self.y.len();
+        // One distance pass fills both caches (the distance cache only
+        // under Adapt — Fixed never reads it); the kernel values are the
+        // same f64s the old direct kval produced.
+        let adaptive = matches!(self.hyper, HyperMode::Adapt { .. });
+        let mut drow = Vec::with_capacity(if adaptive { n + 1 } else { 0 });
         let mut krow = Vec::with_capacity(n + 1);
         for j in 0..n {
-            krow.push(self.kval(x, self.x.row(j)));
+            let sq = sqdist(x, self.x.row(j));
+            if adaptive {
+                drow.push(sq);
+            }
+            krow.push(self.kval_from_sq(sq));
         }
-        krow.push(self.kval(x, x) + self.sigma_n2);
+        let sq0 = sqdist(x, x);
+        if adaptive {
+            drow.push(sq0);
+        }
+        krow.push(self.kval_from_sq(sq0) + self.sigma_n2);
         anyhow::ensure!(
             cholesky_push(&mut self.l, &krow),
             "GP kernel matrix must be PD (jitter too small?)"
         );
         self.k.push_row(&krow);
+        if adaptive {
+            self.d2.push_row(&drow);
+        }
         self.x.push_row(x);
         self.y.push(y);
+        if let HyperMode::Adapt { every } = self.hyper {
+            self.appends += 1;
+            // A session being *used* — acquires interleaving the appends
+            // — honours the user cadence exactly: every intermediate
+            // model is read.  A bulk feed (warm start, the BO init
+            // design: no acquire since the last round) amortizes to one
+            // round per ~25% training-set growth instead, costing
+            // O(log n) rounds rather than n/every O(n³) rounds whose
+            // intermediate hypers nothing ever reads.
+            let bulk = self.acquires.load(Ordering::Relaxed) == self.acquires_at_adapt;
+            let gate =
+                if bulk { every.max(1).max(self.y.len() / 4) } else { every.max(1) };
+            if self.appends >= gate && self.y.len() >= MIN_ADAPT_OBS {
+                self.appends = 0;
+                self.acquires_at_adapt = self.acquires.load(Ordering::Relaxed);
+                self.adapt();
+            }
+        }
         Ok(())
     }
 
     fn forget(&mut self, i: usize) -> Result<()> {
         anyhow::ensure!(i < self.y.len(), "forget({i}) of {} rows", self.y.len());
-        // The factor's prefix property breaks on eviction: full refactor
-        // from the (still exact) kernel cache.  Refactor a scratch copy
-        // first so a failure leaves the session untouched (and usable)
-        // instead of with a factor shorter than its training set.
-        let mut k = self.k.clone();
-        k.remove(i);
-        let mut l = PackedLower::new();
-        anyhow::ensure!(
-            cholesky_rebuild(&k, &mut l),
-            "GP kernel matrix must be PD (jitter too small?)"
-        );
-        self.k = k;
-        self.l = l;
+        match self.hyper {
+            HyperMode::Fixed => {
+                // The factor's prefix property breaks on eviction: full
+                // refactor from the (still exact) kernel cache — O(n³),
+                // but bit-identical to a scratch fit, which is what Fixed
+                // promises.  Refactor a scratch copy first so a failure
+                // leaves the session untouched (and usable) instead of
+                // with a factor shorter than its training set.
+                let mut k = self.k.clone();
+                k.remove(i);
+                let mut l = PackedLower::new();
+                anyhow::ensure!(
+                    cholesky_rebuild(&k, &mut l),
+                    "GP kernel matrix must be PD (jitter too small?)"
+                );
+                self.k = k;
+                self.l = l;
+            }
+            HyperMode::Adapt { .. } => {
+                // O(n²) rank-1 downdate of the cached factor: infallible
+                // on a valid factor (positive Givens pivots), equal to
+                // the rebuild up to rotation round-off.
+                self.k.remove(i);
+                self.d2.remove(i);
+                cholesky_downdate(&mut self.l, i);
+            }
+        }
         self.x.remove_row(i);
         self.y.remove(i);
         Ok(())
@@ -196,6 +519,10 @@ impl GpSession for GpSurrogate {
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
         let n = self.y.len();
         anyhow::ensure!(n > 0, "GP needs observations before acquisition");
+        // Counted once here, on the calling thread, before the fan-out:
+        // the adaptation cadence uses it to tell an actively-driven
+        // session from a bulk feed.
+        self.acquires.fetch_add(1, Ordering::Relaxed);
         let scaler = TargetScaler::fit(&self.y);
         let ysc: Vec<f64> = self.y.iter().map(|&v| scaler.transform(v)).collect();
         let best_sc = scaler.transform(best);
@@ -226,7 +553,14 @@ mod tests {
     }
 
     fn cfg(d: usize) -> GpConfig {
-        GpConfig { dim: d, lengthscale: 0.8, sigma_f2: 1.0, sigma_n2: 0.01, cap: 64 }
+        GpConfig {
+            dim: d,
+            lengthscale: 0.8,
+            sigma_f2: 1.0,
+            sigma_n2: 0.01,
+            cap: 64,
+            hyper: HyperMode::Fixed,
+        }
     }
 
     /// The incremental surrogate must reproduce the one-shot `gp_ei`
@@ -314,6 +648,64 @@ mod tests {
         assert_eq!(bits(&a.0), bits(&b.0));
         assert_eq!(bits(&a.1), bits(&b.1));
         assert_eq!(bits(&a.2), bits(&b.2));
+    }
+
+    #[test]
+    fn downdate_forget_keeps_session_usable() {
+        let mut rng = Pcg::new(25);
+        let d = 4;
+        let mut c = cfg(d);
+        // Adaptation disabled (`every` never reached): isolates the
+        // downdate eviction path.
+        c.hyper = HyperMode::Adapt { every: usize::MAX };
+        let mut gp = GpSurrogate::new(&c);
+        let xs = rand_rows(18, d, &mut rng);
+        for (i, x) in xs.iter().enumerate() {
+            gp.observe(x, (i as f64 * 0.7).sin()).unwrap();
+        }
+        for idx in [0usize, 8, 14] {
+            gp.forget(idx).unwrap();
+        }
+        assert_eq!(gp.len(), 15);
+        gp.observe(&[0.2, 0.4, 0.6, 0.8], 0.3).unwrap();
+        let xc = rand_rows(20, d, &mut rng);
+        let (ei, mu, sigma) = gp.acquire(&ExecPool::serial(), &xc, 0.1).unwrap();
+        for v in ei.iter().chain(&mu).chain(&sigma) {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn adapt_below_min_obs_is_a_noop() {
+        let mut c = cfg(2);
+        c.hyper = HyperMode::adapt();
+        let mut gp = GpSurrogate::new(&c);
+        for i in 0..(MIN_ADAPT_OBS - 1) {
+            gp.observe(&[i as f64 * 0.1, 0.5], i as f64).unwrap();
+        }
+        let out = gp.adapt();
+        assert_eq!(out.steps, 0);
+        assert!(!out.moved);
+        assert_eq!(gp.hypers(), (c.lengthscale, c.sigma_n2));
+    }
+
+    #[test]
+    fn fixed_mode_never_moves_hypers() {
+        let mut rng = Pcg::new(26);
+        let d = 3;
+        let c = cfg(d);
+        let mut gp = GpSurrogate::new(&c);
+        for x in rand_rows(30, d, &mut rng) {
+            let y = (x[0] * 9.0).sin();
+            gp.observe(&x, y).unwrap();
+        }
+        assert_eq!(gp.hypers(), (c.lengthscale, c.sigma_n2));
+        // Even an explicit adapt() call is a no-op on a Fixed session:
+        // it keeps no distance cache, and Fixed means fixed.
+        let out = gp.adapt();
+        assert!(!out.moved);
+        assert_eq!(out.steps, 0);
+        assert_eq!(gp.hypers(), (c.lengthscale, c.sigma_n2));
     }
 
     #[test]

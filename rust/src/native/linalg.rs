@@ -1,6 +1,25 @@
 //! Dense linear algebra for the native (pure-rust) ML backend: row-major
 //! matrices, Cholesky factorization and triangular solves — mirrors of what
 //! the L2 JAX graph does inside the HLO artifacts.
+//!
+//! On top of the dense mirrors, the packed-triangular type backs the
+//! incremental GP surrogate with three factor maintenance operations:
+//!
+//! * [`cholesky_push`] — O(n²) append of one observation, bit-identical
+//!   to a scratch refactor (a Cholesky row only reads prior rows).
+//! * [`cholesky_downdate`] — O(n²) *deletion* of row/column `idx`.  Rows
+//!   above `idx` are untouched (same prefix argument as push, mirrored);
+//!   the trailing block absorbs the deleted column `v = L[idx+1.., idx]`
+//!   with a sweep of Givens rotations, because deleting a row turns the
+//!   trailing factor equation into the positive rank-1 update
+//!   `L' L'ᵀ = L₃₃ L₃₃ᵀ + v vᵀ` — unconditionally stable (every rotation
+//!   has `r = hypot(d, v) ≥ d > 0`), so SPD inputs can never produce a
+//!   NaN.  Rotated entries differ from a scratch refactor only in
+//!   floating-point low-order bits (the differential suite
+//!   `tests/gp_downdate.rs` pins predictions to 1e-8).
+//! * [`cholesky_rebuild`] — the O(n³) from-scratch fallback, used by
+//!   `HyperMode::Fixed` sessions (bitwise reproducibility contract) and
+//!   whenever the kernel hyper-parameters change.
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -152,6 +171,12 @@ impl PackedLower {
         self.data[Self::off(i) + j]
     }
 
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(j <= i && i < self.n);
+        &mut self.data[Self::off(i) + j]
+    }
+
     /// Row `i` (length `i + 1`; last element is the diagonal).
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
@@ -249,10 +274,54 @@ pub fn cholesky_push(l: &mut PackedLower, krow: &[f64]) -> bool {
     true
 }
 
+/// Remove observation `idx` from a Cholesky factor in place — the O(n²)
+/// alternative to splicing the kernel and refactoring from scratch.
+///
+/// Partition `K` around `idx`: the factor rows above `idx` never read it,
+/// so they survive verbatim, as do the sub-`idx` columns of the rows
+/// below.  Writing `L₃₁`/`L₃₃` for the trailing rows' untouched prefix
+/// columns and trailing square block, and `v = L[idx+1.., idx]` for the
+/// deleted column, the reduced kernel block satisfies
+/// `K₃₃ = L₃₁L₃₁ᵀ + L₃₃L₃₃ᵀ + v vᵀ`; the prefix columns are kept, so the
+/// new trailing block must satisfy `L₃₃' L₃₃'ᵀ = L₃₃L₃₃ᵀ + v vᵀ` —
+/// deleting a row is a *positive* rank-1 update of
+/// the trailing factor, absorbed by the classic LINPACK Givens sweep
+/// (`r = hypot(d, v) ≥ d > 0` at every pivot, so the sweep cannot fail or
+/// produce NaN on a valid factor).  `downdate(n-1)` has an empty `v` and
+/// is a pure truncation: bit-identical inverse of [`cholesky_push`].
+///
+/// Precondition: `l` is a valid Cholesky factor (positive diagonal).  The
+/// result equals a scratch refactor of the spliced kernel up to rotation
+/// round-off; `tests/gp_downdate.rs` pins GP predictions through this
+/// path to the rebuild path within 1e-8.
+pub fn cholesky_downdate(l: &mut PackedLower, idx: usize) {
+    let n = l.n();
+    assert!(idx < n);
+    // The deleted column below the diagonal, saved before the splice.
+    let mut v: Vec<f64> = (idx + 1..n).map(|r| l.at(r, idx)).collect();
+    l.remove(idx);
+    let m = l.n();
+    for k in idx..m {
+        let vk = v[k - idx];
+        let dk = l.at(k, k);
+        let r = dk.hypot(vk);
+        let c = r / dk;
+        let s = vk / dk;
+        *l.at_mut(k, k) = r;
+        for i in k + 1..m {
+            let lik = (l.at(i, k) + s * v[i - idx]) / c;
+            *l.at_mut(i, k) = lik;
+            v[i - idx] = c * v[i - idx] - s * lik;
+        }
+    }
+}
+
 /// Refactor `l` from a packed kernel matrix `k` (noise on the diagonal) —
-/// the full O(n³) path the incremental surrogate falls back to after an
-/// eviction, where the factor's prefix property breaks.  Row-by-row
-/// `cholesky_push` in index order is exactly [`cholesky`]'s loop.
+/// the full O(n³) path the incremental surrogate uses for evictions in
+/// `HyperMode::Fixed` (where bitwise reproducibility matters more than
+/// the O(n²) [`cholesky_downdate`]) and after a hyper-parameter change
+/// (which invalidates every cached entry).  Row-by-row `cholesky_push`
+/// in index order is exactly [`cholesky`]'s loop.
 pub fn cholesky_rebuild(k: &PackedLower, l: &mut PackedLower) -> bool {
     l.clear();
     for i in 0..k.n() {
@@ -500,6 +569,12 @@ mod tests {
             }
         }
     }
+
+    // The downdate invariants (downdate-vs-scratch-factor to tolerance,
+    // downdate(last) as a bitwise push-inverse, SPD-never-NaN under
+    // repeated deletions) are pinned by the seeded property sweep in
+    // tests/property_invariants.rs, which strictly subsumes fixed-seed
+    // unit copies of the same assertions.
 
     #[test]
     fn packed_solves_match_dense_bitwise() {

@@ -246,7 +246,11 @@ impl MlBackend for XlaEngine {
     }
 
     /// No incremental artifact exists for the AOT `gp_ei` executable, so
-    /// XLA sessions re-run it per acquire (the one-shot path).
+    /// XLA sessions re-run it per acquire (the one-shot path).  This also
+    /// means `HyperMode::Adapt` is ignored here: there is no cached
+    /// factor to run the marginal-likelihood ascent on, and the AOT
+    /// executable bakes its hyper-parameters in per call — XLA sessions
+    /// always behave as `HyperMode::Fixed`.
     fn gp_open(&self, cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>> {
         Ok(super::one_shot_gp(self, cfg))
     }

@@ -64,6 +64,9 @@ impl MlBackend for XlaEngine {
         unreachable!("XlaEngine cannot be constructed without the `xla` feature")
     }
 
+    /// Mirrors the real engine's contract: were it constructible, this
+    /// would serve the one-shot wrapper, which ignores `HyperMode::Adapt`
+    /// (no cached factor to adapt — one-shot sessions are always fixed).
     fn gp_open(&self, _cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>> {
         unreachable!("XlaEngine cannot be constructed without the `xla` feature")
     }

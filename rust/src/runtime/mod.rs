@@ -19,6 +19,62 @@ use anyhow::Result;
 
 use crate::exec::ExecPool;
 
+/// Hyper-parameter policy of a GP session — the Fixed-vs-Adapt contract:
+///
+/// * [`HyperMode::Fixed`] freezes the [`GpConfig`] hyper-parameters and
+///   rebuilds the Cholesky factor from the cached kernel on eviction —
+///   every posterior is **bitwise** equal to the one-shot `gp_ei`
+///   reference (the PR-2 guarantee, guarded by `tests/gp_incremental.rs`).
+/// * [`HyperMode::Adapt`] trades bitwise reproducibility for speed and
+///   model quality: evictions run the O(n²) rank-1 `cholesky_downdate`
+///   (predictions pinned to the rebuild path within 1e-8 by
+///   `tests/gp_downdate.rs`), and every `every` appends the session takes
+///   a few bounded marginal-likelihood ascent steps over the RBF
+///   length-scale and noise (monotone per accepted step), refactoring the
+///   cached kernel only when the hyper-parameters actually move.
+///
+/// One-shot sessions ([`one_shot_gp`], the XLA engine's `gp_open`) have no
+/// cached factor to adapt and always behave as `Fixed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum HyperMode {
+    #[default]
+    Fixed,
+    Adapt {
+        /// Appends between adaptation rounds on an actively-driven
+        /// session.  During a bulk feed (no acquisitions between the
+        /// appends — e.g. a warm start) the session amortizes to ~one
+        /// round per 25% training-set growth instead, since nothing
+        /// reads the intermediate hyper-parameters.
+        every: usize,
+    },
+}
+
+impl HyperMode {
+    /// Default adaptation cadence: one ascent round per 8 appends keeps
+    /// the amortized cost well under one kernel refactor per append.
+    pub const DEFAULT_ADAPT_EVERY: usize = 8;
+
+    /// `Adapt` at the default cadence.
+    pub fn adapt() -> HyperMode {
+        HyperMode::Adapt { every: Self::DEFAULT_ADAPT_EVERY }
+    }
+
+    pub fn parse(s: &str) -> Option<HyperMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Some(HyperMode::Fixed),
+            "adapt" | "adaptive" => Some(HyperMode::adapt()),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HyperMode::Fixed => "fixed",
+            HyperMode::Adapt { .. } => "adapt",
+        }
+    }
+}
+
 /// Hyper-parameters + shape of a GP surrogate session.
 #[derive(Clone, Copy, Debug)]
 pub struct GpConfig {
@@ -30,14 +86,20 @@ pub struct GpConfig {
     /// Training-row budget (`observe` past it errors) — [`N_TRAIN`] for
     /// the artifact-backed pipeline.
     pub cap: usize,
+    /// Hyper-parameter policy (see [`HyperMode`] for the equality
+    /// contract each side carries).
+    pub hyper: HyperMode,
 }
 
 /// A stateful GP surrogate that persists across BO iterations, so the
 /// per-iteration cost is an incremental update instead of a from-scratch
 /// refit.  Obtained from [`MlBackend::gp_open`] (backend's best
 /// implementation) or [`one_shot_gp`] (the cross-check reference that
-/// re-fits through `gp_ei` every call).  Both paths are bit-identical —
-/// guarded by `tests/gp_incremental.rs`.
+/// re-fits through `gp_ei` every call).  Under [`HyperMode::Fixed`] both
+/// paths are bit-identical (guarded by `tests/gp_incremental.rs`); under
+/// [`HyperMode::Adapt`] the native session downdates on eviction and
+/// adapts its hyper-parameters, and is pinned to the reference at 1e-8
+/// tolerance instead (`tests/gp_downdate.rs`).
 pub trait GpSession: Send {
     fn len(&self) -> usize;
 
@@ -109,6 +171,16 @@ pub trait MlBackend: Send + Sync {
     /// wrapper over its `gp_ei` executable.
     fn gp_open(&self, cfg: &GpConfig) -> Result<Box<dyn GpSession + '_>>;
 
+    /// Whether this backend's `gp_open` sessions honour
+    /// [`HyperMode::Adapt`].  True only for the native incremental
+    /// surrogate; one-shot wrappers (the XLA engine's fixed-shape AOT
+    /// `gp_ei`) have no cached factor to adapt and always behave as
+    /// `Fixed` — callers reporting the *effective* policy (the REST tune
+    /// job record) consult this instead of echoing the request.
+    fn supports_hyper_adaptation(&self) -> bool {
+        false
+    }
+
     /// Whether callers should shard `emcm_score` into small chunks for
     /// the exec pool.  True for the per-row native mirror; false (the
     /// default) for backends like the XLA engine, whose executable pads
@@ -174,6 +246,10 @@ impl MlBackend for NativeBackend {
         Ok(Box::new(crate::native::gp::GpSurrogate::new(cfg)))
     }
 
+    fn supports_hyper_adaptation(&self) -> bool {
+        true
+    }
+
     fn prefers_sharded_scoring(&self) -> bool {
         true
     }
@@ -183,7 +259,10 @@ impl MlBackend for NativeBackend {
 /// kept as plain rows and every `acquire` re-fits from scratch.  This is
 /// the cross-check reference for the incremental surrogate and the session
 /// the XLA engine serves (its `gp_ei` executable is a fixed-shape AOT
-/// artifact with no incremental variant).
+/// artifact with no incremental variant).  [`HyperMode::Adapt`] is
+/// ignored here: a one-shot refit has no cached factor to run the
+/// marginal-likelihood ascent on, so one-shot sessions always behave as
+/// `Fixed` — which is also what makes them the bitwise reference.
 struct OneShotGp<'a> {
     backend: &'a dyn MlBackend,
     cfg: GpConfig,

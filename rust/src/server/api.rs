@@ -17,8 +17,14 @@
 //!   POST /api/characterize {bench, gc, metric?, strategy?, pool?, rounds?}
 //!                          -> 202 {job_id, status, poll}
 //!   POST /api/select       {dataset_id, lambda?}
-//!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?}
+//!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?,
+//!                           gp_hypers?: "fixed"|"adapt", gp_adapt_every?}
 //!                          -> 202 {job_id, status, poll}
+//!                          (`gp_hypers: "adapt"` turns on GP
+//!                          marginal-likelihood hyper-parameter
+//!                          adaptation + O(n²) downdate evictions in the
+//!                          surrogate session; default "fixed" keeps the
+//!                          bit-reproducible path)
 //!   GET  /api/jobs                           all jobs, ascending id
 //!   GET  /api/jobs/:id     {job_id, kind, status, elapsed_s,
 //!                           progress?, result?|error?}
@@ -50,7 +56,7 @@ use crate::exec;
 use crate::featsel;
 use crate::flags::{FlagConfig, GcMode};
 use crate::pipeline::{self, Algo, PipelineConfig};
-use crate::runtime::MlBackend;
+use crate::runtime::{HyperMode, MlBackend};
 use crate::server::http::{Request, Response};
 use crate::server::jobs::{self, CancelOutcome, JobQueue};
 use crate::server::persist;
@@ -465,6 +471,29 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         .and_then(Algo::parse)
         .ok_or_else(|| bad("missing/unknown 'algo' (bo | rbo | bo-warm | sa)"))?;
     let iters = body.get("iters").and_then(Json::as_f64).unwrap_or(20.0) as usize;
+    // Surrogate hyper-parameter policy.  Absent means the default (fixed)
+    // — but, like `metric`, a *present* unparseable value is a client
+    // error, not a silent fallback.
+    let mut gp_mode = match body.get("gp_hypers") {
+        None => HyperMode::Fixed,
+        Some(j) => j
+            .as_str()
+            .and_then(HyperMode::parse)
+            .ok_or_else(|| bad("unknown 'gp_hypers' (fixed | adapt)"))?,
+    };
+    if let Some(every) = body.get("gp_adapt_every") {
+        let every = every
+            .as_f64()
+            .filter(|&v| v >= 1.0 && v.fract() == 0.0)
+            .ok_or_else(|| bad("'gp_adapt_every' must be a positive integer"))?;
+        // The cadence never *implies* adaptation: absent or "fixed"
+        // gp_hypers with a cadence is a contradiction, not an opt-in —
+        // the fixed default stays bit-reproducible unless asked.
+        if matches!(gp_mode, HyperMode::Fixed) {
+            return Err(bad("'gp_adapt_every' requires \"gp_hypers\": \"adapt\""));
+        }
+        gp_mode = HyperMode::Adapt { every: every as usize };
+    }
 
     // Dataset checks stay synchronous so bad requests fail with 400 now,
     // not with a failed job later; the dataset is snapshotted into the job.
@@ -512,7 +541,8 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     let job_state = Arc::clone(state);
     let id = state.jobs.submit_ctl("tune", move |ctl| {
         let runner = SparkRunner::paper_default(bench);
-        let pc = PipelineConfig { tune_iters: iters, ..Default::default() };
+        let mut pc = PipelineConfig { tune_iters: iters, ..Default::default() };
+        pc.bo.hypers.mode = gp_mode;
 
         // Selected subspace: from the dataset when available, else the
         // full group.
@@ -548,8 +578,24 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             .into_iter()
             .map(|(k, v)| (k, Json::num(v)))
             .collect();
-        Ok(Json::obj(vec![
-            ("algo", Json::str(out.algo.name())),
+        // Report the *effective* surrogate policy, not the request: SA
+        // has no GP surrogate at all, and one-shot backends (XLA) ignore
+        // Adapt — echoing "adapt" there would claim adaptation ran when
+        // the surrogate stayed fixed (or never existed).
+        let effective_hypers = match algo {
+            Algo::Sa => None,
+            _ if matches!(gp_mode, HyperMode::Adapt { .. })
+                && !job_state.backend.supports_hyper_adaptation() =>
+            {
+                Some("fixed")
+            }
+            _ => Some(gp_mode.name()),
+        };
+        let mut fields = vec![("algo", Json::str(out.algo.name()))];
+        if let Some(h) = effective_hypers {
+            fields.push(("gp_hypers", Json::str(h)));
+        }
+        fields.extend(vec![
             ("default_mean", Json::num(default_summary.mean)),
             ("tuned_mean", Json::num(out.tuned_summary.mean)),
             ("tuned_std", Json::num(out.tuned_summary.std)),
@@ -558,7 +604,8 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             ("evals", Json::num(out.tune.evals as f64)),
             ("best_flags", Json::Obj(flags_obj.into_iter().collect())),
             ("best_java_args", Json::str(out.tune.best_config.to_java_args())),
-        ]))
+        ]);
+        Ok(Json::obj(fields))
     });
     Ok(accepted(id))
 }

@@ -8,6 +8,10 @@
 //! sharded on the exec pool), instead of refitting the kernel from scratch
 //! every sweep.  [`SurrogateMode::OneShot`] keeps the old refit-per-sweep
 //! `gp_ei` path as the bit-identical cross-check reference.
+//! [`GpHypers::mode`] selects the session's hyper-parameter policy:
+//! `HyperMode::Fixed` (default) preserves that bitwise contract;
+//! `HyperMode::Adapt` turns on marginal-likelihood adaptation and O(n²)
+//! downdate evictions in the native session.
 
 use std::time::Instant;
 
@@ -17,7 +21,7 @@ use super::objective::Objective;
 use super::space::TuneSpace;
 use super::{TuneResult, Tuner};
 use crate::exec::{self, ExecPool, JobControl};
-use crate::runtime::{GpConfig, GpSession, MlBackend, N_TRAIN};
+use crate::runtime::{GpConfig, GpSession, HyperMode, MlBackend, N_TRAIN};
 use crate::util::rng::Pcg;
 use crate::util::sobol::Sobol;
 use crate::util::stats::argmax;
@@ -30,11 +34,23 @@ pub struct GpHypers {
     pub lengthscale_per_sqrt_dim: f64,
     pub sigma_f2: f64,
     pub sigma_n2: f64,
+    /// Hyper-parameter policy for the surrogate session.  `Fixed` (the
+    /// default) keeps the bitwise session-vs-one-shot contract; `Adapt`
+    /// lets the native session run marginal-likelihood ascent over the
+    /// length-scale and noise as observations stream in, and evict via
+    /// the O(n²) Cholesky downdate.  One-shot surrogates (and the XLA
+    /// engine's sessions) ignore `Adapt` and stay fixed.
+    pub mode: HyperMode,
 }
 
 impl Default for GpHypers {
     fn default() -> Self {
-        GpHypers { lengthscale_per_sqrt_dim: 0.30, sigma_f2: 1.0, sigma_n2: 0.01 }
+        GpHypers {
+            lengthscale_per_sqrt_dim: 0.30,
+            sigma_f2: 1.0,
+            sigma_n2: 0.01,
+            mode: HyperMode::Fixed,
+        }
     }
 }
 
@@ -238,6 +254,7 @@ impl Tuner for BoTuner {
             // exactly as the pre-session code was: the loop below still
             // evicts one worst point per iteration while over N_TRAIN.
             cap: N_TRAIN.max(xs.len()),
+            hyper: self.cfg.hypers.mode,
         };
         let backend = std::sync::Arc::clone(&self.backend);
         let mut gp = match self.cfg.surrogate {
@@ -344,6 +361,25 @@ mod tests {
         assert_eq!(r.evals, 6 + 12);
         assert_eq!(r.history.len(), 18);
         assert_eq!(r.best_history.len(), 18);
+    }
+
+    #[test]
+    fn bo_improves_with_adaptive_surrogate() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 6,
+            n_candidates: 128,
+            hypers: GpHypers { mode: HyperMode::adapt(), ..Default::default() },
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 12).unwrap();
+        assert!(r.best_y.is_finite());
+        assert!(r.best_y <= r.best_history[5], "adaptation must not lose the init best");
+        assert!(r.best_y < 0.5, "best_y={}", r.best_y);
+        for w in r.best_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
     }
 
     #[test]

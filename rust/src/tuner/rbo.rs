@@ -5,7 +5,12 @@
 //! metric".  The recommended configuration is validated with one real run
 //! at the end.  The inner loop inherits `BoConfig`'s surrogate session and
 //! exec pool, so RBO's many cheap predictor iterations ride the same
-//! incremental cached-Cholesky surrogate as plain BO.
+//! incremental cached-Cholesky surrogate as plain BO — including
+//! `GpHypers::mode`: with `HyperMode::Adapt` the inner surrogate adapts
+//! its length-scale/noise to the predictor's response surface and evicts
+//! via the O(n²) downdate, which matters here because RBO typically runs
+//! many more (cheap) iterations than plain BO and crosses the N_TRAIN
+//! eviction threshold sooner.
 
 use std::time::Instant;
 

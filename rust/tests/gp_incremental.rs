@@ -1,16 +1,27 @@
 //! Incremental-surrogate regression guard: the stateful GP session
 //! (cached kernel + incrementally-extended Cholesky, pool-sharded
-//! acquisition) must be **bit-identical** to the one-shot `gp_ei` path —
-//! per-candidate (ei, mu, sigma) and whole `TuneResult`s — at every pool
-//! width, including across an N_TRAIN eviction (where the surrogate falls
-//! back to a full refactor of its kernel cache).
+//! acquisition) under `HyperMode::Fixed` must be **bit-identical** to the
+//! one-shot `gp_ei` path — per-candidate (ei, mu, sigma) and whole
+//! `TuneResult`s — at every pool width, including across an N_TRAIN
+//! eviction (where the Fixed surrogate refactors its kernel cache from
+//! scratch).
+//!
+//! Tolerance policy: `Fixed` (the default everywhere in this file) is the
+//! bitwise side of the contract and nothing here is allowed a tolerance.
+//! `HyperMode::Adapt` deliberately gives that up — O(n²) downdate
+//! evictions are pinned to the rebuild path within 1e-8 and adaptation is
+//! pinned by monotonicity/scratch-refactor equalities instead, all in
+//! `tests/gp_downdate.rs`.  This file must keep passing unchanged
+//! whatever happens on the Adapt side: that is the PR-2 guarantee.
 
 use std::sync::Arc;
 
 use onestoptuner::exec::ExecPool;
 use onestoptuner::flags::GcMode;
-use onestoptuner::runtime::{one_shot_gp, GpConfig, GpSession, MlBackend, NativeBackend, N_TRAIN};
-use onestoptuner::tuner::bo::{BoConfig, BoTuner, SurrogateMode};
+use onestoptuner::runtime::{
+    one_shot_gp, GpConfig, GpSession, HyperMode, MlBackend, NativeBackend, N_TRAIN,
+};
+use onestoptuner::tuner::bo::{BoConfig, BoTuner, GpHypers, SurrogateMode};
 use onestoptuner::tuner::objective::Objective;
 use onestoptuner::tuner::{TuneResult, TuneSpace, Tuner};
 use onestoptuner::util::rng::Pcg;
@@ -24,7 +35,14 @@ fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
 }
 
 fn gp_cfg(d: usize) -> GpConfig {
-    GpConfig { dim: d, lengthscale: 0.7, sigma_f2: 1.0, sigma_n2: 0.01, cap: N_TRAIN }
+    GpConfig {
+        dim: d,
+        lengthscale: 0.7,
+        sigma_f2: 1.0,
+        sigma_n2: 0.01,
+        cap: N_TRAIN,
+        hyper: HyperMode::Fixed,
+    }
 }
 
 /// Drive an incremental and a one-shot session through the same history of
@@ -64,6 +82,57 @@ fn session_matches_one_shot_at_every_pool_width() {
         }
         assert_eq!(inc.len(), one.len());
         assert_eq!(bits(inc.ys()), bits(one.ys()));
+    }
+}
+
+/// Eviction-order regression: evicting index 0 and the *last* index must
+/// keep (ei, mu, sigma) finite and bitwise-consistent with a scratch fit
+/// of the surviving points — previously only mid-buffer evictions were
+/// exercised, and the edges are exactly where splice/offset bugs live.
+#[test]
+fn edge_evictions_match_scratch_fit_bitwise() {
+    let backend = NativeBackend;
+    let d = 5;
+    let cfg = gp_cfg(d);
+    let mut rng = Pcg::new(0x62);
+    let xs = rand_rows(30, d, &mut rng);
+    let ys: Vec<f64> = xs.iter().map(|r| (r[1] * 3.0).cos() + r[0] - r[4]).collect();
+    let cands = rand_rows(80, d, &mut rng);
+    let pool = ExecPool::serial();
+
+    for evict in [0usize, 29] {
+        let mut inc = backend.gp_open(&cfg).unwrap();
+        let mut one = one_shot_gp(&backend, &cfg);
+        for (x, &y) in xs.iter().zip(&ys) {
+            inc.observe(x, y).unwrap();
+            one.observe(x, y).unwrap();
+        }
+        inc.forget(evict).unwrap();
+        one.forget(evict).unwrap();
+
+        let mut scratch = backend.gp_open(&cfg).unwrap();
+        for (i, (x, &y)) in xs.iter().zip(&ys).enumerate() {
+            if i != evict {
+                scratch.observe(x, y).unwrap();
+            }
+        }
+
+        let a = inc.acquire(&pool, &cands, 0.2).unwrap();
+        let b = one.acquire(&pool, &cands, 0.2).unwrap();
+        let c = scratch.acquire(&pool, &cands, 0.2).unwrap();
+        for v in a.0.iter().chain(&a.1).chain(&a.2) {
+            assert!(v.is_finite(), "evict {evict}: non-finite posterior");
+        }
+        for (got, want, tag) in [
+            (&a.0, &b.0, "ei vs one-shot"),
+            (&a.1, &b.1, "mu vs one-shot"),
+            (&a.2, &b.2, "sigma vs one-shot"),
+            (&a.0, &c.0, "ei vs scratch"),
+            (&a.1, &c.1, "mu vs scratch"),
+            (&a.2, &c.2, "sigma vs scratch"),
+        ] {
+            assert_eq!(bits(got), bits(want), "evict {evict}: {tag}");
+        }
     }
 }
 
@@ -126,6 +195,33 @@ fn bo_tune_result_identical_across_paths_and_widths() {
         let inc = run_bo(SurrogateMode::Session, width, 8, 10);
         assert_results_identical(&reference, &inc, &format!("width {width}"));
     }
+}
+
+/// The same equivalence with `HyperMode::Fixed` pinned *explicitly*
+/// (rather than through `GpHypers::default()`): if a future change flips
+/// the default hyper policy, this test keeps guarding the contract that
+/// a Fixed session is bitwise-equal to the one-shot reference.
+#[test]
+fn bo_tune_result_identical_with_explicit_fixed_hypers() {
+    let space = small_space();
+    let run = |surrogate: SurrogateMode| {
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(
+            Arc::new(NativeBackend),
+            BoConfig {
+                n_init: 6,
+                n_candidates: 64,
+                surrogate,
+                hypers: GpHypers { mode: HyperMode::Fixed, ..Default::default() },
+                epool: ExecPool::new(4),
+                ..Default::default()
+            },
+        );
+        bo.tune(&space, &mut obj, 8).unwrap()
+    };
+    let one = run(SurrogateMode::OneShot);
+    let inc = run(SurrogateMode::Session);
+    assert_results_identical(&one, &inc, "explicit HyperMode::Fixed");
 }
 
 /// Same equivalence across the N_TRAIN cap: n_init 250 + 10 iterations

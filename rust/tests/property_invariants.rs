@@ -4,6 +4,9 @@
 
 use onestoptuner::flags::{FeatureEncoder, FlagConfig, GcMode, Kind};
 use onestoptuner::jvmsim::{self, JvmParams, MutatorLoad};
+use onestoptuner::native::linalg::{
+    cholesky, cholesky_downdate, cholesky_push, Mat, PackedLower,
+};
 use onestoptuner::tuner::TuneSpace;
 use onestoptuner::util::json::Json;
 use onestoptuner::util::rng::Pcg;
@@ -127,6 +130,106 @@ fn prop_tunespace_to_config_respects_unselected_flags() {
             for (i, (a, b)) in cfg.values.iter().zip(&default.values).enumerate() {
                 if !selected.contains(&i) {
                     assert_eq!(a, b, "unselected flag {i} moved (seed {seed})");
+                }
+            }
+        }
+    }
+}
+
+/// Random well-conditioned SPD matrix (kernel-like: Gram + ridge).
+fn random_spd(n: usize, rng: &mut Pcg) -> Mat {
+    let rows: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+    let x = Mat::from_rows(&rows);
+    let mut g = x.gram();
+    for i in 0..n {
+        *g.at_mut(i, i) += n as f64;
+    }
+    g
+}
+
+/// Factor an SPD matrix into a `PackedLower` via successive pushes.
+fn packed_factor(a: &Mat) -> PackedLower {
+    let mut l = PackedLower::new();
+    for i in 0..a.rows {
+        let krow: Vec<f64> = (0..=i).map(|j| a.at(i, j)).collect();
+        assert!(cholesky_push(&mut l, &krow), "random SPD must factor");
+    }
+    l
+}
+
+#[test]
+fn prop_packed_push_then_downdate_last_is_identity() {
+    // Appending an observation and immediately deleting it must be a
+    // bitwise no-op: downdate(last) has an empty rotation column and is a
+    // pure truncation — the exact inverse of cholesky_push.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8000 + seed);
+        let n = 2 + rng.below(12);
+        let a = random_spd(n + 1, &mut rng);
+        let mut l = PackedLower::new();
+        for i in 0..n {
+            let krow: Vec<f64> = (0..=i).map(|j| a.at(i, j)).collect();
+            assert!(cholesky_push(&mut l, &krow));
+        }
+        let before = l.clone();
+        let krow: Vec<f64> = (0..=n).map(|j| a.at(n, j)).collect();
+        assert!(cholesky_push(&mut l, &krow));
+        cholesky_downdate(&mut l, n);
+        assert_eq!(l, before, "seed {seed} n {n}");
+    }
+}
+
+#[test]
+fn prop_packed_downdate_matches_scratch_factor_of_reduced_kernel() {
+    // Deleting row i via Givens rotations must equal the from-scratch
+    // factor of the kernel with row/column i removed, to tolerance
+    // (the rotations reorder the arithmetic, so bitwise equality is not
+    // expected — 1e-8 relative is the documented downdate contract).
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8100 + seed);
+        let n = 3 + rng.below(12);
+        let a = random_spd(n, &mut rng);
+        let idx = rng.below(n);
+        let mut l = packed_factor(&a);
+        cholesky_downdate(&mut l, idx);
+        assert_eq!(l.n(), n - 1);
+        let keep: Vec<usize> = (0..n).filter(|&r| r != idx).collect();
+        let mut sub = Mat::zeros(n - 1, n - 1);
+        for (i, &ri) in keep.iter().enumerate() {
+            for (j, &rj) in keep.iter().enumerate() {
+                *sub.at_mut(i, j) = a.at(ri, rj);
+            }
+        }
+        let dense = cholesky(&sub).expect("reduced SPD must factor");
+        for i in 0..n - 1 {
+            for j in 0..=i {
+                let (got, want) = (l.at(i, j), dense.at(i, j));
+                assert!(
+                    (got - want).abs() <= 1e-8 * (1.0 + want.abs()),
+                    "seed {seed} idx {idx} ({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_downdate_never_produces_nan_on_spd() {
+    // Every Givens pivot on a valid factor has r = hypot(d, v) >= d > 0,
+    // so SPD inputs can never push a NaN (or a non-positive diagonal)
+    // into the factor, no matter how many deletions run back-to-back.
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg::new(8200 + seed);
+        let n = 4 + rng.below(12);
+        let a = random_spd(n, &mut rng);
+        let mut l = packed_factor(&a);
+        while l.n() > 1 {
+            cholesky_downdate(&mut l, rng.below(l.n()));
+            for i in 0..l.n() {
+                assert!(l.at(i, i) > 0.0, "seed {seed}: diagonal must stay positive");
+                for j in 0..=i {
+                    assert!(l.at(i, j).is_finite(), "seed {seed}: NaN/inf at ({i},{j})");
                 }
             }
         }

@@ -252,6 +252,60 @@ fn tune_without_dataset_requires_cold_algo() {
 }
 
 #[test]
+fn gp_hypers_validation_on_tune() {
+    let addr = server();
+    // Present-but-unknown policy is a client error, like `metric`.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_hypers": "wibble"}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("gp_hypers"), "{body}");
+    // gp_adapt_every must be a positive integer...
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_hypers": "adapt", "gp_adapt_every": 0}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    // ...and contradicting an explicit "fixed" is a client error too.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_hypers": "fixed", "gp_adapt_every": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    // A cadence alone never implies adaptation: the fixed default stays
+    // bit-reproducible unless "adapt" is requested explicitly.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_adapt_every": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("gp_hypers"), "{body}");
+    // A valid adaptive submission is accepted as an async job.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1,
+            "gp_hypers": "adapt", "gp_adapt_every": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+}
+
+#[test]
 fn unknown_route_404s() {
     let addr = server();
     let (code, _) = http_request(addr, "GET", "/api/nope", "").unwrap();
