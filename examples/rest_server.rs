@@ -107,11 +107,19 @@ fn main() -> anyhow::Result<()> {
         sel.get("group_size").unwrap()
     );
 
-    println!("POST /api/tune (BO warm start, adaptive GP hypers, 10 iterations, async)");
+    println!("POST /api/tune (BO warm start, ARD GP hypers, 10 iterations, async)");
+    // Grossly long initial length-scales (one per lasso-selected flag —
+    // the select call above fixes the dimension count) so the ML ascent
+    // must move them: the record only claims gp_ard/ard_relevance when
+    // adaptation actually happened.
+    let n_sel = sel.get("n_selected").unwrap().as_f64().unwrap() as usize;
+    let init_ls: Vec<String> = (0..n_sel).map(|_| "10.0".to_string()).collect();
     let (code, body) = post(
         "/api/tune",
         &format!(
-            r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":10,"gp_hypers":"adapt"}}"#
+            r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":10,"gp_ard":true,
+                "gp_init_hypers":{{"lengthscales":[{}]}}}}"#,
+            init_ls.join(",")
         ),
     );
     println!("  {code} {body}");
@@ -120,10 +128,46 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(rec.get("status").and_then(Json::as_str) == Some("done"));
     let v = rec.get("result").unwrap();
     println!(
-        "  improvement {}x, tuning time {} s\n",
+        "  improvement {}x, tuning time {} s",
         v.get("improvement").unwrap(),
         v.get("tuning_time_s").unwrap()
     );
+    // ARD closes the feature-selection loop: the record reports the
+    // adapted per-flag hypers and a relevance object next to the lasso
+    // selection, and the hypers round-trip into a follow-up job.
+    anyhow::ensure!(
+        v.get("gp_ard").and_then(Json::as_bool) == Some(true),
+        "ARD tune must report an effective gp_ard=true: {v}"
+    );
+    let ls = v
+        .get("gp_lengthscales")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("ARD tune must report gp_lengthscales: {v}"))?;
+    anyhow::ensure!(!ls.is_empty(), "gp_lengthscales must be non-empty");
+    anyhow::ensure!(
+        v.get("ard_relevance").is_some(),
+        "ARD tune must report ard_relevance next to the selection: {v}"
+    );
+    let s2n = v.get("gp_sigma_n2").and_then(Json::as_f64).unwrap_or(0.01);
+    let ls_json: Vec<String> =
+        ls.iter().map(|l| format!("{}", l.as_f64().unwrap())).collect();
+    println!("  adapted {} per-flag length-scales; warm-starting a follow-up tune\n", ls.len());
+    let (code, body) = post(
+        "/api/tune",
+        &format!(
+            r#"{{"bench":"lda","gc":"g1","algo":"bo-warm","dataset_id":{id},"iters":2,
+                "gp_hypers":"adapt","gp_init_hypers":{{"lengthscales":[{}],"sigma_n2":{s2n}}}}}"#,
+            ls_json.join(",")
+        ),
+    );
+    anyhow::ensure!(code == 202, "warm-started tune must be accepted: {body}");
+    let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    let rec = watch(job)?;
+    anyhow::ensure!(
+        rec.get("status").and_then(Json::as_str) == Some("done"),
+        "warm-started tune failed: {rec}"
+    );
+    println!("  warm-started job {job} done\n");
 
     // ---- cancellation: abort a long tune mid-flight -------------------
     println!("POST /api/tune (BO, 500 iterations — then DELETE it mid-run)");

@@ -56,6 +56,7 @@ fn main() {
     }
 
     section("gp_ei: GP posterior + EI (N=120 train, M=1024 candidates)");
+    let ls = vec![4.0; d];
     let xtr = rand_rows(120, d, &mut rng);
     let ytr: Vec<f64> = xtr.iter().map(|r| r.iter().sum::<f64>() / d as f64).collect();
     let xc = rand_rows(1024, d, &mut rng);
@@ -63,7 +64,7 @@ fn main() {
         Bench::new(format!("gp_ei/120tr_1024c/{}", b.name()))
             .iters(2, 8)
             .run_throughput(1024.0, "cand", || {
-                b.gp_ei(&xtr, &ytr, &xc, 4.0, 1.0, 0.01, 0.0).unwrap()
+                b.gp_ei(&xtr, &ytr, &xc, &ls, 1.0, 0.01, 0.0).unwrap()
             });
     }
 
@@ -75,7 +76,7 @@ fn main() {
         for b in &backends {
             Bench::new(format!("gp_ei/{n}tr_512c/{}", b.name()))
                 .iters(2, 6)
-                .run(|| b.gp_ei(&xtr, &ytr, &xc, 4.0, 1.0, 0.01, 0.0).unwrap());
+                .run(|| b.gp_ei(&xtr, &ytr, &xc, &ls, 1.0, 0.01, 0.0).unwrap());
         }
     }
 }

@@ -13,6 +13,10 @@
 //! * `adaptation` — the acquisition loop with marginal-likelihood
 //!   hyper-parameter adaptation on vs off (overhead of the ascent
 //!   rounds), reporting where the hypers moved.
+//! * `ard` — isotropic-adapt vs ARD-adapt acquisition loops at
+//!   d ∈ {8, 16}: the cost of freeing the per-dimension length-scales
+//!   (d+1-parameter gradient + per-dimension distance cache) over the
+//!   tied 2-parameter ascent, reporting the adapted length-scale spread.
 //!
 //! Emits `BENCH_surrogate.json` at the repo root; `--smoke` runs reduced
 //! sizes for CI and writes `BENCH_surrogate_smoke.json`.  Both files come
@@ -42,7 +46,7 @@ const D: usize = 16;
 
 /// Scenario keys the output document must always carry — shared between
 /// the builder and the post-write assertion so they cannot drift.
-const SCENARIO_KEYS: [&str; 3] = ["acquisition", "eviction", "adaptation"];
+const SCENARIO_KEYS: [&str; 4] = ["acquisition", "eviction", "adaptation", "ard"];
 
 fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
     (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
@@ -57,17 +61,17 @@ struct Scenario {
 }
 
 fn synth_y(x: &[f64]) -> f64 {
-    (x[0] * 3.0).sin() + x[1] * x[2] - 0.5 * x[D - 1]
+    (x[0] * 3.0).sin() + x[1] * x[2] - 0.5 * x[x.len() - 1]
 }
 
-fn scenario(n0: usize, m: usize, iters: usize, seed: u64) -> Scenario {
+fn scenario_d(d: usize, n0: usize, m: usize, iters: usize, seed: u64) -> Scenario {
     let mut rng = Pcg::new(seed);
-    let init_x = rand_rows(n0, D, &mut rng);
+    let init_x = rand_rows(n0, d, &mut rng);
     let init_y: Vec<f64> = init_x.iter().map(|r| synth_y(r)).collect();
     let iters = (0..iters)
         .map(|_| {
-            let cands = rand_rows(m, D, &mut rng);
-            let next: Vec<f64> = (0..D).map(|_| rng.f64()).collect();
+            let cands = rand_rows(m, d, &mut rng);
+            let next: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
             let y = synth_y(&next);
             (cands, next, y)
         })
@@ -75,15 +79,16 @@ fn scenario(n0: usize, m: usize, iters: usize, seed: u64) -> Scenario {
     Scenario { init_x, init_y, iters }
 }
 
+fn scenario(n0: usize, m: usize, iters: usize, seed: u64) -> Scenario {
+    scenario_d(D, n0, m, iters, seed)
+}
+
+fn gp_cfg_d(d: usize, cap: usize, hyper: HyperMode) -> GpConfig {
+    GpConfig::isotropic(d, 0.30 * (d as f64).sqrt(), 1.0, 0.01, cap, hyper)
+}
+
 fn gp_cfg(cap: usize, hyper: HyperMode) -> GpConfig {
-    GpConfig {
-        dim: D,
-        lengthscale: 0.30 * (D as f64).sqrt(),
-        sigma_f2: 1.0,
-        sigma_n2: 0.01,
-        cap,
-        hyper,
-    }
+    gp_cfg_d(D, cap, hyper)
 }
 
 /// Replay an append-only acquisition loop; returns the last iteration's
@@ -224,7 +229,7 @@ fn main() {
         let fixed = Bench::new(format!("hypers_fixed/{ad_n}tr_{ad_m}c"))
             .iters(reps.0, reps.1)
             .run(|| replay(&mut *backend.gp_open(&fixed_cfg).unwrap(), &epool, &sc));
-        let mut final_hypers = (adapt_cfg.lengthscale, adapt_cfg.sigma_n2);
+        let mut final_hypers = (adapt_cfg.lengthscales.clone(), adapt_cfg.sigma_n2);
         let adapt = Bench::new(format!("hypers_adapt/{ad_n}tr_{ad_m}c")).iters(reps.0, reps.1).run(
             || {
                 let mut gp = GpSurrogate::new(&adapt_cfg);
@@ -236,7 +241,7 @@ fn main() {
         let overhead = adapt.mean_ns / fixed.mean_ns;
         println!(
             "  overhead: {overhead:.2}x  (lengthscale {:.3} -> {:.3}, noise {:.4} -> {:.4})",
-            adapt_cfg.lengthscale, final_hypers.0, adapt_cfg.sigma_n2, final_hypers.1
+            adapt_cfg.lengthscales[0], final_hypers.0[0], adapt_cfg.sigma_n2, final_hypers.1
         );
 
         ad_rows.push(Json::obj(vec![
@@ -247,12 +252,64 @@ fn main() {
             ("fixed_ms", Json::num(fixed.mean_ns / 1e6)),
             ("adapt_ms", Json::num(adapt.mean_ns / 1e6)),
             ("overhead", Json::num(overhead)),
-            ("adapted_lengthscale", Json::num(final_hypers.0)),
+            // ARD off: the length-scales move as one tied value.
+            ("adapted_lengthscale", Json::num(final_hypers.0[0])),
             ("adapted_noise", Json::num(final_hypers.1)),
         ]));
     }
 
-    let path = write_doc(smoke, epool.threads(), [acq_rows, ev_rows, ad_rows]);
+    // ---- ard: isotropic-adapt vs ARD-adapt acquisition cost -----------
+    // Same adaptive loop, tied 2-parameter ascent vs the free
+    // d+1-parameter one, across the tuning dimensions the lasso stage
+    // typically leaves (d ∈ {8, 16}).
+    let (ard_ds, ard_n, ard_m, ard_iters): (&[usize], usize, usize, usize) =
+        if smoke { (&[8, 16], 32, 64, 4) } else { (&[8, 16], 96, 256, 10) };
+    let mut ard_rows = Vec::new();
+    for &d in ard_ds {
+        let iso_cfg = GpConfig {
+            hyper: HyperMode::Adapt { every: 4 },
+            ..gp_cfg_d(d, N_TRAIN, HyperMode::Fixed)
+        };
+        let ard_cfg = GpConfig { ard: true, ..iso_cfg.clone() };
+        let sc = scenario_d(d, ard_n - ard_iters, ard_m, ard_iters, 0xa4d ^ d as u64);
+
+        section(&format!(
+            "isotropic-adapt vs ARD-adapt: d={d}, {ard_iters} iters ending at n={ard_n}, m={ard_m} candidates"
+        ));
+        let iso = Bench::new(format!("adapt_iso/d{d}_{ard_n}tr_{ard_m}c"))
+            .iters(reps.0, reps.1)
+            .run(|| replay(&mut GpSurrogate::new(&iso_cfg), &epool, &sc));
+        let mut ard_hypers = (ard_cfg.lengthscales.clone(), ard_cfg.sigma_n2);
+        let ard = Bench::new(format!("adapt_ard/d{d}_{ard_n}tr_{ard_m}c"))
+            .iters(reps.0, reps.1)
+            .run(|| {
+                let mut gp = GpSurrogate::new(&ard_cfg);
+                let ei = replay(&mut gp, &epool, &sc);
+                ard_hypers = gp.hypers();
+                ei
+            });
+        let overhead = ard.mean_ns / iso.mean_ns;
+        let (ls_min, ls_max) = ard_hypers
+            .0
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &l| (lo.min(l), hi.max(l)));
+        println!("  overhead: {overhead:.2}x  (adapted lengthscales {ls_min:.3}..{ls_max:.3})");
+
+        ard_rows.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("n", Json::num(ard_n as f64)),
+            ("m", Json::num(ard_m as f64)),
+            ("iters", Json::num(ard_iters as f64)),
+            ("adapt_every", Json::num(4.0)),
+            ("iso_adapt_ms", Json::num(iso.mean_ns / 1e6)),
+            ("ard_adapt_ms", Json::num(ard.mean_ns / 1e6)),
+            ("overhead", Json::num(overhead)),
+            ("adapted_lengthscale_min", Json::num(ls_min)),
+            ("adapted_lengthscale_max", Json::num(ls_max)),
+        ]));
+    }
+
+    let path = write_doc(smoke, epool.threads(), [acq_rows, ev_rows, ad_rows, ard_rows]);
     println!("\nwrote {path}");
 }
 
@@ -260,7 +317,7 @@ fn main() {
 /// from [`SCENARIO_KEYS`], and the written file is parsed back and
 /// re-checked against the same constant, so the full-size and smoke
 /// documents cannot diverge in shape.
-fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 3]) -> &'static str {
+fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 4]) -> &'static str {
     let scenarios: Vec<(&str, Json)> =
         SCENARIO_KEYS.iter().zip(rows).map(|(&k, r)| (k, Json::Arr(r))).collect();
     let doc = Json::obj(vec![

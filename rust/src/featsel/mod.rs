@@ -65,25 +65,48 @@ pub fn select_flags(
     })
 }
 
+/// Normalized ARD relevance over the tuned dimensions: `1/ℓⱼ²` scaled to
+/// sum to 1.  A short adapted length-scale means the kernel varies fast
+/// along that flag — the surrogate found it relevant; a long one means
+/// the dimension is effectively ignored.  Reported next to [`Selection`]
+/// in `TuneResult` and the REST tune job record so the pipeline can
+/// cross-check the GP's relevance signal against the lasso's.
+pub fn ard_relevance(lengthscales: &[f64]) -> Vec<f64> {
+    let inv: Vec<f64> = lengthscales.iter().map(|l| 1.0 / (l * l)).collect();
+    let sum: f64 = inv.iter().sum();
+    if !sum.is_finite() || sum <= 0.0 {
+        return vec![0.0; lengthscales.len()];
+    }
+    inv.into_iter().map(|v| v / sum).collect()
+}
+
 /// Grid-search λ by holdout MSE (the paper's "λ = 0.01 using grid search").
 /// Returns the winning λ and the full (λ, holdout MSE, flags kept) grid.
+///
+/// The scalers are fit on the **training split only**: fitting them on
+/// the full dataset before splitting leaks the validation rows'
+/// statistics into the very scaling used to score them, which can flip
+/// the winning λ (pinned by `leaky_scaling_flips_the_winning_lambda`).
 pub fn grid_search_lambda(
     ds: &Dataset,
     lambdas: &[f64],
     backend: &Arc<dyn MlBackend>,
 ) -> Result<(f64, Vec<(f64, f64, usize)>)> {
     anyhow::ensure!(ds.len() >= 10, "need >= 10 rows for a holdout split");
+    anyhow::ensure!(!lambdas.is_empty(), "grid_search_lambda needs a non-empty lambda grid");
     let enc = FeatureEncoder::new(ds.mode);
     let n_val = (ds.len() / 5).max(2);
     let n_tr = ds.len() - n_val;
 
-    let xs = Standardizer::fit(&ds.feat_rows);
-    let x = xs.transform(&ds.feat_rows);
-    let ysc = TargetScaler::fit(&ds.y);
-    let y: Vec<f64> = ds.y.iter().map(|&v| ysc.transform(v)).collect();
-
-    let (xtr, xval) = x.split_at(n_tr);
-    let (ytr, yval) = y.split_at(n_tr);
+    let (tr_rows, val_rows) = ds.feat_rows.split_at(n_tr);
+    let (tr_y, val_y) = ds.y.split_at(n_tr);
+    let xs = Standardizer::fit(tr_rows);
+    let xtr = xs.transform(tr_rows);
+    let xval = xs.transform(val_rows);
+    let ysc = TargetScaler::fit(tr_y);
+    let ytr: Vec<f64> = tr_y.iter().map(|&v| ysc.transform(v)).collect();
+    let yval: Vec<f64> = val_y.iter().map(|&v| ysc.transform(v)).collect();
+    let (xtr, xval, ytr, yval) = (&xtr[..], &xval[..], &ytr[..], &yval[..]);
 
     let mut grid = Vec::with_capacity(lambdas.len());
     let mut best = (lambdas[0], f64::INFINITY);
@@ -172,6 +195,107 @@ mod tests {
         assert!(grid.contains(&best));
         assert_eq!(rows.len(), 4);
         assert!(rows.iter().all(|r| r.1.is_finite()));
+    }
+
+    /// Synthetic 10-row dataset engineered so holdout leakage *flips* the
+    /// winning λ.  Only feature column 0 is live (everything else is
+    /// zero, hence inert under any scaling):
+    ///
+    /// * training split (8 rows): x = {0,0,0,0,2,2,2,2}, y = x — a clean
+    ///   positive linear signal;
+    /// * validation split (2 rows): x = 21, y = −4 — far outside the
+    ///   training range on both axes.
+    ///
+    /// With train-only scaling the tiny-λ model extrapolates the positive
+    /// slope to the validation point (prediction ≈ +20 vs target −5 in
+    /// scaled units, MSE ≈ 625) and the huge-λ zero model wins (MSE 25).
+    /// With leaked scaling the validation outliers drag the means/stds so
+    /// the *training* correlation turns negative, the tiny-λ model lands
+    /// near the validation target (MSE ≈ 0.29 vs 3.33) and tiny λ wins.
+    /// Margins are >10x on both sides, so ISTA convergence slack cannot
+    /// blur the flip.
+    fn leakage_dataset() -> Dataset {
+        let enc = FeatureEncoder::new(GcMode::ParallelGC);
+        let d = enc.n_features();
+        let mut feat_rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..8 {
+            let x0 = if i < 4 { 0.0 } else { 2.0 };
+            let mut row = vec![0.0; d];
+            row[0] = x0;
+            feat_rows.push(row);
+            y.push(x0);
+        }
+        for _ in 0..2 {
+            let mut row = vec![0.0; d];
+            row[0] = 21.0;
+            feat_rows.push(row);
+            y.push(-4.0);
+        }
+        Dataset {
+            mode: GcMode::ParallelGC,
+            metric: Metric::ExecTime,
+            unit_rows: vec![vec![0.0; enc.n_flags()]; 10],
+            feat_rows,
+            y,
+        }
+    }
+
+    #[test]
+    fn leaky_scaling_flips_the_winning_lambda() {
+        let ds = leakage_dataset();
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        let lambdas = [0.001, 10.0];
+
+        // Fixed implementation: scalers fit on the training split only.
+        let (best, grid) = grid_search_lambda(&ds, &lambdas, &backend).unwrap();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(best, 10.0, "train-only scaling must reject the extrapolating fit: {grid:?}");
+
+        // The old, leaky scoring (scalers fit on the full dataset before
+        // the split), reproduced inline: it picks the other λ.
+        let n_tr = ds.len() - 2;
+        let xs = Standardizer::fit(&ds.feat_rows);
+        let x = xs.transform(&ds.feat_rows);
+        let ysc = TargetScaler::fit(&ds.y);
+        let yy: Vec<f64> = ds.y.iter().map(|&v| ysc.transform(v)).collect();
+        let (xtr, xval) = x.split_at(n_tr);
+        let (ytr, yval) = yy.split_at(n_tr);
+        let mut leaky_best = (f64::NAN, f64::INFINITY);
+        for &lam in &lambdas {
+            let w = backend.lasso_fit(xtr, ytr, lam).unwrap();
+            let mse: f64 = xval
+                .iter()
+                .zip(yval)
+                .map(|(xi, &yi)| {
+                    let p = crate::native::ops::lr_predict(&w, xi);
+                    (p - yi) * (p - yi)
+                })
+                .sum::<f64>()
+                / yval.len() as f64;
+            if mse < leaky_best.1 {
+                leaky_best = (lam, mse);
+            }
+        }
+        assert_eq!(leaky_best.0, 0.001, "leaked scaling rewards the extrapolating fit");
+        assert_ne!(best, leaky_best.0, "the leak must flip the winner");
+    }
+
+    #[test]
+    fn empty_lambda_grid_rejected() {
+        let ds = leakage_dataset();
+        let backend: Arc<dyn MlBackend> = Arc::new(NativeBackend);
+        let err = grid_search_lambda(&ds, &[], &backend).unwrap_err().to_string();
+        assert!(err.contains("non-empty"), "{err}");
+    }
+
+    #[test]
+    fn ard_relevance_normalizes_and_ranks_short_scales_first() {
+        let rel = ard_relevance(&[0.5, 1.0, 2.0]);
+        assert!((rel.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(rel[0] > rel[1] && rel[1] > rel[2], "{rel:?}");
+        // Degenerate input collapses to zeros instead of NaN.
+        assert_eq!(ard_relevance(&[f64::INFINITY, f64::INFINITY]), vec![0.0, 0.0]);
     }
 
     #[test]

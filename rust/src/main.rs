@@ -11,6 +11,7 @@
 //!   select          --data F.csv --gc G [--metric M] [--lambda L] [--grid]
 //!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
 //!                   [--gp-hypers fixed|adapt] [--gp-adapt-every K]
+//!                   [--gp-ard] [--gp-init-hypers "l1,..,ld[:noise]"]
 //!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
 //!   serve           [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]
 //!
@@ -144,6 +145,8 @@ fn print_usage() {
          \x20 select        --data data.csv --gc G [--metric M] [--lambda 0.01] [--grid]\n\
          \x20 tune          --bench B --gc G [--metric M] [--algo bo|rbo|bo-warm|sa|all] [--iters 20]\n\
          \x20               [--gp-hypers fixed|adapt] [--gp-adapt-every K]   GP surrogate hyper-parameter policy\n\
+         \x20               [--gp-ard]                 per-dimension (ARD) length-scales; implies --gp-hypers adapt\n\
+         \x20               [--gp-init-hypers \"l1,..,ld[:noise]\"]           warm-start hypers from a previous run\n\
          \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
          \x20 serve         [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]\n\n\
          global options:\n\
@@ -319,16 +322,39 @@ fn cmd_tune(opts: &Opts) -> Result<()> {
         cfg.bo.hypers.mode =
             onestoptuner::runtime::HyperMode::parse(s).context("--gp-hypers fixed|adapt")?;
     }
+    // ARD frees the per-dimension length-scales, which only exists under
+    // adaptation: bare --gp-ard implies --gp-hypers adapt, while an
+    // explicit "fixed" alongside it is a contradiction, not an override.
+    if opts.has("gp-ard") {
+        match cfg.bo.hypers.mode {
+            onestoptuner::runtime::HyperMode::Adapt { .. } => {}
+            onestoptuner::runtime::HyperMode::Fixed if opts.get("gp-hypers").is_some() => {
+                bail!("--gp-ard requires --gp-hypers adapt (fixed length-scales cannot adapt per dimension)")
+            }
+            onestoptuner::runtime::HyperMode::Fixed => {
+                cfg.bo.hypers.mode = onestoptuner::runtime::HyperMode::adapt();
+            }
+        }
+        cfg.bo.hypers.ard = true;
+    }
     if let Some(v) = opts.get("gp-adapt-every") {
         let every: usize = v.parse().context("--gp-adapt-every must be a positive integer")?;
         anyhow::ensure!(every >= 1, "--gp-adapt-every must be >= 1");
         // A cadence never implies adaptation: the fixed default stays
-        // bit-reproducible unless --gp-hypers adapt asks otherwise.
+        // bit-reproducible unless --gp-hypers adapt (or --gp-ard) asks
+        // otherwise.
         anyhow::ensure!(
             matches!(cfg.bo.hypers.mode, onestoptuner::runtime::HyperMode::Adapt { .. }),
             "--gp-adapt-every requires --gp-hypers adapt"
         );
         cfg.bo.hypers.mode = onestoptuner::runtime::HyperMode::Adapt { every };
+    }
+    // Warm-started hypers from a previous run's report: the dimension
+    // count must match the lasso-selected tuning subspace, which is only
+    // known after characterization — the tuner checks it and errors.
+    if let Some(spec) = opts.get("gp-init-hypers") {
+        let (ls, noise) = parse_init_hypers(spec)?;
+        cfg.bo.hypers.init = Some((ls, noise.unwrap_or(cfg.bo.hypers.sigma_n2)));
     }
 
     let out = pipeline::run_pipeline(bench, gc, metric, &algos, &cfg, &backend)?;
@@ -359,6 +385,39 @@ fn cmd_tune(opts: &Opts) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    // ARD relevance next to the lasso selection: the surrogate's own
+    // per-flag relevance signal, for cross-checking the paper's
+    // feature-selection stage.
+    let enc = onestoptuner::flags::FeatureEncoder::new(gc);
+    let tuned_names: Vec<&str> =
+        out.selection.selected.iter().map(|&p| enc.flag_name(p)).collect();
+    for o in &out.outcomes {
+        if let Some(rel) = &o.tune.ard_relevance {
+            let mut ranked: Vec<(&str, f64)> =
+                tuned_names.iter().copied().zip(rel.iter().copied()).collect();
+            ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut rt = TextTable::new(
+                format!("ARD relevance (1/lengthscale^2, normalized) — {}", o.algo.name()),
+                &["flag", "relevance"],
+            );
+            for (name, r) in ranked {
+                rt.row(vec![name.to_string(), format!("{r:.4}")]);
+            }
+            print!("{}", rt.render());
+        }
+        // Adapted hypers are worth echoing only when they could move:
+        // print them in the ready-to-paste warm-start format.
+        if matches!(cfg.bo.hypers.mode, onestoptuner::runtime::HyperMode::Adapt { .. }) {
+            if let Some((ls, s2n)) = &o.tune.gp_hypers {
+                let spec: Vec<String> = ls.iter().map(|l| format!("{l:.6}")).collect();
+                println!(
+                    "{} adapted GP hypers (reusable via --gp-init-hypers \"{}:{s2n:.6}\")",
+                    o.algo.name(),
+                    spec.join(",")
+                );
+            }
+        }
+    }
     if let Some(best) = out
         .outcomes
         .iter()
@@ -367,6 +426,38 @@ fn cmd_tune(opts: &Opts) -> Result<()> {
         println!("\nbest ({}) java args:\n{}", best.algo.name(), best.tune.best_config.to_java_args());
     }
     Ok(())
+}
+
+/// Parse `--gp-init-hypers "l1,l2,...,ld[:noise]"`: one positive
+/// length-scale per tuned dimension, optionally followed by the noise
+/// variance after a colon — the format `tune` prints after an adaptive
+/// run so hypers round-trip between jobs.
+fn parse_init_hypers(spec: &str) -> Result<(Vec<f64>, Option<f64>)> {
+    let (ls_part, noise_part) = match spec.split_once(':') {
+        Some((a, b)) => (a, Some(b)),
+        None => (spec, None),
+    };
+    let ls = ls_part
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .with_context(|| format!("bad length-scale '{s}' in --gp-init-hypers (want positive numbers)"))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    anyhow::ensure!(!ls.is_empty(), "--gp-init-hypers needs at least one length-scale");
+    let noise = noise_part
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .with_context(|| format!("bad noise variance '{s}' in --gp-init-hypers"))
+        })
+        .transpose()?;
+    Ok((ls, noise))
 }
 
 fn cmd_repro(opts: &Opts) -> Result<()> {

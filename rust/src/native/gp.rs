@@ -1,4 +1,6 @@
-//! Incremental GP surrogate — the native backend's `GpSession`.
+//! Incremental GP surrogate — the native backend's `GpSession`, under the
+//! **vector hyper model**: one RBF length-scale per tuning dimension
+//! (ln ℓ₁..ln ℓ_d) plus the noise variance (ln σₙ²).
 //!
 //! The one-shot `gp_ei` path rebuilds the full n×n RBF kernel and
 //! refactors it with an O(n³) Cholesky on *every* BO iteration, then
@@ -8,10 +10,10 @@
 //! * **Kernel cache** (`PackedLower`): appending an observation computes
 //!   one kernel row in O(nd); evicting one splices a row/column out in
 //!   O(n²).  Entries are pure functions of the point pair, so cached and
-//!   freshly-built kernels are the same f64s.  A parallel
-//!   squared-distance cache (hyper-parameter independent) lets the whole
-//!   kernel be re-materialized for *new* hyper-parameters in O(n²)
-//!   instead of O(n²d).
+//!   freshly-built kernels are the same f64s.  A parallel **per-dimension**
+//!   squared-distance cache (`PackedDims`, hyper-parameter independent)
+//!   lets the whole kernel be re-materialized for *any* trial length-scale
+//!   vector in O(n²d) instead of re-reading the training inputs.
 //! * **Cached Cholesky** (`cholesky_push`): row-wise Cholesky only reads
 //!   *prior* rows, so extending the factor by the new kernel row in O(n²)
 //!   is bit-identical to refactoring from scratch.  Eviction depends on
@@ -24,14 +26,20 @@
 //!   appends), amortized to one round per ~25% training-set growth
 //!   during a bulk feed (warm start — nothing reads the intermediate
 //!   hypers, so O(log n) rounds suffice), the session takes up to
-//!   [`MAX_ADAPT_STEPS`] backtracking
-//!   ascent steps on the log marginal likelihood over
-//!   (log length-scale, log noise), with the analytic gradient
+//!   [`MAX_ADAPT_STEPS`] backtracking ascent steps on the log marginal
+//!   likelihood, with the analytic gradient
 //!   `∂L/∂θ = ½ tr((ααᵀ − K⁻¹) ∂K/∂θ)` computed from the cached factor.
-//!   A step is accepted only if the marginal likelihood increases (the
-//!   trace is monotone by construction — `tests/gp_downdate.rs`), and the
-//!   session's kernel + factor are swapped once, at the end, only when
-//!   the hyper-parameters actually moved.
+//!   With `ard` **off** the length-scales move as one tied parameter —
+//!   ascent over (ln ℓ, ln σₙ²), exactly the scalar behaviour this module
+//!   grew out of; with `ard` **on** (Automatic Relevance Determination)
+//!   every dimension moves independently and the gradient grows from 2 to
+//!   d+1 entries (`∂K/∂(ln ℓⱼ) = K̃ ∘ D²ⱼ/ℓⱼ²`, zero diagonal;
+//!   `∂K/∂(ln σₙ²) = σₙ² I`), validated against central finite
+//!   differences in `tests/gp_ard.rs`.  A step is accepted only if the
+//!   marginal likelihood increases (the trace is monotone by construction
+//!   — `tests/gp_downdate.rs`, `tests/gp_ard.rs`), and the session's
+//!   kernel + factor are swapped once, at the end, only when the
+//!   hyper-parameters actually moved.
 //! * **Sharded acquisition**: candidates are scored in fixed
 //!   [`EI_BLOCK`]-wide blocks fanned out on an [`ExecPool`], results in
 //!   index order.  Within a block the forward solves are interleaved —
@@ -43,28 +51,42 @@
 //!   width — the same guarantee the exec subsystem gives the evaluation
 //!   paths (guarded by `tests/gp_incremental.rs`).
 //!
-//! **Equality contract** (the Fixed-vs-Adapt line the tests pin):
+//! **Equality contract** (the lines the tests pin):
 //! `HyperMode::Fixed` is bitwise-equal to the one-shot `gp_ei` reference
 //! at every pool width, including across evictions
-//! (`tests/gp_incremental.rs`).  `HyperMode::Adapt` keeps the same
+//! (`tests/gp_incremental.rs`) — for *any* length-scale vector.  With all
+//! per-dimension length-scales equal the kernel takes the **isotropic
+//! summation order** (squared distance summed across dimensions first,
+//! scaled once), which is the exact arithmetic of the scalar
+//! implementation this module replaced; with unequal entries both sides
+//! use the same weighted per-dimension sum, so session and one-shot stay
+//! bitwise twins either way.  `HyperMode::Adapt` keeps the same
 //! per-candidate scoring arithmetic but evicts via downdate — predictions
 //! after any eviction sequence match the rebuild path within 1e-8
 //! (`tests/gp_downdate.rs`) — and, once adaptation fires, intentionally
 //! diverges from the fixed-hyper reference (a better-fitting model, not a
-//! numerical error).
+//! numerical error).  ARD-off adaptation moves the length-scales as one
+//! tied parameter, so an Adapt session with `ard: false` walks the same
+//! 2-parameter ascent the scalar implementation did.
 //!
-//! `cargo bench --bench surrogate` times three scenarios — one-shot vs
-//! incremental acquisition (n∈{64,128,256}, m=1024; design target ≥5x at
-//! n=256), eviction-heavy downdate vs rebuild-per-eviction at the cap
-//! (downdate designed to win at n=256), and adaptation on/off overhead —
-//! and writes them to `BENCH_surrogate.json` at the repo root.
+//! After an ARD-adapted session, `1/ℓⱼ²` normalized over the tuned
+//! dimensions is a relevance signal (`featsel::ard_relevance`) the
+//! pipeline reports next to the lasso selection, closing the loop back to
+//! the paper's feature-selection stage.
+//!
+//! `cargo bench --bench surrogate` times four scenarios — one-shot vs
+//! incremental acquisition, eviction-heavy downdate vs rebuild, adaptation
+//! on/off overhead, and isotropic-adapt vs ARD-adapt at d∈{8,16} — and
+//! writes them to `BENCH_surrogate.json` at the repo root.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
-use super::linalg::{cholesky_downdate, cholesky_push, cholesky_rebuild, Mat, PackedLower};
-use super::ops::expected_improvement;
+use super::linalg::{
+    cholesky_downdate, cholesky_push, cholesky_rebuild, Mat, PackedDims, PackedLower,
+};
+use super::ops::{expected_improvement, iso_lengthscale};
 use crate::exec::ExecPool;
 use crate::runtime::{GpConfig, GpSession, HyperMode};
 use crate::util::stats::TargetScaler;
@@ -91,12 +113,39 @@ const LS_BOUNDS: (f64, f64) = (1e-2, 1e2);
 /// Noise-variance box (targets are standardized before fitting).
 const NOISE_BOUNDS: (f64, f64) = (1e-8, 1.0);
 
-/// Squared euclidean distance — the exact summation order `ops::rbf` and
-/// the old inline `kval` used, so kernels built from cached distances
-/// stay bitwise-equal to fresh builds.
+/// Per-dimension squared distances `out[j] = (a_j - b_j)²` — each entry is
+/// the exact term the old scalar `sqdist` accumulated, in the same
+/// dimension order, so summing `out` reproduces the scalar squared
+/// distance bitwise.
 #[inline]
-fn sqdist(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+fn sqdist_dims(a: &[f64], b: &[f64], out: &mut [f64]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        let d = x - y;
+        *o = d * d;
+    }
+}
+
+/// The RBF kernel value from per-dimension squared distances — the single
+/// home of the iso/weighted expression every cached-kernel path uses
+/// (`kval_from_dims` at the session's hypers, `kernel_at` at trial
+/// hypers), so the bitwise session-vs-one-shot contract cannot be broken
+/// by one copy drifting.  `iso` is `Some(1/(2ℓ²))` for all-equal
+/// length-scales (sum across dimensions first, scale once — the scalar
+/// implementation's exact arithmetic); `inv2` holds `1/(2ℓⱼ²)` per
+/// dimension otherwise.  `ops::rbf` mirrors this expression for the
+/// one-shot path; `tests/gp_incremental.rs` pins the two bitwise-equal.
+#[inline]
+fn kval(sq: &[f64], iso: Option<f64>, inv2: &[f64], sf2: f64) -> f64 {
+    match iso {
+        Some(inv) => {
+            let s: f64 = sq.iter().sum();
+            sf2 * (-s * inv).exp()
+        }
+        None => {
+            let e: f64 = sq.iter().zip(inv2).map(|(s, w)| s * w).sum();
+            sf2 * (-e).exp()
+        }
+    }
 }
 
 /// What one adaptation round did — returned by [`GpSurrogate::adapt`] so
@@ -121,9 +170,20 @@ impl AdaptOutcome {
 
 /// Stateful GP surrogate with cached kernel + Cholesky factor.
 pub struct GpSurrogate {
-    lengthscale: f64,
+    /// Per-dimension RBF length-scales (`lengthscales.len() == dim`).
+    lengthscales: Vec<f64>,
+    /// `1/(2ℓⱼ²)` per dimension — refreshed whenever the length-scales
+    /// move (the ARD kernel's per-dimension weights).
+    inv2: Vec<f64>,
+    /// `Some(1/(2ℓ²))` when every length-scale is (bitwise) equal: the
+    /// isotropic fast path, which sums the squared distance across
+    /// dimensions *before* scaling — the scalar implementation's exact
+    /// arithmetic, so ARD-off kernels stay bit-identical to it.
+    iso: Option<f64>,
     sigma_f2: f64,
     sigma_n2: f64,
+    /// Free per-dimension length-scales during adaptation; off = tied.
+    ard: bool,
     cap: usize,
     hyper: HyperMode,
     /// Training inputs, one flat row each.
@@ -134,11 +194,12 @@ pub struct GpSurrogate {
     k: PackedLower,
     /// Cholesky factor of `k`.
     l: PackedLower,
-    /// Squared-distance cache (zero diagonal) — hyper-parameter free, so
-    /// adaptation can rebuild `k` for trial hypers in O(n²).  Maintained
-    /// only under [`HyperMode::Adapt`]; `Fixed` sessions never read it,
-    /// so they skip its storage and splice costs entirely.
-    d2: PackedLower,
+    /// Per-dimension squared-distance cache (zero diagonal blocks) —
+    /// hyper-parameter free, so adaptation can rebuild `k` for any trial
+    /// length-scale vector in O(n²d).  Maintained only under
+    /// [`HyperMode::Adapt`]; `Fixed` sessions never read it, so they skip
+    /// its storage and splice costs entirely.
+    d2: PackedDims,
     /// Appends since the last adaptation round.
     appends: usize,
     /// Acquisitions served so far (atomic: `acquire` takes `&self` and
@@ -153,43 +214,47 @@ pub struct GpSurrogate {
 
 impl GpSurrogate {
     pub fn new(cfg: &GpConfig) -> GpSurrogate {
-        GpSurrogate {
-            lengthscale: cfg.lengthscale,
+        assert_eq!(
+            cfg.lengthscales.len(),
+            cfg.dim,
+            "GpConfig.lengthscales must carry one entry per dimension"
+        );
+        let mut gp = GpSurrogate {
+            lengthscales: Vec::new(),
+            inv2: Vec::new(),
+            iso: None,
             sigma_f2: cfg.sigma_f2,
             sigma_n2: cfg.sigma_n2,
+            ard: cfg.ard,
             cap: cfg.cap,
             hyper: cfg.hyper,
             x: Mat::with_row_capacity(cfg.cap, cfg.dim),
             y: Vec::new(),
             k: PackedLower::new(),
             l: PackedLower::new(),
-            d2: PackedLower::new(),
+            d2: PackedDims::new(cfg.dim),
             appends: 0,
             acquires: AtomicUsize::new(0),
             acquires_at_adapt: 0,
-        }
+        };
+        gp.set_lengthscales(cfg.lengthscales.clone());
+        gp
     }
 
-    /// Current (lengthscale, noise variance) — moves under
-    /// [`HyperMode::Adapt`], frozen otherwise.
-    pub fn hypers(&self) -> (f64, f64) {
-        (self.lengthscale, self.sigma_n2)
+    /// Install a new length-scale vector and refresh the derived kernel
+    /// weights (`inv2`, the isotropic fast-path flag).
+    fn set_lengthscales(&mut self, ls: Vec<f64>) {
+        self.inv2 = ls.iter().map(|l| 1.0 / (2.0 * l * l)).collect();
+        self.iso = iso_lengthscale(&ls).map(|l| 1.0 / (2.0 * l * l));
+        self.lengthscales = ls;
     }
 
-    /// k(a, b) — the same expression (same evaluation order) as
-    /// `ops::rbf`, so cached entries match a fresh kernel build bitwise.
+    /// Kernel value from per-dimension squared distances at the session's
+    /// current hypers — [`kval`]'s expression (and evaluation order), so
+    /// cached entries match a fresh kernel build bitwise.
     #[inline]
-    fn kval(&self, a: &[f64], b: &[f64]) -> f64 {
-        self.kval_from_sq(sqdist(a, b))
-    }
-
-    /// The kernel value for a cached squared distance — identical
-    /// arithmetic to `kval`, factored out so observe fills both caches
-    /// from one distance pass.
-    #[inline]
-    fn kval_from_sq(&self, sq: f64) -> f64 {
-        let inv = 1.0 / (2.0 * self.lengthscale * self.lengthscale);
-        self.sigma_f2 * (-sq * inv).exp()
+    fn kval_from_dims(&self, sq: &[f64]) -> f64 {
+        kval(sq, self.iso, &self.inv2, self.sigma_f2)
     }
 
     /// Log marginal likelihood of the *standardized* targets under the
@@ -204,17 +269,81 @@ impl GpSurrogate {
         log_marginal_of(&self.l, &ysc)
     }
 
+    /// Log marginal likelihood the session would have at *trial*
+    /// hyper-parameters, rebuilt from the distance cache
+    /// ([`HyperMode::Adapt`] sessions only — `Fixed` keeps no cache).
+    /// `None` when the
+    /// trial kernel is not positive definite, the session is empty, or no
+    /// cache exists.  The finite-difference half of the gradient
+    /// validation in `tests/gp_ard.rs`.
+    pub fn log_marginal_at(&self, lengthscales: &[f64], sigma_n2: f64) -> Option<f64> {
+        if self.y.is_empty() || self.d2.n() != self.y.len() {
+            return None;
+        }
+        let scaler = TargetScaler::fit(&self.y);
+        let ysc: Vec<f64> = self.y.iter().map(|&v| scaler.transform(v)).collect();
+        let (_, l) = self.kernel_at(lengthscales, sigma_n2)?;
+        Some(log_marginal_of(&l, &ysc))
+    }
+
+    /// Analytic ML gradient at the *current* hyper-parameters: the vector
+    /// `adapt` ascends — `[∂L/∂(ln ℓ₁) .. ∂L/∂(ln ℓ_d), ∂L/∂(ln σₙ²)]`
+    /// under ARD, `[∂L/∂(ln ℓ), ∂L/∂(ln σₙ²)]` tied otherwise.  Empty on
+    /// sessions with no distance cache (`Fixed`) or no data.  Exposed for
+    /// the finite-difference validation suite.
+    pub fn ml_gradient_now(&self) -> Vec<f64> {
+        if self.y.is_empty() || self.d2.n() != self.y.len() {
+            return Vec::new();
+        }
+        let scaler = TargetScaler::fit(&self.y);
+        let ysc: Vec<f64> = self.y.iter().map(|&v| scaler.transform(v)).collect();
+        self.ml_gradient(&self.k, &self.l, &ysc, &self.lengthscales, self.sigma_n2)
+    }
+
+    /// Cached per-dimension squared distances for the pair `(i, j)`
+    /// (`j <= i`; [`HyperMode::Adapt`] sessions only) — exposed so the
+    /// property suite can check the cache against direct recomputation
+    /// after append/evict churn.
+    pub fn cached_sqdists(&self, i: usize, j: usize) -> &[f64] {
+        self.d2.at(i, j)
+    }
+
+    /// Training input row `i`.
+    pub fn point(&self, i: usize) -> &[f64] {
+        self.x.row(i)
+    }
+
     /// Rebuild the packed kernel (noise on the diagonal) and its factor
-    /// at trial hyper-parameters, from the distance cache.  `None` if the
-    /// trial kernel is not positive definite (trial rejected).
-    fn kernel_at(&self, ls: f64, s2n: f64) -> Option<(PackedLower, PackedLower)> {
-        let inv = 1.0 / (2.0 * ls * ls);
+    /// at trial hyper-parameters, from the per-dimension distance cache.
+    /// All-equal trial length-scales take the isotropic summation order
+    /// (bitwise the scalar arithmetic); unequal ones the weighted sum.
+    /// `None` if the trial kernel is not positive definite (trial
+    /// rejected).
+    fn kernel_at(&self, ls: &[f64], s2n: f64) -> Option<(PackedLower, PackedLower)> {
+        // A short slice would silently truncate dimensions out of the
+        // weighted sum (or quietly go isotropic for len 1) and return a
+        // plausible-looking likelihood for the wrong model.
+        assert_eq!(
+            ls.len(),
+            self.d2.dims(),
+            "trial length-scales must match the session dimension"
+        );
         let n = self.y.len();
+        let iso = iso_lengthscale(ls).map(|l| 1.0 / (2.0 * l * l));
+        let inv2: Vec<f64> = match iso {
+            Some(_) => Vec::new(),
+            None => ls.iter().map(|l| 1.0 / (2.0 * l * l)).collect(),
+        };
         let mut k = PackedLower::new();
+        let mut row: Vec<f64> = Vec::with_capacity(n);
         for i in 0..n {
-            let mut row: Vec<f64> =
-                self.d2.row(i).iter().map(|&sq| self.sigma_f2 * (-sq * inv).exp()).collect();
-            row[i] += s2n; // d2 diagonal is 0, so row[i] was exactly sigma_f2
+            row.clear();
+            for j in 0..=i {
+                row.push(kval(self.d2.at(i, j), iso, &inv2, self.sigma_f2));
+            }
+            // d2 diagonal blocks are all-zero, so row[i] was exactly
+            // sigma_f2 before the noise.
+            row[i] += s2n;
             k.push_row(&row);
         }
         let mut l = PackedLower::new();
@@ -225,21 +354,25 @@ impl GpSurrogate {
         }
     }
 
-    /// Analytic gradient of the log marginal likelihood w.r.t.
-    /// (log lengthscale, log noise variance), from a factor of `k`:
-    /// `∂L/∂θ = ½ Σᵢⱼ (αᵢαⱼ − K⁻¹ᵢⱼ) ∂Kᵢⱼ/∂θ`, with
-    /// `∂K/∂(ln ℓ) = K̃ ∘ D²/ℓ²` (zero diagonal) and
-    /// `∂K/∂(ln σₙ²) = σₙ² I`.  Cost O(n³/2) for the explicit `K⁻¹`,
-    /// paid only once per adaptation round per accepted step.
+    /// Analytic gradient of the log marginal likelihood from a factor of
+    /// `k`: `∂L/∂θ = ½ Σᵢⱼ (αᵢαⱼ − K⁻¹ᵢⱼ) ∂Kᵢⱼ/∂θ`, with
+    /// `∂K/∂(ln ℓⱼ) = K̃ ∘ D²ⱼ/ℓⱼ²` (zero diagonal) and
+    /// `∂K/∂(ln σₙ²) = σₙ² I`.  Returns d+1 entries under ARD
+    /// (ln ℓ₁..ln ℓ_d, ln σₙ² last) or 2 tied entries (the common
+    /// log-shift `τ` with ℓⱼ ∝ e^τ — whose gradient is the sum of the
+    /// per-dimension ones — then ln σₙ²).  Cost O(n³/2) for the explicit
+    /// `K⁻¹` plus O(n²d) for the length-scale traces, paid only once per
+    /// accepted adaptation step.
     fn ml_gradient(
         &self,
         k: &PackedLower,
         l: &PackedLower,
         ysc: &[f64],
-        ls: f64,
+        ls: &[f64],
         s2n: f64,
-    ) -> (f64, f64) {
+    ) -> Vec<f64> {
         let n = k.n();
+        let d = ls.len();
         let alpha = l.solve_lower_t(&l.solve_lower(ysc));
         // W = L⁻¹ as a dense lower triangle: column j solves L w = e_j.
         let mut w = vec![0.0; n * n];
@@ -262,29 +395,69 @@ impl GpSurrogate {
             }
             s
         };
-        let mut g_ls = 0.0;
-        for i in 0..n {
-            for j in 0..i {
-                // Off-diagonal cache entries are pure kernel values (noise
-                // only sits on the diagonal); the symmetric pair halves
-                // cancel the ½ in front of the trace.
-                g_ls += (alpha[i] * alpha[j] - kinv(i, j)) * k.at(i, j) * self.d2.at(i, j);
+        let mut g = if self.ard { vec![0.0; d + 1] } else { vec![0.0; 2] };
+        if self.ard {
+            // Off-diagonal cache entries are pure kernel values (noise
+            // only sits on the diagonal); the symmetric pair halves
+            // cancel the ½ in front of the trace.
+            for i in 0..n {
+                for j in 0..i {
+                    let coeff = (alpha[i] * alpha[j] - kinv(i, j)) * k.at(i, j);
+                    let sq = self.d2.at(i, j);
+                    for (gt, &s) in g[..d].iter_mut().zip(sq) {
+                        *gt += coeff * s;
+                    }
+                }
             }
+            for (gt, &lsj) in g[..d].iter_mut().zip(ls) {
+                *gt /= lsj * lsj;
+            }
+        } else {
+            // Tied length-scale: the gradient of the common log-shift is
+            // the sum of the per-dimension gradients.  With all entries
+            // equal, summing each pair's distance block first and scaling
+            // once reproduces the scalar implementation's arithmetic
+            // bitwise; unequal (warm-started) entries take the weighted
+            // per-pair sum instead.
+            let mut g_ls = 0.0;
+            match iso_lengthscale(ls) {
+                Some(l0) => {
+                    for i in 0..n {
+                        for j in 0..i {
+                            let s: f64 = self.d2.at(i, j).iter().sum();
+                            g_ls += (alpha[i] * alpha[j] - kinv(i, j)) * k.at(i, j) * s;
+                        }
+                    }
+                    g_ls /= l0 * l0;
+                }
+                None => {
+                    let inv: Vec<f64> = ls.iter().map(|l| 1.0 / (l * l)).collect();
+                    for i in 0..n {
+                        for j in 0..i {
+                            let s: f64 =
+                                self.d2.at(i, j).iter().zip(&inv).map(|(q, w)| q * w).sum();
+                            g_ls += (alpha[i] * alpha[j] - kinv(i, j)) * k.at(i, j) * s;
+                        }
+                    }
+                }
+            }
+            g[0] = g_ls;
         }
-        g_ls /= ls * ls;
         let mut g_noise = 0.0;
         for (i, a) in alpha.iter().enumerate() {
             g_noise += a * a - kinv(i, i);
         }
         g_noise *= 0.5 * s2n;
-        (g_ls, g_noise)
+        *g.last_mut().expect("gradient has at least the noise entry") = g_noise;
+        g
     }
 
     /// One adaptation round: up to [`MAX_ADAPT_STEPS`] backtracking ascent
-    /// steps on the log marginal likelihood over (ln ℓ, ln σₙ²), each
-    /// accepted only if the likelihood strictly increases.  The session
-    /// commits the final kernel + factor once, at the end, and only when
-    /// the hyper-parameters actually moved; a round that accepts nothing
+    /// steps on the log marginal likelihood — over (ln ℓ₁..ln ℓ_d, ln σₙ²)
+    /// under ARD, over the tied (ln ℓ, ln σₙ²) otherwise — each accepted
+    /// only if the likelihood strictly increases.  The session commits the
+    /// final kernel + factor once, at the end, and only when the
+    /// hyper-parameters actually moved; a round that accepts nothing
     /// leaves the session bit-for-bit untouched.  No-op below
     /// [`MIN_ADAPT_OBS`] observations, and on [`HyperMode::Fixed`]
     /// sessions (which keep no distance cache to rebuild trial kernels
@@ -297,8 +470,9 @@ impl GpSurrogate {
         let scaler = TargetScaler::fit(&self.y);
         let ysc: Vec<f64> = self.y.iter().map(|&v| scaler.transform(v)).collect();
 
-        let (ls0, s2n0) = (self.lengthscale, self.sigma_n2);
-        let mut ls = ls0;
+        let ls0 = self.lengthscales.clone();
+        let s2n0 = self.sigma_n2;
+        let mut ls = ls0.clone();
         let mut s2n = s2n0;
         let mut k = self.k.clone();
         let mut l = self.l.clone();
@@ -307,22 +481,40 @@ impl GpSurrogate {
         let mut steps = 0;
 
         while steps < MAX_ADAPT_STEPS {
-            let (g_ls, g_noise) = self.ml_gradient(&k, &l, &ysc, ls, s2n);
-            let norm = g_ls.hypot(g_noise);
+            let g = self.ml_gradient(&k, &l, &ysc, &ls, s2n);
+            let norm = if g.len() == 2 {
+                g[0].hypot(g[1])
+            } else {
+                g.iter().map(|v| v * v).sum::<f64>().sqrt()
+            };
             if !norm.is_finite() || norm < 1e-10 {
                 break;
             }
-            let (dir_ls, dir_noise) = (g_ls / norm, g_noise / norm);
+            let dir: Vec<f64> = g.iter().map(|v| v / norm).collect();
+            let dir_noise = *dir.last().expect("gradient has a noise entry");
             let mut accepted = false;
             let mut step = ADAPT_STEP0;
             for _ in 0..ADAPT_BACKTRACKS {
-                let t_ls = (ls.ln() + step * dir_ls).exp().clamp(LS_BOUNDS.0, LS_BOUNDS.1);
+                let t_ls: Vec<f64> = if self.ard {
+                    ls.iter()
+                        .zip(&dir[..dir.len() - 1])
+                        .map(|(l, d)| {
+                            (l.ln() + step * d).exp().clamp(LS_BOUNDS.0, LS_BOUNDS.1)
+                        })
+                        .collect()
+                } else {
+                    ls.iter()
+                        .map(|l| {
+                            (l.ln() + step * dir[0]).exp().clamp(LS_BOUNDS.0, LS_BOUNDS.1)
+                        })
+                        .collect()
+                };
                 let t_s2n =
                     (s2n.ln() + step * dir_noise).exp().clamp(NOISE_BOUNDS.0, NOISE_BOUNDS.1);
                 if t_ls == ls && t_s2n == s2n {
                     break; // clamped into a no-op: the box is binding
                 }
-                if let Some((tk, tl)) = self.kernel_at(t_ls, t_s2n) {
+                if let Some((tk, tl)) = self.kernel_at(&t_ls, t_s2n) {
                     let t_ml = log_marginal_of(&tl, &ysc);
                     if t_ml.is_finite() && t_ml > ml {
                         (ls, s2n, k, l, ml) = (t_ls, t_s2n, tk, tl, t_ml);
@@ -341,7 +533,7 @@ impl GpSurrogate {
 
         let moved = ls != ls0 || s2n != s2n0;
         if moved {
-            self.lengthscale = ls;
+            self.set_lengthscales(ls);
             self.sigma_n2 = s2n;
             self.k = k;
             self.l = l;
@@ -355,12 +547,14 @@ impl GpSurrogate {
     fn score_block(&self, cands: &[Vec<f64>], alpha: &[f64], best_sc: f64) -> Vec<(f64, f64, f64)> {
         let n = self.y.len();
         let bs = cands.len();
+        let mut sq = vec![0.0; self.x.cols];
         // Candidate-major kernel rows k(c, x_j).
         let mut kc = vec![0.0; bs * n];
         for (c, cand) in cands.iter().enumerate() {
             let row = &mut kc[c * n..(c + 1) * n];
             for (j, o) in row.iter_mut().enumerate() {
-                *o = self.kval(cand, self.x.row(j));
+                sqdist_dims(cand, self.x.row(j), &mut sq);
+                *o = self.kval_from_dims(&sq);
             }
         }
         // Interleaved forward solve L v = kc^T, v stored k-major so the
@@ -419,6 +613,12 @@ impl GpSession for GpSurrogate {
         &self.y
     }
 
+    /// Current (per-dimension length-scales, noise variance) — moves
+    /// under [`HyperMode::Adapt`], frozen otherwise.
+    fn hypers(&self) -> (Vec<f64>, f64) {
+        (self.lengthscales.clone(), self.sigma_n2)
+    }
+
     fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
         anyhow::ensure!(
             x.len() == self.x.cols,
@@ -428,24 +628,26 @@ impl GpSession for GpSurrogate {
         );
         anyhow::ensure!(self.y.len() < self.cap, "GP training rows at cap {}", self.cap);
         let n = self.y.len();
-        // One distance pass fills both caches (the distance cache only
-        // under Adapt — Fixed never reads it); the kernel values are the
-        // same f64s the old direct kval produced.
+        let d = self.x.cols;
+        // One distance pass fills both caches (the per-dimension distance
+        // cache only under Adapt — Fixed never reads it); the kernel
+        // values are the same f64s the scalar kval produced.
         let adaptive = matches!(self.hyper, HyperMode::Adapt { .. });
-        let mut drow = Vec::with_capacity(if adaptive { n + 1 } else { 0 });
+        let mut drow = Vec::with_capacity(if adaptive { (n + 1) * d } else { 0 });
         let mut krow = Vec::with_capacity(n + 1);
+        let mut sq = vec![0.0; d];
         for j in 0..n {
-            let sq = sqdist(x, self.x.row(j));
+            sqdist_dims(x, self.x.row(j), &mut sq);
             if adaptive {
-                drow.push(sq);
+                drow.extend_from_slice(&sq);
             }
-            krow.push(self.kval_from_sq(sq));
+            krow.push(self.kval_from_dims(&sq));
         }
-        let sq0 = sqdist(x, x);
+        sqdist_dims(x, x, &mut sq);
         if adaptive {
-            drow.push(sq0);
+            drow.extend_from_slice(&sq);
         }
-        krow.push(self.kval_from_sq(sq0) + self.sigma_n2);
+        krow.push(self.kval_from_dims(&sq) + self.sigma_n2);
         anyhow::ensure!(
             cholesky_push(&mut self.l, &krow),
             "GP kernel matrix must be PD (jitter too small?)"
@@ -500,7 +702,8 @@ impl GpSession for GpSurrogate {
             HyperMode::Adapt { .. } => {
                 // O(n²) rank-1 downdate of the cached factor: infallible
                 // on a valid factor (positive Givens pivots), equal to
-                // the rebuild up to rotation round-off.
+                // the rebuild up to rotation round-off.  The distance
+                // cache splices the evicted pair blocks out in O(n²d).
                 self.k.remove(i);
                 self.d2.remove(i);
                 cholesky_downdate(&mut self.l, i);
@@ -553,14 +756,7 @@ mod tests {
     }
 
     fn cfg(d: usize) -> GpConfig {
-        GpConfig {
-            dim: d,
-            lengthscale: 0.8,
-            sigma_f2: 1.0,
-            sigma_n2: 0.01,
-            cap: 64,
-            hyper: HyperMode::Fixed,
-        }
+        GpConfig::isotropic(d, 0.8, 1.0, 0.01, 64, HyperMode::Fixed)
     }
 
     /// The incremental surrogate must reproduce the one-shot `gp_ei`
@@ -588,7 +784,43 @@ mod tests {
             &xs,
             &ysc,
             &xc,
-            c.lengthscale,
+            &c.lengthscales,
+            c.sigma_f2,
+            c.sigma_n2,
+            scaler.transform(best),
+        );
+        assert_eq!(bits(&ei), bits(&e2));
+        assert_eq!(bits(&mu), bits(&m2));
+        assert_eq!(bits(&sigma), bits(&s2));
+    }
+
+    /// The same bitwise session-vs-one-shot identity with *unequal*
+    /// per-dimension length-scales: both sides must use the same weighted
+    /// per-dimension summation.
+    #[test]
+    fn incremental_matches_one_shot_bitwise_under_ard_lengthscales() {
+        let mut rng = Pcg::new(27);
+        let d = 4;
+        let mut c = cfg(d);
+        c.lengthscales = vec![0.3, 0.9, 2.0, 0.55];
+        let xs = rand_rows(26, d, &mut rng);
+        let ys: Vec<f64> = xs.iter().map(|r| (r[0] * 5.0).sin() - r[3]).collect();
+        let xc = rand_rows(90, d, &mut rng);
+
+        let mut gp = GpSurrogate::new(&c);
+        for (x, &y) in xs.iter().zip(&ys) {
+            gp.observe(x, y).unwrap();
+        }
+        let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let (ei, mu, sigma) = gp.acquire(&ExecPool::serial(), &xc, best).unwrap();
+
+        let scaler = TargetScaler::fit(&ys);
+        let ysc: Vec<f64> = ys.iter().map(|&v| scaler.transform(v)).collect();
+        let (e2, m2, s2) = gp_ei(
+            &xs,
+            &ysc,
+            &xc,
+            &c.lengthscales,
             c.sigma_f2,
             c.sigma_n2,
             scaler.transform(best),
@@ -686,7 +918,7 @@ mod tests {
         let out = gp.adapt();
         assert_eq!(out.steps, 0);
         assert!(!out.moved);
-        assert_eq!(gp.hypers(), (c.lengthscale, c.sigma_n2));
+        assert_eq!(gp.hypers(), (c.lengthscales.clone(), c.sigma_n2));
     }
 
     #[test]
@@ -699,13 +931,13 @@ mod tests {
             let y = (x[0] * 9.0).sin();
             gp.observe(&x, y).unwrap();
         }
-        assert_eq!(gp.hypers(), (c.lengthscale, c.sigma_n2));
+        assert_eq!(gp.hypers(), (c.lengthscales.clone(), c.sigma_n2));
         // Even an explicit adapt() call is a no-op on a Fixed session:
         // it keeps no distance cache, and Fixed means fixed.
         let out = gp.adapt();
         assert!(!out.moved);
         assert_eq!(out.steps, 0);
-        assert_eq!(gp.hypers(), (c.lengthscale, c.sigma_n2));
+        assert_eq!(gp.hypers(), (c.lengthscales.clone(), c.sigma_n2));
     }
 
     #[test]
@@ -720,6 +952,27 @@ mod tests {
         }
         assert!(gp.observe(&[0.5, 0.5], 9.0).is_err());
         assert!(gp.observe(&[0.5], 9.0).is_err(), "dim mismatch must error");
+    }
+
+    /// ARD-off adaptation keeps the length-scales tied: after any number
+    /// of accepted steps every per-dimension entry is still (bitwise) the
+    /// same value.
+    #[test]
+    fn tied_adaptation_keeps_lengthscales_equal() {
+        let d = 3;
+        let mut c = cfg(d);
+        c.hyper = HyperMode::Adapt { every: usize::MAX };
+        c.lengthscales = vec![6.0; d]; // grossly long: a step must land
+        let mut gp = GpSurrogate::new(&c);
+        let mut rng = Pcg::new(28);
+        for x in rand_rows(24, d, &mut rng) {
+            let y = (x[0] * 6.0).sin() + x[1];
+            gp.observe(&x, y).unwrap();
+        }
+        let out = gp.adapt();
+        assert!(out.steps >= 1);
+        let (ls, _) = gp.hypers();
+        assert!(ls.windows(2).all(|w| w[0] == w[1]), "tied scales split: {ls:?}");
     }
 
     fn bits(v: &[f64]) -> Vec<u64> {

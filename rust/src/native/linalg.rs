@@ -20,6 +20,12 @@
 //! * [`cholesky_rebuild`] — the O(n³) from-scratch fallback, used by
 //!   `HyperMode::Fixed` sessions (bitwise reproducibility contract) and
 //!   whenever the kernel hyper-parameters change.
+//!
+//! [`PackedDims`] is the factor caches' sibling for the ARD surrogate: a
+//! packed lower-triangular store holding a d-vector per pair (the
+//! per-dimension squared distances), so trial kernels under any
+//! per-dimension length-scale weighting rebuild in O(n²d) without
+//! re-reading the training inputs.
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -241,6 +247,85 @@ impl PackedLower {
             x[i] = sum / self.at(i, i);
         }
         x
+    }
+}
+
+/// Packed lower-triangular store with a fixed-length f64 block per entry:
+/// entry `(i, j)` (`j <= i`) occupies `data[(i(i+1)/2 + j)·d .. +d]`.
+///
+/// Backs the GP surrogate's **per-dimension** squared-distance cache: the
+/// ARD kernel weights every dimension's squared distance by its own
+/// length-scale, so trial kernels at new hyper-parameters need the d
+/// per-dimension components of every pair — not just their sum — to stay
+/// O(n²d) with no re-reading of the training inputs.  Append is a plain
+/// `extend` (one `(n+1)·d` row), eviction splices the row and column's
+/// blocks out of every later row in place, mirroring [`PackedLower`].
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PackedDims {
+    n: usize,
+    d: usize,
+    data: Vec<f64>,
+}
+
+impl PackedDims {
+    pub fn new(d: usize) -> PackedDims {
+        PackedDims { n: 0, d, data: Vec::new() }
+    }
+
+    #[inline]
+    fn off(i: usize) -> usize {
+        i * (i + 1) / 2
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Values per entry (the input dimension of the cached pairs).
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// The d-block of entry `(i, j)` (`j <= i`).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> &[f64] {
+        debug_assert!(j <= i && i < self.n);
+        let o = (Self::off(i) + j) * self.d;
+        &self.data[o..o + self.d]
+    }
+
+    /// Append row `n`: `row` holds the `n + 1` entries `(n, 0..=n)`
+    /// flattened in column order, d values each.
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), (self.n + 1) * self.d);
+        self.data.extend_from_slice(row);
+        self.n += 1;
+    }
+
+    /// Remove row and column `idx` (`Vec::remove` semantics: the order of
+    /// the remaining indices is preserved).
+    pub fn remove(&mut self, idx: usize) {
+        assert!(idx < self.n);
+        let d = self.d;
+        let mut w = Self::off(idx) * d;
+        for r in idx + 1..self.n {
+            let start = Self::off(r) * d;
+            for c in 0..=r {
+                if c == idx {
+                    continue;
+                }
+                let src = start + c * d;
+                self.data.copy_within(src..src + d, w);
+                w += d;
+            }
+        }
+        self.n -= 1;
+        self.data.truncate(w);
+    }
+
+    pub fn clear(&mut self) {
+        self.n = 0;
+        self.data.clear();
     }
 }
 
@@ -566,6 +651,55 @@ mod tests {
         for i in 0..9 {
             for j in 0..=i {
                 assert_eq!(l.at(i, j).to_bits(), dense.at(i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dims_push_at_roundtrip() {
+        let d = 3;
+        let mut p = PackedDims::new(d);
+        // entry (i, j) block value = 100*i + 10*j + dim index
+        for i in 0..4usize {
+            let mut row = Vec::new();
+            for j in 0..=i {
+                for k in 0..d {
+                    row.push((100 * i + 10 * j + k) as f64);
+                }
+            }
+            p.push_row(&row);
+        }
+        assert_eq!(p.n(), 4);
+        assert_eq!(p.dims(), d);
+        for i in 0..4usize {
+            for j in 0..=i {
+                let want: Vec<f64> = (0..d).map(|k| (100 * i + 10 * j + k) as f64).collect();
+                assert_eq!(p.at(i, j), &want[..], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dims_remove_matches_index_relabelling() {
+        let d = 2;
+        for idx in [0usize, 2, 4] {
+            let mut p = PackedDims::new(d);
+            for i in 0..5usize {
+                let mut row = Vec::new();
+                for j in 0..=i {
+                    row.push((10 * i + j) as f64);
+                    row.push(-((10 * i + j) as f64));
+                }
+                p.push_row(&row);
+            }
+            p.remove(idx);
+            assert_eq!(p.n(), 4);
+            let keep: Vec<usize> = (0..5).filter(|&r| r != idx).collect();
+            for (i, &ri) in keep.iter().enumerate() {
+                for (j, &rj) in keep.iter().take(i + 1).enumerate() {
+                    let v = (10 * ri + rj) as f64;
+                    assert_eq!(p.at(i, j), &[v, -v][..], "idx {idx} ({i},{j})");
+                }
             }
         }
     }

@@ -118,44 +118,82 @@ pub fn lasso_fit(x: &[Vec<f64>], y: &[f64], lam: f64, iters: usize) -> Vec<f64> 
     w
 }
 
-/// RBF kernel row block: K[i][j] = sf2 exp(-||a_i-b_j||^2/(2 l^2)),
-/// returned as one flat `Mat` (one contiguous row per `a` row — no
-/// per-row allocations on the kernel hot path).
-pub fn rbf(a: &[Vec<f64>], b: &[Vec<f64>], lengthscale: f64, sf2: f64) -> Mat {
-    let inv = 1.0 / (2.0 * lengthscale * lengthscale);
+/// `Some(ℓ)` when every per-dimension length-scale is (bitwise) the same
+/// — the isotropic case.  Isotropic kernels keep the scalar summation
+/// order (sum the squared distance across dimensions first, scale once),
+/// so an ARD code path with all-equal length-scales stays bit-identical
+/// to the pre-ARD scalar implementation; `None` selects the weighted
+/// per-dimension sum.
+pub fn iso_lengthscale(lengthscales: &[f64]) -> Option<f64> {
+    match lengthscales.split_first() {
+        Some((&l0, rest)) if rest.iter().all(|&l| l == l0) => Some(l0),
+        _ => None,
+    }
+}
+
+/// RBF kernel row block under per-dimension (ARD) length-scales:
+/// `K[i][j] = sf2 exp(-½ Σ_k (a_ik - b_jk)²/ℓ_k²)`, returned as one flat
+/// `Mat` (one contiguous row per `a` row — no per-row allocations on the
+/// kernel hot path).  All-equal length-scales take the isotropic path —
+/// `sf2 exp(-||a_i - b_j||²/(2ℓ²))` with the squared distance summed
+/// across dimensions *before* scaling — which is bit-identical to the old
+/// scalar-lengthscale kernel.
+pub fn rbf(a: &[Vec<f64>], b: &[Vec<f64>], lengthscales: &[f64], sf2: f64) -> Mat {
     let mut k = Mat::with_row_capacity(a.len(), b.len());
     let mut row = vec![0.0; b.len()];
-    for ai in a {
-        for (o, bj) in row.iter_mut().zip(b) {
-            let sq: f64 = ai.iter().zip(bj).map(|(x, y)| (x - y) * (x - y)).sum();
-            *o = sf2 * (-sq * inv).exp();
+    match iso_lengthscale(lengthscales) {
+        Some(l) => {
+            let inv = 1.0 / (2.0 * l * l);
+            for ai in a {
+                for (o, bj) in row.iter_mut().zip(b) {
+                    let sq: f64 =
+                        ai.iter().zip(bj).map(|(x, y)| (x - y) * (x - y)).sum();
+                    *o = sf2 * (-sq * inv).exp();
+                }
+                k.push_row(&row);
+            }
         }
-        k.push_row(&row);
+        None => {
+            let inv2: Vec<f64> =
+                lengthscales.iter().map(|l| 1.0 / (2.0 * l * l)).collect();
+            for ai in a {
+                for (o, bj) in row.iter_mut().zip(b) {
+                    let e: f64 = ai
+                        .iter()
+                        .zip(bj)
+                        .zip(&inv2)
+                        .map(|((x, y), w)| (x - y) * (x - y) * w)
+                        .sum();
+                    *o = sf2 * (-e).exp();
+                }
+                k.push_row(&row);
+            }
+        }
     }
     k
 }
 
-/// GP posterior + EI at candidates (mirror of gp_ei):
-/// returns (ei, mu, sigma) per candidate.
+/// GP posterior + EI at candidates (mirror of gp_ei) under per-dimension
+/// length-scales: returns (ei, mu, sigma) per candidate.
 pub fn gp_ei(
     xtr: &[Vec<f64>],
     ytr: &[f64],
     xc: &[Vec<f64>],
-    lengthscale: f64,
+    lengthscales: &[f64],
     sigma_f2: f64,
     sigma_n2: f64,
     best: f64,
 ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
     let n = xtr.len();
     assert_eq!(ytr.len(), n);
-    let mut km = rbf(xtr, xtr, lengthscale, sigma_f2);
+    let mut km = rbf(xtr, xtr, lengthscales, sigma_f2);
     for i in 0..n {
         *km.at_mut(i, i) += sigma_n2;
     }
     let l = cholesky(&km).expect("GP kernel matrix must be PD (jitter too small?)");
     let alpha = solve_lower_t(&l, &solve_lower(&l, ytr));
 
-    let kc = rbf(xc, xtr, lengthscale, sigma_f2);
+    let kc = rbf(xc, xtr, lengthscales, sigma_f2);
     let mut mu = Vec::with_capacity(xc.len());
     let mut sigma = Vec::with_capacity(xc.len());
     let mut ei = Vec::with_capacity(xc.len());
@@ -258,7 +296,7 @@ mod tests {
         let x = rand_rows(25, 4, &mut rng);
         let y: Vec<f64> = x.iter().map(|r| (r[0] * 3.0).sin() + r[1]).collect();
         // predicting at the training points themselves
-        let (_, mu_tr, sig_tr) = gp_ei(&x, &y, &x, 1.0, 1.0, 1e-6, 0.0);
+        let (_, mu_tr, sig_tr) = gp_ei(&x, &y, &x, &[1.0; 4], 1.0, 1e-6, 0.0);
         for (m, yi) in mu_tr.iter().zip(&y) {
             assert!((m - yi).abs() < 1e-3, "{m} vs {yi}");
         }
@@ -270,7 +308,7 @@ mod tests {
         let xtr = vec![vec![0.0], vec![0.1], vec![0.2]];
         let ytr = vec![0.0, 0.1, 0.2];
         let xc = vec![vec![0.1], vec![5.0]];
-        let (_, _, sigma) = gp_ei(&xtr, &ytr, &xc, 0.5, 1.0, 1e-4, 0.0);
+        let (_, _, sigma) = gp_ei(&xtr, &ytr, &xc, &[0.5], 1.0, 1e-4, 0.0);
         assert!(sigma[1] > sigma[0] * 5.0, "{sigma:?}");
     }
 
@@ -278,9 +316,30 @@ mod tests {
     fn rbf_diag_is_sf2() {
         let mut rng = Pcg::new(10);
         let x = rand_rows(5, 3, &mut rng);
-        let k = rbf(&x, &x, 1.0, 2.5);
+        let k = rbf(&x, &x, &[1.0; 3], 2.5);
         for i in 0..5 {
             assert!((k.at(i, i) - 2.5).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn iso_lengthscale_detects_equal_and_unequal() {
+        assert_eq!(iso_lengthscale(&[0.7, 0.7, 0.7]), Some(0.7));
+        assert_eq!(iso_lengthscale(&[0.7]), Some(0.7));
+        assert_eq!(iso_lengthscale(&[0.7, 0.8]), None);
+        assert_eq!(iso_lengthscale(&[]), None);
+    }
+
+    /// ARD kernel with a large length-scale on one dimension must ignore
+    /// differences along it; the isotropic path must match the weighted
+    /// path bitwise when the weights coincide.
+    #[test]
+    fn rbf_ard_downweights_long_lengthscale_dims() {
+        let a = vec![vec![0.0, 0.0]];
+        let near = vec![vec![0.0, 5.0]]; // far only along the long dim
+        let k_iso = rbf(&a, &near, &[1.0, 1.0], 1.0);
+        let k_ard = rbf(&a, &near, &[1.0, 1e3], 1.0);
+        assert!(k_iso.at(0, 0) < 1e-5, "{}", k_iso.at(0, 0));
+        assert!(k_ard.at(0, 0) > 0.999, "{}", k_ard.at(0, 0));
     }
 }

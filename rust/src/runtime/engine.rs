@@ -205,11 +205,22 @@ impl MlBackend for XlaEngine {
         xtr: &[Vec<f64>],
         ytr: &[f64],
         xc: &[Vec<f64>],
-        lengthscale: f64,
+        lengthscales: &[f64],
         sigma_f2: f64,
         sigma_n2: f64,
         best: f64,
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        // The AOT artifact's theta vector carries one length-scale: only
+        // the isotropic (all-equal) case maps onto it.  ARD length-scales
+        // never reach here — adaptation is native-session-only
+        // (`supports_hyper_adaptation` is false for this engine).
+        let lengthscale = crate::native::ops::iso_lengthscale(lengthscales)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "the XLA gp_ei artifact is isotropic: per-dimension (ARD) \
+                     length-scales require the native backend"
+                )
+            })?;
         let n_live = xtr.len();
         anyhow::ensure!(n_live <= N_TRAIN, "GP training rows {n_live} > {N_TRAIN}");
         anyhow::ensure!(n_live == ytr.len());

@@ -56,7 +56,7 @@ impl MlBackend for XlaEngine {
         _xtr: &[Vec<f64>],
         _ytr: &[f64],
         _xc: &[Vec<f64>],
-        _lengthscale: f64,
+        _lengthscales: &[f64],
         _sigma_f2: f64,
         _sigma_n2: f64,
         _best: f64,

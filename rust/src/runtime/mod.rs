@@ -19,19 +19,33 @@ use anyhow::Result;
 
 use crate::exec::ExecPool;
 
-/// Hyper-parameter policy of a GP session — the Fixed-vs-Adapt contract:
+/// Hyper-parameter policy of a GP session — the Fixed-vs-Adapt contract
+/// under the **vector hyper model** (`GpConfig.lengthscales` holds one RBF
+/// length-scale per tuning dimension; ln ℓ₁..ln ℓ_d and ln σₙ² are the
+/// d+1 free parameters adaptation can move):
 ///
 /// * [`HyperMode::Fixed`] freezes the [`GpConfig`] hyper-parameters and
 ///   rebuilds the Cholesky factor from the cached kernel on eviction —
 ///   every posterior is **bitwise** equal to the one-shot `gp_ei`
 ///   reference (the PR-2 guarantee, guarded by `tests/gp_incremental.rs`).
+///   This holds for *any* length-scale vector: with all entries equal the
+///   kernel takes the isotropic summation order (squared distance summed
+///   across dimensions first, scaled once) and is bit-identical to the
+///   pre-ARD scalar implementation; with unequal entries both the session
+///   and the one-shot reference use the same weighted per-dimension sum.
 /// * [`HyperMode::Adapt`] trades bitwise reproducibility for speed and
 ///   model quality: evictions run the O(n²) rank-1 `cholesky_downdate`
 ///   (predictions pinned to the rebuild path within 1e-8 by
 ///   `tests/gp_downdate.rs`), and every `every` appends the session takes
-///   a few bounded marginal-likelihood ascent steps over the RBF
-///   length-scale and noise (monotone per accepted step), refactoring the
-///   cached kernel only when the hyper-parameters actually move.
+///   a few bounded marginal-likelihood ascent steps (monotone per accepted
+///   step), refactoring the cached kernel only when the hyper-parameters
+///   actually move.  With [`GpConfig::ard`] **off** the length-scales move
+///   as one tied parameter — ascent over (ln ℓ, ln σₙ²), exactly the
+///   scalar behaviour; with `ard` **on** every dimension's length-scale
+///   moves independently (Automatic Relevance Determination) and the
+///   analytic gradient grows from 2 to d+1 entries.  ARD traces stay
+///   monotone per accepted step (`tests/gp_ard.rs` validates the gradient
+///   against central finite differences).
 ///
 /// One-shot sessions ([`one_shot_gp`], the XLA engine's `gp_open`) have no
 /// cached factor to adapt and always behave as `Fixed`.
@@ -76,11 +90,14 @@ impl HyperMode {
 }
 
 /// Hyper-parameters + shape of a GP surrogate session.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct GpConfig {
     /// Input dimension (the tuning subspace, not the encoded feature dim).
     pub dim: usize,
-    pub lengthscale: f64,
+    /// Per-dimension RBF length-scales (`lengthscales.len() == dim`).
+    /// All-equal entries select the isotropic summation order, keeping
+    /// the kernel bit-identical to the scalar implementation it replaced.
+    pub lengthscales: Vec<f64>,
     pub sigma_f2: f64,
     pub sigma_n2: f64,
     /// Training-row budget (`observe` past it errors) — [`N_TRAIN`] for
@@ -89,6 +106,33 @@ pub struct GpConfig {
     /// Hyper-parameter policy (see [`HyperMode`] for the equality
     /// contract each side carries).
     pub hyper: HyperMode,
+    /// Automatic Relevance Determination: under [`HyperMode::Adapt`],
+    /// move every per-dimension length-scale independently instead of as
+    /// one tied parameter.  Has no effect under [`HyperMode::Fixed`].
+    pub ard: bool,
+}
+
+impl GpConfig {
+    /// Isotropic configuration: one `lengthscale` replicated across `dim`
+    /// (the pre-ARD scalar behaviour), ARD off.
+    pub fn isotropic(
+        dim: usize,
+        lengthscale: f64,
+        sigma_f2: f64,
+        sigma_n2: f64,
+        cap: usize,
+        hyper: HyperMode,
+    ) -> GpConfig {
+        GpConfig {
+            dim,
+            lengthscales: vec![lengthscale; dim],
+            sigma_f2,
+            sigma_n2,
+            cap,
+            hyper,
+            ard: false,
+        }
+    }
 }
 
 /// A stateful GP surrogate that persists across BO iterations, so the
@@ -109,6 +153,13 @@ pub trait GpSession: Send {
 
     /// Raw (unstandardized) targets, in observation order.
     fn ys(&self) -> &[f64];
+
+    /// Current hyper-parameters: per-dimension length-scales (tuning-space
+    /// dimension order) + noise variance.  Moves under
+    /// [`HyperMode::Adapt`] on sessions that support adaptation; frozen at
+    /// the [`GpConfig`] values otherwise.  The warm-start payload for a
+    /// follow-up job (`tune --gp-init-hypers`, REST `gp_init_hypers`).
+    fn hypers(&self) -> (Vec<f64>, f64);
 
     /// Append one observation.
     fn observe(&mut self, x: &[f64], y: f64) -> Result<()>;
@@ -152,14 +203,18 @@ pub trait MlBackend: Send + Sync {
     /// Lasso weights (ISTA, 400 iterations).
     fn lasso_fit(&self, x: &[Vec<f64>], y: &[f64], lam: f64) -> Result<Vec<f64>>;
 
-    /// GP posterior + EI at candidates: (ei, mu, sigma).
+    /// GP posterior + EI at candidates: (ei, mu, sigma), under
+    /// per-dimension (ARD) length-scales.  All-equal `lengthscales` are
+    /// the isotropic kernel, bit-identical (native backend) to the old
+    /// scalar-lengthscale call; the XLA artifact only supports that
+    /// isotropic case.
     #[allow(clippy::too_many_arguments)]
     fn gp_ei(
         &self,
         xtr: &[Vec<f64>],
         ytr: &[f64],
         xc: &[Vec<f64>],
-        lengthscale: f64,
+        lengthscales: &[f64],
         sigma_f2: f64,
         sigma_n2: f64,
         best: f64,
@@ -232,13 +287,13 @@ impl MlBackend for NativeBackend {
         xtr: &[Vec<f64>],
         ytr: &[f64],
         xc: &[Vec<f64>],
-        lengthscale: f64,
+        lengthscales: &[f64],
         sigma_f2: f64,
         sigma_n2: f64,
         best: f64,
     ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
         Ok(crate::native::ops::gp_ei(
-            xtr, ytr, xc, lengthscale, sigma_f2, sigma_n2, best,
+            xtr, ytr, xc, lengthscales, sigma_f2, sigma_n2, best,
         ))
     }
 
@@ -259,10 +314,11 @@ impl MlBackend for NativeBackend {
 /// kept as plain rows and every `acquire` re-fits from scratch.  This is
 /// the cross-check reference for the incremental surrogate and the session
 /// the XLA engine serves (its `gp_ei` executable is a fixed-shape AOT
-/// artifact with no incremental variant).  [`HyperMode::Adapt`] is
-/// ignored here: a one-shot refit has no cached factor to run the
-/// marginal-likelihood ascent on, so one-shot sessions always behave as
-/// `Fixed` — which is also what makes them the bitwise reference.
+/// artifact with no incremental variant).  [`HyperMode::Adapt`] (and with
+/// it `GpConfig::ard`) is ignored here: a one-shot refit has no cached
+/// factor to run the marginal-likelihood ascent on, so one-shot sessions
+/// always behave as `Fixed` — which is also what makes them the bitwise
+/// reference, at any length-scale vector.
 struct OneShotGp<'a> {
     backend: &'a dyn MlBackend,
     cfg: GpConfig,
@@ -272,7 +328,7 @@ struct OneShotGp<'a> {
 
 /// Open a one-shot (refit-per-acquire) session over `backend`'s `gp_ei`.
 pub fn one_shot_gp<'a>(backend: &'a dyn MlBackend, cfg: &GpConfig) -> Box<dyn GpSession + 'a> {
-    Box::new(OneShotGp { backend, cfg: *cfg, xs: Vec::new(), ys: Vec::new() })
+    Box::new(OneShotGp { backend, cfg: cfg.clone(), xs: Vec::new(), ys: Vec::new() })
 }
 
 impl GpSession for OneShotGp<'_> {
@@ -282,6 +338,10 @@ impl GpSession for OneShotGp<'_> {
 
     fn ys(&self) -> &[f64] {
         &self.ys
+    }
+
+    fn hypers(&self) -> (Vec<f64>, f64) {
+        (self.cfg.lengthscales.clone(), self.cfg.sigma_n2)
     }
 
     fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
@@ -321,7 +381,7 @@ impl GpSession for OneShotGp<'_> {
             &self.xs,
             &ysc,
             xc,
-            self.cfg.lengthscale,
+            &self.cfg.lengthscales,
             self.cfg.sigma_f2,
             self.cfg.sigma_n2,
             scaler.transform(best),

@@ -18,13 +18,26 @@
 //!                          -> 202 {job_id, status, poll}
 //!   POST /api/select       {dataset_id, lambda?}
 //!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?,
-//!                           gp_hypers?: "fixed"|"adapt", gp_adapt_every?}
+//!                           gp_hypers?: "fixed"|"adapt", gp_adapt_every?,
+//!                           gp_ard?: bool,
+//!                           gp_init_hypers?: {lengthscales: [..], sigma_n2?}}
 //!                          -> 202 {job_id, status, poll}
 //!                          (`gp_hypers: "adapt"` turns on GP
 //!                          marginal-likelihood hyper-parameter
 //!                          adaptation + O(n²) downdate evictions in the
 //!                          surrogate session; default "fixed" keeps the
-//!                          bit-reproducible path)
+//!                          bit-reproducible path.  `gp_ard: true` frees
+//!                          the per-dimension length-scales (implies
+//!                          adapt; 400 against an explicit "fixed") and
+//!                          the job record gains an `ard_relevance`
+//!                          object over the tuned flags next to the
+//!                          lasso selection.  `gp_init_hypers`
+//!                          warm-starts the surrogate at a previous
+//!                          job's reported `gp_lengthscales` /
+//!                          `gp_sigma_n2`; a length-scale count that
+//!                          does not match the tuning subspace is a 400,
+//!                          checked synchronously because feature
+//!                          selection now runs at submission time)
 //!   GET  /api/jobs                           all jobs, ascending id
 //!   GET  /api/jobs/:id     {job_id, kind, status, elapsed_s,
 //!                           progress?, result?|error?}
@@ -481,6 +494,23 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             .and_then(HyperMode::parse)
             .ok_or_else(|| bad("unknown 'gp_hypers' (fixed | adapt)"))?,
     };
+    // ARD frees the per-dimension length-scales, which only exists under
+    // adaptation: bare `gp_ard` implies adapt, while an explicit "fixed"
+    // alongside it is a contradiction (400), not an override.
+    let gp_ard = match body.get("gp_ard") {
+        None => false,
+        Some(j) => j.as_bool().ok_or_else(|| bad("'gp_ard' must be a boolean"))?,
+    };
+    if gp_ard {
+        if matches!(gp_mode, HyperMode::Fixed) && body.get("gp_hypers").is_some() {
+            return Err(bad(
+                "'gp_ard' requires \"gp_hypers\": \"adapt\" (fixed length-scales cannot adapt per dimension)",
+            ));
+        }
+        if matches!(gp_mode, HyperMode::Fixed) {
+            gp_mode = HyperMode::adapt();
+        }
+    }
     if let Some(every) = body.get("gp_adapt_every") {
         let every = every
             .as_f64()
@@ -488,12 +518,42 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             .ok_or_else(|| bad("'gp_adapt_every' must be a positive integer"))?;
         // The cadence never *implies* adaptation: absent or "fixed"
         // gp_hypers with a cadence is a contradiction, not an opt-in —
-        // the fixed default stays bit-reproducible unless asked.
+        // the fixed default stays bit-reproducible unless asked (via
+        // "adapt" or gp_ard).
         if matches!(gp_mode, HyperMode::Fixed) {
             return Err(bad("'gp_adapt_every' requires \"gp_hypers\": \"adapt\""));
         }
         gp_mode = HyperMode::Adapt { every: every as usize };
     }
+    // Warm-start hypers from a previous job's record: shape errors are
+    // 400s here; the dimension count is checked against the tuning
+    // subspace below, once it is known.
+    let gp_init: Option<(Vec<f64>, Option<f64>)> = match body.get("gp_init_hypers") {
+        None => None,
+        Some(j) => {
+            let arr = j
+                .get("lengthscales")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad("'gp_init_hypers' needs a 'lengthscales' array"))?;
+            let ls = arr
+                .iter()
+                .map(|v| v.as_f64().filter(|x| x.is_finite() && *x > 0.0))
+                .collect::<Option<Vec<f64>>>()
+                .ok_or_else(|| bad("'gp_init_hypers' length-scales must be positive numbers"))?;
+            if ls.is_empty() {
+                return Err(bad("'gp_init_hypers' length-scales must be non-empty"));
+            }
+            let s2n = match j.get("sigma_n2") {
+                None => None,
+                Some(v) => Some(
+                    v.as_f64()
+                        .filter(|x| x.is_finite() && *x > 0.0)
+                        .ok_or_else(|| bad("'gp_init_hypers' sigma_n2 must be positive"))?,
+                ),
+            };
+            Some((ls, s2n))
+        }
+    };
 
     // Dataset checks stay synchronous so bad requests fail with 400 now,
     // not with a failed job later; the dataset is snapshotted into the job.
@@ -538,22 +598,63 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         }
     };
 
+    // Selected subspace: from the dataset when available, else the full
+    // group.  Computed synchronously (a single fast lasso fit, the same
+    // cost `/api/select` already pays per request) so warm-start hypers
+    // with the wrong dimension count fail with a 400 now instead of a
+    // failed job minutes later.
+    let space = if ch.dataset.is_empty() {
+        TuneSpace::full(gc)
+    } else {
+        let sel = featsel::select_flags(&ch.dataset, featsel::DEFAULT_LAMBDA, &state.backend)
+            .map_err(|e| (500, format!("{e:#}")))?;
+        // An empty selection (near-constant targets zero every lasso
+        // weight) would assert inside TuneSpace::from_selection — in this
+        // handler thread that would drop the connection with no response,
+        // so answer like every other validation failure instead.
+        if sel.selected.is_empty() {
+            return Err(bad(format!(
+                "feature selection kept no flags for dataset {}; characterize with more \
+                 signal or tune without a dataset_id",
+                dataset_id.unwrap_or(0)
+            )));
+        }
+        TuneSpace::from_selection(gc, &sel)
+    };
+    if let Some((ls, _)) = &gp_init {
+        if ls.len() != space.dim() {
+            return Err(bad(format!(
+                "'gp_init_hypers' has {} length-scales but the tuning space has {} dimensions",
+                ls.len(),
+                space.dim()
+            )));
+        }
+        // One-shot backends (XLA) evaluate the isotropic AOT artifact on
+        // every acquire: unequal per-dimension scales would 202-accept
+        // here and then kill the job at its first acquisition — fail at
+        // submission instead, like the dimension check above.
+        if !state.backend.supports_hyper_adaptation()
+            && crate::native::ops::iso_lengthscale(ls).is_none()
+        {
+            return Err(bad(
+                "'gp_init_hypers' with unequal length-scales requires a backend with an \
+                 ARD-capable surrogate (this backend serves an isotropic one-shot session)",
+            ));
+        }
+    }
+    // Tuned-dimension flag names, for the ARD relevance report.
+    let enc = crate::flags::FeatureEncoder::new(gc);
+    let dim_names: Vec<String> =
+        space.selected.iter().map(|&p| enc.flag_name(p).to_string()).collect();
+
     let job_state = Arc::clone(state);
     let id = state.jobs.submit_ctl("tune", move |ctl| {
         let runner = SparkRunner::paper_default(bench);
         let mut pc = PipelineConfig { tune_iters: iters, ..Default::default() };
         pc.bo.hypers.mode = gp_mode;
-
-        // Selected subspace: from the dataset when available, else the
-        // full group.
-        let space = if ch.dataset.is_empty() {
-            TuneSpace::full(gc)
-        } else {
-            let sel =
-                featsel::select_flags(&ch.dataset, featsel::DEFAULT_LAMBDA, &job_state.backend)
-                    .map_err(|e| format!("{e:#}"))?;
-            TuneSpace::from_selection(gc, &sel)
-        };
+        pc.bo.hypers.ard = gp_ard;
+        let default_noise = pc.bo.hypers.sigma_n2;
+        pc.bo.hypers.init = gp_init.map(|(ls, s2n)| (ls, s2n.unwrap_or(default_noise)));
 
         let default_summary =
             pipeline::measure(&runner, &FlagConfig::default_for(gc), metric, 5, pc.seed);
@@ -594,6 +695,32 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         let mut fields = vec![("algo", Json::str(out.algo.name()))];
         if let Some(h) = effective_hypers {
             fields.push(("gp_hypers", Json::str(h)));
+            // Effective ARD, like the effective policy: true only when
+            // the surrogate actually adapted per dimension — the tuner
+            // withholds relevance when the backend/mode could not adapt,
+            // or when the run was too short for the scales to move.
+            fields.push(("gp_ard", Json::Bool(out.tune.ard_relevance.is_some())));
+        }
+        // Final surrogate hypers: the warm-start payload a follow-up job
+        // feeds back via "gp_init_hypers".
+        if let Some((ls, s2n)) = &out.tune.gp_hypers {
+            fields.push(("gp_lengthscales", Json::arr_f64(ls)));
+            fields.push(("gp_sigma_n2", Json::num(*s2n)));
+        }
+        // ARD relevance per tuned flag, next to the lasso selection the
+        // space came from — the cross-check the pipeline closes the
+        // feature-selection loop with.
+        if let Some(rel) = &out.tune.ard_relevance {
+            fields.push((
+                "ard_relevance",
+                Json::Obj(
+                    dim_names
+                        .iter()
+                        .cloned()
+                        .zip(rel.iter().map(|&v| Json::num(v)))
+                        .collect(),
+                ),
+            ));
         }
         fields.extend(vec![
             ("default_mean", Json::num(default_summary.mean)),

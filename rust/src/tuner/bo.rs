@@ -11,7 +11,11 @@
 //! [`GpHypers::mode`] selects the session's hyper-parameter policy:
 //! `HyperMode::Fixed` (default) preserves that bitwise contract;
 //! `HyperMode::Adapt` turns on marginal-likelihood adaptation and O(n²)
-//! downdate evictions in the native session.
+//! downdate evictions in the native session.  [`GpHypers::ard`] frees the
+//! per-dimension length-scales during adaptation (Automatic Relevance
+//! Determination) and makes the result carry a normalized relevance
+//! vector over the tuned flags; [`GpHypers::init`] warm-starts the
+//! session at a previous job's adapted hypers.
 
 use std::time::Instant;
 
@@ -29,7 +33,7 @@ use crate::util::stats::argmax;
 /// GP hyper-parameters (y is standardized before fitting, so the signal
 /// variance is ~1; the lengthscale scales with sqrt(dim) because distances
 /// in the unit cube grow with dimension).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct GpHypers {
     pub lengthscale_per_sqrt_dim: f64,
     pub sigma_f2: f64,
@@ -37,10 +41,21 @@ pub struct GpHypers {
     /// Hyper-parameter policy for the surrogate session.  `Fixed` (the
     /// default) keeps the bitwise session-vs-one-shot contract; `Adapt`
     /// lets the native session run marginal-likelihood ascent over the
-    /// length-scale and noise as observations stream in, and evict via
+    /// length-scales and noise as observations stream in, and evict via
     /// the O(n²) Cholesky downdate.  One-shot surrogates (and the XLA
     /// engine's sessions) ignore `Adapt` and stay fixed.
     pub mode: HyperMode,
+    /// Automatic Relevance Determination: under `Adapt`, every tuned
+    /// dimension's length-scale moves independently (d+1 free
+    /// parameters) instead of as one tied scalar, and the result carries
+    /// a normalized per-dimension relevance vector next to the lasso
+    /// selection.  Isotropic (off) stays the default.
+    pub ard: bool,
+    /// Warm-start initial hypers from a previous job's `TuneResult`:
+    /// per-dimension length-scales (must match the tuning dimension —
+    /// `tune_ctl` errors otherwise) plus noise variance.  Overrides
+    /// `lengthscale_per_sqrt_dim`/`sigma_n2` when present.
+    pub init: Option<(Vec<f64>, f64)>,
 }
 
 impl Default for GpHypers {
@@ -50,6 +65,8 @@ impl Default for GpHypers {
             sigma_f2: 1.0,
             sigma_n2: 0.01,
             mode: HyperMode::Fixed,
+            ard: false,
+            init: None,
         }
     }
 }
@@ -198,6 +215,44 @@ impl Tuner for BoTuner {
         ctl: &JobControl,
     ) -> Result<TuneResult> {
         let t0 = Instant::now();
+        // Warm-started hypers (a previous job's adapted values) override
+        // the default isotropic prior.  Validated *before* the initial
+        // design: every init point is a full benchmark evaluation, and
+        // both inputs to the checks are already known here — failing
+        // after the evals would waste exactly the cost the REST layer's
+        // synchronous 400 for the same mistakes was added to avoid.
+        let (lengthscales, sigma_n2) = match &self.cfg.hypers.init {
+            Some((ls, s2n)) => {
+                anyhow::ensure!(
+                    ls.len() == space.dim(),
+                    "gp_init_hypers has {} length-scales but the tuning space has {} dimensions",
+                    ls.len(),
+                    space.dim()
+                );
+                anyhow::ensure!(
+                    ls.iter().all(|l| l.is_finite() && *l > 0.0)
+                        && s2n.is_finite()
+                        && *s2n > 0.0,
+                    "gp_init_hypers must be positive and finite"
+                );
+                // One-shot isotropic backends (XLA) evaluate their AOT
+                // artifact on every acquire: unequal per-dimension scales
+                // would only fail there, mid-run.
+                anyhow::ensure!(
+                    self.backend.supports_hyper_adaptation()
+                        || crate::native::ops::iso_lengthscale(ls).is_some(),
+                    "gp_init_hypers with unequal length-scales requires a backend with an \
+                     ARD-capable surrogate (this backend serves an isotropic one-shot session)"
+                );
+                (ls.clone(), *s2n)
+            }
+            None => {
+                let ls =
+                    self.cfg.hypers.lengthscale_per_sqrt_dim * (space.dim() as f64).sqrt();
+                (vec![ls; space.dim()], self.cfg.hypers.sigma_n2)
+            }
+        };
+
         let mut rng = Pcg::new(self.cfg.seed);
         let mut xs: Vec<Vec<f64>> = Vec::new();
         let mut ys: Vec<f64> = Vec::new();
@@ -244,17 +299,17 @@ impl Tuner for BoTuner {
 
         // Surrogate session: initial data is fed once, then each
         // iteration appends one observation instead of refitting.
-        let ls = self.cfg.hypers.lengthscale_per_sqrt_dim * (space.dim() as f64).sqrt();
         let gpcfg = GpConfig {
             dim: space.dim(),
-            lengthscale: ls,
+            lengthscales,
             sigma_f2: self.cfg.hypers.sigma_f2,
-            sigma_n2: self.cfg.hypers.sigma_n2,
+            sigma_n2,
             // An oversized initial design (n_init > N_TRAIN) is allowed,
             // exactly as the pre-session code was: the loop below still
             // evicts one worst point per iteration while over N_TRAIN.
             cap: N_TRAIN.max(xs.len()),
             hyper: self.cfg.hypers.mode,
+            ard: self.cfg.hypers.ard,
         };
         let backend = std::sync::Arc::clone(&self.backend);
         let mut gp = match self.cfg.surrogate {
@@ -298,6 +353,25 @@ impl Tuner for BoTuner {
             });
         }
 
+        // Report the surrogate's final hypers (the warm-start payload for
+        // a follow-up job) and, after an ARD-adapted run, the normalized
+        // per-dimension relevance — the second relevance signal the
+        // pipeline cross-checks against the lasso selection.  Relevance
+        // is only claimed when the length-scales actually *moved* under an
+        // ARD-capable session (native, adaptive policy): a one-shot or
+        // non-adaptive surrogate — or an adaptive one whose run was too
+        // short for adaptation to fire or accept a step — still has its
+        // initial scales, and a uniform 1/d vector from those would be
+        // noise dressed up as a learned signal.
+        let (final_ls, final_s2n) = gp.hypers();
+        let adapted_ard = self.cfg.hypers.ard
+            && matches!(self.cfg.hypers.mode, HyperMode::Adapt { .. })
+            && matches!(self.cfg.surrogate, SurrogateMode::Session)
+            && self.backend.supports_hyper_adaptation()
+            && final_ls != gpcfg.lengthscales;
+        let ard_relevance =
+            if adapted_ard { Some(crate::featsel::ard_relevance(&final_ls)) } else { None };
+
         Ok(TuneResult {
             algo: self.name(),
             best_config: space.to_config(&best_x),
@@ -307,6 +381,8 @@ impl Tuner for BoTuner {
             evals: objective.evals(),
             sim_time_s: objective.sim_time_s(),
             algo_wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            gp_hypers: Some((final_ls, final_s2n)),
+            ard_relevance,
         })
     }
 }
@@ -380,6 +456,121 @@ mod tests {
         for w in r.best_history.windows(2) {
             assert!(w[1] <= w[0] + 1e-12);
         }
+    }
+
+    #[test]
+    fn ard_tune_reports_hypers_and_relevance() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 8,
+            n_candidates: 128,
+            hypers: GpHypers {
+                mode: HyperMode::Adapt { every: 4 },
+                ard: true,
+                // Grossly long initial scales: the ascent must accept at
+                // least one step (same construction gp_downdate pins), so
+                // the moved-scales gate on relevance reporting opens
+                // deterministically.
+                init: Some((vec![10.0; 6], 0.01)),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 10).unwrap();
+        let (ls, s2n) = r.gp_hypers.as_ref().expect("BO must report final GP hypers");
+        assert_eq!(ls.len(), space.dim());
+        assert!(ls.iter().all(|l| l.is_finite() && *l > 0.0));
+        assert!(s2n.is_finite() && *s2n > 0.0);
+        assert_ne!(ls, &vec![10.0; 6], "adaptation must have moved the scales");
+        let rel = r.ard_relevance.as_ref().expect("ARD tune must report relevance");
+        assert_eq!(rel.len(), space.dim());
+        let sum: f64 = rel.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "relevance must be normalized: {sum}");
+    }
+
+    #[test]
+    fn ard_without_movement_reports_no_relevance() {
+        // Adaptation enabled but the cadence never reached: the scales
+        // never move, so the result must not dress a uniform vector up as
+        // a learned relevance signal.
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 4,
+            n_candidates: 64,
+            hypers: GpHypers {
+                mode: HyperMode::Adapt { every: usize::MAX },
+                ard: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 3).unwrap();
+        assert!(r.gp_hypers.is_some());
+        assert!(r.ard_relevance.is_none(), "unmoved scales cannot claim relevance");
+    }
+
+    #[test]
+    fn fixed_tune_reports_hypers_but_no_relevance() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 5,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 4).unwrap();
+        assert!(r.gp_hypers.is_some());
+        assert!(r.ard_relevance.is_none(), "fixed hypers cannot claim ARD relevance");
+    }
+
+    #[test]
+    fn init_hypers_wrong_dimension_errors() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 4,
+            n_candidates: 64,
+            hypers: GpHypers {
+                init: Some((vec![0.5; 2], 0.01)), // space has 6 dims
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let err = bo.tune(&space, &mut obj, 3).unwrap_err().to_string();
+        assert!(err.contains("length-scales"), "{err}");
+        // Validation fires before the initial design: no benchmark
+        // evaluation may be burned on a doomed run.
+        assert_eq!(obj.evals(), 0, "init evals ran before validation");
+    }
+
+    #[test]
+    fn init_hypers_round_trip_seeds_next_session() {
+        let space = small_space();
+        // First tune adapts; its reported hypers seed a second tune whose
+        // session must start exactly there (Fixed: they never move).
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut first = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 8,
+            n_candidates: 64,
+            hypers: GpHypers { mode: HyperMode::Adapt { every: 4 }, ..Default::default() },
+            ..Default::default()
+        });
+        let r1 = first.tune(&space, &mut obj, 6).unwrap();
+        let warm = r1.gp_hypers.clone().unwrap();
+
+        let mut obj2 = Bowl { space: space.clone(), count: 0 };
+        let mut second = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 4,
+            n_candidates: 64,
+            hypers: GpHypers { init: Some(warm.clone()), ..Default::default() },
+            ..Default::default()
+        });
+        let r2 = second.tune(&space, &mut obj2, 3).unwrap();
+        let got = r2.gp_hypers.unwrap();
+        assert_eq!(got.0, warm.0, "fixed session must keep the warm-started scales");
+        assert_eq!(got.1, warm.1);
     }
 
     #[test]

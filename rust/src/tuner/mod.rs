@@ -46,6 +46,16 @@ pub struct TuneResult {
     pub sim_time_s: f64,
     /// Optimizer-side wall time actually measured (ms).
     pub algo_wall_ms: f64,
+    /// Final GP surrogate hyper-parameters (per-dimension length-scales
+    /// in tuning-space dimension order, noise variance) — the warm-start
+    /// payload for a follow-up job (`tune --gp-init-hypers`, REST
+    /// `gp_init_hypers`).  `None` for tuners without a GP surrogate (SA).
+    pub gp_hypers: Option<(Vec<f64>, f64)>,
+    /// Normalized ARD relevance (1/ℓⱼ², scaled to sum to 1) over the
+    /// tuned dimensions — present only when the surrogate adapted with
+    /// ARD, so the pipeline can cross-check it against the lasso
+    /// `featsel::Selection` (the paper's feature-selection stage).
+    pub ard_relevance: Option<Vec<f64>>,
 }
 
 /// Common interface for all phase-3 optimizers.

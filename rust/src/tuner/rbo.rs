@@ -101,6 +101,10 @@ impl Tuner for RboTuner {
             evals: objective.evals(),
             sim_time_s: objective.sim_time_s(),
             algo_wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            // The inner surrogate's adapted hypers/ARD relevance describe
+            // the same tuning subspace, so they carry over verbatim.
+            gp_hypers: surrogate_result.gp_hypers,
+            ard_relevance: surrogate_result.ard_relevance,
         })
     }
 }

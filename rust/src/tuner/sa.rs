@@ -150,6 +150,10 @@ impl Tuner for SaTuner {
             evals: objective.evals(),
             sim_time_s: objective.sim_time_s(),
             algo_wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            // SA has no GP surrogate: no hypers to warm-start, no
+            // relevance to report.
+            gp_hypers: None,
+            ard_relevance: None,
         })
     }
 }

@@ -33,7 +33,7 @@ fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
 }
 
 fn cfg(d: usize, cap: usize, hyper: HyperMode) -> GpConfig {
-    GpConfig { dim: d, lengthscale: 0.7, sigma_f2: 1.0, sigma_n2: 0.01, cap, hyper }
+    GpConfig::isotropic(d, 0.7, 1.0, 0.01, cap, hyper)
 }
 
 /// Adapt-mode config whose adaptation never triggers: isolates the
@@ -191,7 +191,7 @@ fn repeated_evictions_stay_within_tolerance_of_rebuild_and_scratch() {
 fn adapt_ml_trace_is_monotone_and_commits_last_step() {
     let d = 3;
     let mut c = cfg(d, 64, HyperMode::Adapt { every: usize::MAX });
-    c.lengthscale = 10.0;
+    c.lengthscales = vec![10.0; d];
     let mut gp = GpSurrogate::new(&c);
     let mut rng = Pcg::new(0xdd04);
     for x in rand_rows(24, d, &mut rng) {
@@ -208,9 +208,14 @@ fn adapt_ml_trace_is_monotone_and_commits_last_step() {
     // The committed factor is the one the last accepted step scored.
     assert_eq!(gp.log_marginal().to_bits(), out.ml.last().unwrap().to_bits());
     let (ls, s2n) = gp.hypers();
-    assert!((1e-2..=1e2).contains(&ls), "lengthscale out of box: {ls}");
+    assert!(ls.iter().all(|l| (1e-2..=1e2).contains(l)), "lengthscale out of box: {ls:?}");
     assert!((1e-8..=1.0).contains(&s2n), "noise out of box: {s2n}");
-    assert!(ls < 10.0, "ascent should shorten a too-long lengthscale (got {ls})");
+    assert!(
+        ls.iter().all(|l| *l < 10.0),
+        "ascent should shorten a too-long lengthscale (got {ls:?})"
+    );
+    // ARD off: the length-scales move as one tied parameter.
+    assert!(ls.windows(2).all(|w| w[0] == w[1]), "tied scales split: {ls:?}");
 }
 
 /// After an adaptation round, the committed kernel + factor must be
@@ -221,7 +226,7 @@ fn adapt_ml_trace_is_monotone_and_commits_last_step() {
 fn adapted_session_equals_scratch_session_at_adapted_hypers() {
     let d = 4;
     let mut c = cfg(d, 64, HyperMode::Adapt { every: usize::MAX });
-    c.lengthscale = 3.0;
+    c.lengthscales = vec![3.0; d];
     let mut gp = GpSurrogate::new(&c);
     let mut rng = Pcg::new(0xdd05);
     let xs = rand_rows(20, d, &mut rng);
@@ -239,7 +244,7 @@ fn adapted_session_equals_scratch_session_at_adapted_hypers() {
 
     let (ls, s2n) = gp.hypers();
     let mut scratch_cfg = cfg(d, 64, HyperMode::Fixed);
-    scratch_cfg.lengthscale = ls;
+    scratch_cfg.lengthscales = ls;
     scratch_cfg.sigma_n2 = s2n;
     let mut scratch = GpSurrogate::new(&scratch_cfg);
     for (x, &y) in xs.iter().zip(&ys) {
@@ -284,6 +289,6 @@ fn adapt_with_evictions_stays_healthy() {
         }
     }
     let (ls, s2n) = gp.hypers();
-    assert!((1e-2..=1e2).contains(&ls));
+    assert!(ls.iter().all(|l| (1e-2..=1e2).contains(l)));
     assert!((1e-8..=1.0).contains(&s2n));
 }

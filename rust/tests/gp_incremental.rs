@@ -11,8 +11,13 @@
 //! `HyperMode::Adapt` deliberately gives that up — O(n²) downdate
 //! evictions are pinned to the rebuild path within 1e-8 and adaptation is
 //! pinned by monotonicity/scratch-refactor equalities instead, all in
-//! `tests/gp_downdate.rs`.  This file must keep passing unchanged
-//! whatever happens on the Adapt side: that is the PR-2 guarantee.
+//! `tests/gp_downdate.rs` (ARD specifics in `tests/gp_ard.rs`).  This
+//! file must keep passing unchanged whatever happens on the Adapt side:
+//! that is the PR-2 guarantee, extended by the ARD refactor — ARD off
+//! (or all per-dimension length-scales equal, which selects the same
+//! isotropic summation order) reproduces the pre-refactor scalar path
+//! bitwise, and unequal Fixed length-scales are pinned session-vs-one-shot
+//! bitwise too.
 
 use std::sync::Arc;
 
@@ -37,11 +42,12 @@ fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
 fn gp_cfg(d: usize) -> GpConfig {
     GpConfig {
         dim: d,
-        lengthscale: 0.7,
+        lengthscales: vec![0.7; d],
         sigma_f2: 1.0,
         sigma_n2: 0.01,
         cap: N_TRAIN,
         hyper: HyperMode::Fixed,
+        ard: false,
     }
 }
 
@@ -82,6 +88,87 @@ fn session_matches_one_shot_at_every_pool_width() {
         }
         assert_eq!(inc.len(), one.len());
         assert_eq!(bits(inc.ys()), bits(one.ys()));
+    }
+}
+
+/// The ARD refactor's all-equal-lengthscales pin: a session whose
+/// per-dimension length-scales are all equal (with the `ard` flag set,
+/// exercising the full vector code path) must stay **bitwise** equal to
+/// the plain isotropic session — same kernel summation order — through
+/// the same observe/forget/acquire history at pool widths 1/2/8,
+/// including across the full-refactor eviction path.
+#[test]
+fn ard_flag_with_equal_lengthscales_is_bitwise_isotropic() {
+    let backend = NativeBackend;
+    let d = 6;
+    let iso_cfg = gp_cfg(d);
+    let mut ard_cfg = gp_cfg(d);
+    ard_cfg.ard = true;
+    let mut rng = Pcg::new(0x63);
+    let xs = rand_rows(40, d, &mut rng);
+    let ys: Vec<f64> = xs.iter().map(|r| (r[0] * 4.0).sin() + r[1] * r[2] - r[5]).collect();
+    let cands = rand_rows(150, d, &mut rng);
+
+    for width in [1usize, 2, 8] {
+        let epool = ExecPool::new(width);
+        let mut iso = backend.gp_open(&iso_cfg).unwrap();
+        let mut ard = backend.gp_open(&ard_cfg).unwrap();
+        let mut best = f64::INFINITY;
+        for (i, (x, &y)) in xs.iter().zip(&ys).enumerate() {
+            iso.observe(x, y).unwrap();
+            ard.observe(x, y).unwrap();
+            best = best.min(y);
+            if i == 18 || i == 31 {
+                iso.forget(i / 3).unwrap();
+                ard.forget(i / 3).unwrap();
+            }
+            if i % 6 == 0 {
+                let a = iso.acquire(&epool, &cands, best).unwrap();
+                let b = ard.acquire(&epool, &cands, best).unwrap();
+                assert_eq!(bits(&a.0), bits(&b.0), "ei, step {i} width {width}");
+                assert_eq!(bits(&a.1), bits(&b.1), "mu, step {i} width {width}");
+                assert_eq!(bits(&a.2), bits(&b.2), "sigma, step {i} width {width}");
+            }
+        }
+    }
+}
+
+/// Unequal per-dimension length-scales under `Fixed`: the session's
+/// weighted-sum kernel path must stay bitwise equal to the one-shot
+/// `gp_ei` reference (which runs the same ARD arithmetic in `ops::rbf`),
+/// through observes, an eviction, and acquires at widths 1/2/8.
+#[test]
+fn fixed_ard_lengthscales_match_one_shot_bitwise() {
+    let backend = NativeBackend;
+    let d = 5;
+    let mut cfg = gp_cfg(d);
+    cfg.lengthscales = vec![0.25, 0.7, 1.4, 0.4, 2.2];
+    let mut rng = Pcg::new(0x64);
+    let xs = rand_rows(32, d, &mut rng);
+    let ys: Vec<f64> = xs.iter().map(|r| (r[2] * 3.0).cos() + r[0] - r[4]).collect();
+    let cands = rand_rows(120, d, &mut rng);
+
+    for width in [1usize, 2, 8] {
+        let epool = ExecPool::new(width);
+        let mut inc = backend.gp_open(&cfg).unwrap();
+        let mut one = one_shot_gp(&backend, &cfg);
+        let mut best = f64::INFINITY;
+        for (i, (x, &y)) in xs.iter().zip(&ys).enumerate() {
+            inc.observe(x, y).unwrap();
+            one.observe(x, y).unwrap();
+            best = best.min(y);
+            if i == 21 {
+                inc.forget(4).unwrap();
+                one.forget(4).unwrap();
+            }
+            if i % 8 == 0 {
+                let a = inc.acquire(&epool, &cands, best).unwrap();
+                let b = one.acquire(&epool, &cands, best).unwrap();
+                assert_eq!(bits(&a.0), bits(&b.0), "ei, step {i} width {width}");
+                assert_eq!(bits(&a.1), bits(&b.1), "mu, step {i} width {width}");
+                assert_eq!(bits(&a.2), bits(&b.2), "sigma, step {i} width {width}");
+            }
+        }
     }
 }
 

@@ -306,6 +306,135 @@ fn gp_hypers_validation_on_tune() {
 }
 
 #[test]
+fn gp_ard_validation_on_tune() {
+    let addr = server();
+    // Non-boolean gp_ard is a client error.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_ard": "yes"}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("gp_ard"), "{body}");
+    // ARD against an explicit "fixed" policy is a contradiction.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_hypers": "fixed", "gp_ard": true}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("gp_ard"), "{body}");
+    // Bare gp_ard implies adapt: accepted, and it satisfies the
+    // gp_adapt_every precondition too.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1,
+            "gp_ard": true, "gp_adapt_every": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+    // gp_ard: false is a no-op, not an error.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1, "gp_ard": false}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+}
+
+#[test]
+fn gp_init_hypers_validation_on_tune() {
+    let addr = server();
+    // Shape errors: missing/non-array lengthscales, non-positive values.
+    for bad_body in [
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_init_hypers": {}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_init_hypers": {"lengthscales": "x"}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "gp_init_hypers": {"lengthscales": []}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo",
+            "gp_init_hypers": {"lengthscales": [0.5, -1.0]}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo",
+            "gp_init_hypers": {"lengthscales": [0.5], "sigma_n2": 0}}"#,
+    ] {
+        let (code, body) = http_request(addr, "POST", "/api/tune", bad_body).unwrap();
+        assert_eq!(code, 400, "{bad_body} -> {body}");
+        assert!(body.contains("gp_init_hypers"), "{body}");
+    }
+    // Wrong dimension count is a *synchronous* 400: a dataset-less g1
+    // tune runs over the full 141-flag group.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo",
+            "gp_init_hypers": {"lengthscales": [0.5, 0.7]}}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("141"), "must name the tuning dimension: {body}");
+}
+
+/// End-to-end ARD loop closure: an ARD tune reports per-flag hypers and a
+/// relevance object next to the selection, and the reported hypers feed
+/// back into a warm-started follow-up job.  The initial length-scales are
+/// grossly long (50, near the box edge) so the ML ascent must accept a
+/// step — the record's `gp_ard`/`ard_relevance` only appear when the
+/// scales actually moved.
+#[test]
+fn ard_tune_reports_relevance_and_hypers_round_trip() {
+    let addr = server();
+    let init: Vec<String> = (0..141).map(|_| "50.0".to_string()).collect();
+    let job = submit(
+        addr,
+        "/api/tune",
+        &format!(
+            r#"{{"bench": "lda", "gc": "g1", "algo": "bo", "iters": 1, "gp_ard": true,
+                "gp_init_hypers": {{"lengthscales": [{}]}}}}"#,
+            init.join(",")
+        ),
+    );
+    let v = wait_done(addr, job);
+    assert_eq!(v.get("gp_hypers").unwrap().as_str(), Some("adapt"));
+    assert_eq!(v.get("gp_ard").unwrap().as_bool(), Some(true), "{v}");
+    let ls = v.get("gp_lengthscales").unwrap().as_arr().unwrap();
+    assert_eq!(ls.len(), 141, "dataset-less g1 tune runs the full group");
+    assert!(v.get("gp_sigma_n2").unwrap().as_f64().unwrap() > 0.0);
+    let rel = v.get("ard_relevance").unwrap();
+    // Relevance is keyed by flag name and normalized over the group.
+    let Json::Obj(pairs) = rel else { panic!("ard_relevance must be an object: {rel}") };
+    assert_eq!(pairs.len(), 141);
+    let sum: f64 = pairs.iter().filter_map(|(_, v)| v.as_f64()).sum();
+    assert!((sum - 1.0).abs() < 1e-6, "relevance must be normalized: {sum}");
+
+    // Round-trip: the reported length-scales seed a follow-up job.
+    let ls_csv: Vec<String> =
+        ls.iter().map(|l| format!("{}", l.as_f64().unwrap())).collect();
+    let s2n = v.get("gp_sigma_n2").unwrap().as_f64().unwrap();
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        &format!(
+            r#"{{"bench": "lda", "gc": "g1", "algo": "bo", "iters": 1,
+                "gp_hypers": "adapt",
+                "gp_init_hypers": {{"lengthscales": [{}], "sigma_n2": {s2n}}}}}"#,
+            ls_csv.join(",")
+        ),
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+    let job2 = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    wait_done(addr, job2);
+}
+
+#[test]
 fn unknown_route_404s() {
     let addr = server();
     let (code, _) = http_request(addr, "GET", "/api/nope", "").unwrap();

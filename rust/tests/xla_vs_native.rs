@@ -121,10 +121,10 @@ fn gp_ei_matches() {
             .map(|r| (r.iter().sum::<f64>() / d as f64 - 0.5) * 2.0)
             .collect();
         let xc = rand_rows(m, d, &mut rng);
-        let ls = (d as f64).sqrt() * 0.3;
+        let ls = vec![(d as f64).sqrt() * 0.3; d];
         let best = ytr.iter().cloned().fold(f64::INFINITY, f64::min);
-        let (ea, ma, sa) = xla.gp_ei(&xtr, &ytr, &xc, ls, 1.0, 0.01, best).unwrap();
-        let (eb, mb, sb) = native.gp_ei(&xtr, &ytr, &xc, ls, 1.0, 0.01, best).unwrap();
+        let (ea, ma, sa) = xla.gp_ei(&xtr, &ytr, &xc, &ls, 1.0, 0.01, best).unwrap();
+        let (eb, mb, sb) = native.gp_ei(&xtr, &ytr, &xc, &ls, 1.0, 0.01, best).unwrap();
         assert_eq!(ea.len(), m);
         assert!(max_abs_diff(&ma, &mb) < 2e-3, "gp mu (n={n})");
         assert!(max_abs_diff(&sa, &sb) < 2e-3, "gp sigma (n={n})");
