@@ -1,0 +1,252 @@
+//! mutant-hunter: mutation-testing driver for the numeric kernels.
+//!
+//! Modes:
+//!
+//! * `--smoke` — run the pinned, curated mutant set (see
+//!   `src/mutate/smoke.rs`) against the fast differential tier and demand
+//!   a 100% kill rate.  Writes `mutants_smoke.json` at the repo root and
+//!   exits non-zero on any surviving/undead pin or on pin rot.  This is
+//!   the CI step.
+//! * default (full sweep) — scan all mutation sites in the five kernel
+//!   files, run each against its mapped suites plus the `--lib` tier, and
+//!   write `mutants.json` + `mutants.md` at the repo root.  Exits
+//!   non-zero while any survivor lacks an `equivalent` disposition in
+//!   `rust/mutants.dispositions.json`.  `--shard i/n` splits the sweep
+//!   across machines/jobs.
+//! * `--list` — print the discovered sites without building anything.
+//!
+//! Examples:
+//!
+//! ```text
+//! cargo run --release --bin mutant-hunter -- --smoke
+//! cargo run --release --bin mutant-hunter -- --shard 0/4 --workers 2
+//! cargo run --release --bin mutant-hunter -- --list --files linalg
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{Context, Result};
+
+use onestoptuner::mutate::{
+    find_root, pinned, report, resolve_pin, runner, scan_targets, MutantResult, RunConfig,
+    Site, Verdict,
+};
+
+struct Opts {
+    smoke: bool,
+    list: bool,
+    workers: Option<usize>,
+    timeout_s: Option<u64>,
+    shard: Option<(usize, usize)>,
+    files: Vec<String>,
+    out: Option<PathBuf>,
+}
+
+const USAGE: &str = "usage: mutant-hunter [--smoke | --list] [--workers N] [--timeout-s S] \
+                     [--shard I/N] [--files substr,substr] [--out PATH]";
+
+fn next_value<'a>(it: &mut std::slice::Iter<'a, String>, flag: &str) -> Result<&'a String> {
+    it.next().with_context(|| format!("{flag} needs a value\n{USAGE}"))
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts> {
+    let mut o = Opts {
+        smoke: false,
+        list: false,
+        workers: None,
+        timeout_s: None,
+        shard: None,
+        files: Vec::new(),
+        out: None,
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--smoke" => o.smoke = true,
+            "--list" => o.list = true,
+            "--workers" => {
+                o.workers = Some(next_value(&mut it, a)?.parse().context("--workers")?)
+            }
+            "--timeout-s" => {
+                o.timeout_s = Some(next_value(&mut it, a)?.parse().context("--timeout-s")?)
+            }
+            "--shard" => {
+                let v = next_value(&mut it, a)?;
+                let (i, n) = v.split_once('/').context("--shard wants I/N, e.g. 0/4")?;
+                let (i, n): (usize, usize) =
+                    (i.parse().context("--shard")?, n.parse().context("--shard")?);
+                anyhow::ensure!(n > 0 && i < n, "--shard index must satisfy I < N");
+                o.shard = Some((i, n));
+            }
+            "--files" => {
+                o.files =
+                    next_value(&mut it, a)?.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            "--out" => o.out = Some(PathBuf::from(next_value(&mut it, a)?)),
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => anyhow::bail!("unknown argument `{other}`\n{USAGE}"),
+        }
+    }
+    anyhow::ensure!(
+        !(o.smoke && (o.list || o.shard.is_some() || !o.files.is_empty())),
+        "--smoke runs exactly the pinned set; it does not combine with \
+         --list/--shard/--files"
+    );
+    Ok(o)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("mutant-hunter: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<ExitCode> {
+    let opts = parse_opts(args)?;
+    let root = find_root()?;
+    let sites = scan_targets(&root)?;
+    eprintln!("scanned {} mutation sites across {} files", sites.len(), {
+        let mut files: Vec<_> = sites.iter().map(|s| s.file.as_str()).collect();
+        files.dedup();
+        files.len()
+    });
+
+    if opts.smoke {
+        return run_smoke(&opts, &root, &sites);
+    }
+    if opts.list {
+        return run_list(&opts, &sites);
+    }
+    run_full(&opts, &root, &sites)
+}
+
+fn config(opts: &Opts, root: &std::path::Path, full_suites: bool) -> RunConfig {
+    let mut cfg = RunConfig::new(root.to_path_buf());
+    if let Some(w) = opts.workers {
+        cfg.workers = w.max(1);
+    }
+    if let Some(t) = opts.timeout_s {
+        cfg.timeout_s = t.max(1);
+    }
+    cfg.full_suites = full_suites;
+    cfg
+}
+
+/// The CI gate: every pinned mutant must be Killed — not survived, not
+/// build-failed (a pin that stops compiling is a stale pin), not timed
+/// out (a pin that hangs the suite needs investigation, not silent
+/// credit).
+fn run_smoke(opts: &Opts, root: &std::path::Path, sites: &[Site]) -> Result<ExitCode> {
+    let pins = pinned();
+    let mut pin_sites = Vec::with_capacity(pins.len());
+    for pin in &pins {
+        let site = resolve_pin(pin, sites)?;
+        eprintln!("pin {:<28} -> {}", pin.id, site.id());
+        pin_sites.push(site.clone());
+    }
+
+    let cfg = config(opts, root, false);
+    eprintln!(
+        "running {} pinned mutants on {} worker(s), fast differential tier",
+        pin_sites.len(),
+        cfg.workers
+    );
+    let results = runner::run_mutants(&cfg, &pin_sites)?;
+
+    let out = opts.out.clone().unwrap_or_else(|| root.join("mutants_smoke.json"));
+    let json = report::to_json("smoke", None, &results, &[]);
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("{}", report::summary_markdown("smoke", &results, &[]));
+    println!("wrote {}", out.display());
+
+    let mut failed = false;
+    for (pin, r) in pins.iter().zip(&results) {
+        if r.verdict != Verdict::Killed {
+            failed = true;
+            eprintln!(
+                "SMOKE FAILURE: pin `{}` {} ({}). Kill argument was: {}",
+                pin.id,
+                r.verdict.label(),
+                r.site.diff(),
+                pin.kill_argument
+            );
+        }
+    }
+    if failed {
+        eprintln!("smoke demands a 100% kill rate on the pinned set");
+        return Ok(ExitCode::FAILURE);
+    }
+    println!("smoke OK: {}/{} pinned mutants killed", results.len(), results.len());
+    Ok(ExitCode::SUCCESS)
+}
+
+fn selected<'a>(opts: &Opts, sites: &'a [Site]) -> Vec<&'a Site> {
+    sites
+        .iter()
+        .filter(|s| opts.files.is_empty() || opts.files.iter().any(|f| s.file.contains(f.as_str())))
+        .collect()
+}
+
+fn run_list(opts: &Opts, sites: &[Site]) -> Result<ExitCode> {
+    let chosen = selected(opts, sites);
+    for s in &chosen {
+        println!("{:<52} {}", s.id(), s.diff());
+    }
+    println!("\n{} sites", chosen.len());
+    Ok(ExitCode::SUCCESS)
+}
+
+fn run_full(opts: &Opts, root: &std::path::Path, sites: &[Site]) -> Result<ExitCode> {
+    let chosen = selected(opts, sites);
+    let sharded: Vec<Site> = match opts.shard {
+        Some((i, n)) => chosen
+            .iter()
+            .enumerate()
+            .filter(|(idx, _)| idx % n == i)
+            .map(|(_, s)| (*s).clone())
+            .collect(),
+        None => chosen.into_iter().cloned().collect(),
+    };
+    anyhow::ensure!(!sharded.is_empty(), "selection is empty (files filter / shard too narrow?)");
+
+    let cfg = config(opts, root, true);
+    eprintln!(
+        "running {} mutants on {} worker(s), full tier (differential suites + --lib)",
+        sharded.len(),
+        cfg.workers
+    );
+    let results: Vec<MutantResult> = runner::run_mutants(&cfg, &sharded)?;
+
+    let dispositions = report::load_dispositions(&root.join("rust/mutants.dispositions.json"))?;
+    let out = opts.out.clone().unwrap_or_else(|| root.join("mutants.json"));
+    let json = report::to_json("full", opts.shard, &results, &dispositions);
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    let md = report::summary_markdown("full", &results, &dispositions);
+    let md_path = out.with_extension("md");
+    std::fs::write(&md_path, &md)
+        .with_context(|| format!("writing {}", md_path.display()))?;
+    println!("{md}");
+    println!("wrote {} and {}", out.display(), md_path.display());
+
+    let open = report::undispositioned(&results, &dispositions);
+    if !open.is_empty() {
+        eprintln!(
+            "{} survivor(s) lack an `equivalent` disposition — add a killing test or a \
+             disposition entry (see MUTANTS.md)",
+            open.len()
+        );
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}

@@ -14,11 +14,18 @@
 //! * **runtime/** — loads those artifacts via PJRT (`xla` crate) so Python
 //!   never runs on the tuning path.
 
+// The whole crate is safe Rust, with exactly one vetted exception:
+// `runtime::engine::Inner` (compiled only under `feature = "xla"`) wraps a
+// PJRT handle in `unsafe impl Send`.  `forbid` cannot be overridden by an
+// inner `allow`, so the crate-level lint is gated off for that build.
+#![cfg_attr(not(feature = "xla"), forbid(unsafe_code))]
+
 pub mod datagen;
 pub mod exec;
 pub mod featsel;
 pub mod flags;
 pub mod jvmsim;
+pub mod mutate;
 pub mod native;
 pub mod pipeline;
 pub mod report;

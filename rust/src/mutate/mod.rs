@@ -1,0 +1,98 @@
+//! Self-hosted mutation testing for the numeric kernels (`mutant-hunter`).
+//!
+//! The repo's correctness story rests on differential contracts — bitwise
+//! session-vs-one-shot GP (`tests/gp_incremental.rs`), 1e-8
+//! downdate-vs-rebuild (`tests/gp_downdate.rs`), finite-difference ARD
+//! gradients (`tests/gp_ard.rs`) and the seeded property sweeps
+//! (`tests/property_invariants.rs`).  Those suites exist to make future
+//! SIMD/blocked-kernel refactors safe, but a green suite only proves the
+//! code *currently* passes it.  This module closes the loop: it plants
+//! deliberate faults in the kernels and measures whether the suites notice.
+//!
+//! Pipeline (all hand-rolled — the crate is dependency-free by design):
+//!
+//! 1. [`scanner`] — a line-based Rust source scanner (no parser, no new
+//!    deps) discovers mutation sites in the five numeric kernel files
+//!    ([`TARGET_FILES`]) and applies the operator catalog ([`Op`]):
+//!    arithmetic swaps, comparison boundary swaps, range
+//!    inclusive/exclusive flips, off-by-one on index arithmetic, constant
+//!    perturbation of tolerances/init values, statement deletion targeting
+//!    the Givens-sweep and splice loops, and eviction-index flips.
+//! 2. [`runner`] — for each mutant, materializes a patched copy of the
+//!    crate in a persistent per-worker scratch workspace (own
+//!    `CARGO_TARGET_DIR`, so rebuilds are incremental), runs the
+//!    per-file-targeted subset of the suites (`cargo test -q --release
+//!    --test …` via [`runner::suites_for`]) and classifies the mutant
+//!    killed / survived / build-failed / timed-out.  Execution fans out
+//!    over a bounded worker pool.
+//! 3. [`report`] — emits machine-readable `mutants.json` (per-mutant site,
+//!    operator, diff excerpt, verdict, killing test) plus a CLI/markdown
+//!    summary with kill rate per file and per operator.
+//! 4. [`smoke`] — a pinned, curated mutant set small enough for CI
+//!    (`mutant-hunter --smoke`): every pin is a fault the differential
+//!    suites must kill, so CI asserts a 100% kill rate on it.  Pins are
+//!    addressed by (file, operator, original text, line substring,
+//!    occurrence), so they survive unrelated edits and fail loudly —
+//!    "pin rot" — when the pinned line itself changes.
+//!
+//! Scoring: `score = (killed + timed_out) / (killed + timed_out +
+//! survived)`.  Build-failed mutants are excluded from the denominator
+//! (they prove nothing about the tests); timeouts count as killed (a hung
+//! loop is a detected fault) but are reported separately.
+//!
+//! Survivors from a full sweep must each either get a new killing test or
+//! an explicit `equivalent` disposition in `rust/mutants.dispositions.json`
+//! (see `MUTANTS.md` for the workflow); the full sweep exits non-zero while
+//! any survivor is undispositioned.
+
+pub mod report;
+pub mod runner;
+pub mod scanner;
+pub mod smoke;
+
+pub use runner::{MutantResult, RunConfig, Verdict};
+pub use scanner::{scan_source, Op, Site};
+pub use smoke::{pinned, resolve_pin, Pin};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// The numeric kernel files under mutation, relative to the repo root.
+pub const TARGET_FILES: [&str; 5] = [
+    "rust/src/native/linalg.rs",
+    "rust/src/native/ops.rs",
+    "rust/src/native/gp.rs",
+    "rust/src/featsel/mod.rs",
+    "rust/src/util/stats.rs",
+];
+
+/// Scan every target file under `root`, returning sites in deterministic
+/// (file, line, col, operator) order.
+pub fn scan_targets(root: &Path) -> Result<Vec<Site>> {
+    let mut sites = Vec::new();
+    for file in TARGET_FILES {
+        let path = root.join(file);
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        sites.extend(scan_source(file, &src));
+    }
+    Ok(sites)
+}
+
+/// Locate the repo root (the directory holding `rust/Cargo.toml` and
+/// `examples/`) from the current working directory — works from the repo
+/// root and from inside `rust/` (where CI invokes the bin).
+pub fn find_root() -> Result<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().context("getting cwd")?;
+    loop {
+        if dir.join("rust").join("Cargo.toml").exists() && dir.join("examples").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "not inside the repo: no ancestor directory holds rust/Cargo.toml + examples/"
+            );
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! Reporters: machine-readable JSON (`mutants.json` / `mutants_smoke.json`)
+//! and the CLI/markdown summary with kill rate per file and per operator.
+//!
+//! Scoring convention (mirrors mutation-testing practice): build-failed
+//! mutants are excluded from the denominator — a mutant the compiler
+//! rejects says nothing about the test suites.  Timed-out mutants count
+//! as killed (a hung loop is a detected fault) but stay visible as their
+//! own column so a timeout regression cannot hide inside the kill rate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::runner::{MutantResult, Verdict};
+use super::scanner::Op;
+use crate::util::json::Json;
+
+/// An explicit disposition for a surviving mutant, loaded from
+/// `rust/mutants.dispositions.json`.  Addressed structurally like a smoke
+/// pin, so dispositions survive unrelated edits.
+#[derive(Clone, Debug)]
+pub struct Disposition {
+    pub file: String,
+    pub op: Op,
+    pub original: String,
+    pub contains: String,
+    pub occurrence: usize,
+    /// `equivalent` is the only status that excuses a survivor.
+    pub status: String,
+    pub reason: String,
+}
+
+/// Load dispositions; a missing file means "no dispositions yet".
+pub fn load_dispositions(path: &Path) -> Result<Vec<Disposition>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let json = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, d) in json
+        .get("dispositions")
+        .and_then(Json::as_arr)
+        .context("dispositions file needs a `dispositions` array")?
+        .iter()
+        .enumerate()
+    {
+        let field = |k: &str| -> Result<String> {
+            Ok(d.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("dispositions[{i}] missing `{k}`"))?
+                .to_string())
+        };
+        let op_label = field("operator")?;
+        out.push(Disposition {
+            file: field("file")?,
+            op: Op::parse(&op_label)
+                .with_context(|| format!("dispositions[{i}]: unknown operator `{op_label}`"))?,
+            original: field("original")?,
+            contains: field("contains")?,
+            occurrence: d.get("occurrence").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            status: field("status")?,
+            reason: field("reason")?,
+        });
+    }
+    Ok(out)
+}
+
+/// Find the disposition covering result `r`, honoring occurrence order
+/// within the (file, op, original, contains) bucket across `all` results.
+pub fn disposition_for<'a>(
+    r: &MutantResult,
+    all: &[MutantResult],
+    dispositions: &'a [Disposition],
+) -> Option<&'a Disposition> {
+    dispositions.iter().find(|d| {
+        if !(r.site.file == d.file
+            && r.site.op == d.op
+            && r.site.original == d.original
+            && r.site.line_text.contains(&d.contains))
+        {
+            return false;
+        }
+        let index_in_bucket = all
+            .iter()
+            .filter(|o| {
+                o.site.file == d.file
+                    && o.site.op == d.op
+                    && o.site.original == d.original
+                    && o.site.line_text.contains(&d.contains)
+            })
+            .position(|o| std::ptr::eq(o, r));
+        index_in_bucket == Some(d.occurrence)
+    })
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Tally {
+    pub total: usize,
+    pub killed: usize,
+    pub survived: usize,
+    pub build_failed: usize,
+    pub timed_out: usize,
+}
+
+impl Tally {
+    pub fn add(&mut self, v: Verdict) {
+        self.total += 1;
+        match v {
+            Verdict::Killed => self.killed += 1,
+            Verdict::Survived => self.survived += 1,
+            Verdict::BuildFailed => self.build_failed += 1,
+            Verdict::TimedOut => self.timed_out += 1,
+        }
+    }
+
+    /// `(killed + timed_out) / (killed + timed_out + survived)`; 1.0 when
+    /// the denominator is empty (nothing scoreable means nothing missed).
+    pub fn score(&self) -> f64 {
+        let hits = self.killed + self.timed_out;
+        let denom = hits + self.survived;
+        if denom == 0 {
+            1.0
+        } else {
+            hits as f64 / denom as f64
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("total", Json::num(self.total as f64)),
+            ("killed", Json::num(self.killed as f64)),
+            ("survived", Json::num(self.survived as f64)),
+            ("build_failed", Json::num(self.build_failed as f64)),
+            ("timed_out", Json::num(self.timed_out as f64)),
+            ("score", Json::num(self.score())),
+        ])
+    }
+}
+
+pub fn tally(results: &[MutantResult]) -> Tally {
+    let mut t = Tally::default();
+    for r in results {
+        t.add(r.verdict);
+    }
+    t
+}
+
+fn group_tallies<K: Ord, F: Fn(&MutantResult) -> K>(
+    results: &[MutantResult],
+    key: F,
+) -> BTreeMap<K, Tally> {
+    let mut map: BTreeMap<K, Tally> = BTreeMap::new();
+    for r in results {
+        map.entry(key(r)).or_default().add(r.verdict);
+    }
+    map
+}
+
+/// The full machine-readable report.
+pub fn to_json(
+    mode: &str,
+    shard: Option<(usize, usize)>,
+    results: &[MutantResult],
+    dispositions: &[Disposition],
+) -> Json {
+    let per_file = group_tallies(results, |r| r.site.file.clone());
+    let per_op = group_tallies(results, |r| r.site.op.label().to_string());
+    let mutants: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let disp = disposition_for(r, results, dispositions);
+            Json::obj(vec![
+                ("id", Json::str(r.site.id())),
+                ("file", Json::str(r.site.file.clone())),
+                ("line", Json::num(r.site.line as f64)),
+                ("col", Json::num(r.site.col as f64)),
+                ("operator", Json::str(r.site.op.label())),
+                ("original", Json::str(r.site.original.clone())),
+                ("replacement", Json::str(r.site.replacement.clone())),
+                ("diff", Json::str(r.site.diff())),
+                ("verdict", Json::str(r.verdict.label())),
+                (
+                    "killing_suite",
+                    r.killing_suite.clone().map(Json::str).unwrap_or(Json::Null),
+                ),
+                (
+                    "killing_test",
+                    r.killing_test.clone().map(Json::str).unwrap_or(Json::Null),
+                ),
+                ("secs", Json::num((r.secs * 10.0).round() / 10.0)),
+                (
+                    "disposition",
+                    disp.map(|d| Json::str(d.status.clone())).unwrap_or(Json::Null),
+                ),
+                (
+                    "disposition_reason",
+                    disp.map(|d| Json::str(d.reason.clone())).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        (
+            "shard",
+            match shard {
+                Some((i, n)) => Json::obj(vec![
+                    ("index", Json::num(i as f64)),
+                    ("total", Json::num(n as f64)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+        ("summary", tally(results).to_json()),
+        (
+            "per_file",
+            Json::Obj(per_file.into_iter().map(|(k, v)| (k, v.to_json())).collect()),
+        ),
+        (
+            "per_operator",
+            Json::Obj(per_op.into_iter().map(|(k, v)| (k, v.to_json())).collect()),
+        ),
+        ("mutants", Json::Arr(mutants)),
+    ])
+}
+
+/// Human summary: headline score, per-file and per-operator tables, and
+/// the survivor list with dispositions.  Valid markdown, readable as CLI
+/// output.
+pub fn summary_markdown(
+    mode: &str,
+    results: &[MutantResult],
+    dispositions: &[Disposition],
+) -> String {
+    use std::fmt::Write as _;
+    let t = tally(results);
+    let mut out = String::new();
+    let _ = writeln!(out, "# Mutation report ({mode})\n");
+    let _ = writeln!(
+        out,
+        "**score {:.1}%** — {} mutants: {} killed, {} timed out, {} survived, {} build-failed (excluded)\n",
+        t.score() * 100.0,
+        t.total,
+        t.killed,
+        t.timed_out,
+        t.survived,
+        t.build_failed,
+    );
+    for (title, groups) in [
+        ("Per file", group_tallies(results, |r| r.site.file.clone())),
+        ("Per operator", group_tallies(results, |r| r.site.op.label().to_string())),
+    ] {
+        let _ = writeln!(out, "## {title}\n");
+        let _ = writeln!(out, "| {} | total | killed | timed out | survived | build-failed | score |", title.to_lowercase());
+        let _ = writeln!(out, "|---|---|---|---|---|---|---|");
+        for (k, g) in groups {
+            let _ = writeln!(
+                out,
+                "| {k} | {} | {} | {} | {} | {} | {:.1}% |",
+                g.total,
+                g.killed,
+                g.timed_out,
+                g.survived,
+                g.build_failed,
+                g.score() * 100.0,
+            );
+        }
+        let _ = writeln!(out);
+    }
+    let survivors: Vec<&MutantResult> =
+        results.iter().filter(|r| r.verdict == Verdict::Survived).collect();
+    if survivors.is_empty() {
+        let _ = writeln!(out, "No survivors.");
+    } else {
+        let _ = writeln!(out, "## Survivors\n");
+        for r in survivors {
+            match disposition_for(r, results, dispositions) {
+                Some(d) => {
+                    let _ = writeln!(
+                        out,
+                        "- `{}` {} — **dispositioned {}**: {}",
+                        r.site.id(),
+                        r.site.diff(),
+                        d.status,
+                        d.reason
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "- `{}` {} — **UNDISPOSITIONED**: add a killing test or an \
+                         `equivalent` entry in rust/mutants.dispositions.json",
+                        r.site.id(),
+                        r.site.diff()
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Survivors with no `equivalent` disposition — the full sweep's failure
+/// condition.
+pub fn undispositioned<'a>(
+    results: &'a [MutantResult],
+    dispositions: &[Disposition],
+) -> Vec<&'a MutantResult> {
+    results
+        .iter()
+        .filter(|r| r.verdict == Verdict::Survived)
+        .filter(|r| {
+            disposition_for(r, results, dispositions)
+                .map(|d| d.status != "equivalent")
+                .unwrap_or(true)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mutate::scanner::Site;
+
+    fn mk(file: &str, op: Op, verdict: Verdict) -> MutantResult {
+        MutantResult {
+            site: Site {
+                file: file.to_string(),
+                line: 1,
+                col: 1,
+                byte_start: 0,
+                byte_end: 3,
+                op,
+                original: " + ".into(),
+                replacement: " - ".into(),
+                line_text: "let a = b + c;".into(),
+            },
+            verdict,
+            killing_suite: None,
+            killing_test: None,
+            secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn score_excludes_build_failures_counts_timeouts() {
+        let results = vec![
+            mk("a.rs", Op::ArithSwap, Verdict::Killed),
+            mk("a.rs", Op::ArithSwap, Verdict::TimedOut),
+            mk("a.rs", Op::CmpSwap, Verdict::Survived),
+            mk("b.rs", Op::CmpSwap, Verdict::BuildFailed),
+        ];
+        let t = tally(&results);
+        assert_eq!(t.total, 4);
+        assert!((t.score() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_has_schema_fields() {
+        let results = vec![mk("a.rs", Op::ArithSwap, Verdict::Killed)];
+        let j = to_json("smoke", None, &results, &[]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("mode").unwrap().as_str(), Some("smoke"));
+        let summary = back.get("summary").unwrap();
+        for k in ["total", "killed", "survived", "build_failed", "timed_out", "score"] {
+            assert!(summary.get(k).is_some(), "missing summary.{k}");
+        }
+        let m = &back.get("mutants").unwrap().as_arr().unwrap()[0];
+        for k in ["id", "file", "line", "operator", "original", "replacement", "verdict"] {
+            assert!(m.get(k).is_some(), "missing mutants[0].{k}");
+        }
+        assert!(back.get("per_file").unwrap().get("a.rs").is_some());
+        assert!(back.get("per_operator").unwrap().get("arith-swap").is_some());
+    }
+
+    #[test]
+    fn undispositioned_survivors_flagged() {
+        let results = vec![
+            mk("a.rs", Op::ArithSwap, Verdict::Survived),
+            mk("a.rs", Op::ArithSwap, Verdict::Survived),
+        ];
+        let disp = vec![Disposition {
+            file: "a.rs".into(),
+            op: Op::ArithSwap,
+            original: " + ".into(),
+            contains: "b + c".into(),
+            occurrence: 0,
+            status: "equivalent".into(),
+            reason: "test".into(),
+        }];
+        let open = undispositioned(&results, &disp);
+        assert_eq!(open.len(), 1, "occurrence 0 excused, occurrence 1 not");
+        let md = summary_markdown("full", &results, &disp);
+        assert!(md.contains("UNDISPOSITIONED"));
+        assert!(md.contains("dispositioned equivalent"));
+    }
+}

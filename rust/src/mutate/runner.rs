@@ -1,0 +1,430 @@
+//! Mutant execution: patched scratch workspaces, targeted `cargo test`
+//! runs, and a bounded worker pool.
+//!
+//! Each worker owns one persistent scratch workspace under
+//! `target/mutants/w<i>/` — a copy of the crate (`Cargo.toml` workspace
+//! shim + `rust/` + `examples/`) plus its own `CARGO_TARGET_DIR` — so
+//! consecutive mutants rebuild incrementally (one changed file, not a
+//! cold build).  The workspace source copy is refreshed at the start of
+//! every run; the target dir persists across runs.
+//!
+//! Classification is two-phase per mutant: `cargo test --no-run` first
+//! (a mutant that does not compile is **build-failed** and proves nothing
+//! about the suites — it is excluded from the score), then each mapped
+//! suite in order until one fails (**killed**, recording the killing
+//! suite and test) or all pass (**survived**).  A command exceeding the
+//! timeout marks the mutant **timed-out**: a hung loop is a detected
+//! fault, so timeouts count toward the kill rate but are reported
+//! separately.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::scanner::{apply, Site};
+
+/// One targeted test suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    /// An integration test under `rust/tests/` (`cargo test --test <name>`).
+    Test(&'static str),
+    /// The crate's unit tests (`cargo test --lib`).
+    Lib,
+}
+
+impl Suite {
+    pub fn name(self) -> &'static str {
+        match self {
+            Suite::Test(n) => n,
+            Suite::Lib => "lib",
+        }
+    }
+
+    fn cargo_args(self) -> Vec<&'static str> {
+        match self {
+            Suite::Test(n) => vec!["--test", n],
+            Suite::Lib => vec!["--lib"],
+        }
+    }
+}
+
+/// The file → suites map.  The fast tier is the differential suites that
+/// exercise the file *through an independent reference implementation* —
+/// that is what the smoke set pins.  The full tier adds the crate unit
+/// tests (`--lib`), which also catch mutants in code shared by both sides
+/// of a differential contract (e.g. `erf` feeds both the session and the
+/// one-shot EI, so a differential compare alone cannot see it drift).
+pub fn suites_for(file: &str, full: bool) -> Vec<Suite> {
+    let fast: &[Suite] = match file {
+        "rust/src/native/linalg.rs" => {
+            &[Suite::Test("property_invariants"), Suite::Test("gp_downdate"), Suite::Test("gp_incremental")]
+        }
+        "rust/src/native/ops.rs" => &[Suite::Test("gp_incremental"), Suite::Test("gp_ard")],
+        "rust/src/native/gp.rs" => {
+            &[Suite::Test("gp_incremental"), Suite::Test("gp_downdate"), Suite::Test("gp_ard")]
+        }
+        "rust/src/featsel/mod.rs" => &[Suite::Test("pipeline_e2e")],
+        "rust/src/util/stats.rs" => &[Suite::Test("property_invariants")],
+        _ => &[Suite::Lib],
+    };
+    let mut suites = fast.to_vec();
+    if full {
+        suites.push(Suite::Lib);
+    }
+    suites
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Killed,
+    Survived,
+    BuildFailed,
+    TimedOut,
+}
+
+impl Verdict {
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Killed => "killed",
+            Verdict::Survived => "survived",
+            Verdict::BuildFailed => "build-failed",
+            Verdict::TimedOut => "timed-out",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MutantResult {
+    pub site: Site,
+    pub verdict: Verdict,
+    /// Suite that killed the mutant (or timed out on it).
+    pub killing_suite: Option<String>,
+    /// First failing test parsed from the killing suite's output.
+    pub killing_test: Option<String>,
+    pub secs: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Repo root (holds `rust/`, `examples/`, the workspace `Cargo.toml`).
+    pub root: PathBuf,
+    pub workers: usize,
+    /// Per-command timeout (build or one suite run).
+    pub timeout_s: u64,
+    /// Include the `--lib` tier on top of the differential suites.
+    pub full_suites: bool,
+}
+
+impl RunConfig {
+    pub fn new(root: PathBuf) -> RunConfig {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        RunConfig {
+            root,
+            // Each worker runs its own parallel cargo build; oversubscribing
+            // cores makes every build slower without finishing more mutants.
+            workers: (cores / 4).clamp(1, 4),
+            timeout_s: 600,
+            full_suites: false,
+        }
+    }
+}
+
+/// Run every site and return results in site order.  `None` entries never
+/// occur in the returned vec — a worker failure (workspace I/O, cargo
+/// missing) aborts the run with the underlying error instead of silently
+/// shrinking the result set.
+pub fn run_mutants(cfg: &RunConfig, sites: &[Site]) -> Result<Vec<MutantResult>> {
+    let pristine = read_pristine(&cfg.root, sites)?;
+    let n = sites.len();
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<MutantResult>>> = Mutex::new(vec![None; n]);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for w in 0..cfg.workers.max(1) {
+            let (next, done, results, errors, pristine) =
+                (&next, &done, &results, &errors, &pristine);
+            scope.spawn(move || {
+                let ws = match setup_workspace(&cfg.root, w) {
+                    Ok(ws) => ws,
+                    Err(e) => {
+                        errors.lock().unwrap().push(format!("worker {w}: {e:#}"));
+                        return;
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        return;
+                    }
+                    let site = &sites[i];
+                    match run_one(cfg, &ws, site, pristine) {
+                        Ok(res) => {
+                            let finished = done.fetch_add(1, Ordering::SeqCst) + 1;
+                            eprintln!(
+                                "[{finished}/{n}] {:<12} {} ({:.0}s){}",
+                                res.verdict.label(),
+                                site.id(),
+                                res.secs,
+                                res.killing_suite
+                                    .as_deref()
+                                    .map(|s| format!(" by {s}"))
+                                    .unwrap_or_default(),
+                            );
+                            results.lock().unwrap()[i] = Some(res);
+                        }
+                        Err(e) => {
+                            errors.lock().unwrap().push(format!("mutant {}: {e:#}", site.id()));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        anyhow::bail!("mutation run aborted:\n  {}", errors.join("\n  "));
+    }
+    let results = results.into_inner().unwrap();
+    Ok(results.into_iter().map(|r| r.expect("no error, so every slot is filled")).collect())
+}
+
+/// Pristine content of every file referenced by the sites.
+fn read_pristine(root: &Path, sites: &[Site]) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for site in sites {
+        if !map.contains_key(&site.file) {
+            let path = root.join(&site.file);
+            let src = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            map.insert(site.file.clone(), src);
+        }
+    }
+    Ok(map)
+}
+
+/// Build (or refresh) worker `w`'s scratch workspace and return its path.
+/// Layout: `<root>/target/mutants/w<w>/ws` (fresh copy every run) and
+/// `<root>/target/mutants/w<w>/target` (persistent, for incremental
+/// rebuilds).
+fn setup_workspace(root: &Path, w: usize) -> Result<PathBuf> {
+    let base = root.join("target").join("mutants").join(format!("w{w}"));
+    let ws = base.join("ws");
+    if ws.exists() {
+        fs::remove_dir_all(&ws).with_context(|| format!("clearing {}", ws.display()))?;
+    }
+    fs::create_dir_all(&ws)?;
+    fs::create_dir_all(base.join("target"))?;
+    fs::copy(root.join("Cargo.toml"), ws.join("Cargo.toml"))
+        .context("copying workspace Cargo.toml")?;
+    copy_tree(&root.join("rust"), &ws.join("rust"))?;
+    copy_tree(&root.join("examples"), &ws.join("examples"))?;
+    Ok(ws)
+}
+
+/// Recursive copy skipping build products and VCS state.
+fn copy_tree(src: &Path, dst: &Path) -> Result<()> {
+    fs::create_dir_all(dst)?;
+    for entry in fs::read_dir(src).with_context(|| format!("reading {}", src.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let skip = matches!(
+            name.to_str().unwrap_or(""),
+            "target" | ".git" | "results" | "__pycache__"
+        );
+        if skip {
+            continue;
+        }
+        let from = entry.path();
+        let to = dst.join(&name);
+        if entry.file_type()?.is_dir() {
+            copy_tree(&from, &to)?;
+        } else {
+            fs::copy(&from, &to)
+                .with_context(|| format!("copying {} -> {}", from.display(), to.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Classify one mutant inside worker workspace `ws`.
+fn run_one(
+    cfg: &RunConfig,
+    ws: &Path,
+    site: &Site,
+    pristine: &BTreeMap<String, String>,
+) -> Result<MutantResult> {
+    let start = Instant::now();
+    let src = &pristine[&site.file];
+    let target_file = ws.join(&site.file);
+    fs::write(&target_file, apply(src, site))
+        .with_context(|| format!("patching {}", target_file.display()))?;
+
+    let suites = suites_for(&site.file, cfg.full_suites);
+    let result = classify(cfg, ws, site, &suites);
+
+    // Always restore the pristine file so the workspace is clean for the
+    // next mutant, even when classification errored.
+    fs::write(&target_file, src)
+        .with_context(|| format!("restoring {}", target_file.display()))?;
+
+    let (verdict, killing_suite, killing_test) = result?;
+    Ok(MutantResult {
+        site: site.clone(),
+        verdict,
+        killing_suite,
+        killing_test,
+        secs: start.elapsed().as_secs_f64(),
+    })
+}
+
+type Classification = (Verdict, Option<String>, Option<String>);
+
+fn classify(cfg: &RunConfig, ws: &Path, site: &Site, suites: &[Suite]) -> Result<Classification> {
+    // Phase 1: build everything the suites need.
+    let mut build_args = vec!["test", "--release", "-q", "--no-run"];
+    for s in suites {
+        build_args.extend(s.cargo_args());
+    }
+    match cargo(cfg, ws, &build_args, format!("{}-build", site.line))? {
+        CmdOutcome::TimedOut => return Ok((Verdict::TimedOut, Some("build".into()), None)),
+        CmdOutcome::Failed(_) => return Ok((Verdict::BuildFailed, None, None)),
+        CmdOutcome::Passed => {}
+    }
+    // Phase 2: run suites in order; first failure kills.
+    for s in suites {
+        let mut args = vec!["test", "--release", "-q"];
+        args.extend(s.cargo_args());
+        match cargo(cfg, ws, &args, format!("{}-{}", site.line, s.name()))? {
+            CmdOutcome::TimedOut => {
+                return Ok((Verdict::TimedOut, Some(s.name().to_string()), None))
+            }
+            CmdOutcome::Failed(log) => {
+                return Ok((Verdict::Killed, Some(s.name().to_string()), first_failed_test(&log)))
+            }
+            CmdOutcome::Passed => {}
+        }
+    }
+    Ok((Verdict::Survived, None, None))
+}
+
+enum CmdOutcome {
+    Passed,
+    Failed(String),
+    TimedOut,
+}
+
+/// Run cargo in `ws/rust` with the worker's own target dir, polling for
+/// completion (std has no wait_timeout).  Output goes to a log file so a
+/// chatty compile can never deadlock a pipe.
+fn cargo(cfg: &RunConfig, ws: &Path, args: &[&str], tag: String) -> Result<CmdOutcome> {
+    let log_path = ws.parent().expect("ws has a parent").join(format!("log-{tag}.txt"));
+    let log = fs::File::create(&log_path)
+        .with_context(|| format!("creating {}", log_path.display()))?;
+    let log_err = log.try_clone()?;
+    let mut child = Command::new("cargo")
+        .args(args)
+        .current_dir(ws.join("rust"))
+        .env("CARGO_TARGET_DIR", ws.parent().expect("ws has a parent").join("target"))
+        .env("CARGO_TERM_COLOR", "never")
+        .stdin(Stdio::null())
+        .stdout(Stdio::from(log))
+        .stderr(Stdio::from(log_err))
+        .spawn()
+        .context("spawning cargo (is a rust toolchain on PATH?)")?;
+
+    let deadline = Instant::now() + Duration::from_secs(cfg.timeout_s);
+    let status = loop {
+        if let Some(status) = child.try_wait()? {
+            break status;
+        }
+        if Instant::now() >= deadline {
+            child.kill().ok();
+            child.wait().ok();
+            return Ok(CmdOutcome::TimedOut);
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    };
+    if status.success() {
+        Ok(CmdOutcome::Passed)
+    } else {
+        let mut text = String::new();
+        if let Ok(mut f) = fs::File::open(&log_path) {
+            f.read_to_string(&mut text).ok();
+        }
+        Ok(CmdOutcome::Failed(text))
+    }
+}
+
+/// First failing test name from `cargo test` output (the `failures:` list
+/// entries are indented bare test paths).
+fn first_failed_test(log: &str) -> Option<String> {
+    let mut in_failures = false;
+    for line in log.lines() {
+        if line.trim_end() == "failures:" {
+            in_failures = true;
+            continue;
+        }
+        if in_failures {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            if line.starts_with("    ")
+                && t.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            {
+                return Some(t.to_string());
+            }
+            in_failures = false;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_map_covers_every_target_fast_and_full() {
+        for file in crate::mutate::TARGET_FILES {
+            let fast = suites_for(file, false);
+            assert!(!fast.is_empty(), "{file}");
+            assert!(
+                fast.iter().all(|s| *s != Suite::Lib),
+                "fast tier must stay differential-only for {file}"
+            );
+            let full = suites_for(file, true);
+            assert_eq!(full.len(), fast.len() + 1);
+            assert_eq!(*full.last().unwrap(), Suite::Lib);
+        }
+    }
+
+    #[test]
+    fn parses_failing_test_name_from_quiet_output() {
+        let log = "\nrunning 12 tests\n....F.......\nfailures:\n\n---- prop_x stdout ----\n\
+                   thread 'prop_x' panicked at src/x.rs:1:1:\nboom\n\nfailures:\n    prop_x\n\n\
+                   test result: FAILED. 11 passed; 1 failed\n";
+        assert_eq!(first_failed_test(log).as_deref(), Some("prop_x"));
+        assert_eq!(first_failed_test("all good"), None);
+    }
+
+    #[test]
+    fn verdict_labels_stable() {
+        // The JSON schema (and CI's jq assert) depend on these strings.
+        assert_eq!(Verdict::Killed.label(), "killed");
+        assert_eq!(Verdict::Survived.label(), "survived");
+        assert_eq!(Verdict::BuildFailed.label(), "build-failed");
+        assert_eq!(Verdict::TimedOut.label(), "timed-out");
+    }
+}

@@ -1,0 +1,590 @@
+//! Line-based mutation-site scanner.
+//!
+//! Not a Rust parser: the kernels under test are rustfmt'd, numeric,
+//! macro-light code, so spaced-token matching on comment/string-masked
+//! lines is enough to find every operator site without false positives.
+//! The rules that keep it honest:
+//!
+//! * string literals and `//` comments are masked (replaced by spaces, so
+//!   byte offsets survive) before any pattern runs;
+//! * lines that are comments, attributes, or `use` items are skipped, as
+//!   is anything mentioning `assert`/`ensure!`/`panic!` (mutating an
+//!   assertion weakens the *oracle*, not the code under test);
+//! * scanning stops at the first `#[cfg(test)]` line — unit tests are
+//!   oracles too;
+//! * arithmetic/comparison operators only match with a space on both
+//!   sides, which rustfmt guarantees for binary operators and which
+//!   excludes `+=`, `->`, `=>`, unary `-`, deref `*`, and generics.
+
+use std::fmt;
+
+/// Mutation operator catalog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Op {
+    /// `+`↔`-`, `*`↔`/` on spaced binary operators.
+    ArithSwap,
+    /// `<`↔`<=`, `>`↔`>=` boundary swaps.
+    CmpSwap,
+    /// `..`↔`..=` inclusive/exclusive range flips.
+    RangeSwap,
+    /// `+ 1`→`+ 2`, `- 1`→`- 2` on index arithmetic.
+    OffByOne,
+    /// Float literal `X`→`(X * 10.0)` (tolerances, init values).
+    ConstPerturb,
+    /// Delete a single-line assignment or mutating-call statement
+    /// (Givens-sweep updates, splice-loop writes, cache maintenance).
+    StmtDelete,
+    /// Eviction-index flips: `== idx`→`!= idx`, and `x.remove(i)`-style
+    /// final index arguments bumped to `i + 1`.
+    EvictFlip,
+}
+
+impl Op {
+    pub const ALL: [Op; 7] = [
+        Op::ArithSwap,
+        Op::CmpSwap,
+        Op::RangeSwap,
+        Op::OffByOne,
+        Op::ConstPerturb,
+        Op::StmtDelete,
+        Op::EvictFlip,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Op::ArithSwap => "arith-swap",
+            Op::CmpSwap => "cmp-swap",
+            Op::RangeSwap => "range-swap",
+            Op::OffByOne => "off-by-one",
+            Op::ConstPerturb => "const-perturb",
+            Op::StmtDelete => "stmt-delete",
+            Op::EvictFlip => "evict-flip",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Op> {
+        Op::ALL.iter().copied().find(|o| o.label() == s)
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One mutation site: a byte range of the pristine source plus the text
+/// that replaces it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Site {
+    /// Repo-relative path, e.g. `rust/src/native/linalg.rs`.
+    pub file: String,
+    /// 1-based line number in the pristine source.
+    pub line: usize,
+    /// 1-based byte column of `byte_start` within the line.
+    pub col: usize,
+    pub byte_start: usize,
+    pub byte_end: usize,
+    pub op: Op,
+    /// The pristine bytes being replaced.
+    pub original: String,
+    /// The mutated replacement text.
+    pub replacement: String,
+    /// The trimmed pristine line, for reports and pin matching.
+    pub line_text: String,
+}
+
+impl Site {
+    /// Stable human-readable id: `file:line:col:op`.
+    pub fn id(&self) -> String {
+        format!("{}:{}:{}:{}", self.file, self.line, self.col, self.op.label())
+    }
+
+    /// One-line diff excerpt for reports.
+    pub fn diff(&self) -> String {
+        format!("`{}` -> `{}` in `{}`", self.original, self.replacement, self.line_text)
+    }
+}
+
+/// Apply a site to the pristine source it was scanned from.
+pub fn apply(src: &str, site: &Site) -> String {
+    debug_assert_eq!(&src[site.byte_start..site.byte_end], site.original);
+    let mut out = String::with_capacity(src.len() + site.replacement.len());
+    out.push_str(&src[..site.byte_start]);
+    out.push_str(&site.replacement);
+    out.push_str(&src[site.byte_end..]);
+    out
+}
+
+/// Scan one source file for mutation sites, in (line, col, op) order.
+pub fn scan_source(file: &str, src: &str) -> Vec<Site> {
+    let mut sites = Vec::new();
+    let mut offset = 0usize;
+    for (idx, line) in src.split_inclusive('\n').enumerate() {
+        let body = line.trim_end_matches(['\n', '\r']);
+        let trimmed = body.trim_start();
+        if trimmed.starts_with("#[cfg(test)]") {
+            break; // everything below is test oracle, not code under test
+        }
+        if !skip_line(trimmed) {
+            let masked = mask_line(body);
+            let indent = body.len() - trimmed.len();
+            let mut line_sites = Vec::new();
+            arith_swap(&masked, &mut line_sites);
+            cmp_swap(&masked, &mut line_sites);
+            range_swap(&masked, &mut line_sites);
+            off_by_one(&masked, &mut line_sites);
+            const_perturb(&masked, body, &mut line_sites);
+            stmt_delete(&masked, indent, &mut line_sites);
+            evict_flip(&masked, &mut line_sites);
+            for (start, end, op, replacement) in line_sites {
+                sites.push(Site {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    col: start + 1,
+                    byte_start: offset + start,
+                    byte_end: offset + end,
+                    op,
+                    original: body[start..end].to_string(),
+                    replacement,
+                    line_text: trimmed.to_string(),
+                });
+            }
+        }
+        offset += line.len();
+    }
+    sites.sort_by(|a, b| {
+        (a.line, a.col, a.op, &a.replacement).cmp(&(b.line, b.col, b.op, &b.replacement))
+    });
+    sites.dedup_by(|a, b| {
+        a.byte_start == b.byte_start && a.byte_end == b.byte_end && a.replacement == b.replacement
+    });
+    sites
+}
+
+/// Skip whole lines that are not code under test.
+fn skip_line(trimmed: &str) -> bool {
+    trimmed.is_empty()
+        || trimmed.starts_with("//")
+        || trimmed.starts_with('#')
+        || trimmed.starts_with("use ")
+        || trimmed.contains("assert")
+        || trimmed.contains("ensure!")
+        || trimmed.contains("panic!")
+}
+
+/// Replace string-literal contents and `//` comments with spaces,
+/// preserving byte positions (targets are ASCII-only rust source; any
+/// non-ASCII byte is masked too, so pattern positions stay byte-exact).
+fn mask_line(line: &str) -> String {
+    let bytes = line.as_bytes();
+    let mut out = vec![b' '; bytes.len()];
+    let mut i = 0;
+    let mut in_str = false;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if in_str {
+            if b == b'\\' {
+                i += 2; // skip the escaped byte, keep both masked
+                continue;
+            }
+            if b == b'"' {
+                in_str = false;
+                out[i] = b'"';
+            }
+            i += 1;
+            continue;
+        }
+        if b == b'"' {
+            in_str = true;
+            out[i] = b'"';
+            i += 1;
+            continue;
+        }
+        if b == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+            break; // rest of line is a comment, stays masked
+        }
+        if b.is_ascii() {
+            out[i] = b;
+        }
+        i += 1;
+    }
+    String::from_utf8(out).expect("mask output is pure ASCII")
+}
+
+type RawSite = (usize, usize, Op, String);
+
+fn find_all(masked: &str, pat: &str) -> Vec<usize> {
+    masked.match_indices(pat).map(|(i, _)| i).collect()
+}
+
+fn byte_at(masked: &str, i: usize) -> u8 {
+    masked.as_bytes().get(i).copied().unwrap_or(b'\n')
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// ` + `↔` - `, ` * `↔` / `.  Spacing excludes `+=`, `-=`, `->`, unary
+/// minus, deref `*`, and `//` (already masked as comments anyway).
+fn arith_swap(masked: &str, out: &mut Vec<RawSite>) {
+    for (pat, to) in [(" + ", " - "), (" - ", " + "), (" * ", " / "), (" / ", " * ")] {
+        for i in find_all(masked, pat) {
+            out.push((i, i + pat.len(), Op::ArithSwap, to.to_string()));
+        }
+    }
+}
+
+/// ` < `↔` <= `, ` > `↔` >= `.  ` < ` cannot match inside ` <= ` (the byte
+/// after `<` is `=`), and ` > ` cannot match inside ` => ` or ` >= `.
+fn cmp_swap(masked: &str, out: &mut Vec<RawSite>) {
+    for (pat, to) in [(" < ", " <= "), (" <= ", " < "), (" > ", " >= "), (" >= ", " > ")] {
+        for i in find_all(masked, pat) {
+            out.push((i, i + pat.len(), Op::CmpSwap, to.to_string()));
+        }
+    }
+}
+
+/// `..=`→`..` and `..`→`..=`.  A bare `..` followed by a space or `}` is a
+/// rest pattern (`Adapt { .. }`), not a range — skipped.
+fn range_swap(masked: &str, out: &mut Vec<RawSite>) {
+    for i in find_all(masked, "..") {
+        if i > 0 && byte_at(masked, i - 1) == b'.' {
+            continue; // second half of a previous match
+        }
+        let next = byte_at(masked, i + 2);
+        if next == b'=' {
+            out.push((i, i + 3, Op::RangeSwap, "..".to_string()));
+        } else if next != b'.' && next != b' ' && next != b'}' {
+            out.push((i, i + 2, Op::RangeSwap, "..=".to_string()));
+        }
+    }
+}
+
+/// ` + 1`→` + 2` and ` - 1`→` - 2` where the `1` is a standalone integer
+/// (index arithmetic), not part of a larger number or float.  `+ 1..` is
+/// allowed (range starts like `idx + 1..n` are prime off-by-one sites);
+/// `+ 1.0` is not (that's a float, const-perturb territory).
+fn off_by_one(masked: &str, out: &mut Vec<RawSite>) {
+    for (pat, to) in [(" + 1", " + 2"), (" - 1", " - 2")] {
+        for i in find_all(masked, pat) {
+            let after = byte_at(masked, i + pat.len());
+            let ok = match after {
+                b')' | b']' | b'}' | b';' | b',' | b' ' | b'\n' => true,
+                b'.' => byte_at(masked, i + pat.len() + 1) == b'.', // range, not float
+                _ => false,
+            };
+            if ok {
+                out.push((i, i + pat.len(), Op::OffByOne, to.to_string()));
+            }
+        }
+    }
+}
+
+/// Float literals `X` → `(X * 10.0)`.  Integer literals are left alone
+/// (they are sizes and indices, covered by off-by-one); zero is left alone
+/// (scaling it is a no-op, i.e. an equivalent mutant by construction).
+fn const_perturb(masked: &str, body: &str, out: &mut Vec<RawSite>) {
+    let b = masked.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if !b[i].is_ascii_digit() || (i > 0 && (is_ident_byte(b[i - 1]) || b[i - 1] == b'.')) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i;
+        let mut has_dot = false;
+        let mut has_exp = false;
+        while j < b.len() && b[j].is_ascii_digit() {
+            j += 1;
+        }
+        // fractional part — but not `..` (range) and not a method call `1.max(…)`
+        if j + 1 < b.len() && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+            has_dot = true;
+            j += 1;
+            while j < b.len() && b[j].is_ascii_digit() {
+                j += 1;
+            }
+        }
+        // exponent part: `e`/`E`, optional sign, digits
+        if j < b.len() && (b[j] == b'e' || b[j] == b'E') {
+            let mut k = j + 1;
+            if k < b.len() && (b[k] == b'+' || b[k] == b'-') {
+                k += 1;
+            }
+            if k < b.len() && b[k].is_ascii_digit() {
+                has_exp = true;
+                j = k;
+                while j < b.len() && b[j].is_ascii_digit() {
+                    j += 1;
+                }
+            }
+        }
+        // `1.0f64`-style suffixes would end the token here; targets don't
+        // use them, and an `_` or letter after the literal means it's part
+        // of an identifier-ish token we don't understand — skip those.
+        if (has_dot || has_exp) && !(j < b.len() && is_ident_byte(b[j])) {
+            let lit = &body[start..j];
+            if lit.parse::<f64>().map(|v| v != 0.0).unwrap_or(false) {
+                out.push((start, j, Op::ConstPerturb, format!("({lit} * 10.0)")));
+            }
+        }
+        i = j.max(i + 1);
+    }
+}
+
+/// Mutating method calls whose whole-statement deletion is a meaningful
+/// fault (splice loops, factor maintenance, cache upkeep).
+const MUTATING_CALLS: [&str; 11] = [
+    ".push(",
+    ".push_row(",
+    ".truncate(",
+    ".extend_from_slice(",
+    ".copy_within(",
+    ".clear(",
+    ".remove(",
+    ".remove_row(",
+    ".drain(",
+    ".swap_remove(",
+    "cholesky_downdate(",
+];
+
+const STMT_DELETE_EXCLUDED_STARTS: [&str; 14] = [
+    "let ", "use ", "return", "break", "continue", "fn ", "pub ", "const ", "static ", "type ",
+    "impl ", "mod ", "else", "loop",
+];
+
+/// Delete one complete single-line statement: an assignment (`x = …;`,
+/// `x += …;`, …) or a mutating method call.  Restricted to lines that are
+/// a whole statement (balanced brackets, trailing `;`, no braces) and not
+/// a binding (`let` deletion would break later uses at compile time —
+/// a build-failed mutant proves nothing).
+fn stmt_delete(masked: &str, indent: usize, out: &mut Vec<RawSite>) {
+    let t = masked.trim_end();
+    let stmt = &t[indent.min(t.len())..];
+    if !stmt.ends_with(';') {
+        return;
+    }
+    let first = stmt.as_bytes().first().copied().unwrap_or(b' ');
+    if !(first.is_ascii_alphabetic() || first == b'_' || first == b'*') {
+        return;
+    }
+    if STMT_DELETE_EXCLUDED_STARTS.iter().any(|p| stmt.starts_with(p)) {
+        return;
+    }
+    if stmt.contains('{') || stmt.contains('}') {
+        return;
+    }
+    for (open, close) in [('(', ')'), ('[', ']')] {
+        let mut depth = 0i32;
+        for c in stmt.chars() {
+            if c == open {
+                depth += 1;
+            } else if c == close {
+                depth -= 1;
+                if depth < 0 {
+                    return; // fragment of a multi-line expression
+                }
+            }
+        }
+        if depth != 0 {
+            return;
+        }
+    }
+    let is_assign = [" = ", " += ", " -= ", " *= ", " /= "].iter().any(|p| stmt.contains(p));
+    let is_call = MUTATING_CALLS.iter().any(|p| stmt.contains(p));
+    if is_assign || is_call {
+        out.push((indent, indent + stmt.len(), Op::StmtDelete, String::new()));
+    }
+}
+
+/// Eviction-index flips: `== idx`→`!= idx` guards inside splice loops,
+/// and `x.remove(i)`-style calls whose final argument is a bare index
+/// identifier, bumped to `i + 1`.
+fn evict_flip(masked: &str, out: &mut Vec<RawSite>) {
+    for i in find_all(masked, "== idx") {
+        if !is_ident_byte(byte_at(masked, i + 6)) {
+            out.push((i, i + 6, Op::EvictFlip, "!= idx".to_string()));
+        }
+    }
+    for pat in [".remove(", ".remove_row(", ".swap_remove(", "cholesky_downdate("] {
+        for i in find_all(masked, pat) {
+            if !pat.starts_with('.')
+                && i > 0
+                && (is_ident_byte(byte_at(masked, i - 1)) || byte_at(masked, i - 1) == b'.')
+            {
+                continue; // substring of a longer identifier or a method path
+            }
+            let args_start = i + pat.len();
+            let Some(rel_close) = masked[args_start..].find(')') else { continue };
+            let args = &masked[args_start..args_start + rel_close];
+            if args.contains('(') {
+                continue; // nested call — too clever for a line matcher
+            }
+            let last = args.rsplit(',').next().unwrap_or(args).trim();
+            if !last.is_empty()
+                && last.bytes().all(is_ident_byte)
+                && !last.bytes().next().unwrap().is_ascii_digit()
+                && last != "self"
+            {
+                let last_start = args_start + args.rfind(last).unwrap_or(0);
+                out.push((
+                    last_start,
+                    last_start + last.len(),
+                    Op::EvictFlip,
+                    format!("{last} + 1"),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arith_swap_respects_spacing() {
+        let s = scan_source("f.rs", "fn f() {\n    let a = b + c;\n    w += 1;\n}\n");
+        let arith: Vec<_> = s.iter().filter(|x| x.op == Op::ArithSwap).collect();
+        assert_eq!(arith.len(), 1, "{s:?}");
+        assert_eq!(arith[0].original, " + ");
+        assert_eq!(arith[0].replacement, " - ");
+        assert_eq!(arith[0].line, 2);
+    }
+
+    #[test]
+    fn cmp_swap_handles_boundaries_not_arrows() {
+        let s = scan_source("f.rs", "    if a < b && c <= d => {}\n");
+        let cmp: Vec<_> =
+            s.iter().filter(|x| x.op == Op::CmpSwap).map(|x| x.original.clone()).collect();
+        assert_eq!(cmp, vec![" < ".to_string(), " <= ".to_string()]);
+    }
+
+    #[test]
+    fn range_swap_skips_rest_patterns() {
+        let s = scan_source("f.rs", "    for i in 0..n {}\n    for j in 0..=m {}\n    Adapt { .. } => {}\n");
+        let rs: Vec<_> = s
+            .iter()
+            .filter(|x| x.op == Op::RangeSwap)
+            .map(|x| (x.original.clone(), x.replacement.clone()))
+            .collect();
+        assert_eq!(
+            rs,
+            vec![("..".to_string(), "..=".to_string()), ("..=".to_string(), "..".to_string())]
+        );
+    }
+
+    #[test]
+    fn off_by_one_skips_floats_allows_ranges() {
+        let s = scan_source(
+            "f.rs",
+            "    a(i * c..(i + 1) * c);\n    let x = y + 1.5;\n    for r in idx + 1..n {}\n",
+        );
+        let ob: Vec<_> = s.iter().filter(|x| x.op == Op::OffByOne).collect();
+        assert_eq!(ob.len(), 2, "{ob:?}");
+        assert!(ob.iter().all(|x| x.replacement == " + 2"));
+        assert_eq!(ob[0].line, 1);
+        assert_eq!(ob[1].line, 3);
+    }
+
+    #[test]
+    fn const_perturb_floats_only_nonzero_only() {
+        let s = scan_source("f.rs", "    if sigma <= 1e-9 { t(0.0, 2.5, 3, x[1]); }\n");
+        let cp: Vec<_> = s.iter().filter(|x| x.op == Op::ConstPerturb).collect();
+        let origs: Vec<_> = cp.iter().map(|x| x.original.clone()).collect();
+        assert_eq!(origs, vec!["1e-9".to_string(), "2.5".to_string()]);
+        assert_eq!(cp[0].replacement, "(1e-9 * 10.0)");
+    }
+
+    #[test]
+    fn stmt_delete_targets_assignments_and_mutators_only() {
+        let src = "    w += 1;\n    let q = 3;\n    self.data.truncate(w);\n    x.frob();\n        .sum();\n";
+        let s = scan_source("f.rs", src);
+        let sd: Vec<_> = s.iter().filter(|x| x.op == Op::StmtDelete).collect();
+        assert_eq!(sd.len(), 2, "{sd:?}");
+        assert_eq!(sd[0].original, "w += 1;");
+        assert_eq!(sd[1].original, "self.data.truncate(w);");
+        assert!(sd.iter().all(|x| x.replacement.is_empty()));
+    }
+
+    #[test]
+    fn evict_flip_guard_and_index_bump() {
+        let src = "    if c == idx {\n    self.k.remove(i);\n    cholesky_downdate(&mut self.l, i);\n    v.drain(a..b);\n";
+        let s = scan_source("f.rs", src);
+        let ef: Vec<_> = s.iter().filter(|x| x.op == Op::EvictFlip).collect();
+        let pairs: Vec<_> =
+            ef.iter().map(|x| (x.original.clone(), x.replacement.clone())).collect();
+        assert_eq!(
+            pairs,
+            vec![
+                ("== idx".to_string(), "!= idx".to_string()),
+                ("i".to_string(), "i + 1".to_string()),
+                ("i".to_string(), "i + 1".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn skips_comments_attributes_asserts_and_test_module() {
+        let src = "\
+fn f(n: usize) {
+    // a + b in a comment
+    /// doc + doc
+    #[inline]
+    assert!(a + b < 3);
+    debug_assert!(j <= i && i < n);
+    let s = \"x + y\";
+}
+#[cfg(test)]
+mod tests {
+    fn g() { let z = a + b; }
+}
+";
+        let s = scan_source("f.rs", src);
+        assert!(s.is_empty(), "{s:?}");
+    }
+
+    #[test]
+    fn apply_roundtrip_preserves_everything_else() {
+        let src = "fn f() {\n    let a = b + c;\n}\n";
+        let s = scan_source("f.rs", src);
+        let site = s.iter().find(|x| x.op == Op::ArithSwap).unwrap();
+        let patched = apply(src, site);
+        assert_eq!(patched, "fn f() {\n    let a = b - c;\n}\n");
+    }
+
+    #[test]
+    fn sites_are_sorted_and_deduped() {
+        let src = "    let a = b + c;\n    let d = e * f;\n";
+        let s = scan_source("f.rs", src);
+        let mut sorted = s.clone();
+        sorted.sort_by(|a, b| {
+            (a.line, a.col, a.op, &a.replacement).cmp(&(b.line, b.col, b.op, &b.replacement))
+        });
+        assert_eq!(s, sorted);
+        for w in s.windows(2) {
+            assert!(
+                !(w[0].byte_start == w[1].byte_start
+                    && w[0].byte_end == w[1].byte_end
+                    && w[0].replacement == w[1].replacement),
+                "dup {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn mask_preserves_offsets() {
+        let line = r#"    foo("a + b", x + y); // c + d"#;
+        let m = mask_line(line);
+        assert_eq!(m.len(), line.len());
+        assert!(!m.contains("a + b"));
+        assert!(!m.contains("c + d"));
+        assert_eq!(&m[..4], "    ");
+        let i = m.find(" + ").unwrap();
+        assert_eq!(&line[i..i + 3], " + ");
+        assert_eq!(&line[i - 1..i + 5], "x + y)");
+    }
+}

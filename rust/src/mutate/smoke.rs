@@ -1,0 +1,227 @@
+//! The pinned smoke mutant set: a curated list of faults the differential
+//! suites MUST kill, small enough to run on every CI push.
+//!
+//! Each pin is addressed structurally — (file, operator, original text,
+//! line substring, occurrence index) — not by line number, so the set
+//! survives unrelated edits.  If the pinned line itself is edited or
+//! removed, [`resolve_pin`] fails loudly ("pin rot") and the smoke run
+//! exits non-zero: whoever changes a kernel line that carries a pin must
+//! re-point the pin, which is exactly the review moment the pin exists
+//! to create.
+//!
+//! Every pin carries a `kill_argument`: the reason the fast differential
+//! tier cannot miss it.  A pin whose argument goes stale (e.g. a suite
+//! stops covering the path) shows up immediately as a smoke failure.
+
+use anyhow::{bail, Result};
+
+use super::scanner::{Op, Site};
+
+/// A structural address of one curated mutant plus the reason it dies.
+#[derive(Clone, Debug)]
+pub struct Pin {
+    /// Short stable id used in reports, e.g. `linalg-push-mul`.
+    pub id: &'static str,
+    /// Repo-relative target file.
+    pub file: &'static str,
+    pub op: Op,
+    /// The pristine text the operator replaces (disambiguates multiple
+    /// operators matching one line).
+    pub original: &'static str,
+    /// Substring the pristine line must contain.
+    pub contains: &'static str,
+    /// Index within the (op, original, contains)-filtered site list.
+    pub occurrence: usize,
+    /// Why the fast-tier suites must kill this mutant.
+    pub kill_argument: &'static str,
+}
+
+/// The curated set.  Keep each entry's kill argument airtight: a pin that
+/// *might* survive (e.g. a mutation in code shared by both sides of a
+/// differential contract) belongs in the full sweep, not here.
+pub fn pinned() -> Vec<Pin> {
+    vec![
+        Pin {
+            id: "linalg-push-mul",
+            file: "rust/src/native/linalg.rs",
+            op: Op::ArithSwap,
+            original: " * ",
+            contains: "sum -= row[k] * lj[k];",
+            occurrence: 0,
+            kill_argument: "breaks cholesky_push only; property_invariants compares the \
+                            packed factor against the dense cholesky (independent code) \
+                            far beyond 1e-8",
+        },
+        Pin {
+            id: "linalg-givens-plus",
+            file: "rust/src/native/linalg.rs",
+            op: Op::ArithSwap,
+            original: " + ",
+            contains: "(l.at(i, k) + s * v[i - idx]) / c;",
+            occurrence: 0,
+            kill_argument: "corrupts the Givens rotation update; \
+                            prop_packed_downdate_matches_scratch_factor_of_reduced_kernel \
+                            rebuilds the reduced kernel densely and pins 1e-8",
+        },
+        Pin {
+            id: "linalg-givens-vupdate-del",
+            file: "rust/src/native/linalg.rs",
+            op: Op::StmtDelete,
+            original: "v[i - idx] = c * v[i - idx] - s * lik;",
+            contains: "v[i - idx] = c * v[i - idx] - s * lik;",
+            occurrence: 0,
+            kill_argument: "drops the sweep's carry-column update so every later \
+                            rotation uses stale v; same dense cross-check kills it",
+        },
+        Pin {
+            id: "linalg-splice-guard-flip",
+            file: "rust/src/native/linalg.rs",
+            op: Op::EvictFlip,
+            original: "== idx",
+            contains: "if c == idx {",
+            occurrence: 0,
+            kill_argument: "PackedLower::remove keeps ONLY the deleted column; killed \
+                            directly by prop_packed_remove_edge_indices and through \
+                            every downdate property",
+        },
+        Pin {
+            id: "linalg-dims-splice-guard-flip",
+            file: "rust/src/native/linalg.rs",
+            op: Op::EvictFlip,
+            original: "== idx",
+            contains: "if c == idx {",
+            occurrence: 1,
+            kill_argument: "same guard in PackedDims::remove; killed directly by \
+                            prop_packed_dims_remove_edge_indices",
+        },
+        Pin {
+            id: "linalg-remove-row-off-by-one",
+            file: "rust/src/native/linalg.rs",
+            op: Op::OffByOne,
+            original: " + 1",
+            contains: "self.data.drain(i * c..(i + 1) * c);",
+            occurrence: 0,
+            kill_argument: "Mat::remove_row drains two rows (or panics on the last); \
+                            killed directly by prop_mat_remove_row_edge_indices",
+        },
+        Pin {
+            id: "ops-rbf-sqdist-div",
+            file: "rust/src/native/ops.rs",
+            op: Op::ArithSwap,
+            original: " * ",
+            contains: "(x - y) * (x - y)).sum();",
+            occurrence: 0,
+            kill_argument: "the isotropic RBF diagonal becomes 0/0 = NaN, the one-shot \
+                            reference kernel is no longer PD and gp_ei panics inside \
+                            gp_incremental's reference path",
+        },
+        Pin {
+            id: "gp-sqdist-dims-div",
+            file: "rust/src/native/gp.rs",
+            op: Op::ArithSwap,
+            original: " * ",
+            contains: "*o = d * d;",
+            occurrence: 0,
+            kill_argument: "the session's per-dimension distance cache degenerates \
+                            (d/d) while the one-shot reference keeps true distances; \
+                            gp_incremental's bitwise contract breaks on the first \
+                            prediction",
+        },
+        Pin {
+            id: "gp-forget-downdate-index",
+            file: "rust/src/native/gp.rs",
+            op: Op::EvictFlip,
+            original: "i",
+            contains: "cholesky_downdate(&mut self.l, i);",
+            occurrence: 0,
+            kill_argument: "Adapt-mode forget downdates the wrong row (or asserts on \
+                            the last index); gp_downdate pins downdate-vs-rebuild \
+                            predictions to 1e-8 across eviction churn",
+        },
+        Pin {
+            id: "stats-var-divisor-mul",
+            file: "rust/src/util/stats.rs",
+            op: Op::ArithSwap,
+            original: " / ",
+            contains: "(n - 1) as f64",
+            occurrence: 0,
+            kill_argument: "variance becomes sum * (n-1); \
+                            prop_summarize_matches_naive_reference recomputes the \
+                            Bessel-corrected variance inline",
+        },
+        Pin {
+            id: "stats-var-bessel-off-by-one",
+            file: "rust/src/util/stats.rs",
+            op: Op::OffByOne,
+            original: " - 1",
+            contains: "(n - 1) as f64",
+            occurrence: 0,
+            kill_argument: "divisor n-2 skews std for every n >= 2; the same naive \
+                            reference property kills it",
+        },
+        Pin {
+            id: "stats-argmin-tie-break",
+            file: "rust/src/util/stats.rs",
+            op: Op::CmpSwap,
+            original: " <= ",
+            contains: "Some(b) if xs[b] <= *x => {}",
+            occurrence: 0,
+            kill_argument: "ties now move best to the LAST minimum; \
+                            prop_argminmax_match_naive_reference generates discrete \
+                            values so ties occur on nearly every seed",
+        },
+    ]
+}
+
+/// Resolve a pin against the scanned sites of its file.  Errors describe
+/// pin rot precisely enough to re-point the pin.
+pub fn resolve_pin<'a>(pin: &Pin, sites: &'a [Site]) -> Result<&'a Site> {
+    let matches: Vec<&Site> = sites
+        .iter()
+        .filter(|s| {
+            s.file == pin.file
+                && s.op == pin.op
+                && s.original == pin.original
+                && s.line_text.contains(pin.contains)
+        })
+        .collect();
+    match matches.get(pin.occurrence) {
+        Some(site) => Ok(site),
+        None => bail!(
+            "pin rot: `{}` matched {} site(s) in {} (need occurrence {}). The pinned line \
+             (`{}`, operator {}, original `{}`) was edited or removed — re-point the pin in \
+             rust/src/mutate/smoke.rs",
+            pin.id,
+            matches.len(),
+            pin.file,
+            pin.occurrence,
+            pin.contains,
+            pin.op,
+            pin.original,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mutate::scanner::scan_source;
+
+    #[test]
+    fn pins_have_unique_ids() {
+        let pins = pinned();
+        let mut ids: Vec<_> = pins.iter().map(|p| p.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), pins.len());
+    }
+
+    #[test]
+    fn resolve_reports_rot_on_missing_line() {
+        let pins = pinned();
+        let sites = scan_source("rust/src/native/linalg.rs", "fn nothing_here() {}\n");
+        let err = resolve_pin(&pins[0], &sites).unwrap_err().to_string();
+        assert!(err.contains("pin rot"), "{err}");
+        assert!(err.contains(pins[0].id), "{err}");
+    }
+}

@@ -171,12 +171,23 @@ impl PackedLower {
         self.n == 0
     }
 
+    /// Entry `(i, j)` of the lower triangle.
+    ///
+    /// Invariant: `j <= i < n`.  Checked only by `debug_assert!` — in
+    /// release builds an upper-triangle query `(i, j)` with `j > i` does
+    /// NOT panic; `off(i) + j` still lands inside `data` and silently
+    /// reads an unrelated entry of a *later* row.  Callers must supply
+    /// lower-triangle indices; `tests/property_invariants.rs` sweeps the
+    /// `j <= i < n` boundary against a dense mirror.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(j <= i && i < self.n);
         self.data[Self::off(i) + j]
     }
 
+    /// Mutable entry `(i, j)`.  Same `j <= i < n` invariant (and same
+    /// silent-misread hazard in release builds) as [`PackedLower::at`] —
+    /// except here a bad index silently *corrupts* a later row.
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         debug_assert!(j <= i && i < self.n);
@@ -286,7 +297,11 @@ impl PackedDims {
         self.d
     }
 
-    /// The d-block of entry `(i, j)` (`j <= i`).
+    /// The d-block of entry `(i, j)`.
+    ///
+    /// Invariant: `j <= i < n`, checked only by `debug_assert!` like
+    /// [`PackedLower::at`]: in release builds an upper-triangle query
+    /// silently returns the d-block of a later row instead of panicking.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> &[f64] {
         debug_assert!(j <= i && i < self.n);

@@ -1,0 +1,91 @@
+//! Static checks on the mutation-site scanner against the *real* kernel
+//! sources: every target file yields sites, every operator fires
+//! somewhere, and every smoke pin resolves.  This runs in plain
+//! `cargo test` (no mutant builds), so pin rot — editing a pinned kernel
+//! line without re-pointing the pin — fails tier-1 immediately instead of
+//! waiting for the next `mutant-hunter --smoke` run.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use onestoptuner::mutate::{pinned, resolve_pin, scan_source, Op, Site, TARGET_FILES};
+
+/// Repo root = parent of the crate dir (`rust/`).
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ crate dir has a parent")
+        .to_path_buf()
+}
+
+fn scan_all() -> Vec<Site> {
+    let root = repo_root();
+    let mut sites = Vec::new();
+    for file in TARGET_FILES {
+        let src = std::fs::read_to_string(root.join(file))
+            .unwrap_or_else(|e| panic!("reading {file}: {e}"));
+        sites.extend(scan_source(file, &src));
+    }
+    sites
+}
+
+#[test]
+fn every_target_file_yields_sites() {
+    let sites = scan_all();
+    for file in TARGET_FILES {
+        let n = sites.iter().filter(|s| s.file == file).count();
+        assert!(n > 0, "{file}: scanner found no mutation sites");
+        // A kernel file with only a handful of sites would mean the
+        // scanner regressed (masking everything, or stopping early).
+        assert!(n >= 10, "{file}: only {n} sites — scanner regression?");
+    }
+}
+
+#[test]
+fn every_operator_fires_somewhere() {
+    let sites = scan_all();
+    let seen: BTreeSet<&str> = sites.iter().map(|s| s.op.label()).collect();
+    for op in Op::ALL {
+        assert!(
+            seen.contains(op.label()),
+            "operator {op} matched nothing across the target files"
+        );
+    }
+}
+
+#[test]
+fn all_smoke_pins_resolve_and_mutate() {
+    let sites = scan_all();
+    for pin in pinned() {
+        let site = resolve_pin(&pin, &sites)
+            .unwrap_or_else(|e| panic!("smoke pin must resolve: {e:#}"));
+        let src = std::fs::read_to_string(repo_root().join(site.file)).unwrap();
+        let mutated = onestoptuner::mutate::scanner::apply(&src, site);
+        assert_ne!(mutated, src, "pin {} produced an identical source", pin.id);
+        assert_eq!(
+            mutated.lines().count(),
+            src.lines().count(),
+            "pin {} changed the line count (mutations are in-line)",
+            pin.id
+        );
+        // The replacement sits exactly at the site's byte offset.
+        let window = &mutated[site.byte_start..site.byte_start + site.replacement.len()];
+        assert_eq!(window, site.replacement, "pin {}", pin.id);
+    }
+}
+
+#[test]
+fn sites_are_sorted_and_unique_ids() {
+    let sites = scan_all();
+    for file in TARGET_FILES {
+        let per: Vec<&Site> = sites.iter().filter(|s| s.file == file).collect();
+        let n = per.len();
+        // id = file:line:col:op can repeat when one operator offers two
+        // replacements at the same spot; (id, replacement) must not.
+        let mut full: Vec<String> =
+            per.iter().map(|s| format!("{}->{}", s.id(), s.replacement)).collect();
+        full.sort_unstable();
+        full.dedup();
+        assert_eq!(full.len(), n, "{file}: duplicate (site, replacement) pair");
+    }
+}

@@ -5,9 +5,10 @@
 use onestoptuner::flags::{FeatureEncoder, FlagConfig, GcMode, Kind};
 use onestoptuner::jvmsim::{self, JvmParams, MutatorLoad};
 use onestoptuner::native::linalg::{
-    cholesky, cholesky_downdate, cholesky_push, Mat, PackedLower,
+    cholesky, cholesky_downdate, cholesky_push, Mat, PackedDims, PackedLower,
 };
 use onestoptuner::tuner::TuneSpace;
+use onestoptuner::util::stats::{argmax, argmin, summarize};
 use onestoptuner::util::json::Json;
 use onestoptuner::util::rng::Pcg;
 use onestoptuner::util::sobol::Sobol;
@@ -233,6 +234,237 @@ fn prop_packed_downdate_never_produces_nan_on_spd() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn prop_packed_accessor_boundary_roundtrip() {
+    // at/at_mut honor the packed layout across the whole documented
+    // `j <= i < n` triangle, including the boundary entries (diagonal
+    // j == i, last row i == n-1): values written through at_mut come back
+    // via at and row(), so no entry aliases another.  PackedDims gets the
+    // same sweep over its d-blocks.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8600 + seed);
+        let n = 1 + rng.below(8);
+        let mut l = PackedLower::new();
+        for i in 0..n {
+            let zeros = vec![0.0; i + 1];
+            l.push_row(&zeros);
+        }
+        for i in 0..n {
+            for j in 0..=i {
+                *l.at_mut(i, j) = (i * (i + 1) / 2 + j) as f64;
+            }
+        }
+        for i in 0..n {
+            for j in 0..=i {
+                let want = (i * (i + 1) / 2 + j) as f64;
+                assert_eq!(l.at(i, j), want, "seed {seed} ({i},{j})");
+                assert_eq!(l.row(i)[j], want, "seed {seed} row ({i},{j})");
+            }
+        }
+
+        let d = 1 + rng.below(3);
+        let mut pd = PackedDims::new(d);
+        for i in 0..n {
+            let flat: Vec<f64> = (0..=i)
+                .flat_map(|j| (0..d).map(move |k| ((i * (i + 1) / 2 + j) * d + k) as f64))
+                .collect();
+            pd.push_row(&flat);
+        }
+        assert_eq!(pd.dims(), d);
+        for i in 0..n {
+            for j in 0..=i {
+                let want: Vec<f64> =
+                    (0..d).map(|k| ((i * (i + 1) / 2 + j) * d + k) as f64).collect();
+                assert_eq!(pd.at(i, j), &want[..], "seed {seed} dims ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mat_remove_row_edge_indices() {
+    // Direct splice contract for Mat::remove_row at the boundary indices —
+    // first row, last row, the singleton matrix — plus a random interior
+    // row, against a Vec-of-rows reference.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8300 + seed);
+        let rows = 1 + rng.below(8);
+        let cols = 1 + rng.below(5);
+        let reference: Vec<Vec<f64>> = (0..rows)
+            .map(|i| (0..cols).map(|j| (i * cols + j) as f64 + rng.f64()).collect())
+            .collect();
+        let mut idxs = vec![0, rows - 1];
+        if rows > 1 {
+            idxs.push(rng.below(rows));
+        }
+        for idx in idxs {
+            let mut m = Mat::from_rows(&reference);
+            m.remove_row(idx);
+            let mut want = reference.clone();
+            want.remove(idx);
+            assert_eq!(m.rows, rows - 1, "seed {seed} idx {idx}");
+            assert_eq!(m.cols, cols);
+            for (i, wr) in want.iter().enumerate() {
+                assert_eq!(m.row(i), &wr[..], "seed {seed} idx {idx} row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_remove_edge_indices() {
+    // PackedLower::remove must splice exactly row/column idx and nothing
+    // else — checked entry-by-entry against the pre-removal triangle at
+    // first/last/singleton and a random interior index.  (Values are all
+    // distinct, so keeping a wrong column cannot pass by coincidence.)
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8400 + seed);
+        let n = 1 + rng.below(8);
+        let mut l = PackedLower::new();
+        for i in 0..n {
+            let row: Vec<f64> =
+                (0..=i).map(|j| (i * (i + 1) / 2 + j) as f64 + rng.f64() * 0.5).collect();
+            l.push_row(&row);
+        }
+        let dense: Vec<Vec<f64>> = (0..n).map(|i| l.row(i).to_vec()).collect();
+        let mut idxs = vec![0, n - 1];
+        if n > 1 {
+            idxs.push(rng.below(n));
+        }
+        for idx in idxs {
+            let mut p = l.clone();
+            p.remove(idx);
+            assert_eq!(p.n(), n - 1, "seed {seed} idx {idx}");
+            let keep: Vec<usize> = (0..n).filter(|&r| r != idx).collect();
+            for (i, &ri) in keep.iter().enumerate() {
+                for (j, &rj) in keep.iter().enumerate().take(i + 1) {
+                    assert_eq!(
+                        p.at(i, j),
+                        dense[ri][rj],
+                        "seed {seed} idx {idx} ({i},{j}) <- ({ri},{rj})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_dims_remove_edge_indices() {
+    // PackedDims::remove, same splice contract as PackedLower::remove but
+    // over d-blocks (copy_within instead of element moves).
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8500 + seed);
+        let n = 1 + rng.below(6);
+        let d = 1 + rng.below(4);
+        let mut pd = PackedDims::new(d);
+        let mut dense: Vec<Vec<Vec<f64>>> = Vec::new();
+        for i in 0..n {
+            let mut flat = Vec::new();
+            let mut drow = Vec::new();
+            for j in 0..=i {
+                let block: Vec<f64> =
+                    (0..d).map(|k| ((i * 31 + j) * 7 + k) as f64 + rng.f64()).collect();
+                flat.extend_from_slice(&block);
+                drow.push(block);
+            }
+            pd.push_row(&flat);
+            dense.push(drow);
+        }
+        let mut idxs = vec![0, n - 1];
+        if n > 1 {
+            idxs.push(rng.below(n));
+        }
+        for idx in idxs {
+            let mut p = pd.clone();
+            p.remove(idx);
+            assert_eq!(p.n(), n - 1, "seed {seed} idx {idx}");
+            let keep: Vec<usize> = (0..n).filter(|&r| r != idx).collect();
+            for (i, &ri) in keep.iter().enumerate() {
+                for (j, &rj) in keep.iter().enumerate().take(i + 1) {
+                    assert_eq!(
+                        p.at(i, j),
+                        &dense[ri][rj][..],
+                        "seed {seed} idx {idx} ({i},{j}) <- ({ri},{rj})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_summarize_matches_naive_reference() {
+    // summarize against an inline two-pass reference (mean, then
+    // Bessel-corrected variance): any drift in the divisor or the
+    // accumulation shows up immediately.  n >= 2 so the n-1 divisor is
+    // always on the live path.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8700 + seed);
+        let n = 2 + rng.below(20);
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform(-50.0, 50.0)).collect();
+        let s = summarize(&xs);
+        let mean: f64 = xs.iter().sum::<f64>() / n as f64;
+        let mut var = 0.0;
+        for x in &xs {
+            var += (x - mean) * (x - mean);
+        }
+        var /= (n as f64) - 1.0;
+        assert_eq!(s.n, n, "seed {seed}");
+        assert!((s.mean - mean).abs() <= 1e-12 * (1.0 + mean.abs()), "seed {seed}");
+        assert!(
+            (s.std - var.sqrt()).abs() <= 1e-9 * (1.0 + var.sqrt()),
+            "seed {seed}: std {} vs {}",
+            s.std,
+            var.sqrt()
+        );
+        let mn = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.min, mn, "seed {seed}");
+        assert_eq!(s.max, mx, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_argminmax_match_naive_reference() {
+    // Discrete values from {0..3} force ties on nearly every seed, so the
+    // first-occurrence tie-break is always exercised; NaN injection checks
+    // the skip path.  Reference: first strict optimum among non-NaN
+    // entries, index 0 when none exist.
+    for seed in 0..CASES {
+        let mut rng = Pcg::new(8800 + seed);
+        let n = 1 + rng.below(12);
+        let xs: Vec<f64> = (0..n)
+            .map(|_| if rng.below(6) == 0 { f64::NAN } else { rng.below(4) as f64 })
+            .collect();
+        let mut lo: Option<(usize, f64)> = None;
+        let mut hi: Option<(usize, f64)> = None;
+        for (i, x) in xs.iter().enumerate() {
+            if x.is_nan() {
+                continue;
+            }
+            match lo {
+                Some((_, v)) if v <= *x => {}
+                _ => lo = Some((i, *x)),
+            }
+            match hi {
+                Some((_, v)) if v >= *x => {}
+                _ => hi = Some((i, *x)),
+            }
+        }
+        let want_min = match lo {
+            Some((i, _)) => i,
+            None => 0,
+        };
+        let want_max = match hi {
+            Some((i, _)) => i,
+            None => 0,
+        };
+        assert_eq!(argmin(&xs), want_min, "seed {seed} {xs:?}");
+        assert_eq!(argmax(&xs), want_max, "seed {seed} {xs:?}");
     }
 }
 

@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# kick_tires.sh — one-command "does the repro actually reproduce?" check.
+#
+# Rebuilds the paper's headline artifacts — fig5 (EMCM active-learning
+# convergence), fig6 (tuning trajectories) and table2 (GRID/flag-selection
+# comparison) — into results/kick_tires/ and renders a single markdown
+# report (KICK_TIRES.md) embedding the three tables.
+#
+#   scripts/kick_tires.sh           # copy the committed precomputed tables
+#   scripts/kick_tires.sh --fresh   # actually run the experiments (needs
+#                                   # a Rust toolchain; CI uses this)
+#
+# The default path exists so the report renders on machines without a
+# toolchain; --fresh is the real check and is what CI runs.  Exits
+# non-zero if any expected artifact is missing afterwards.
+
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+OUT="$ROOT/results/kick_tires"
+PRE="$ROOT/scripts/precomputed"
+ARTIFACTS=(fig5 fig6 table2)
+
+MODE="precomputed"
+if [[ "${1:-}" == "--fresh" ]]; then
+  MODE="fresh"
+elif [[ $# -gt 0 ]]; then
+  echo "usage: $0 [--fresh]" >&2
+  exit 2
+fi
+
+mkdir -p "$OUT"
+
+if [[ "$MODE" == "fresh" ]]; then
+  command -v cargo >/dev/null || {
+    echo "kick_tires: --fresh needs a Rust toolchain (cargo not found)" >&2
+    exit 1
+  }
+  for a in "${ARTIFACTS[@]}"; do
+    echo "== repro $a (--fast) =="
+    (cd "$ROOT/rust" && cargo run --release --quiet -- repro "$a" --fast --out "$OUT")
+  done
+else
+  for a in "${ARTIFACTS[@]}"; do
+    for ext in csv txt; do
+      cp "$PRE/$a.$ext" "$OUT/$a.$ext"
+    done
+  done
+fi
+
+missing=0
+for a in "${ARTIFACTS[@]}"; do
+  for ext in csv txt; do
+    if [[ ! -s "$OUT/$a.$ext" ]]; then
+      echo "kick_tires: missing or empty artifact $OUT/$a.$ext" >&2
+      missing=1
+    fi
+  done
+done
+[[ "$missing" == 0 ]] || exit 1
+
+REPORT="$OUT/KICK_TIRES.md"
+{
+  echo "# Kick-the-tires report"
+  echo
+  echo "- provenance: \`$MODE\`$([[ "$MODE" == precomputed ]] && echo ' (committed placeholder tables — run with `--fresh` for a real reproduction)')"
+  echo "- command: \`scripts/kick_tires.sh${1:+ $1}\`"
+  echo
+  for a in "${ARTIFACTS[@]}"; do
+    echo "## $a"
+    echo
+    echo '```text'
+    cat "$OUT/$a.txt"
+    echo '```'
+    echo
+  done
+} > "$REPORT"
+
+echo "kick_tires: OK ($MODE) — report at ${REPORT#"$ROOT"/}"
