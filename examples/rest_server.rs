@@ -1,14 +1,21 @@
 //! The Fig 2 backend in action: start the REST API, then act as the UI —
 //! characterize (watching live progress), select flags, tune, cancel a
-//! running tune mid-flight, and finally "restart" the backend on the same
-//! state directory to show the datasets and terminal job records survive.
+//! running tune mid-flight, degrade a tune under injected measurement
+//! faults, and finally "restart" the backend on the same state directory
+//! to show the datasets and terminal job records survive.
 //!
 //! The long-running endpoints are asynchronous: POST returns
 //! `202 Accepted` + a job id; the client polls `/api/jobs/:id` (which
 //! carries a `progress` object while running) and can abort with
 //! `DELETE /api/jobs/:id`.
 //!
-//! Run with:  cargo run --release --example rest_server [-- --threads N] [--state-dir DIR]
+//! Run with:
+//!   cargo run --release --example rest_server \
+//!     [-- --threads N] [--state-dir DIR] [--chaos-out FILE]
+//!
+//! `--chaos-out FILE` writes the degraded job's full record (status +
+//! best-so-far result + per-kind failure histogram) to FILE so CI can
+//! schema-check the chaos leg with jq.
 //!
 //! Exits non-zero if any lifecycle invariant breaks — CI runs this as the
 //! end-to-end check of the job subsystem.
@@ -37,6 +44,11 @@ fn main() -> anyhow::Result<()> {
         .and_then(|i| args.get(i + 1))
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|| std::env::temp_dir().join("onestoptuner-rest-demo"));
+    let chaos_out = args
+        .iter()
+        .position(|a| a == "--chaos-out")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from);
     // Fresh demo every run: drop any state file a previous run left.
     let _ = std::fs::remove_file(state_dir.join(persist::STATE_FILE));
 
@@ -64,7 +76,7 @@ fn main() -> anyhow::Result<()> {
                 }
             }
             match status.as_str() {
-                "done" | "failed" | "cancelled" => return Ok(v),
+                "done" | "failed" | "cancelled" | "degraded" => return Ok(v),
                 _ => std::thread::sleep(std::time::Duration::from_millis(100)),
             }
         }
@@ -208,6 +220,38 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  job {job} cancelled with best-so-far partial result\n");
 
+    // ---- graceful degradation: tune under injected faults -------------
+    println!("POST /api/tune (SA under crash injection, fail_budget 2 — degrades, keeps best-so-far)");
+    let (code, body) = post(
+        "/api/tune",
+        r#"{"bench":"lda","gc":"g1","algo":"sa","iters":10,"fail_budget":2,
+            "faults":{"seed":7,"crash_p":1.0,"max_retries":1}}"#,
+    );
+    anyhow::ensure!(code == 202, "faulty tune must still be accepted: {body}");
+    let chaos_job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    let chaos_rec = watch(chaos_job)?;
+    anyhow::ensure!(
+        chaos_rec.get("status").and_then(Json::as_str) == Some("degraded"),
+        "fault-budget exhaustion must land in 'degraded': {chaos_rec}"
+    );
+    let v = chaos_rec
+        .get("result")
+        .ok_or_else(|| anyhow::anyhow!("degraded job must keep its best-so-far result"))?;
+    let failures = v
+        .get("failures")
+        .ok_or_else(|| anyhow::anyhow!("degraded result must carry the failure histogram"))?;
+    let total = failures.get("total").and_then(Json::as_f64).unwrap_or(0.0);
+    anyhow::ensure!(total > 2.0, "budget 2 means >2 recorded failures: {failures}");
+    anyhow::ensure!(
+        v.get("best_java_args").is_some(),
+        "degraded result must still name a best configuration: {v}"
+    );
+    println!("  job {chaos_job} degraded after {total} failures; histogram {failures}\n");
+    if let Some(path) = &chaos_out {
+        std::fs::write(path, format!("{chaos_rec}\n"))?;
+        println!("  wrote degraded job record to {}\n", path.display());
+    }
+
     // ---- restart: a second backend on the same state dir --------------
     println!("restarting the backend on the same --state-dir ...");
     // The terminal hook persists *after* the record turns visible over
@@ -217,15 +261,15 @@ fn main() -> anyhow::Result<()> {
     let state_file = state_dir.join(persist::STATE_FILE);
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
     loop {
-        let has_cancelled = std::fs::read_to_string(&state_file)
-            .ok()
-            .is_some_and(|s| s.contains("\"status\":\"cancelled\""));
-        if has_cancelled {
+        let persisted = std::fs::read_to_string(&state_file).unwrap_or_default();
+        if persisted.contains("\"status\":\"cancelled\"")
+            && persisted.contains("\"status\":\"degraded\"")
+        {
             break;
         }
         anyhow::ensure!(
             std::time::Instant::now() < deadline,
-            "cancelled job never reached the state file"
+            "cancelled/degraded jobs never reached the state file"
         );
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
@@ -243,10 +287,22 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(code == 200, "terminal job records did not survive the restart");
     anyhow::ensure!(body.contains("\"status\":\"cancelled\""), "restored job lost its state: {body}");
     println!("  GET /api/jobs/{job}\n    {body}");
+    // The degraded record survives too, histogram and all.
+    let (code, body) =
+        http_request(addr2, "GET", &format!("/api/jobs/{chaos_job}"), "").unwrap();
+    anyhow::ensure!(code == 200, "degraded job record did not survive the restart");
+    anyhow::ensure!(
+        body.contains("\"status\":\"degraded\"") && body.contains("\"failures\""),
+        "restored degraded job lost its state: {body}"
+    );
+    println!("  GET /api/jobs/{chaos_job}\n    {body}");
     // The restored dataset is live, not just listed: select works on it.
     let (code, _) =
         http_request(addr2, "POST", "/api/select", &format!(r#"{{"dataset_id":{id}}}"#)).unwrap();
     anyhow::ensure!(code == 200, "select on a restored dataset failed");
-    println!("\njob lifecycle demo complete: progress, cancellation, and restart persistence OK");
+    println!(
+        "\njob lifecycle demo complete: progress, cancellation, graceful degradation, \
+         and restart persistence OK"
+    );
     Ok(())
 }

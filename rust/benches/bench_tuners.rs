@@ -14,8 +14,8 @@ use onestoptuner::flags::GcMode;
 use onestoptuner::runtime::{engine::XlaEngine, MlBackend, NativeBackend};
 use onestoptuner::sparksim::SparkRunner;
 use onestoptuner::tuner::{
-    bo::BoConfig, sa::SaConfig, BoTuner, Objective, RboTuner, SaTuner, SimObjective,
-    TuneSpace, Tuner,
+    bo::BoConfig, sa::SaConfig, BoTuner, EvalOutcome, Objective, RboTuner, SaTuner,
+    SimObjective, TuneSpace, Tuner,
 };
 use onestoptuner::{Benchmark, Metric};
 
@@ -26,10 +26,11 @@ struct FreeObjective {
 }
 
 impl Objective for FreeObjective {
-    fn eval(&mut self, cfg: &onestoptuner::FlagConfig) -> f64 {
+    fn eval_outcome(&mut self, cfg: &onestoptuner::FlagConfig) -> EvalOutcome {
         self.count += 1;
         let u = self.space.project(cfg);
-        u.iter().map(|&x| (x - 0.6) * (x - 0.6)).sum()
+        let y = u.iter().map(|&x| (x - 0.6) * (x - 0.6)).sum();
+        EvalOutcome { y, failure: None, attempts: 1 }
     }
     fn evals(&self) -> usize {
         self.count

@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::exec::{self, ExecPool, JobControl};
 use crate::flags::{FeatureEncoder, FlagConfig, GcMode};
 use crate::runtime::{MlBackend, N_TRAIN, Z_ENS};
-use crate::sparksim::{RunMetrics, SparkRunner};
+use crate::sparksim::{FailureHisto, RunOutcome, SparkRunner};
 use crate::util::csv::Table;
 use crate::util::rng::Pcg;
 use crate::util::stats::{self, TargetScaler};
@@ -156,6 +156,8 @@ pub struct CharacterizeResult {
     pub rounds: usize,
     /// Total simulated benchmark time spent generating data (seconds).
     pub sim_time_s: f64,
+    /// Per-kind measurement-failure counts over all labelling runs.
+    pub failures: FailureHisto,
 }
 
 /// Labels pool entries by running the benchmark on the simulated cluster.
@@ -177,7 +179,16 @@ struct Labeller<'a> {
     /// recorded as `cap` rather than the raw timeout, so a handful of OOM
     /// outliers cannot dominate the regression model phase 1 trains.
     cap: f64,
+    /// Per-kind counts of failed labelling runs (OOM, wall-cap, injected).
+    failures: FailureHisto,
 }
+
+/// Flat heap-usage label recorded for a failed run.  A failed run's heap
+/// trace is not a measurement — an OOM pins it near 100% while a crashed
+/// executor leaves it near 0% — so the raw value is *replaced* rather than
+/// penalized additively: a crash must not look memory-efficient, and an
+/// OOM's garbage reading must not drift above the dataset's sanity bound.
+const HEAP_FAIL_LABEL: f64 = 140.0;
 
 impl<'a> Labeller<'a> {
     /// Run every config of the batch on `pool` and return their labels in
@@ -189,22 +200,27 @@ impl<'a> Labeller<'a> {
         // The batch owns the fan-out; each run simulates its executors
         // serially rather than nesting a second pool per run.
         let inner = ExecPool::serial();
-        let runs: Vec<RunMetrics> = pool.par_map(cfgs, |i, cfg| {
-            runner.run_on(&inner, cfg, seed.wrapping_add(base + 1 + i as u64))
+        let runs: Vec<RunOutcome> = pool.par_map(cfgs, |i, cfg| {
+            runner.run_outcome_on(&inner, cfg, seed.wrapping_add(base + 1 + i as u64))
         });
         // Bookkeeping and label post-processing stay in batch order so the
         // floating-point `sim_time_s` accumulation matches a serial run.
         let mut labels = Vec::with_capacity(runs.len());
-        for m in &runs {
+        for out in &runs {
+            let m = out.metrics();
             self.count += 1;
             self.sim_time_s += m.wall_clock_s;
             let mut v = self.metric.of(m);
+            if let Some(kind) = out.failure() {
+                self.failures.record(kind);
+            }
             match self.metric {
+                // The timeout-shaped exec time of a failed run is capped
+                // like any other outlier.
                 Metric::ExecTime => v = v.min(self.cap),
                 Metric::HeapUsage => {
-                    if m.timed_out {
-                        // Failed configurations must not look memory-efficient.
-                        v += 50.0;
+                    if out.failure().is_some() {
+                        v = HEAP_FAIL_LABEL;
                     }
                 }
             }
@@ -299,6 +315,7 @@ pub fn characterize_ctl(
         count: 1,
         sim_time_s: default_run.wall_clock_s,
         cap: 5.0 * default_run.exec_time_s,
+        failures: FailureHisto::default(),
     };
 
     // Unlabelled pool.
@@ -348,6 +365,7 @@ pub fn characterize_ctl(
         test_cfgs.push(c);
     }
     let test_y = labeller.label_batch(epool, &test_cfgs);
+    ctl.note_failures(labeller.failures.total());
 
     let ridge = cfg.ridge;
     let test_std: Vec<Vec<f64>> = test_x.iter().map(|x| fstd.transform_row(x)).collect();
@@ -373,12 +391,14 @@ pub fn characterize_ctl(
         p.max_rounds = Some(cfg.max_rounds);
         p.runs_executed = Some(labeller.count);
         p.last_rmse = Some(rmse0);
+        p.failures = Some(labeller.failures);
     });
 
     let mut rounds = 0;
     for round in 0..cfg.max_rounds {
-        // Cancelled: keep the rounds already labelled as a partial dataset.
-        if ctl.is_cancelled() {
+        // Stopped (cancelled or failure budget exhausted): keep the rounds
+        // already labelled as a partial dataset.
+        if ctl.should_stop() {
             break;
         }
         if pool.is_empty() || y.len() + cfg.batch_k > N_TRAIN {
@@ -437,6 +457,7 @@ pub fn characterize_ctl(
             feat_rows.push(f);
         }
         y.extend(labeller.label_batch(epool, &batch_cfgs));
+        ctl.note_failures(labeller.failures.total());
 
         // Convergence check on validation RMSE.
         let (_, _, r) = fit_and_rmse(&feat_std_rows, &y, backend)?;
@@ -446,6 +467,7 @@ pub fn characterize_ctl(
             p.round = Some(rounds);
             p.runs_executed = Some(labeller.count);
             p.last_rmse = Some(r);
+            p.failures = Some(labeller.failures);
         });
         if (prev - r).abs() / prev.max(1e-9) < cfg.rmse_rel_tol {
             break;
@@ -459,6 +481,7 @@ pub fn characterize_ctl(
         runs_executed: labeller.count,
         rounds,
         sim_time_s: labeller.sim_time_s,
+        failures: labeller.failures,
     })
 }
 
@@ -617,6 +640,50 @@ mod tests {
         )
         .unwrap();
         assert!(r.dataset.y.iter().all(|&v| v > 0.0 && v < 150.0));
+    }
+
+    #[test]
+    fn failed_runs_get_penalty_labels_not_garbage() {
+        // Regression test for the heap-usage label bug: an OOMing config's
+        // raw `hu_avg_pct` is pinned near 100% by its death throes; adding
+        // a +50 penalty on top used to push the label toward the dataset
+        // sanity bound while still *ranking* the config as if its heap
+        // reading were real.  The label must be the flat replacement
+        // penalty, and the exec-time label must stay capped.
+        let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+        let good = FlagConfig::default_for(GcMode::ParallelGC);
+        let mut oom = good.clone();
+        oom.set("MaxHeapSize", 2048.0); // live set cannot fit: deterministic OOM
+        let cfgs = [good, oom];
+        let pool = ExecPool::serial();
+
+        let mut heap = Labeller {
+            runner: &runner,
+            metric: Metric::HeapUsage,
+            seed: 11,
+            count: 0,
+            sim_time_s: 0.0,
+            cap: 500.0,
+            failures: FailureHisto::default(),
+        };
+        let labels = heap.label_batch(&pool, &cfgs);
+        assert!(labels[0] > 0.0 && labels[0] < 100.0, "healthy label: {}", labels[0]);
+        assert_eq!(labels[1], HEAP_FAIL_LABEL, "failed label is replaced, not offset");
+        assert_eq!(heap.failures.oom, 1);
+        assert_eq!(heap.failures.total(), 1);
+
+        let mut time = Labeller {
+            runner: &runner,
+            metric: Metric::ExecTime,
+            seed: 11,
+            count: 0,
+            sim_time_s: 0.0,
+            cap: 500.0,
+            failures: FailureHisto::default(),
+        };
+        let labels = time.label_batch(&pool, &cfgs);
+        assert!(labels[0] < 500.0, "healthy exec time under the cap");
+        assert_eq!(labels[1], 500.0, "failed exec time lands exactly on the cap");
     }
 
     #[test]

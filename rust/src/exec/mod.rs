@@ -192,6 +192,8 @@ pub struct Progress {
     pub last_rmse: Option<f64>,
     /// Best objective value seen so far (minimization).
     pub best_y: Option<f64>,
+    /// Per-kind failure counts accumulated so far (failure-aware loops).
+    pub failures: Option<crate::sparksim::FailureHisto>,
 }
 
 impl Progress {
@@ -203,15 +205,35 @@ impl Progress {
 /// Shared control cell between a job's owner (the REST queue) and the
 /// loops doing the work: the owner reads [`Progress`] snapshots and can
 /// request cooperative cancellation; the worker publishes progress at
-/// round/iteration boundaries and polls [`JobControl::is_cancelled`] at
-/// the same boundaries, returning its best-so-far partial result when the
-/// flag is set.  A default (unattached) control is free to construct and
-/// turns both sides into no-ops, so library callers that don't care about
-/// lifecycle pay nothing.
-#[derive(Debug, Default)]
+/// round/iteration boundaries and polls [`JobControl::should_stop`] at
+/// the same boundaries, returning its best-so-far partial result when a
+/// stop is requested.  A stop comes from two places: explicit
+/// cancellation ([`JobControl::cancel`]) or the job's failure budget
+/// being exhausted ([`JobControl::set_fail_budget`] +
+/// [`JobControl::note_failures`]) — the latter marks the job *degraded*,
+/// which the queue maps to its own terminal status.  A default
+/// (unattached) control is free to construct and turns both sides into
+/// no-ops (the default failure budget is unlimited), so library callers
+/// that don't care about lifecycle pay nothing.
+#[derive(Debug)]
 pub struct JobControl {
     cancelled: AtomicBool,
+    degraded: AtomicBool,
+    /// Max failures tolerated before the job degrades; `usize::MAX`
+    /// means unlimited.
+    fail_budget: AtomicUsize,
     progress: Mutex<Progress>,
+}
+
+impl Default for JobControl {
+    fn default() -> Self {
+        JobControl {
+            cancelled: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
+            fail_budget: AtomicUsize::new(usize::MAX),
+            progress: Mutex::new(Progress::default()),
+        }
+    }
 }
 
 impl JobControl {
@@ -223,6 +245,33 @@ impl JobControl {
 
     pub fn is_cancelled(&self) -> bool {
         self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Set the job's failure budget: once more than `budget` measurement
+    /// failures are reported via [`JobControl::note_failures`], the job
+    /// degrades (stops with best-so-far results).
+    pub fn set_fail_budget(&self, budget: usize) {
+        self.fail_budget.store(budget, Ordering::SeqCst);
+    }
+
+    /// Report the *total* failure count observed so far (idempotent —
+    /// callers pass a running total, not a delta).  Trips the degraded
+    /// latch when the total exceeds the budget.
+    pub fn note_failures(&self, total: usize) {
+        if total > self.fail_budget.load(Ordering::SeqCst) {
+            self.degraded.store(true, Ordering::SeqCst);
+        }
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    /// Should the working loop stop at its next boundary?  True on
+    /// explicit cancellation or an exhausted failure budget; either way
+    /// the loop returns its best-so-far partial result.
+    pub fn should_stop(&self) -> bool {
+        self.is_cancelled() || self.is_degraded()
     }
 
     /// Publish a progress update (workers mutate only their own fields).
@@ -384,6 +433,25 @@ mod tests {
         assert_eq!(ctl.progress().iteration, Some(2));
         ctl.cancel();
         assert!(ctl.is_cancelled());
+        assert!(ctl.should_stop());
+    }
+
+    #[test]
+    fn fail_budget_trips_the_degraded_latch() {
+        let ctl = JobControl::default();
+        // Unlimited by default: totals never degrade an unbudgeted job.
+        ctl.note_failures(1_000_000);
+        assert!(!ctl.is_degraded());
+        assert!(!ctl.should_stop());
+        ctl.set_fail_budget(3);
+        ctl.note_failures(3); // at the budget: still fine
+        assert!(!ctl.is_degraded());
+        ctl.note_failures(4); // over: degraded, and it latches
+        assert!(ctl.is_degraded());
+        assert!(ctl.should_stop());
+        assert!(!ctl.is_cancelled());
+        ctl.note_failures(0);
+        assert!(ctl.is_degraded(), "degraded must latch");
     }
 
     #[test]

@@ -11,6 +11,54 @@ use super::params::JvmParams;
 use crate::flags::GcMode;
 use crate::util::rng::Pcg;
 
+/// Why a run failed — the first-class replacement for the old
+/// `timed_out` bool, so every consumer (retry policy, tuner, job
+/// records) can tell an out-of-memory death from a wall-cap truncation
+/// from an injected crash or hang.
+///
+/// `Oom` and `WallCap` arise naturally from the simulator and are
+/// *deterministic* for a given (config, seed): retrying them is wasted
+/// work.  `Crash` and `Hang` only come from the fault-injection layer
+/// (`sparksim::FaultPlan`), where the plan classifies each occurrence
+/// as deterministic (crash-on-start flag regions) or transient
+/// (probabilistic executor crashes/hangs, which a retry may clear).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FailureKind {
+    /// Executor/JVM crashed (refused to start or died mid-run).
+    Crash,
+    /// Live set outgrew the old generation: `OutOfMemoryError`.
+    Oom,
+    /// Simulated wall time hit [`MAX_WALL_S`] (GC thrash truncation).
+    WallCap,
+    /// Straggler/hang: the run exceeded the timeout without progressing.
+    Hang,
+}
+
+impl FailureKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureKind::Crash => "crash",
+            FailureKind::Oom => "oom",
+            FailureKind::WallCap => "wall_cap",
+            FailureKind::Hang => "hang",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FailureKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "crash" => Some(FailureKind::Crash),
+            "oom" => Some(FailureKind::Oom),
+            "wall_cap" | "wallcap" | "timeout" => Some(FailureKind::WallCap),
+            "hang" => Some(FailureKind::Hang),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [FailureKind; 4] {
+        [FailureKind::Crash, FailureKind::Oom, FailureKind::WallCap, FailureKind::Hang]
+    }
+}
+
 /// Workload placed on one executor JVM.
 #[derive(Clone, Debug)]
 pub struct MutatorLoad {
@@ -48,10 +96,18 @@ pub struct JvmRunResult {
     /// Average heap-usage percentage over the 5 s jstat samples (eq. 9).
     pub hu_avg_pct: f64,
     pub n_samples: usize,
-    /// True if the run failed: wall-time cap hit (GC thrash) or the live
-    /// set outgrew the old generation (executor OOM — the JVM dies fast,
-    /// like a real `java.lang.OutOfMemoryError`).
-    pub timed_out: bool,
+    /// Why the run failed, if it did: [`FailureKind::WallCap`] when the
+    /// wall-time cap truncated a thrashing run, [`FailureKind::Oom`]
+    /// when the live set outgrew the old generation (the JVM dies fast,
+    /// like a real `java.lang.OutOfMemoryError`).  `None` on success.
+    pub failure: Option<FailureKind>,
+}
+
+impl JvmRunResult {
+    /// Did the run fail (for call sites that only care yes/no)?
+    pub fn failed(&self) -> bool {
+        self.failure.is_some()
+    }
 }
 
 /// Hard cap on simulated wall time: configurations that thrash are
@@ -110,7 +166,7 @@ pub fn run(p: &JvmParams, load: &MutatorLoad, cores: f64, rng: &mut Pcg) -> JvmR
         gc: GcStats::default(),
     };
 
-    let mut timed_out = false;
+    let mut failure = None;
     loop {
         let marking = st.t_s < st.marking_until;
         let s = mutator_speed(p, st.t_s, cores, marking) * speed_noise;
@@ -127,7 +183,7 @@ pub fn run(p: &JvmParams, load: &MutatorLoad, cores: f64, rng: &mut Pcg) -> JvmR
             break; // job finished
         }
         if st.t_s > MAX_WALL_S {
-            timed_out = true;
+            failure = Some(FailureKind::WallCap);
             break;
         }
 
@@ -139,7 +195,7 @@ pub fn run(p: &JvmParams, load: &MutatorLoad, cores: f64, rng: &mut Pcg) -> JvmR
         // region by constraining heap-flag ranges; we let the tuner learn
         // it instead).
         if st.old_live > old_cap * 0.99 {
-            timed_out = true;
+            failure = Some(FailureKind::Oom);
             break;
         }
 
@@ -171,7 +227,7 @@ pub fn run(p: &JvmParams, load: &MutatorLoad, cores: f64, rng: &mut Pcg) -> JvmR
         gc: st.gc,
         hu_avg_pct: hu,
         n_samples: st.n_samples,
-        timed_out,
+        failure,
     }
 }
 
@@ -402,7 +458,7 @@ mod tests {
         let b = run(&p, &load(), 20.0, &mut Pcg::new(1));
         assert_eq!(a.wall_s, b.wall_s);
         assert_eq!(a.gc, b.gc);
-        assert!(a.wall_s > 0.0 && !a.timed_out);
+        assert!(a.wall_s > 0.0 && !a.failed());
     }
 
     #[test]
@@ -521,6 +577,32 @@ mod tests {
         let r = run(&p, &l, 20.0, &mut Pcg::new(10));
         // Either times out or thrashes to completion; must terminate.
         assert!(r.wall_s <= MAX_WALL_S * 1.5);
+    }
+
+    #[test]
+    fn live_set_beyond_old_cap_fails_as_oom_not_wall_cap() {
+        // A heap far below the live set dies with OutOfMemoryError the
+        // moment the cache builds — the failure kind must say so rather
+        // than lumping it in with wall-cap thrash truncation.
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("MaxHeapSize", 2048.0);
+        let p = JvmParams::derive(&cfg, 81920.0, 20.0);
+        let mut l = load();
+        l.live_mb = 14000.0;
+        let r = run(&p, &l, 20.0, &mut Pcg::new(10));
+        assert_eq!(r.failure, Some(FailureKind::Oom), "wall {}", r.wall_s);
+        assert!(r.failed());
+        // ... and the OOM fast-fail really is fast: no 1800 s of thrash.
+        assert!(r.wall_s < MAX_WALL_S / 2.0, "wall {}", r.wall_s);
+    }
+
+    #[test]
+    fn failure_kind_names_roundtrip() {
+        for k in FailureKind::all() {
+            assert_eq!(FailureKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FailureKind::parse("timeout"), Some(FailureKind::WallCap));
+        assert_eq!(FailureKind::parse("nope"), None);
     }
 
     #[test]

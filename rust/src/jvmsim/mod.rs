@@ -3,9 +3,32 @@
 //! `params` derives physical simulator parameters from a `FlagConfig`;
 //! `engine` is the event-driven mutator/GC/JIT execution model with the
 //! jstat-style heap-usage sampler.
+//!
+//! # Failure semantics
+//!
+//! A run is not an infallible number: [`JvmRunResult::failure`] carries a
+//! [`FailureKind`] whenever the simulated JVM dies instead of finishing.
+//! Two kinds arise naturally in the engine, and both are *deterministic*
+//! for a given (config, seed) — retrying them can never succeed:
+//!
+//! * [`FailureKind::Oom`] — the live set outgrew the old generation; the
+//!   executor dies almost immediately (`OutOfMemoryError` fast-fail), so
+//!   the reported wall time is short and the sampled heap percentage is
+//!   garbage (pinned near 100% by the death throes).
+//! * [`FailureKind::WallCap`] — simulated wall time hit [`MAX_WALL_S`];
+//!   the run is truncated the way a benchmark-harness timeout would.
+//!
+//! The remaining kinds ([`FailureKind::Crash`], [`FailureKind::Hang`])
+//! never originate here: they are injected by `sparksim::FaultPlan`,
+//! which also classifies each injected fault as deterministic
+//! (crash-on-start flag regions) or transient (probabilistic crashes
+//! and stragglers, which the measurement layer may retry).  Consumers
+//! must treat the metrics of a failed run as penalty values, not
+//! measurements — see `sparksim::RunOutcome` for the first-class
+//! success/failure split.
 
 pub mod engine;
 pub mod params;
 
-pub use engine::{run, GcStats, JvmRunResult, MutatorLoad, MAX_WALL_S};
+pub use engine::{run, FailureKind, GcStats, JvmRunResult, MutatorLoad, MAX_WALL_S};
 pub use params::JvmParams;

@@ -36,7 +36,8 @@ pub mod tuner;
 pub mod util;
 
 pub use flags::{FeatureEncoder, FlagConfig, GcMode};
-pub use sparksim::{Benchmark, RunMetrics, SparkRunner};
+pub use jvmsim::FailureKind;
+pub use sparksim::{Benchmark, FailureHisto, FaultPlan, RunMetrics, RunOutcome, SparkRunner};
 
 /// Which metric the user optimizes (paper §IV-B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -207,7 +207,11 @@ fn cmd_run(opts: &Opts) -> Result<()> {
     }
     let m = SparkRunner::paper_default(bench).run(&cfg, seed);
     println!("benchmark:     {} ({})", bench.name(), gc.name());
-    println!("exec time:     {:.1} s{}", m.exec_time_s, if m.timed_out { "  [FAILED]" } else { "" });
+    let fail_tag = match m.failure {
+        Some(kind) => format!("  [FAILED: {}]", kind.name()),
+        None => String::new(),
+    };
+    println!("exec time:     {:.1} s{}", m.exec_time_s, fail_tag);
     println!("heap usage:    {:.1} %", m.hu_avg_pct);
     println!(
         "gc:            {} minor, {} mixed, {} full, {} conc cycles",

@@ -375,7 +375,7 @@ pub fn run_fig4(ctx: &ExperimentCtx) -> Result<String> {
         tries += 1;
         let cfg = FlagConfig::random(mode, &mut rng);
         let m = runner.run(&cfg, 0xeef + tries);
-        if m.timed_out {
+        if m.failed() {
             continue;
         }
         actual.push(m.exec_time_s);

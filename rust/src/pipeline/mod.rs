@@ -214,7 +214,14 @@ pub fn run_algo_ctl(
     // time, which would oversubscribe the CPU whenever the caller fans
     // several algorithms out and hands us a serial pool.  Pool width
     // never changes results (exec module invariant), only scheduling.
-    let bo_cfg = BoConfig { epool: *epool, ..cfg.bo.clone() };
+    // The default configuration's measured mean doubles as the BO safe
+    // baseline: candidates the surrogate predicts to be worse than the
+    // untuned starting point are not worth a real (possibly failing) run.
+    let bo_cfg = BoConfig {
+        epool: *epool,
+        safe_baseline: cfg.bo.safe_baseline.or(Some(default_mean)),
+        ..cfg.bo.clone()
+    };
     let mut tuner: Box<dyn Tuner> = match algo {
         Algo::Bo => Box::new(BoTuner::new(backend.clone(), bo_cfg)),
         Algo::BoWarm => Box::new(BoTuner::warm_start(

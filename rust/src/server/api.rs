@@ -20,7 +20,13 @@
 //!   POST /api/tune         {dataset_id?, bench, gc, metric?, algo, iters?,
 //!                           gp_hypers?: "fixed"|"adapt", gp_adapt_every?,
 //!                           gp_ard?: bool,
-//!                           gp_init_hypers?: {lengthscales: [..], sigma_n2?}}
+//!                           gp_init_hypers?: {lengthscales: [..], sigma_n2?},
+//!                           faults?: {seed?, crash_p?, hang_p?, spike_p?,
+//!                                     spike_mult?, max_retries?,
+//!                                     backoff_base_s?, backoff_cap_s?,
+//!                                     run_budget_s?,
+//!                                     crash_regions?: [{flag, lo, hi}]},
+//!                           fail_budget?: int}
 //!                          -> 202 {job_id, status, poll}
 //!                          (`gp_hypers: "adapt"` turns on GP
 //!                          marginal-likelihood hyper-parameter
@@ -37,7 +43,17 @@
 //!                          `gp_sigma_n2`; a length-scale count that
 //!                          does not match the tuning subspace is a 400,
 //!                          checked synchronously because feature
-//!                          selection now runs at submission time)
+//!                          selection now runs at submission time.
+//!                          `faults` activates seeded fault injection on
+//!                          the job's measurements — validated to a 400
+//!                          up front, deterministic from its seed (which
+//!                          defaults to the pipeline seed).  `fail_budget`
+//!                          caps total measurement failures; once
+//!                          exceeded the job stops at its next checkpoint
+//!                          and lands in the `degraded` terminal state,
+//!                          still carrying its best-so-far result.  Tune
+//!                          results always include a `failures` per-kind
+//!                          histogram {crash, oom, wall_cap, hang, total})
 //!   GET  /api/jobs                           all jobs, ascending id
 //!   GET  /api/jobs/:id     {job_id, kind, status, elapsed_s,
 //!                           progress?, result?|error?}
@@ -52,9 +68,13 @@
 //! cancellation — a *running* job lands in `cancelled` at its next
 //! round/iteration boundary, still carrying its best-so-far partial
 //! `result`; a job cancelled while still *queued* never started, so its
-//! `cancelled` record has no `result`.  Terminal records (`done` | `failed` |
-//! `cancelled`) never change again and are evicted lazily after the
-//! queue's TTL.  With a state directory configured ([`ApiOptions`],
+//! `cancelled` record has no `result`.  A job whose `fail_budget` is
+//! exhausted stops the same cooperative way but lands in `degraded`,
+//! always with a `result`.  Terminal records (`done` | `failed` |
+//! `cancelled` | `degraded`) never change again and are evicted lazily
+//! after the queue's TTL.  Submissions beyond the queue's capacity of
+//! non-terminal jobs are refused with `429 Too Many Requests` + a
+//! `Retry-After` header instead of queueing unboundedly.  With a state directory configured ([`ApiOptions`],
 //! `serve --state-dir`), stored datasets and terminal job records are
 //! persisted to a JSON state file on every completion and reloaded on
 //! restart.
@@ -73,7 +93,7 @@ use crate::runtime::{HyperMode, MlBackend};
 use crate::server::http::{Request, Response};
 use crate::server::jobs::{self, CancelOutcome, JobQueue};
 use crate::server::persist;
-use crate::sparksim::SparkRunner;
+use crate::sparksim::{CrashRegion, FaultPlan, SparkRunner};
 use crate::tuner::TuneSpace;
 use crate::util::json::Json;
 use crate::{Benchmark, Metric};
@@ -91,11 +111,28 @@ pub struct ApiOptions {
     /// Directory for the restart-persistence state file; `None` keeps
     /// everything in memory (tests, throwaway servers).
     pub state_dir: Option<PathBuf>,
+    /// Max non-terminal jobs admitted before `/api/characterize` and
+    /// `/api/tune` answer `429 Too Many Requests` + `Retry-After`;
+    /// `None` disables backpressure.
+    pub queue_capacity: Option<usize>,
 }
+
+/// Default admission bound: generous for interactive use, small enough
+/// that a runaway submit loop hits backpressure before exhausting memory.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
+
+/// `Retry-After` hint (seconds) sent with a 429 — roughly the time a
+/// queued quick job takes to drain.
+pub const RETRY_AFTER_S: u64 = 5;
 
 impl Default for ApiOptions {
     fn default() -> Self {
-        ApiOptions { workers: 2, job_ttl: jobs::DEFAULT_TTL, state_dir: None }
+        ApiOptions {
+            workers: 2,
+            job_ttl: jobs::DEFAULT_TTL,
+            state_dir: None,
+            queue_capacity: Some(DEFAULT_QUEUE_CAPACITY),
+        }
     }
 }
 
@@ -135,7 +172,7 @@ impl ApiState {
     /// records when `opts.state_dir` holds a state file, and hooks
     /// persistence onto every subsequent completion.
     pub fn with_options(backend: Arc<dyn MlBackend>, opts: ApiOptions) -> Arc<ApiState> {
-        let jobs = JobQueue::with_ttl(opts.workers, opts.job_ttl);
+        let jobs = JobQueue::with_limits(opts.workers, opts.job_ttl, opts.queue_capacity);
         let mut datasets = HashMap::new();
         let mut next_id = 1u64;
         if let Some(dir) = &opts.state_dir {
@@ -218,10 +255,18 @@ pub fn handle(state: &Arc<ApiState>, req: &Request) -> Response {
     };
     match result {
         Ok((status, json)) => Response::json(status, json.to_string()),
-        Err((code, msg)) => Response::json(
-            code,
-            Json::obj(vec![("error", Json::str(msg))]).to_string(),
-        ),
+        Err((code, msg)) => {
+            let resp = Response::json(
+                code,
+                Json::obj(vec![("error", Json::str(msg))]).to_string(),
+            );
+            // Backpressure refusals tell the client when to come back.
+            if code == 429 {
+                resp.with_retry_after(RETRY_AFTER_S)
+            } else {
+                resp
+            }
+        }
     }
 }
 
@@ -381,17 +426,87 @@ fn run(req: &Request) -> ApiResult {
     let seed = body.get("seed").and_then(Json::as_f64).unwrap_or(1.0) as u64;
     let cfg = config_from_body(gc, &body)?;
     let m = SparkRunner::paper_default(bench).run(&cfg, seed);
-    Ok((
-        200,
-        Json::obj(vec![
-            ("exec_time_s", Json::num(m.exec_time_s)),
-            ("heap_usage_pct", Json::num(m.hu_avg_pct)),
-            ("minor_gcs", Json::num(m.gc.minor as f64)),
-            ("full_gcs", Json::num(m.gc.full as f64)),
-            ("total_pause_ms", Json::num(m.gc.total_pause_ms)),
-            ("failed", Json::Bool(m.timed_out)),
-        ]),
-    ))
+    let mut fields = vec![
+        ("exec_time_s", Json::num(m.exec_time_s)),
+        ("heap_usage_pct", Json::num(m.hu_avg_pct)),
+        ("minor_gcs", Json::num(m.gc.minor as f64)),
+        ("full_gcs", Json::num(m.gc.full as f64)),
+        ("total_pause_ms", Json::num(m.gc.total_pause_ms)),
+        ("failed", Json::Bool(m.failed())),
+    ];
+    if let Some(kind) = m.failure {
+        fields.push(("failure", Json::str(kind.name())));
+    }
+    Ok((200, Json::obj(fields)))
+}
+
+/// Parse the optional `faults` object into a validated [`FaultPlan`];
+/// a malformed or self-contradictory plan is a 400 here, not a failed
+/// job later.  The plan seed defaults to `default_seed` (the pipeline
+/// seed) so a faulty run is reproducible from the job parameters alone.
+fn parse_faults(body: &Json, default_seed: u64) -> Result<Option<FaultPlan>, (u16, String)> {
+    let Some(f) = body.get("faults") else { return Ok(None) };
+    if !matches!(f, Json::Obj(_)) {
+        return Err(bad("'faults' must be an object"));
+    }
+    let mut plan = FaultPlan { seed: default_seed, ..Default::default() };
+    let num = |key: &str| -> Result<Option<f64>, (u16, String)> {
+        match f.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .filter(|x| x.is_finite())
+                .map(Some)
+                .ok_or_else(|| bad(format!("'faults.{key}' must be a finite number"))),
+        }
+    };
+    if let Some(v) = num("seed")? {
+        plan.seed = v as u64;
+    }
+    if let Some(v) = num("crash_p")? {
+        plan.crash_p = v;
+    }
+    if let Some(v) = num("hang_p")? {
+        plan.hang_p = v;
+    }
+    if let Some(v) = num("spike_p")? {
+        plan.spike_p = v;
+    }
+    if let Some(v) = num("spike_mult")? {
+        plan.spike_mult = v;
+    }
+    if let Some(v) = num("max_retries")? {
+        if v < 0.0 || v.fract() != 0.0 {
+            return Err(bad("'faults.max_retries' must be a non-negative integer"));
+        }
+        plan.max_retries = v as u32;
+    }
+    if let Some(v) = num("backoff_base_s")? {
+        plan.backoff_base_s = v;
+    }
+    if let Some(v) = num("backoff_cap_s")? {
+        plan.backoff_cap_s = v;
+    }
+    if let Some(v) = num("run_budget_s")? {
+        plan.run_budget_s = v;
+    }
+    if let Some(regions) = f.get("crash_regions") {
+        let arr = regions
+            .as_arr()
+            .ok_or_else(|| bad("'faults.crash_regions' must be an array"))?;
+        for r in arr {
+            let flag = r
+                .get("flag")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("crash region needs a 'flag' name"))?
+                .to_string();
+            let lo = r.get("lo").and_then(Json::as_f64).unwrap_or(0.0);
+            let hi = r.get("hi").and_then(Json::as_f64).unwrap_or(1.0);
+            plan.crash_regions.push(CrashRegion { flag, lo, hi });
+        }
+    }
+    plan.validate().map_err(bad)?;
+    Ok(Some(plan))
 }
 
 /// Validate, enqueue the AL characterization, answer 202 + job id.
@@ -417,7 +532,7 @@ fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
     }
 
     let job_state = Arc::clone(state);
-    let id = state.jobs.submit_ctl("characterize", move |ctl| {
+    let submitted = state.jobs.try_submit_ctl("characterize", move |ctl| {
         let runner = SparkRunner::paper_default(bench);
         let r = datagen::characterize_ctl(
             exec::global(),
@@ -442,9 +557,25 @@ fn characterize(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             ("rounds", Json::num(r.rounds as f64)),
             ("rmse_history", Json::arr_f64(&r.rmse_history)),
             ("sim_time_s", Json::num(r.sim_time_s)),
+            ("failures", jobs::failures_json(&r.failures)),
         ]))
     });
-    Ok(accepted(id))
+    match submitted {
+        Ok(id) => Ok(accepted(id)),
+        Err(full) => Err(queue_full(full)),
+    }
+}
+
+/// Map a refused submission to the 429 body (the router attaches the
+/// `Retry-After` header).
+fn queue_full(full: jobs::QueueFull) -> (u16, String) {
+    (
+        429,
+        format!(
+            "job queue full: {} of {} jobs in flight; retry in ~{RETRY_AFTER_S}s",
+            full.inflight, full.capacity
+        ),
+    )
 }
 
 fn select(state: &Arc<ApiState>, req: &Request) -> ApiResult {
@@ -555,6 +686,19 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         }
     };
 
+    // Fault injection + degradation knobs — validated synchronously like
+    // every other parameter.
+    let faults = parse_faults(&body, PipelineConfig::default().seed)?;
+    let fail_budget = match body.get("fail_budget") {
+        None => None,
+        Some(j) => Some(
+            j.as_f64()
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                .ok_or_else(|| bad("'fail_budget' must be a non-negative integer"))?
+                as usize,
+        ),
+    };
+
     // Dataset checks stay synchronous so bad requests fail with 400 now,
     // not with a failed job later; the dataset is snapshotted into the job.
     let dataset_id = body.get("dataset_id").and_then(Json::as_f64).map(|v| v as u64);
@@ -575,6 +719,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
                 runs_executed: 0,
                 rounds: 0,
                 sim_time_s: 0.0,
+                failures: Default::default(),
             }
         }
         None => {
@@ -594,6 +739,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
                 runs_executed: 0,
                 rounds: 0,
                 sim_time_s: 0.0,
+                failures: Default::default(),
             }
         }
     };
@@ -648,8 +794,14 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         space.selected.iter().map(|&p| enc.flag_name(p).to_string()).collect();
 
     let job_state = Arc::clone(state);
-    let id = state.jobs.submit_ctl("tune", move |ctl| {
-        let runner = SparkRunner::paper_default(bench);
+    let submitted = state.jobs.try_submit_ctl("tune", move |ctl| {
+        let mut runner = SparkRunner::paper_default(bench);
+        if let Some(plan) = faults {
+            runner = runner.with_faults(plan);
+        }
+        if let Some(budget) = fail_budget {
+            ctl.set_fail_budget(budget);
+        }
         let mut pc = PipelineConfig { tune_iters: iters, ..Default::default() };
         pc.bo.hypers.mode = gp_mode;
         pc.bo.hypers.ard = gp_ard;
@@ -729,12 +881,18 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             ("improvement", Json::num(out.improvement)),
             ("tuning_time_s", Json::num(out.tuning_time_s)),
             ("evals", Json::num(out.tune.evals as f64)),
+            // Always present, even when all-zero: the failure histogram is
+            // part of the tune-result schema, not an optional extra.
+            ("failures", jobs::failures_json(&out.tune.failures)),
             ("best_flags", Json::Obj(flags_obj.into_iter().collect())),
             ("best_java_args", Json::str(out.tune.best_config.to_java_args())),
         ]);
         Ok(Json::obj(fields))
     });
-    Ok(accepted(id))
+    match submitted {
+        Ok(id) => Ok(accepted(id)),
+        Err(full) => Err(queue_full(full)),
+    }
 }
 
 fn datasets(state: &Arc<ApiState>) -> Json {

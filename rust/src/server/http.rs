@@ -29,15 +29,33 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: String,
+    /// Emitted as a `Retry-After: <secs>` header (429 backpressure).
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
     pub fn json(status: u16, body: impl Into<String>) -> Response {
-        Response { status, content_type: "application/json", body: body.into() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into(),
+            retry_after: None,
+        }
     }
 
     pub fn text(status: u16, body: impl Into<String>) -> Response {
-        Response { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into(),
+            retry_after: None,
+        }
+    }
+
+    /// Attach a `Retry-After` hint (seconds).
+    pub fn with_retry_after(mut self, secs: u64) -> Response {
+        self.retry_after = Some(secs);
+        self
     }
 
     fn status_line(&self) -> &'static str {
@@ -50,6 +68,7 @@ impl Response {
             405 => "405 Method Not Allowed",
             409 => "409 Conflict",
             413 => "413 Payload Too Large",
+            429 => "429 Too Many Requests",
             _ => "500 Internal Server Error",
         }
     }
@@ -195,11 +214,16 @@ fn refuse(
 }
 
 fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let retry = match resp.retry_after {
+        Some(secs) => format!("Retry-After: {secs}\r\n"),
+        None => String::new(),
+    };
     let out = format!(
-        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: close\r\n\r\n{}",
         resp.status_line(),
         resp.content_type,
         resp.body.len(),
+        retry,
         resp.body
     );
     stream.write_all(out.as_bytes())?;
@@ -383,6 +407,32 @@ mod tests {
         let (status, body) = raw_roundtrip(addr, req, true);
         assert_eq!(status, 400, "{body}");
         assert!(body.contains("invalid Content-Length"), "{body}");
+    }
+
+    #[test]
+    fn retry_after_header_emitted_on_429() {
+        let handler: Arc<Handler> = Arc::new(|_req: &Request| {
+            Response::json(429, r#"{"error":"queue full"}"#).with_retry_after(5)
+        });
+        let addr = spawn("127.0.0.1:0", handler).unwrap();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /api/tune HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf).unwrap();
+        let head = buf.split("\r\n\r\n").next().unwrap();
+        assert!(head.starts_with("HTTP/1.1 429 Too Many Requests"), "{head}");
+        assert!(head.contains("Retry-After: 5"), "{head}");
+        // Normal responses never grow the header.
+        let addr2 = echo_server();
+        let mut stream = TcpStream::connect(addr2).unwrap();
+        stream
+            .write_all(b"GET /ok HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf).unwrap();
+        assert!(!buf.contains("Retry-After"), "{buf}");
     }
 
     #[test]

@@ -10,13 +10,22 @@
 //!   closure (plus a fresh [`JobControl`]) to an [`exec::JobRunner`]
 //!   worker, and returns the job id immediately;
 //! * workers flip the record to `running`, then to a terminal state:
-//!   `done` (result payload), `failed` (error), or `cancelled`;
+//!   `done` (result payload), `failed` (error), `cancelled`, or
+//!   `degraded` (the job's measurement-failure budget was exhausted — see
+//!   [`crate::exec::JobControl::note_failures`] — and the cooperative loop
+//!   stopped early, handing back its best-so-far payload plus a per-kind
+//!   failure histogram);
 //! * `GET /api/jobs/:id` polls the record — while `running` it carries a
-//!   live `progress` object and an `elapsed_s` since submission;
+//!   live `progress` object (including the failure histogram so far) and
+//!   an `elapsed_s` since submission;
 //! * [`JobQueue::cancel`] requests cooperative cancellation: a queued job
 //!   lands in `cancelled` immediately (it never started, so no result),
 //!   a running one at its next round/iteration boundary — still carrying
 //!   its best-so-far partial result;
+//! * [`JobQueue::try_submit_ctl`] bounds admission: when the number of
+//!   non-terminal jobs reaches the queue's capacity the submission is
+//!   refused ([`QueueFull`]) instead of queueing unboundedly — the API
+//!   layer translates this to `429 Too Many Requests` + `Retry-After`;
 //! * terminal records never change again ([`JobStatus::is_terminal`]) and
 //!   are evicted lazily once older than the queue's TTL, bounding memory
 //!   without a background reaper thread;
@@ -31,6 +40,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::exec::{JobControl, JobRunner, Progress};
+use crate::sparksim::FailureHisto;
 use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,6 +50,9 @@ pub enum JobStatus {
     Done,
     Failed,
     Cancelled,
+    /// The job's measurement-failure budget was exhausted: the cooperative
+    /// loop stopped early but still handed back its best-so-far payload.
+    Degraded,
 }
 
 impl JobStatus {
@@ -50,6 +63,7 @@ impl JobStatus {
             JobStatus::Done => "done",
             JobStatus::Failed => "failed",
             JobStatus::Cancelled => "cancelled",
+            JobStatus::Degraded => "degraded",
         }
     }
 
@@ -60,6 +74,7 @@ impl JobStatus {
             "done" => Some(JobStatus::Done),
             "failed" => Some(JobStatus::Failed),
             "cancelled" => Some(JobStatus::Cancelled),
+            "degraded" => Some(JobStatus::Degraded),
             _ => None,
         }
     }
@@ -67,7 +82,10 @@ impl JobStatus {
     /// Terminal states carry a result or an error and never change again
     /// (enforced by every queue mutation, tested below).
     pub fn is_terminal(self) -> bool {
-        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
+        matches!(
+            self,
+            JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled | JobStatus::Degraded
+        )
     }
 }
 
@@ -145,7 +163,24 @@ fn progress_json(p: &Progress) -> Json {
     if let Some(v) = p.best_y {
         pairs.push(("best_y", Json::num(v)));
     }
+    if let Some(h) = p.failures {
+        if !h.is_empty() {
+            pairs.push(("failures", failures_json(&h)));
+        }
+    }
     Json::obj(pairs)
+}
+
+/// Serialize a per-kind failure histogram — the schema the chaos smoke
+/// test in CI asserts on (`.result.failures` of a degraded tune job).
+pub(crate) fn failures_json(h: &FailureHisto) -> Json {
+    Json::obj(vec![
+        ("crash", Json::num(h.crash as f64)),
+        ("oom", Json::num(h.oom as f64)),
+        ("wall_cap", Json::num(h.wall_cap as f64)),
+        ("hang", Json::num(h.hang as f64)),
+        ("total", Json::num(h.total() as f64)),
+    ])
 }
 
 /// A terminal job snapshot that can cross a process restart
@@ -176,6 +211,15 @@ pub enum CancelOutcome {
 /// Default lifetime of terminal records before lazy eviction.
 pub const DEFAULT_TTL: Duration = Duration::from_secs(3600);
 
+/// [`JobQueue::try_submit_ctl`] refusal: the queue already holds
+/// `capacity` non-terminal jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    /// Non-terminal (queued + running) jobs at refusal time.
+    pub inflight: usize,
+    pub capacity: usize,
+}
+
 type TerminalHook = Box<dyn Fn() + Send + Sync>;
 
 /// The queue: job records + the detached worker pool executing them.
@@ -186,6 +230,9 @@ pub struct JobQueue {
     /// Terminal records older than this are evicted on access (submit /
     /// get / list) — no background reaper thread needed to bound memory.
     ttl: Duration,
+    /// Bound on non-terminal jobs for [`Self::try_submit_ctl`]; `None`
+    /// means unbounded admission.
+    capacity: Option<usize>,
     /// Called (lock-free) after a record turns terminal; the server hooks
     /// state persistence here.
     on_terminal: Mutex<Option<TerminalHook>>,
@@ -198,11 +245,17 @@ impl JobQueue {
 
     /// Explicit TTL for terminal-record eviction.
     pub fn with_ttl(workers: usize, ttl: Duration) -> Arc<JobQueue> {
+        Self::with_limits(workers, ttl, None)
+    }
+
+    /// Explicit TTL and admission bound.
+    pub fn with_limits(workers: usize, ttl: Duration, capacity: Option<usize>) -> Arc<JobQueue> {
         Arc::new(JobQueue {
             runner: JobRunner::new(workers),
             jobs: Mutex::new(HashMap::new()),
             next_id: Mutex::new(1),
             ttl,
+            capacity,
             on_terminal: Mutex::new(None),
         })
     }
@@ -243,6 +296,35 @@ impl JobQueue {
         work: impl FnOnce(&JobControl) -> Result<Json, String> + Send + 'static,
     ) -> u64 {
         self.evict_expired();
+        self.submit_inner(kind, work)
+    }
+
+    /// `submit_ctl` behind the queue's admission bound: refused with
+    /// [`QueueFull`] when `capacity` non-terminal jobs are already in
+    /// flight.  Terminal records never count against the bound (they are
+    /// bookkeeping, not load), so a saturated queue re-admits as soon as a
+    /// job finishes — no TTL wait involved.
+    pub fn try_submit_ctl(
+        self: &Arc<Self>,
+        kind: &str,
+        work: impl FnOnce(&JobControl) -> Result<Json, String> + Send + 'static,
+    ) -> Result<u64, QueueFull> {
+        self.evict_expired();
+        if let Some(cap) = self.capacity {
+            let inflight =
+                self.jobs.lock().unwrap().values().filter(|r| !r.status.is_terminal()).count();
+            if inflight >= cap {
+                return Err(QueueFull { inflight, capacity: cap });
+            }
+        }
+        Ok(self.submit_inner(kind, work))
+    }
+
+    fn submit_inner(
+        self: &Arc<Self>,
+        kind: &str,
+        work: impl FnOnce(&JobControl) -> Result<Json, String> + Send + 'static,
+    ) -> u64 {
         let ctl = Arc::new(JobControl::default());
         let id = {
             let mut next = self.next_id.lock().unwrap();
@@ -311,9 +393,14 @@ impl JobQueue {
                         Ok(json) => {
                             // Ok under a requested cancel is the cooperative
                             // loop handing back its best-so-far payload, so
-                            // `cancelled` always implies a `result`.
+                            // `cancelled` always implies a `result` — and
+                            // likewise `degraded` (failure budget exhausted
+                            // mid-run).  An explicit cancel wins over a
+                            // degradation that raced with it.
                             rec.status = if rec.ctl.is_cancelled() {
                                 JobStatus::Cancelled
+                            } else if rec.ctl.is_degraded() {
+                                JobStatus::Degraded
                             } else {
                                 JobStatus::Done
                             };
@@ -683,6 +770,53 @@ mod tests {
         let id2 = q2.submit("test", || Ok(Json::num(1.0)));
         assert!(id2 > id, "restored ids must not be reused");
         wait_terminal(&q2, id2);
+    }
+
+    #[test]
+    fn degraded_job_is_terminal_with_result() {
+        let q = JobQueue::new(1);
+        let id = q.submit_ctl("tune", |ctl| {
+            // The work trips its own failure budget mid-run, then hands
+            // back its best-so-far payload like a cooperative loop would.
+            ctl.set_fail_budget(2);
+            ctl.note_failures(3);
+            assert!(ctl.should_stop());
+            Ok(Json::obj(vec![("best_y", Json::num(1.0))]))
+        });
+        let snap = wait_terminal(&q, id);
+        assert_eq!(snap.get("status").unwrap().as_str(), Some("degraded"));
+        assert_eq!(snap.get("result").unwrap().get("best_y").unwrap().as_f64(), Some(1.0));
+        assert!(snap.get("error").is_none());
+        // Degraded records cross restarts like any terminal state.
+        let persisted = q.terminal_snapshot();
+        assert_eq!(persisted[0].status, JobStatus::Degraded);
+        let q2 = JobQueue::new(1);
+        q2.restore(persisted);
+        let rec = q2.get(id).unwrap();
+        assert_eq!(rec.get("status").unwrap().as_str(), Some("degraded"));
+    }
+
+    #[test]
+    fn bounded_queue_refuses_at_capacity_and_readmits_after_finish() {
+        let q = JobQueue::with_limits(1, DEFAULT_TTL, Some(1));
+        let (tx, rx) = mpsc::channel::<()>();
+        let id = q
+            .try_submit_ctl("test", move |_| {
+                let _ = rx.recv_timeout(Duration::from_secs(10));
+                Ok(Json::num(1.0))
+            })
+            .expect("empty queue admits");
+        // One job in flight fills the capacity-1 queue.
+        let err = q.try_submit_ctl("test", |_| Ok(Json::num(2.0))).unwrap_err();
+        assert_eq!(err, QueueFull { inflight: 1, capacity: 1 });
+        // Unbounded submit still bypasses the admission check.
+        let forced = q.submit("test", || Ok(Json::num(3.0)));
+        // Finish both; terminal records never count against the bound.
+        tx.send(()).unwrap();
+        wait_terminal(&q, id);
+        wait_terminal(&q, forced);
+        let id3 = q.try_submit_ctl("test", |_| Ok(Json::num(4.0))).expect("readmits");
+        wait_terminal(&q, id3);
     }
 
     #[test]

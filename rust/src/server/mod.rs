@@ -7,6 +7,20 @@
 //! endpoints (`/api/characterize`, `/api/tune` -> poll `/api/jobs/:id`,
 //! cancel with `DELETE /api/jobs/:id`); `persist` carries stored datasets
 //! and terminal job records across server restarts via a JSON state file.
+//!
+//! # Failure semantics
+//!
+//! Measurement failures are first-class through the whole stack.  A tune
+//! request may carry a `faults` plan (seeded, deterministic fault
+//! injection — [`crate::sparksim::FaultPlan`]) and a `fail_budget`; a job
+//! whose budget is exhausted stops cooperatively and lands in the
+//! `degraded` terminal state, still carrying its best-so-far result plus
+//! a per-kind failure histogram (`failures`: crash / oom / wall_cap /
+//! hang / total).  Degraded records persist and restore like any other
+//! terminal state.  Admission is bounded: when the queue already holds
+//! its capacity of non-terminal jobs, submissions are refused with
+//! `429 Too Many Requests` and a `Retry-After` header instead of
+//! queueing unboundedly.
 
 pub mod api;
 pub mod http;

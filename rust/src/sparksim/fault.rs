@@ -1,0 +1,348 @@
+//! Deterministic, seeded fault injection for the measurement pipeline.
+//!
+//! A [`FaultPlan`] describes the fault mix a `SparkRunner` should suffer:
+//! crash-on-start regions of the flag space (deterministic — a config in
+//! the region *always* refuses to start), transient per-executor crashes
+//! and stragglers/hangs with configured probabilities, and benign noise
+//! spikes that inflate a run's wall time without failing it.
+//!
+//! Every injected decision is a **pure function of indices**: the plan
+//! seed, the run's own seed, the retry attempt, and the executor index
+//! feed a dedicated [`Pcg`] stream that is constructed only when a plan
+//! is active and never touches the simulator's run stream.  Results are
+//! therefore bit-identical at any `ExecPool` width (the exec-module
+//! determinism invariant), reproducible from the job seed alone, and a
+//! runner with no plan consumes *exactly* the RNG draws it always did.
+//!
+//! The plan also owns the retry policy: transient faults (injected
+//! crashes and hangs) are retried with capped exponential backoff under
+//! a per-run simulated-time budget, while deterministic failures (OOM,
+//! wall-cap, crash-on-start regions) are never retried — see
+//! `SparkRunner::run_outcome_on`.
+
+use crate::flags::{catalog, FlagConfig};
+use crate::jvmsim::{FailureKind, MAX_WALL_S};
+use crate::util::rng::{splitmix64, Pcg};
+
+/// RNG stream selector for fault decisions — distinct from the run
+/// stream (`0x5eed_0001`) so injection never perturbs simulation draws.
+const FAULT_STREAM: u64 = 0xfa_0175_eed;
+
+/// A deterministic crash-on-start region: configs whose `flag` sits in
+/// `[lo, hi]` of that flag's normalized [0,1] range refuse to start
+/// (think: a heap size the container rejects, a flag combination the JVM
+/// bails on during argument parsing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashRegion {
+    pub flag: String,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl CrashRegion {
+    /// Does `cfg` fall inside this region?  Unknown flag names never
+    /// match (validated plans reject them up front).
+    pub fn matches(&self, cfg: &FlagConfig) -> bool {
+        let Some((_, def)) = catalog::flag_by_name(&self.flag) else {
+            return false;
+        };
+        let u = def.normalize(cfg.get(&self.flag));
+        u >= self.lo && u <= self.hi
+    }
+}
+
+/// The fault mix injected into a `SparkRunner`'s measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed the fault stream derives from (mixed with each run's seed).
+    pub seed: u64,
+    /// Deterministic crash-on-start flag regions.
+    pub crash_regions: Vec<CrashRegion>,
+    /// Per-executor transient crash probability per attempt.
+    pub crash_p: f64,
+    /// Per-executor transient straggler/hang probability per attempt.
+    pub hang_p: f64,
+    /// Per-executor noise-spike probability (benign slowdown, no failure).
+    pub spike_p: f64,
+    /// Wall-time multiplier a spiked executor suffers (> 1).
+    pub spike_mult: f64,
+    /// Retry cap for transient faults (0 = never retry).
+    pub max_retries: u32,
+    /// First-retry backoff in simulated seconds; doubles per attempt.
+    pub backoff_base_s: f64,
+    /// Backoff ceiling in simulated seconds.
+    pub backoff_cap_s: f64,
+    /// Per-run budget: total simulated seconds (attempts + backoff) a
+    /// single measurement may consume before retries stop.
+    pub run_budget_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            crash_regions: Vec::new(),
+            crash_p: 0.0,
+            hang_p: 0.0,
+            spike_p: 0.0,
+            spike_mult: 1.5,
+            max_retries: 2,
+            backoff_base_s: 5.0,
+            backoff_cap_s: 60.0,
+            run_budget_s: 3.0 * MAX_WALL_S,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Reject malformed plans with a human-readable reason (the REST
+    /// layer maps this to a 400).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in
+            [("crash_p", self.crash_p), ("hang_p", self.hang_p), ("spike_p", self.spike_p)]
+        {
+            if !(0.0..=1.0).contains(&p) || !p.is_finite() {
+                return Err(format!("{name} must be a probability in [0,1], got {p}"));
+            }
+        }
+        if !self.spike_mult.is_finite() || self.spike_mult < 1.0 {
+            return Err(format!("spike_mult must be >= 1, got {}", self.spike_mult));
+        }
+        if !self.backoff_base_s.is_finite()
+            || self.backoff_base_s < 0.0
+            || !self.backoff_cap_s.is_finite()
+            || self.backoff_cap_s < self.backoff_base_s
+        {
+            return Err("backoff must satisfy 0 <= base <= cap".to_string());
+        }
+        if !self.run_budget_s.is_finite() || self.run_budget_s <= 0.0 {
+            return Err(format!("run_budget_s must be positive, got {}", self.run_budget_s));
+        }
+        for r in &self.crash_regions {
+            if catalog::flag_by_name(&r.flag).is_none() {
+                return Err(format!("crash region names unknown flag '{}'", r.flag));
+            }
+            if !(0.0..=1.0).contains(&r.lo) || !(0.0..=1.0).contains(&r.hi) || r.lo > r.hi {
+                return Err(format!(
+                    "crash region for '{}' needs 0 <= lo <= hi <= 1, got [{}, {}]",
+                    r.flag, r.lo, r.hi
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic crash-on-start: is `cfg` inside any crash region?
+    pub fn crashes_on_start(&self, cfg: &FlagConfig) -> bool {
+        self.crash_regions.iter().any(|r| r.matches(cfg))
+    }
+
+    /// The fault stream for one (run, attempt, executor) cell — a pure
+    /// function of those indices plus the plan seed, so decisions are
+    /// identical at any pool width and reproducible from the job seed.
+    fn cell_rng(&self, run_seed: u64, attempt: u32, exec_idx: usize) -> Pcg {
+        let cell = ((attempt as u64) << 32) | exec_idx as u64;
+        let s = splitmix64(self.seed ^ splitmix64(run_seed)) ^ splitmix64(cell.wrapping_add(1));
+        Pcg::with_stream(splitmix64(s), FAULT_STREAM)
+    }
+
+    /// Transient-fault decision for one executor of one attempt, as
+    /// `(failure, adjusted_wall_s)`: a crashed executor died a fraction
+    /// of the way through its work, a hung one sat past the wall cap,
+    /// a spiked one finished late without failing, and an untouched one
+    /// keeps its wall time.
+    pub fn executor_fault(
+        &self,
+        run_seed: u64,
+        attempt: u32,
+        exec_idx: usize,
+        exec_wall_s: f64,
+    ) -> (Option<FailureKind>, f64) {
+        let mut rng = self.cell_rng(run_seed, attempt, exec_idx);
+        // Fixed draw order (crash, hang, spike) keeps the stream layout
+        // stable however the probabilities are configured.
+        let crash_u = rng.f64();
+        let hang_u = rng.f64();
+        let spike_u = rng.f64();
+        let frac = rng.uniform(0.05, 0.6);
+        if crash_u < self.crash_p {
+            // Died a fraction of the way through its work.
+            return (Some(FailureKind::Crash), (exec_wall_s * frac).max(1.0));
+        }
+        if hang_u < self.hang_p {
+            // Straggler: sat past the harness timeout without finishing.
+            return (Some(FailureKind::Hang), MAX_WALL_S * (1.0 + 0.5 * frac));
+        }
+        if spike_u < self.spike_p {
+            return (None, exec_wall_s * self.spike_mult);
+        }
+        (None, exec_wall_s)
+    }
+
+    /// Is an observed failure worth retrying under this plan?  Injected
+    /// crashes/hangs are transient (a retry redraws the fault stream);
+    /// OOM and wall-cap come from the simulator deterministically.
+    pub fn is_transient(&self, kind: FailureKind) -> bool {
+        matches!(kind, FailureKind::Crash | FailureKind::Hang)
+    }
+
+    /// Capped exponential backoff before retry `attempt` (1-based:
+    /// attempt 1 is the first *retry*).
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let factor = 2f64.powi(attempt.saturating_sub(1).min(16) as i32);
+        (self.backoff_base_s * factor).min(self.backoff_cap_s)
+    }
+}
+
+/// Per-kind failure counters — the histogram a tuning job accumulates
+/// and the REST job record reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FailureHisto {
+    pub crash: usize,
+    pub oom: usize,
+    pub wall_cap: usize,
+    pub hang: usize,
+}
+
+impl FailureHisto {
+    pub fn record(&mut self, kind: FailureKind) {
+        match kind {
+            FailureKind::Crash => self.crash += 1,
+            FailureKind::Oom => self.oom += 1,
+            FailureKind::WallCap => self.wall_cap += 1,
+            FailureKind::Hang => self.hang += 1,
+        }
+    }
+
+    pub fn count(&self, kind: FailureKind) -> usize {
+        match kind {
+            FailureKind::Crash => self.crash,
+            FailureKind::Oom => self.oom,
+            FailureKind::WallCap => self.wall_cap,
+            FailureKind::Hang => self.hang,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.crash + self.oom + self.wall_cap + self.hang
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    pub fn merge(&mut self, other: &FailureHisto) {
+        self.crash += other.crash;
+        self.oom += other.oom;
+        self.wall_cap += other.wall_cap;
+        self.hang += other.hang;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flags::GcMode;
+
+    #[test]
+    fn executor_fault_is_deterministic_per_cell() {
+        let plan = FaultPlan { seed: 9, crash_p: 0.3, hang_p: 0.2, spike_p: 0.3, ..Default::default() };
+        for run_seed in [1u64, 77, 0xbeef] {
+            for attempt in [1u32, 2] {
+                for e in 0..6usize {
+                    let a = plan.executor_fault(run_seed, attempt, e, 100.0);
+                    let b = plan.executor_fault(run_seed, attempt, e, 100.0);
+                    assert_eq!(a, b, "cell ({run_seed},{attempt},{e}) not pure");
+                }
+            }
+        }
+        // ... and neighbouring cells decorrelate: not all identical.
+        let outcomes: Vec<_> =
+            (0..32).map(|e| plan.executor_fault(1, 1, e, 100.0).0).collect();
+        assert!(outcomes.iter().any(|o| o.is_some()));
+        assert!(outcomes.iter().any(|o| o.is_none()));
+    }
+
+    #[test]
+    fn fault_rates_track_probabilities() {
+        let plan = FaultPlan { seed: 3, crash_p: 0.25, hang_p: 0.0, ..Default::default() };
+        let n = 2000;
+        let crashes = (0..n)
+            .filter(|&e| {
+                matches!(plan.executor_fault(5, 1, e, 100.0).0, Some(FailureKind::Crash))
+            })
+            .count();
+        let rate = crashes as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.05, "crash rate {rate}");
+    }
+
+    #[test]
+    fn retry_redraws_the_fault_stream() {
+        // A transient fault at attempt 1 must be able to clear at
+        // attempt 2: the decisions across attempts are independent.
+        let plan = FaultPlan { seed: 11, crash_p: 0.5, ..Default::default() };
+        let cleared = (0..200usize).any(|e| {
+            plan.executor_fault(1, 1, e, 100.0).0.is_some()
+                && plan.executor_fault(1, 2, e, 100.0).0.is_none()
+        });
+        assert!(cleared, "attempt index never changed a fault decision");
+    }
+
+    #[test]
+    fn crash_region_matches_unit_interval() {
+        let region =
+            CrashRegion { flag: "MaxHeapSize".to_string(), lo: 0.0, hi: 0.10 };
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("MaxHeapSize", 1024.0); // bottom of the range
+        assert!(region.matches(&cfg));
+        cfg.set("MaxHeapSize", 65536.0); // top of the range
+        assert!(!region.matches(&cfg));
+        // Unknown flags never match (and fail validation).
+        let bogus = CrashRegion { flag: "NoSuchFlag".into(), lo: 0.0, hi: 1.0 };
+        assert!(!bogus.matches(&cfg));
+        let plan = FaultPlan { crash_regions: vec![bogus], ..Default::default() };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_probabilities_and_regions() {
+        assert!(FaultPlan::default().validate().is_ok());
+        assert!(FaultPlan { crash_p: 1.5, ..Default::default() }.validate().is_err());
+        assert!(FaultPlan { spike_mult: 0.5, ..Default::default() }.validate().is_err());
+        assert!(FaultPlan { run_budget_s: 0.0, ..Default::default() }.validate().is_err());
+        let bad = FaultPlan {
+            crash_regions: vec![CrashRegion { flag: "MaxHeapSize".into(), lo: 0.7, hi: 0.2 }],
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let plan =
+            FaultPlan { backoff_base_s: 5.0, backoff_cap_s: 60.0, ..Default::default() };
+        assert_eq!(plan.backoff_s(1), 5.0);
+        assert_eq!(plan.backoff_s(2), 10.0);
+        assert_eq!(plan.backoff_s(3), 20.0);
+        assert_eq!(plan.backoff_s(5), 60.0); // capped
+        assert_eq!(plan.backoff_s(30), 60.0); // exponent clamped, no overflow
+    }
+
+    #[test]
+    fn histogram_counts_by_kind() {
+        let mut h = FailureHisto::default();
+        assert!(h.is_empty());
+        h.record(FailureKind::Crash);
+        h.record(FailureKind::Crash);
+        h.record(FailureKind::Oom);
+        h.record(FailureKind::Hang);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.count(FailureKind::Crash), 2);
+        assert_eq!(h.count(FailureKind::WallCap), 0);
+        let mut m = FailureHisto::default();
+        m.record(FailureKind::WallCap);
+        m.merge(&h);
+        assert_eq!(m.total(), 5);
+        assert_eq!(m.wall_cap, 1);
+    }
+}

@@ -4,14 +4,23 @@
 //! E5-2650 (20 physical cores/node, 60 total), 90 GB per node — with
 //! executors hosting one simulated JVM each, the two HiBench workloads
 //! (Table I), and the parallel-run contention scenarios of Fig 6.
+//!
+//! Measurement is failure-aware: a [`SparkRunner`] with a [`FaultPlan`]
+//! attached injects deterministic, seeded faults (crash-on-start flag
+//! regions, transient executor crashes, stragglers, noise spikes) and
+//! wraps every measurement in a retry-with-backoff policy, reporting a
+//! first-class [`RunOutcome`] instead of a bare number.  Without a plan
+//! the runner is bit-identical to the fault-free path.
 
 pub mod cluster;
+pub mod fault;
 pub mod runner;
 pub mod workloads;
 
 pub use cluster::{ClusterSpec, ExecutorSpec};
+pub use fault::{CrashRegion, FailureHisto, FaultPlan};
 pub use runner::{
     run_benchmark, run_benchmark_with_contention, run_benchmark_with_contention_on,
-    run_parallel, run_parallel_on, RunMetrics, SparkRunner,
+    run_parallel, run_parallel_on, RunMetrics, RunOutcome, SparkRunner,
 };
 pub use workloads::{Benchmark, WorkloadSpec};

@@ -5,24 +5,83 @@
 //! (execution time, heap usage %) out.
 
 use super::cluster::{contention_factor, ClusterSpec, ExecutorSpec};
+use super::fault::FaultPlan;
 use super::workloads::Benchmark;
 use crate::exec::{self, ExecPool};
 use crate::flags::FlagConfig;
-use crate::jvmsim::{self, GcStats, JvmParams};
+use crate::jvmsim::{self, FailureKind, GcStats, JvmParams, MAX_WALL_S};
 use crate::util::rng::Pcg;
 
 /// Metrics recorded for one benchmark run (paper §IV-B).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunMetrics {
-    /// Job execution time.  Failed runs (OOM / GC-thrash timeout) report
-    /// the timeout budget — a failed configuration can never look fast.
+    /// Job execution time.  Failed runs (OOM / GC-thrash timeout / any
+    /// injected fault) report the timeout budget — a failed configuration
+    /// can never look fast.
     pub exec_time_s: f64,
-    /// Actual simulated wall-clock (short for an OOM crash) — what tuning
-    /// time accounting should charge.
+    /// Actual simulated wall-clock (short for an OOM crash; includes
+    /// retry attempts and backoff when a fault plan retried) — what
+    /// tuning time accounting should charge.
     pub wall_clock_s: f64,
     pub hu_avg_pct: f64,
     pub gc: GcStats,
-    pub timed_out: bool,
+    /// Why the run failed, if it did: the worst executor's failure, with
+    /// the first failing executor (in index order) deciding the kind.
+    pub failure: Option<FailureKind>,
+}
+
+impl RunMetrics {
+    pub fn failed(&self) -> bool {
+        self.failure.is_some()
+    }
+}
+
+/// First-class success/failure for one measured configuration — what the
+/// objective, datagen, and the tuners consume instead of bare metrics.
+/// `Failed` still carries metrics (penalty values: capped exec time,
+/// garbage heap percentage), because downstream label policies need
+/// *something* to record; they must treat it as a penalty, not a
+/// measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunOutcome {
+    Ok(RunMetrics),
+    Failed { kind: FailureKind, attempts: u32, metrics: RunMetrics },
+}
+
+impl RunOutcome {
+    fn from_metrics(m: RunMetrics) -> RunOutcome {
+        match m.failure {
+            None => RunOutcome::Ok(m),
+            Some(kind) => RunOutcome::Failed { kind, attempts: 1, metrics: m },
+        }
+    }
+
+    /// The metrics of the (final) attempt, success or not.
+    pub fn metrics(&self) -> &RunMetrics {
+        match self {
+            RunOutcome::Ok(m) => m,
+            RunOutcome::Failed { metrics, .. } => metrics,
+        }
+    }
+
+    pub fn failure(&self) -> Option<FailureKind> {
+        match self {
+            RunOutcome::Ok(_) => None,
+            RunOutcome::Failed { kind, .. } => Some(*kind),
+        }
+    }
+
+    /// Measurement attempts consumed (1 unless the retry policy ran).
+    pub fn attempts(&self) -> u32 {
+        match self {
+            RunOutcome::Ok(_) => 1,
+            RunOutcome::Failed { attempts, .. } => *attempts,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, RunOutcome::Ok(_))
+    }
 }
 
 /// Fixed driver-side overhead per Spark job (scheduling, result collection).
@@ -41,6 +100,25 @@ pub fn run_benchmark_with_contention_on(
     exec: &ExecutorSpec,
     contention: f64,
     seed: u64,
+) -> RunMetrics {
+    run_attempt(pool, bench, cfg, exec, contention, seed, None)
+}
+
+/// One measurement attempt, optionally under a fault plan.  With
+/// `fault == None` this is byte-for-byte the pre-fault-injection run path:
+/// the fault RNG is never constructed and no extra draws happen, so all
+/// happy-path results stay bit-identical.  With a plan, injection is a
+/// post-processing step per executor — a pure function of
+/// (plan seed, run seed, attempt, executor index) — so results remain
+/// independent of the pool width.
+fn run_attempt(
+    pool: &ExecPool,
+    bench: Benchmark,
+    cfg: &FlagConfig,
+    exec: &ExecutorSpec,
+    contention: f64,
+    seed: u64,
+    fault: Option<(&FaultPlan, u32)>,
 ) -> RunMetrics {
     let mut p = JvmParams::derive(cfg, exec.mem_mb, exec.cores as f64);
     let load = bench.executor_load(exec.count);
@@ -65,9 +143,20 @@ pub fn run_benchmark_with_contention_on(
     let mut worst_wall = 0.0f64;
     let mut hu_sum = 0.0;
     let mut gc = GcStats::default();
-    let mut timed_out = false;
-    for r in &results {
-        worst_wall = worst_wall.max(r.wall_s);
+    let mut failure: Option<FailureKind> = None;
+    for (e, r) in results.iter().enumerate() {
+        let mut wall = r.wall_s;
+        let mut exec_failure = r.failure;
+        if let Some((plan, attempt)) = fault {
+            // Natural (deterministic) failures take precedence: an OOM'd
+            // executor is already dead, there is nothing left to inject.
+            if exec_failure.is_none() {
+                let (injected, w) = plan.executor_fault(seed, attempt, e, r.wall_s);
+                exec_failure = injected;
+                wall = w;
+            }
+        }
+        worst_wall = worst_wall.max(wall);
         hu_sum += r.hu_avg_pct;
         gc.minor += r.gc.minor;
         gc.mixed += r.gc.mixed;
@@ -75,20 +164,23 @@ pub fn run_benchmark_with_contention_on(
         gc.conc_cycles += r.gc.conc_cycles;
         gc.total_pause_ms += r.gc.total_pause_ms;
         gc.max_pause_ms = gc.max_pause_ms.max(r.gc.max_pause_ms);
-        timed_out |= r.timed_out;
+        // The first failing executor (index order) decides the run's kind.
+        if failure.is_none() {
+            failure = exec_failure;
+        }
     }
 
     let wall_clock_s = worst_wall + DRIVER_OVERHEAD_S;
     RunMetrics {
-        exec_time_s: if timed_out {
-            crate::jvmsim::MAX_WALL_S + DRIVER_OVERHEAD_S
+        exec_time_s: if failure.is_some() {
+            MAX_WALL_S + DRIVER_OVERHEAD_S
         } else {
             wall_clock_s
         },
         wall_clock_s,
         hu_avg_pct: hu_sum / exec.count.max(1) as f64,
         gc,
-        timed_out,
+        failure,
     }
 }
 
@@ -157,13 +249,22 @@ pub struct SparkRunner {
     pub cluster: ClusterSpec,
     pub exec: ExecutorSpec,
     pub bench: Benchmark,
+    /// Optional deterministic fault-injection plan.  `None` (the default)
+    /// keeps the measurement path bit-identical to the fault-free runner.
+    pub faults: Option<FaultPlan>,
 }
 
 impl SparkRunner {
     pub fn paper_default(bench: Benchmark) -> SparkRunner {
         let cluster = ClusterSpec::paper();
         let exec = ExecutorSpec::full_cluster(&cluster);
-        SparkRunner { cluster, exec, bench }
+        SparkRunner { cluster, exec, bench, faults: None }
+    }
+
+    /// Builder-style: attach a fault plan to this runner.
+    pub fn with_faults(mut self, plan: FaultPlan) -> SparkRunner {
+        self.faults = Some(plan);
+        self
     }
 
     /// Run on the process-global pool (per-executor fan-out) — right for
@@ -181,12 +282,79 @@ impl SparkRunner {
     pub fn run_on(&self, pool: &ExecPool, cfg: &FlagConfig, seed: u64) -> RunMetrics {
         run_benchmark_with_contention_on(pool, self.bench, cfg, &self.exec, 1.0, seed)
     }
+
+    /// `run_outcome_on` on the process-global pool.
+    pub fn run_outcome(&self, cfg: &FlagConfig, seed: u64) -> RunOutcome {
+        self.run_outcome_on(exec::global(), cfg, seed)
+    }
+
+    /// Failure-aware measurement: run `cfg`, applying the fault plan (if
+    /// any) and its retry policy, and report a first-class [`RunOutcome`].
+    ///
+    /// * No plan: exactly one `run_on` — same RNG draws, same floats —
+    ///   with any natural failure (OOM / wall-cap) reported as `Failed`
+    ///   with `attempts == 1` (natural failures are deterministic in
+    ///   (config, seed): retrying cannot help).
+    /// * Plan with a matching crash-on-start region: the JVM refuses to
+    ///   boot — deterministic, never retried, near-zero cost.
+    /// * Plan, transient fault (injected crash / hang): retried with
+    ///   capped exponential backoff while the attempt count stays within
+    ///   `max_retries` and accumulated simulated time plus backoff stays
+    ///   under `run_budget_s`.  Each attempt redraws the fault stream
+    ///   (keyed by attempt index), so a retry can genuinely clear a
+    ///   transient fault.  Backoff and earlier attempts are charged to the
+    ///   final metrics' `wall_clock_s`.
+    pub fn run_outcome_on(&self, pool: &ExecPool, cfg: &FlagConfig, seed: u64) -> RunOutcome {
+        let Some(plan) = &self.faults else {
+            return RunOutcome::from_metrics(self.run_on(pool, cfg, seed));
+        };
+        if plan.crashes_on_start(cfg) {
+            let metrics = RunMetrics {
+                exec_time_s: MAX_WALL_S + DRIVER_OVERHEAD_S,
+                wall_clock_s: DRIVER_OVERHEAD_S,
+                hu_avg_pct: 0.0,
+                gc: GcStats::default(),
+                failure: Some(FailureKind::Crash),
+            };
+            return RunOutcome::Failed { kind: FailureKind::Crash, attempts: 1, metrics };
+        }
+        let mut attempt = 1u32;
+        let mut spent_s = 0.0;
+        loop {
+            let mut m = run_attempt(
+                pool,
+                self.bench,
+                cfg,
+                &self.exec,
+                1.0,
+                seed,
+                Some((plan, attempt)),
+            );
+            spent_s += m.wall_clock_s;
+            let Some(kind) = m.failure else {
+                m.wall_clock_s = spent_s;
+                return RunOutcome::Ok(m);
+            };
+            let backoff = plan.backoff_s(attempt);
+            if plan.is_transient(kind)
+                && attempt <= plan.max_retries
+                && spent_s + backoff < plan.run_budget_s
+            {
+                spent_s += backoff;
+                attempt += 1;
+                continue;
+            }
+            m.wall_clock_s = spent_s;
+            return RunOutcome::Failed { kind, attempts: attempt, metrics: m };
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::flags::GcMode;
+    use crate::sparksim::fault::CrashRegion;
 
     #[test]
     fn default_runs_land_in_expected_band() {
@@ -202,7 +370,7 @@ mod tests {
                     mode.name(),
                     r.exec_time_s
                 );
-                assert!(!r.timed_out);
+                assert!(!r.failed());
             }
         }
     }
@@ -279,5 +447,120 @@ mod tests {
         let r = SparkRunner::paper_default(Benchmark::Lda)
             .run(&FlagConfig::default_for(GcMode::G1GC), 5);
         assert!(r.hu_avg_pct > 1.0 && r.hu_avg_pct < 100.0, "{}", r.hu_avg_pct);
+    }
+
+    #[test]
+    fn no_plan_outcome_is_bitwise_the_plain_run() {
+        let runner = SparkRunner::paper_default(Benchmark::PageRank);
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let plain = runner.run(&cfg, 31);
+        let out = runner.run_outcome(&cfg, 31);
+        assert!(out.is_ok());
+        assert_eq!(out.attempts(), 1);
+        assert_eq!(*out.metrics(), plain);
+    }
+
+    #[test]
+    fn natural_oom_is_failed_without_retries() {
+        // A config whose live set cannot fit OOMs deterministically; even
+        // a retry-happy plan must not retry it.
+        let plan = FaultPlan { max_retries: 5, ..Default::default() };
+        let runner = SparkRunner::paper_default(Benchmark::DenseKMeans).with_faults(plan);
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("MaxHeapSize", 2048.0);
+        let out = runner.run_outcome(&cfg, 7);
+        assert_eq!(out.failure(), Some(FailureKind::Oom), "{out:?}");
+        assert_eq!(out.attempts(), 1);
+        assert_eq!(out.metrics().exec_time_s, MAX_WALL_S + DRIVER_OVERHEAD_S);
+    }
+
+    #[test]
+    fn crash_region_fails_fast_and_is_never_retried() {
+        let plan = FaultPlan {
+            crash_regions: vec![CrashRegion {
+                flag: "MaxHeapSize".to_string(),
+                lo: 0.0,
+                hi: 1.0,
+            }],
+            max_retries: 3,
+            ..Default::default()
+        };
+        let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+        let out = runner.run_outcome(&FlagConfig::default_for(GcMode::G1GC), 1);
+        assert_eq!(out.failure(), Some(FailureKind::Crash));
+        assert_eq!(out.attempts(), 1);
+        // The JVM never booted: near-zero wall, full exec-time penalty.
+        assert_eq!(out.metrics().wall_clock_s, DRIVER_OVERHEAD_S);
+        assert_eq!(out.metrics().exec_time_s, MAX_WALL_S + DRIVER_OVERHEAD_S);
+    }
+
+    #[test]
+    fn certain_crash_exhausts_retries_with_backoff_charged() {
+        let plan = FaultPlan {
+            seed: 5,
+            crash_p: 1.0,
+            max_retries: 2,
+            backoff_base_s: 5.0,
+            run_budget_s: 50_000.0,
+            ..Default::default()
+        };
+        let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let out = runner.run_outcome(&cfg, 9);
+        assert_eq!(out.failure(), Some(FailureKind::Crash));
+        assert_eq!(out.attempts(), 3, "2 retries => 3 attempts");
+        // wall_clock_s charges all attempts plus the 5 + 10 s of backoff.
+        assert!(out.metrics().wall_clock_s > 15.0, "{}", out.metrics().wall_clock_s);
+    }
+
+    #[test]
+    fn certain_hang_respects_run_budget() {
+        // Every attempt hangs (~1.5x MAX_WALL_S); a budget of 2x MAX_WALL_S
+        // cannot afford a second attempt, whatever max_retries says.
+        let plan = FaultPlan {
+            seed: 6,
+            hang_p: 1.0,
+            max_retries: 5,
+            run_budget_s: 2.0 * MAX_WALL_S,
+            ..Default::default()
+        };
+        let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+        let out = runner.run_outcome(&FlagConfig::default_for(GcMode::G1GC), 13);
+        assert_eq!(out.failure(), Some(FailureKind::Hang));
+        assert_eq!(out.attempts(), 1);
+        assert!(out.metrics().wall_clock_s > MAX_WALL_S);
+    }
+
+    #[test]
+    fn retry_can_clear_a_transient_crash() {
+        // With a moderate crash rate, some seeds fail outright while
+        // others clear on retry — both must occur across a seed sweep,
+        // and every outcome must be reproducible.
+        let plan = FaultPlan { seed: 21, crash_p: 0.2, max_retries: 2, ..Default::default() };
+        let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let outcomes: Vec<RunOutcome> =
+            (0..100u64).map(|s| runner.run_outcome(&cfg, s)).collect();
+        assert!(outcomes.iter().any(|o| o.is_ok()), "no run ever succeeded");
+        assert!(outcomes.iter().any(|o| !o.is_ok()), "no run ever exhausted retries");
+        for (s, o) in outcomes.iter().enumerate() {
+            assert_eq!(*o, runner.run_outcome(&cfg, s as u64), "seed {s} not reproducible");
+        }
+    }
+
+    #[test]
+    fn spikes_slow_the_run_without_failing_it() {
+        let spiky = FaultPlan { seed: 2, spike_p: 1.0, spike_mult: 1.5, ..Default::default() };
+        let runner = SparkRunner::paper_default(Benchmark::PageRank);
+        let cfg = FlagConfig::default_for(GcMode::G1GC);
+        let base = runner.run_outcome(&cfg, 17);
+        let spiked = runner.clone().with_faults(spiky).run_outcome(&cfg, 17);
+        assert!(base.is_ok() && spiked.is_ok());
+        assert!(
+            spiked.metrics().exec_time_s > base.metrics().exec_time_s * 1.3,
+            "spike {} vs base {}",
+            spiked.metrics().exec_time_s,
+            base.metrics().exec_time_s
+        );
     }
 }

@@ -17,6 +17,7 @@
 //! vector over the tuned flags; [`GpHypers::init`] warm-starts the
 //! session at a previous job's adapted hypers.
 
+use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -108,6 +109,13 @@ pub struct BoConfig {
     /// Pool the acquisition scoring shards on; width never changes
     /// results (index-ordered fixed-size blocks).
     pub epool: ExecPool,
+    /// Safe-baseline bound for failure-aware acquisition: when set,
+    /// candidates whose GP posterior mean predicts a value *worse* than
+    /// this baseline are rejected (the online-safe-tuning guard), falling
+    /// back to plain argmax-EI when no candidate qualifies.  `None` (the
+    /// default) keeps the acquisition pick bitwise identical to the
+    /// legacy path.
+    pub safe_baseline: Option<f64>,
 }
 
 impl Default for BoConfig {
@@ -124,8 +132,64 @@ impl Default for BoConfig {
             include_default: true,
             surrogate: SurrogateMode::Session,
             epool: *exec::global(),
+            safe_baseline: None,
         }
     }
+}
+
+/// Bit-pattern key for a unit-cube point (quarantine-set membership is
+/// exact — the same proposed point hashes identically).
+fn unit_key(u: &[f64]) -> Vec<u64> {
+    u.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Failure-aware candidate choice.  With no quarantined configs and no
+/// baseline this *is* `argmax(ei)` — same index, same tie-breaking — so
+/// the happy path stays bitwise unchanged.  Otherwise: argmax EI over
+/// non-quarantined candidates predicted no worse than the baseline,
+/// falling back to non-quarantined argmax EI, then to the plain pick.
+fn pick_candidate(
+    cands: &[Vec<f64>],
+    ei: &[f64],
+    mu: &[f64],
+    baseline: Option<f64>,
+    quarantine: &HashSet<Vec<u64>>,
+) -> usize {
+    if quarantine.is_empty() && baseline.is_none() {
+        return argmax(ei);
+    }
+    let allowed =
+        |i: usize| quarantine.is_empty() || !quarantine.contains(&unit_key(&cands[i]));
+    let mut best: Option<usize> = None;
+    if let Some(b) = baseline {
+        for i in 0..cands.len() {
+            if ei[i].is_nan() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => ei[i] > ei[j],
+            };
+            if allowed(i) && mu[i] <= b && better {
+                best = Some(i);
+            }
+        }
+    }
+    if best.is_none() {
+        for i in 0..cands.len() {
+            if ei[i].is_nan() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => ei[i] > ei[j],
+            };
+            if allowed(i) && better {
+                best = Some(i);
+            }
+        }
+    }
+    best.unwrap_or_else(|| argmax(ei))
 }
 
 pub struct BoTuner {
@@ -257,6 +321,8 @@ impl Tuner for BoTuner {
         let mut xs: Vec<Vec<f64>> = Vec::new();
         let mut ys: Vec<f64> = Vec::new();
         let mut history = Vec::new();
+        // Configs whose measurement failed: never re-proposed.
+        let mut quarantine: HashSet<Vec<u64>> = HashSet::new();
 
         match &self.warm {
             Some(warm) => {
@@ -279,14 +345,18 @@ impl Tuner for BoTuner {
                     init_pts.push(u);
                 }
                 for u in init_pts {
-                    let y = objective.eval(&space.to_config(&u));
-                    history.push(y);
+                    let out = objective.eval_outcome(&space.to_config(&u));
+                    if out.failure.is_some() {
+                        quarantine.insert(unit_key(&u));
+                    }
+                    history.push(out.y);
                     xs.push(u);
-                    ys.push(y);
+                    ys.push(out.y);
                 }
             }
         }
         anyhow::ensure!(!xs.is_empty(), "BO needs initial data");
+        ctl.note_failures(objective.failures().total());
 
         let best_i = crate::util::stats::argmin(&ys);
         let mut best_x = xs[best_i].clone();
@@ -322,10 +392,11 @@ impl Tuner for BoTuner {
         drop((xs, ys));
 
         for it in 0..iters {
-            // Cooperative cancellation at the iteration boundary: keep
-            // everything observed so far and return the best-so-far
+            // Cooperative stop at the iteration boundary — explicit
+            // cancellation or an exhausted failure budget (degraded job):
+            // keep everything observed so far and return the best-so-far
             // result below.
-            if ctl.is_cancelled() {
+            if ctl.should_stop() {
                 break;
             }
             // Cap the GP training set at the artifact budget: drop the
@@ -334,22 +405,36 @@ impl Tuner for BoTuner {
                 gp.forget(argmax(gp.ys()))?;
             }
             let cands = self.candidates(space, &best_x, &mut rng);
-            let (ei, _, _) = gp.acquire(&self.cfg.epool, &cands, best_y)?;
-            let pick = argmax(&ei);
+            let (ei, mu, _) = gp.acquire(&self.cfg.epool, &cands, best_y)?;
+            let pick =
+                pick_candidate(&cands, &ei, &mu, self.cfg.safe_baseline, &quarantine);
             let x_next = cands[pick].clone();
-            let y_next = objective.eval(&space.to_config(&x_next));
+            let out = objective.eval_outcome(&space.to_config(&x_next));
+            let y_next = out.y;
             history.push(y_next);
-            if y_next < best_y {
-                best_y = y_next;
-                best_x = x_next.clone();
-            }
+            let y_gp = if out.failure.is_some() {
+                // Quarantine the config and feed the surrogate a penalized
+                // value: at least as bad as everything observed, so the GP
+                // learns to avoid the region without swallowing the raw
+                // garbage magnitude of a failed measurement.
+                quarantine.insert(unit_key(&x_next));
+                gp.ys().iter().cloned().fold(y_next, f64::max)
+            } else {
+                if y_next < best_y {
+                    best_y = y_next;
+                    best_x = x_next.clone();
+                }
+                y_next
+            };
             best_history.push(best_y);
-            gp.observe(&x_next, y_next)?;
+            gp.observe(&x_next, y_gp)?;
+            ctl.note_failures(objective.failures().total());
             ctl.update(|p| {
                 p.iteration = Some(it + 1);
                 p.iters = Some(iters);
                 p.runs_executed = Some(objective.evals());
                 p.best_y = Some(best_y);
+                p.failures = Some(objective.failures());
             });
         }
 
@@ -383,6 +468,7 @@ impl Tuner for BoTuner {
             algo_wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             gp_hypers: Some((final_ls, final_s2n)),
             ard_relevance,
+            failures: objective.failures(),
         })
     }
 }
@@ -392,6 +478,7 @@ mod tests {
     use super::*;
     use crate::flags::GcMode;
     use crate::runtime::NativeBackend;
+    use crate::tuner::objective::EvalOutcome;
     use std::sync::Arc;
 
     /// Cheap synthetic objective: quadratic bowl in the unit cube with
@@ -402,16 +489,67 @@ mod tests {
     }
 
     impl Objective for Bowl {
-        fn eval(&mut self, cfg: &crate::flags::FlagConfig) -> f64 {
+        fn eval_outcome(&mut self, cfg: &crate::flags::FlagConfig) -> EvalOutcome {
             self.count += 1;
             let u = self.space.project(cfg);
-            u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum()
+            let y = u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum();
+            EvalOutcome { y, failure: None, attempts: 1 }
         }
         fn evals(&self) -> usize {
             self.count
         }
         fn sim_time_s(&self) -> f64 {
             self.count as f64
+        }
+    }
+
+    /// Bowl that *fails* (transient crash) whenever the first tuned
+    /// dimension exceeds a threshold — the failure region the quarantine
+    /// and safe-baseline logic must learn to avoid.
+    struct FailingBowl {
+        space: TuneSpace,
+        count: usize,
+        threshold: f64,
+        failures: crate::sparksim::FailureHisto,
+        evaluated: Vec<Vec<f64>>,
+    }
+
+    impl FailingBowl {
+        fn new(space: TuneSpace, threshold: f64) -> Self {
+            FailingBowl {
+                space,
+                count: 0,
+                threshold,
+                failures: Default::default(),
+                evaluated: Vec::new(),
+            }
+        }
+    }
+
+    impl Objective for FailingBowl {
+        fn eval_outcome(&mut self, cfg: &crate::flags::FlagConfig) -> EvalOutcome {
+            self.count += 1;
+            let u = self.space.project(cfg);
+            self.evaluated.push(u.clone());
+            if u[0] > self.threshold {
+                self.failures.record(crate::jvmsim::FailureKind::Crash);
+                return EvalOutcome {
+                    y: 100.0, // penalty magnitude, like a capped exec time
+                    failure: Some(crate::jvmsim::FailureKind::Crash),
+                    attempts: 2,
+                };
+            }
+            let y = u.iter().map(|&x| (x - 0.3) * (x - 0.3)).sum();
+            EvalOutcome { y, failure: None, attempts: 1 }
+        }
+        fn evals(&self) -> usize {
+            self.count
+        }
+        fn sim_time_s(&self) -> f64 {
+            self.count as f64
+        }
+        fn failures(&self) -> crate::sparksim::FailureHisto {
+            self.failures
         }
     }
 
@@ -664,5 +802,92 @@ mod tests {
         assert_eq!(r.algo, "bo_warm");
         assert_eq!(r.evals, 10, "warm start must not burn init evals");
         assert!(r.best_y < 0.5);
+    }
+
+    #[test]
+    fn failed_configs_are_quarantined_not_reproposed() {
+        let space = small_space();
+        let mut obj = FailingBowl::new(space.clone(), 0.8);
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 6,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 15).unwrap();
+        assert_eq!(r.evals, 6 + 15);
+        assert_eq!(
+            r.failures.crash,
+            obj.evaluated.iter().filter(|u| u[0] > 0.8).count(),
+            "result histogram must match what actually failed"
+        );
+        // No failed point may ever be proposed twice (bitwise identity).
+        let failed: Vec<&Vec<f64>> =
+            obj.evaluated.iter().filter(|u| u[0] > 0.8).collect();
+        for (a, fa) in failed.iter().enumerate() {
+            for fb in failed.iter().skip(a + 1) {
+                assert_ne!(fa, fb, "a quarantined config was re-proposed");
+            }
+        }
+        // The winner must come from the feasible region.
+        let best_u = space.project(&r.best_config);
+        assert!(best_u[0] <= 0.8, "best config sits in the failure region");
+    }
+
+    #[test]
+    fn exhausted_fail_budget_degrades_the_run() {
+        let space = small_space();
+        // Fail everything: every init point trips the budget immediately.
+        let mut obj = FailingBowl::new(space.clone(), -1.0);
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 5,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let ctl = JobControl::default();
+        ctl.set_fail_budget(2);
+        let r = bo.tune_ctl(&space, &mut obj, 12, &ctl).unwrap();
+        assert!(ctl.is_degraded(), "budget of 2 with 5 failing init evals must degrade");
+        assert!(!ctl.is_cancelled());
+        assert_eq!(r.evals, 5, "degraded loop must stop at the first boundary");
+        assert_eq!(r.failures.crash, 5);
+    }
+
+    #[test]
+    fn safe_baseline_fallback_keeps_the_loop_alive() {
+        // An impossibly low baseline rejects every candidate by predicted
+        // mean; the fallback must keep proposing (plain EI) instead of
+        // wedging, and eval counts stay exactly as configured.
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 5,
+            n_candidates: 64,
+            safe_baseline: Some(f64::NEG_INFINITY),
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 6).unwrap();
+        assert_eq!(r.evals, 5 + 6);
+        assert!(r.best_y.is_finite());
+    }
+
+    #[test]
+    fn safe_baseline_none_is_bitwise_transparent() {
+        let space = small_space();
+        let run = |baseline: Option<f64>| {
+            let mut obj = Bowl { space: space.clone(), count: 0 };
+            let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+                n_init: 6,
+                n_candidates: 128,
+                safe_baseline: baseline,
+                ..Default::default()
+            });
+            bo.tune(&space, &mut obj, 8).unwrap()
+        };
+        let plain = run(None);
+        // A baseline far above every observable value never rejects, so
+        // the guarded pick must reduce to the same argmax-EI choice.
+        let guarded = run(Some(f64::INFINITY));
+        assert_eq!(plain.history, guarded.history);
+        assert_eq!(plain.best_y, guarded.best_y);
     }
 }

@@ -19,7 +19,7 @@ pub mod sa;
 pub mod space;
 
 pub use bo::BoTuner;
-pub use objective::{Objective, ParallelSimObjective, SimObjective};
+pub use objective::{EvalOutcome, Objective, ParallelSimObjective, SimObjective};
 pub use rbo::RboTuner;
 pub use sa::SaTuner;
 pub use space::TuneSpace;
@@ -56,6 +56,9 @@ pub struct TuneResult {
     /// ARD, so the pipeline can cross-check it against the lasso
     /// `featsel::Selection` (the paper's feature-selection stage).
     pub ard_relevance: Option<Vec<f64>>,
+    /// Per-kind measurement-failure histogram accumulated by the
+    /// objective over this run (all zeros on a fault-free run).
+    pub failures: crate::sparksim::FailureHisto,
 }
 
 /// Common interface for all phase-3 optimizers.

@@ -3,20 +3,45 @@
 
 use crate::exec::{self, ExecPool};
 use crate::flags::FlagConfig;
-use crate::sparksim::SparkRunner;
+use crate::jvmsim::FailureKind;
+use crate::sparksim::{FailureHisto, SparkRunner};
 use crate::util::stats::{Standardizer, TargetScaler};
 use crate::Metric;
 
+/// One objective evaluation, failure-aware: the value the tuner should
+/// record (already a penalty value when the run failed), plus what
+/// happened to the underlying measurement.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalOutcome {
+    pub y: f64,
+    /// Why the measurement failed, if it did (after any retries).
+    pub failure: Option<FailureKind>,
+    /// Measurement attempts consumed (1 unless a fault plan retried).
+    pub attempts: u32,
+}
+
 /// Minimization objective over flag configurations.
 pub trait Objective {
-    /// Evaluate one configuration.
-    fn eval(&mut self, cfg: &FlagConfig) -> f64;
+    /// Evaluate one configuration, reporting measurement failures.
+    fn eval_outcome(&mut self, cfg: &FlagConfig) -> EvalOutcome;
+
+    /// Evaluate one configuration (value only — failed runs still return
+    /// a penalty value, so legacy callers keep working).
+    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+        self.eval_outcome(cfg).y
+    }
 
     /// Benchmark executions consumed so far.
     fn evals(&self) -> usize;
 
     /// Simulated benchmark wall time consumed so far (seconds).
     fn sim_time_s(&self) -> f64;
+
+    /// Per-kind failure counts accumulated over this objective's life.
+    /// Surrogate objectives that cannot fail report an empty histogram.
+    fn failures(&self) -> FailureHisto {
+        FailureHisto::default()
+    }
 }
 
 /// The real objective: run the benchmark on the simulated cluster.
@@ -26,6 +51,7 @@ pub struct SimObjective<'a> {
     seed: u64,
     count: usize,
     sim_time_s: f64,
+    failures: FailureHisto,
     /// Pool for the per-executor fan-out inside each run.  The global pool
     /// when this objective is the only thing running (a lone tuning job);
     /// serial when the caller already fans several tuners out in parallel
@@ -41,20 +67,33 @@ impl<'a> SimObjective<'a> {
 
     /// `new` with an explicit per-run executor fan-out pool.
     pub fn new_on(runner: &'a SparkRunner, metric: Metric, seed: u64, pool: ExecPool) -> Self {
-        SimObjective { runner, metric, seed, count: 0, sim_time_s: 0.0, pool }
+        SimObjective {
+            runner,
+            metric,
+            seed,
+            count: 0,
+            sim_time_s: 0.0,
+            failures: FailureHisto::default(),
+            pool,
+        }
     }
 }
 
 impl Objective for SimObjective<'_> {
-    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+    fn eval_outcome(&mut self, cfg: &FlagConfig) -> EvalOutcome {
         self.count += 1;
-        let m = self.runner.run_on(&self.pool, cfg, self.seed.wrapping_add(self.count as u64));
+        let out =
+            self.runner.run_outcome_on(&self.pool, cfg, self.seed.wrapping_add(self.count as u64));
+        let m = out.metrics();
         self.sim_time_s += m.wall_clock_s;
-        let mut v = self.metric.of(&m);
-        if m.timed_out && self.metric == Metric::HeapUsage {
-            v += 50.0; // a crashing config must not win the memory race
+        let mut v = self.metric.of(m);
+        if let Some(kind) = out.failure() {
+            self.failures.record(kind);
+            if self.metric == Metric::HeapUsage {
+                v += 50.0; // a crashing config must not win the memory race
+            }
         }
-        v
+        EvalOutcome { y: v, failure: out.failure(), attempts: out.attempts() }
     }
 
     fn evals(&self) -> usize {
@@ -63,6 +102,10 @@ impl Objective for SimObjective<'_> {
 
     fn sim_time_s(&self) -> f64 {
         self.sim_time_s
+    }
+
+    fn failures(&self) -> FailureHisto {
+        self.failures
     }
 }
 
@@ -77,6 +120,7 @@ pub struct ParallelSimObjective {
     seed: u64,
     count: usize,
     sim_time_s: f64,
+    failures: FailureHisto,
 }
 
 impl ParallelSimObjective {
@@ -87,7 +131,16 @@ impl ParallelSimObjective {
         metric: Metric,
         seed: u64,
     ) -> Self {
-        ParallelSimObjective { cluster, target, other, metric, seed, count: 0, sim_time_s: 0.0 }
+        ParallelSimObjective {
+            cluster,
+            target,
+            other,
+            metric,
+            seed,
+            count: 0,
+            sim_time_s: 0.0,
+            failures: FailureHisto::default(),
+        }
     }
 
     /// Evaluate a concrete config (also used for the default baseline).
@@ -109,13 +162,16 @@ impl ParallelSimObjective {
 }
 
 impl Objective for ParallelSimObjective {
-    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+    fn eval_outcome(&mut self, cfg: &FlagConfig) -> EvalOutcome {
         let m = self.run_once(cfg);
         let mut v = self.metric.of(&m);
-        if m.timed_out && self.metric == Metric::HeapUsage {
-            v += 50.0;
+        if let Some(kind) = m.failure {
+            self.failures.record(kind);
+            if self.metric == Metric::HeapUsage {
+                v += 50.0;
+            }
         }
-        v
+        EvalOutcome { y: v, failure: m.failure, attempts: 1 }
     }
 
     fn evals(&self) -> usize {
@@ -124,6 +180,10 @@ impl Objective for ParallelSimObjective {
 
     fn sim_time_s(&self) -> f64 {
         self.sim_time_s
+    }
+
+    fn failures(&self) -> FailureHisto {
+        self.failures
     }
 }
 
@@ -168,9 +228,9 @@ impl PredictorObjective {
 }
 
 impl Objective for PredictorObjective {
-    fn eval(&mut self, cfg: &FlagConfig) -> f64 {
+    fn eval_outcome(&mut self, cfg: &FlagConfig) -> EvalOutcome {
         self.count += 1;
-        self.predict(cfg)
+        EvalOutcome { y: self.predict(cfg), failure: None, attempts: 1 }
     }
 
     fn evals(&self) -> usize {
@@ -186,6 +246,7 @@ impl Objective for PredictorObjective {
 mod tests {
     use super::*;
     use crate::flags::GcMode;
+    use crate::sparksim::FaultPlan;
     use crate::Benchmark;
 
     #[test]
@@ -199,6 +260,7 @@ mod tests {
         assert_ne!(a, b, "per-eval seeds must differ");
         assert_eq!(obj.evals(), 2);
         assert!(obj.sim_time_s() >= a + b - 1e-9);
+        assert!(obj.failures().is_empty());
     }
 
     #[test]
@@ -207,5 +269,31 @@ mod tests {
         let mut obj = SimObjective::new(&runner, Metric::HeapUsage, 5);
         let v = obj.eval(&FlagConfig::default_for(GcMode::G1GC));
         assert!(v > 0.0 && v < 150.0);
+    }
+
+    #[test]
+    fn sim_objective_records_failures() {
+        // A too-small heap OOMs deterministically: the histogram sees it
+        // and the reported value is the exec-time penalty.
+        let runner = SparkRunner::paper_default(Benchmark::DenseKMeans);
+        let mut obj = SimObjective::new(&runner, Metric::ExecTime, 5);
+        let mut cfg = FlagConfig::default_for(GcMode::ParallelGC);
+        cfg.set("MaxHeapSize", 2048.0);
+        let out = obj.eval_outcome(&cfg);
+        assert_eq!(out.failure, Some(FailureKind::Oom));
+        assert_eq!(out.attempts, 1);
+        assert_eq!(obj.failures().oom, 1);
+        assert!(out.y > 1000.0, "failed run must report the penalty, got {}", out.y);
+    }
+
+    #[test]
+    fn sim_objective_counts_injected_faults() {
+        let plan = FaultPlan { seed: 4, crash_p: 1.0, max_retries: 1, ..Default::default() };
+        let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+        let mut obj = SimObjective::new(&runner, Metric::ExecTime, 5);
+        let out = obj.eval_outcome(&FlagConfig::default_for(GcMode::G1GC));
+        assert_eq!(out.failure, Some(FailureKind::Crash));
+        assert_eq!(out.attempts, 2, "one retry before giving up");
+        assert_eq!(obj.failures().crash, 1);
     }
 }

@@ -105,6 +105,9 @@ impl Tuner for RboTuner {
             // the same tuning subspace, so they carry over verbatim.
             gp_hypers: surrogate_result.gp_hypers,
             ard_relevance: surrogate_result.ard_relevance,
+            // Only the *real* validation runs can fail; the predictor
+            // objective driving the inner loop cannot.
+            failures: objective.failures(),
         })
     }
 }

@@ -78,18 +78,30 @@ impl Tuner for SaTuner {
         let mut best_y = f64::INFINITY;
         let mut init_vals = Vec::new();
         for p in init {
-            let y = objective.eval(&space.to_config(&p));
+            let out = objective.eval_outcome(&space.to_config(&p));
+            let y = out.y;
             history.push(y);
             init_vals.push(y);
-            if y < cur_y {
-                cur_y = y;
-                cur_x = p.clone();
-            }
-            if y < best_y {
-                best_y = y;
-                best_x = p;
+            // A failed measurement only contributes its penalty value to
+            // the temperature scale — it can never become the incumbent.
+            if out.failure.is_none() {
+                if y < cur_y {
+                    cur_y = y;
+                    cur_x = p.clone();
+                }
+                if y < best_y {
+                    best_y = y;
+                    best_x = p;
+                }
             }
             best_history.push(best_y);
+        }
+        ctl.note_failures(objective.failures().total());
+        // Degenerate start (every init point failed): anchor the walk at
+        // the default config so the proposal loop has a current point.
+        if cur_x.is_empty() {
+            cur_x = space.default_point();
+            best_x = cur_x.clone();
         }
 
         // Temperature scale from the observed spread so acceptance is
@@ -98,8 +110,9 @@ impl Tuner for SaTuner {
         let mut temp = self.cfg.t0;
 
         for it in 0..iters {
-            // Cancelled: return the best-so-far partial result.
-            if ctl.is_cancelled() {
+            // Stopped (cancelled or failure budget exhausted): return the
+            // best-so-far partial result.
+            if ctl.should_stop() {
                 break;
             }
             // Propose a neighbour.
@@ -117,27 +130,35 @@ impl Tuner for SaTuner {
                 prop[j] = (prop[j] + rng.normal() * sigma).clamp(0.0, 1.0);
             }
 
-            let y = objective.eval(&space.to_config(&prop));
+            let out = objective.eval_outcome(&space.to_config(&prop));
+            let y = out.y;
             history.push(y);
-            let accept = y < cur_y || {
-                let d = (y - cur_y) / spread;
-                rng.f64() < (-d / temp.max(1e-9)).exp()
-            };
-            if accept {
-                cur_x = prop.clone();
-                cur_y = y;
-            }
-            if y < best_y {
-                best_y = y;
-                best_x = prop;
+            // A failed proposal is never accepted as the walk's current
+            // point and never the best — but it still burns an iteration
+            // (and cools the temperature), like a wasted real run would.
+            if out.failure.is_none() {
+                let accept = y < cur_y || {
+                    let d = (y - cur_y) / spread;
+                    rng.f64() < (-d / temp.max(1e-9)).exp()
+                };
+                if accept {
+                    cur_x = prop.clone();
+                    cur_y = y;
+                }
+                if y < best_y {
+                    best_y = y;
+                    best_x = prop;
+                }
             }
             best_history.push(best_y);
             temp *= self.cfg.cooling;
+            ctl.note_failures(objective.failures().total());
             ctl.update(|p| {
                 p.iteration = Some(it + 1);
                 p.iters = Some(iters);
                 p.runs_executed = Some(objective.evals());
                 p.best_y = Some(best_y);
+                p.failures = Some(objective.failures());
             });
         }
 
@@ -154,6 +175,7 @@ impl Tuner for SaTuner {
             // relevance to report.
             gp_hypers: None,
             ard_relevance: None,
+            failures: objective.failures(),
         })
     }
 }
@@ -169,10 +191,14 @@ mod tests {
     }
 
     impl Objective for Bowl {
-        fn eval(&mut self, cfg: &crate::flags::FlagConfig) -> f64 {
+        fn eval_outcome(
+            &mut self,
+            cfg: &crate::flags::FlagConfig,
+        ) -> crate::tuner::objective::EvalOutcome {
             self.count += 1;
             let u = self.space.project(cfg);
-            u.iter().map(|&x| (x - 0.3) * (x - 0.3)).sum()
+            let y = u.iter().map(|&x| (x - 0.3) * (x - 0.3)).sum();
+            crate::tuner::objective::EvalOutcome { y, failure: None, attempts: 1 }
         }
         fn evals(&self) -> usize {
             self.count

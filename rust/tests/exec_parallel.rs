@@ -13,8 +13,10 @@ use onestoptuner::pipeline::experiments::{run_table2, ExperimentCtx};
 use onestoptuner::pipeline::measure_on;
 use onestoptuner::runtime::{MlBackend, NativeBackend};
 use onestoptuner::sparksim::{
-    run_benchmark_with_contention_on, run_parallel_on, ClusterSpec, ExecutorSpec,
+    run_benchmark_with_contention_on, run_parallel_on, ClusterSpec, CrashRegion, ExecutorSpec,
+    FaultPlan,
 };
+use onestoptuner::tuner::{bo::BoConfig, BoTuner, SimObjective, TuneSpace, Tuner};
 use onestoptuner::{Benchmark, Metric, SparkRunner};
 
 fn backend() -> Arc<dyn MlBackend> {
@@ -129,6 +131,51 @@ fn characterize_identical_across_pool_widths() {
         assert_eq!(serial.runs_executed, parallel.runs_executed);
         assert_eq!(serial.rounds, parallel.rounds);
         assert_eq!(serial.sim_time_s.to_bits(), parallel.sim_time_s.to_bits());
+    }
+}
+
+/// Fault injection rides the same determinism invariant: every injected
+/// decision is a pure function of (plan seed, run seed, attempt, executor
+/// index), so a full tuning loop under an active fault mix — transient
+/// crashes, hangs, noise spikes, and a deterministic crash region — must
+/// be bit-identical at any `ExecPool` width.
+#[test]
+fn faulty_tune_identical_across_pool_widths() {
+    let plan = FaultPlan {
+        seed: 0xc4a05,
+        crash_p: 0.25,
+        hang_p: 0.10,
+        spike_p: 0.30,
+        crash_regions: vec![CrashRegion { flag: "MaxHeapSize".to_string(), lo: 0.0, hi: 0.05 }],
+        max_retries: 2,
+        ..Default::default()
+    };
+    let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+    let mut space = TuneSpace::full(GcMode::G1GC);
+    space.selected.truncate(6);
+    let tune_at = |width: usize| {
+        let pool = if width == 1 { ExecPool::serial() } else { ExecPool::new(width) };
+        let mut obj = SimObjective::new_on(&runner, Metric::ExecTime, 3, pool.clone());
+        let mut bo = BoTuner::new(
+            backend(),
+            BoConfig { n_init: 5, n_candidates: 64, epool: pool, ..Default::default() },
+        );
+        bo.tune(&space, &mut obj, 8).unwrap()
+    };
+    let serial = tune_at(1);
+    assert!(
+        serial.failures.total() > 0,
+        "the fault mix must actually fire for this test to mean anything"
+    );
+    for width in [2usize, 8] {
+        let parallel = tune_at(width);
+        let sh: Vec<u64> = serial.history.iter().map(|v| v.to_bits()).collect();
+        let ph: Vec<u64> = parallel.history.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sh, ph, "history differs at width {width}");
+        assert_eq!(serial.best_y.to_bits(), parallel.best_y.to_bits(), "width {width}");
+        assert_eq!(serial.best_config, parallel.best_config, "width {width}");
+        assert_eq!(serial.evals, parallel.evals);
+        assert_eq!(serial.failures, parallel.failures, "histogram differs at width {width}");
     }
 }
 

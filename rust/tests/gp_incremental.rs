@@ -230,10 +230,14 @@ struct Bowl {
 }
 
 impl Objective for Bowl {
-    fn eval(&mut self, cfg: &onestoptuner::flags::FlagConfig) -> f64 {
+    fn eval_outcome(
+        &mut self,
+        cfg: &onestoptuner::flags::FlagConfig,
+    ) -> onestoptuner::tuner::EvalOutcome {
         self.count += 1;
         let u = self.space.project(cfg);
-        u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum()
+        let y = u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum();
+        onestoptuner::tuner::EvalOutcome { y, failure: None, attempts: 1 }
     }
     fn evals(&self) -> usize {
         self.count

@@ -23,7 +23,7 @@ fn wait_terminal(addr: std::net::SocketAddr, job_id: f64) -> Json {
         assert_eq!(code, 200, "{body}");
         let v = Json::parse(&body).unwrap();
         match v.get("status").and_then(Json::as_str) {
-            Some("done") | Some("failed") | Some("cancelled") => return v,
+            Some("done") | Some("failed") | Some("cancelled") | Some("degraded") => return v,
             _ => {
                 assert!(Instant::now() < deadline, "job {job_id} never finished");
                 std::thread::sleep(Duration::from_millis(25));
@@ -43,7 +43,7 @@ fn wait_done(addr: std::net::SocketAddr, job_id: f64) -> Json {
         let v = Json::parse(&body).unwrap();
         match v.get("status").and_then(Json::as_str) {
             Some("done") => return v.get("result").unwrap().clone(),
-            Some("failed") => panic!("job {job_id} failed: {body}"),
+            Some("failed") | Some("degraded") => panic!("job {job_id} did not finish clean: {body}"),
             _ => {
                 assert!(Instant::now() < deadline, "job {job_id} never finished");
                 std::thread::sleep(Duration::from_millis(25));
@@ -550,6 +550,135 @@ fn cancel_endpoint_edge_cases() {
     wait_done(addr, job);
     let (code, body) = http_request(addr, "DELETE", &format!("/api/jobs/{job}"), "").unwrap();
     assert_eq!(code, 409, "{body}");
+}
+
+#[test]
+fn faults_validation_on_tune() {
+    let addr = server();
+    // Malformed fault plans are synchronous 400s, not failed jobs.
+    for bad_body in [
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "faults": "chaos"}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "faults": {"crash_p": 1.5}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "faults": {"spike_mult": 0.5}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "faults": {"max_retries": -1}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa",
+            "faults": {"crash_regions": [{"flag": "NoSuchFlag", "lo": 0, "hi": 1}]}}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa",
+            "faults": {"crash_regions": [{"flag": "MaxHeapSize", "lo": 0.9, "hi": 0.1}]}}"#,
+    ] {
+        let (code, body) = http_request(addr, "POST", "/api/tune", bad_body).unwrap();
+        assert_eq!(code, 400, "{bad_body} -> {body}");
+    }
+    // A non-integer fail_budget is a client error too.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "fail_budget": 1.5}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("fail_budget"), "{body}");
+}
+
+/// The tentpole end-to-end: a tune under an injected fault mix with a
+/// tight failure budget lands in `degraded`, still carrying its
+/// best-so-far result and an accurate per-kind failure histogram.
+#[test]
+fn faulty_tune_degrades_with_histogram_and_best_so_far() {
+    let addr = server();
+    // Every measurement crashes (crash_p 1.0, one retry) so the budget of
+    // 2 total failures trips during SA's 5-point init phase.
+    let job = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 10, "fail_budget": 2,
+            "faults": {"seed": 7, "crash_p": 1.0, "max_retries": 1}}"#,
+    );
+    let rec = wait_terminal(addr, job);
+    assert_eq!(rec.get("status").unwrap().as_str(), Some("degraded"), "{rec}");
+    let result = rec.get("result").expect("degraded job keeps its best-so-far result");
+    let failures = result.get("failures").expect("tune results always carry the histogram");
+    let crash = failures.get("crash").unwrap().as_f64().unwrap();
+    let total = failures.get("total").unwrap().as_f64().unwrap();
+    assert!(crash > 2.0, "budget 2 means at least 3 failures recorded: {failures}");
+    assert_eq!(crash, total, "only crashes were injected: {failures}");
+    assert_eq!(failures.get("oom").unwrap().as_f64(), Some(0.0));
+    assert!(result.get("best_java_args").is_some(), "{result}");
+    // Cancelling a degraded (terminal) job is refused like any other.
+    let (code, _) = http_request(addr, "DELETE", &format!("/api/jobs/{job}"), "").unwrap();
+    assert_eq!(code, 409);
+
+    // The same faulty tune without a budget runs to `done` — and its
+    // histogram is reproducible from the seeds alone.
+    let job2 = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 3,
+            "faults": {"seed": 7, "crash_p": 1.0, "max_retries": 1}}"#,
+    );
+    let rec2 = wait_terminal(addr, job2);
+    assert_eq!(rec2.get("status").unwrap().as_str(), Some("done"), "{rec2}");
+    let f2 = rec2.get("result").unwrap().get("failures").unwrap();
+    // SA: 4 LHS init points + 3 iterations, all crashing (injection is
+    // deterministic given the plan seed + run seeds).
+    assert_eq!(f2.get("crash").unwrap().as_f64(), Some(8.0), "{f2}");
+    // A fault-free tune reports the all-zero histogram, not a missing key.
+    let job3 = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1}"#,
+    );
+    let v = wait_done(addr, job3);
+    assert_eq!(v.get("failures").unwrap().get("total").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn saturated_queue_answers_429_with_retry_after() {
+    use std::io::{Read as _, Write as _};
+    // Capacity 1, single worker: one blocking-ish job saturates the queue.
+    let opts = ApiOptions { workers: 1, queue_capacity: Some(1), ..Default::default() };
+    let addr = spawn_with("127.0.0.1:0", Arc::new(NativeBackend), opts).unwrap();
+    let blocker = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "densekmeans", "gc": "parallel", "algo": "bo", "iters": 200}"#,
+    );
+    // Raw client so the Retry-After *header* is visible.
+    let body = r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1}"#;
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "POST /api/tune HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 429 Too Many Requests"), "{resp}");
+    let head = resp.split("\r\n\r\n").next().unwrap();
+    assert!(head.contains("Retry-After: "), "{head}");
+    assert!(resp.contains("queue full"), "{resp}");
+    // Characterize submissions hit the same bound.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/characterize",
+        r#"{"bench": "lda", "gc": "g1", "pool": 100, "rounds": 1}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 429, "{body}");
+    // Draining the queue re-admits: cancel the blocker and wait it out.
+    let (code, _) = http_request(addr, "DELETE", &format!("/api/jobs/{blocker}"), "").unwrap();
+    assert_eq!(code, 202);
+    wait_terminal(addr, blocker);
+    let job = submit(
+        addr,
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1}"#,
+    );
+    wait_done(addr, job);
 }
 
 #[test]
