@@ -1,0 +1,106 @@
+//! detlint: the determinism & concurrency lint gate.
+//!
+//! Modes:
+//!
+//! * default (sweep) — lint every `.rs` file under `rust/src/`, print
+//!   the markdown summary, write `detlint.json` at the repo root, and
+//!   exit non-zero on any unsuppressed violation or malformed allow
+//!   annotation.  This is the CI step.
+//! * `--self-check` — patch known violations into in-memory copies of
+//!   real files (one-plus per rule, plus negative controls) and exit
+//!   non-zero unless every plant is flagged at the expected file/rule.
+//!   Guards the lint itself against silent rot; also a CI step.
+//!
+//! Examples:
+//!
+//! ```text
+//! cargo run --release --bin detlint
+//! cargo run --release --bin detlint -- --self-check
+//! cargo run --release --bin detlint -- --out /tmp/detlint.json
+//! ```
+//!
+//! Rules, rationale and the allow workflow are documented in `LINTS.md`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{Context, Result};
+
+use onestoptuner::lint::{self, report, selfcheck};
+use onestoptuner::mutate::find_root;
+
+struct Opts {
+    self_check: bool,
+    out: Option<PathBuf>,
+}
+
+const USAGE: &str = "usage: detlint [--self-check] [--out PATH]";
+
+fn parse_opts(args: &[String]) -> Result<Opts> {
+    let mut o = Opts { self_check: false, out: None };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--self-check" => o.self_check = true,
+            "--out" => {
+                let v = it.next().with_context(|| format!("--out needs a value\n{USAGE}"))?;
+                o.out = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => anyhow::bail!("unknown argument `{other}`\n{USAGE}"),
+        }
+    }
+    Ok(o)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("detlint: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<ExitCode> {
+    let opts = parse_opts(args)?;
+    let root = find_root()?;
+    if opts.self_check {
+        return run_self_check(&root);
+    }
+    run_sweep(&opts, &root)
+}
+
+fn run_sweep(opts: &Opts, root: &std::path::Path) -> Result<ExitCode> {
+    let rep = lint::lint_root(root)?;
+    let out = opts.out.clone().unwrap_or_else(|| root.join("detlint.json"));
+    std::fs::write(&out, format!("{}\n", report::to_json(&rep)))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("{}", report::summary_markdown(&rep));
+    println!("wrote {}", out.display());
+    if !rep.clean() {
+        eprintln!(
+            "detlint: {} violation(s) / {} problem(s) — fix the site, use an ordered \
+             container, or add `// detlint: allow(<rule>) -- <reason>` (see LINTS.md)",
+            rep.findings.len(),
+            rep.problems.len()
+        );
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
+fn run_self_check(root: &std::path::Path) -> Result<ExitCode> {
+    let results = selfcheck::run(root)?;
+    println!("{}", selfcheck::summary_markdown(&results));
+    if !selfcheck::all_ok(&results) {
+        eprintln!("detlint: self-check failed — the lint no longer catches what it claims to");
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}

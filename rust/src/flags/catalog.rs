@@ -348,13 +348,11 @@ pub fn group_indices(mode: GcMode) -> &'static [usize] {
             .map(|(i, _)| i)
             .collect()
     }
-    static PARALLEL: once_cell::sync::Lazy<Vec<usize>> =
-        once_cell::sync::Lazy::new(|| build(GcMode::ParallelGC));
-    static G1: once_cell::sync::Lazy<Vec<usize>> =
-        once_cell::sync::Lazy::new(|| build(GcMode::G1GC));
+    static PARALLEL: std::sync::OnceLock<Vec<usize>> = std::sync::OnceLock::new();
+    static G1: std::sync::OnceLock<Vec<usize>> = std::sync::OnceLock::new();
     match mode {
-        GcMode::ParallelGC => &PARALLEL,
-        GcMode::G1GC => &G1,
+        GcMode::ParallelGC => PARALLEL.get_or_init(|| build(GcMode::ParallelGC)),
+        GcMode::G1GC => G1.get_or_init(|| build(GcMode::G1GC)),
     }
 }
 
@@ -368,13 +366,12 @@ pub fn group_position(mode: GcMode, name: &str) -> Option<usize> {
             .map(|(pos, &i)| (CATALOG[i].name, pos))
             .collect()
     }
-    static PARALLEL: once_cell::sync::Lazy<std::collections::HashMap<&'static str, usize>> =
-        once_cell::sync::Lazy::new(|| build(GcMode::ParallelGC));
-    static G1: once_cell::sync::Lazy<std::collections::HashMap<&'static str, usize>> =
-        once_cell::sync::Lazy::new(|| build(GcMode::G1GC));
+    static PARALLEL: std::sync::OnceLock<HashMap<&'static str, usize>> =
+        std::sync::OnceLock::new();
+    static G1: std::sync::OnceLock<HashMap<&'static str, usize>> = std::sync::OnceLock::new();
     match mode {
-        GcMode::ParallelGC => PARALLEL.get(name).copied(),
-        GcMode::G1GC => G1.get(name).copied(),
+        GcMode::ParallelGC => PARALLEL.get_or_init(|| build(GcMode::ParallelGC)).get(name).copied(),
+        GcMode::G1GC => G1.get_or_init(|| build(GcMode::G1GC)).get(name).copied(),
     }
 }
 

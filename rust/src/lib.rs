@@ -25,6 +25,7 @@ pub mod exec;
 pub mod featsel;
 pub mod flags;
 pub mod jvmsim;
+pub mod lint;
 pub mod mutate;
 pub mod native;
 pub mod pipeline;

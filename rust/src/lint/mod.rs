@@ -1,0 +1,247 @@
+//! `detlint` — a determinism & concurrency lint that statically enforces
+//! the repo's bitwise-reproducibility contract.
+//!
+//! Every result this reproduction produces — characterize datasets,
+//! BO/SA tunes, fault-injected degraded runs — is contractually
+//! bit-identical across `ExecPool` widths and derivable from seeds
+//! alone.  The differential suites (`tests/exec_parallel.rs`,
+//! `tests/gp_incremental.rs`) enforce that *dynamically*; this pass
+//! enforces it *statically*, so a stray `HashMap` iteration or ambient
+//! clock read in a new code path fails CI instead of waiting for a pin
+//! to happen to catch it.
+//!
+//! Like `mutate/scanner.rs` (whose masking infrastructure it shares via
+//! [`crate::util::source`]), this is a line-based scanner, not a Rust
+//! parser: rustfmt'd code plus comment/string masking make spaced-token
+//! matching reliable, and anything the heuristics over-approximate is
+//! suppressed *explicitly* with a reviewed annotation:
+//!
+//! ```text
+//! // detlint: allow(<rule-id>) -- <mandatory reason>
+//! ```
+//!
+//! either trailing on the flagged line or standing alone on the line
+//! above it.  An allow without a reason (or naming an unknown rule) is
+//! itself a fatal problem.  The rule catalog, per-rule rationale and
+//! the allow workflow are documented in `LINTS.md`; `detlint
+//! --self-check` (see [`selfcheck`]) plants one-or-more violations per
+//! rule into scratch copies of real files and demands each is flagged
+//! at the expected file/rule, pinning the lint itself against rot.
+//!
+//! Scanning stops at the first top-level `#[cfg(test)]` in each file —
+//! tests are oracles and may freely use wall-clocks, hash iteration and
+//! raw threads.
+
+pub mod report;
+pub mod rules;
+pub mod selfcheck;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// The determinism rule catalog.  Ids are stable: they appear in allow
+/// annotations, `detlint.json`, CI asserts and LINTS.md.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1: no iteration over `HashMap`/`HashSet` — iteration order is
+    /// nondeterministic per process.  Declarations and point lookups
+    /// (`get`, `contains_key`, `insert`, `entry`) stay legal; anything
+    /// order-bearing must use `BTreeMap`/`BTreeSet` or sort first.
+    HashIter,
+    /// R2: no `Instant::now`/`SystemTime` influencing result values.
+    /// Elapsed-time *reporting* (`elapsed_s`, `tuning_time_s`) and TTL
+    /// bookkeeping are legitimate but must carry an allow annotation so
+    /// every wall-clock read in the tree is a reviewed one.
+    WallClock,
+    /// R3: no RNG construction outside the seeded `splitmix64`-derived
+    /// stream discipline of `util/rng.rs` — no thread-local or OS
+    /// entropy (`RandomState`, `thread_rng`, `from_entropy`, …).
+    AmbientRng,
+    /// R4: no `thread::spawn`/`scope`/`Builder` outside `exec/` (the
+    /// `ExecPool`/`JobRunner` home — its fixed-block sharding is what
+    /// makes width-invariance provable) and `mutate/` (build-runner
+    /// tooling, not a result path).
+    ThreadOutsideExec,
+    /// R5: no float reductions chained onto a concurrent fan-out
+    /// (`par_map(..).iter().sum()` -style) and no shared float
+    /// accumulators (`Mutex<f64>`) — reductions must run over the
+    /// index-ordered results via the fixed-order helpers in
+    /// `util/stats.rs`/`exec`.
+    UnorderedFloatReduce,
+    /// R6: no lock held across an I/O or blocking call in `server/`
+    /// (the jobs/persist mutexes serve request threads; file writes
+    /// under them turn a slow disk into a stalled API).
+    LockAcrossIo,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::HashIter,
+        Rule::WallClock,
+        Rule::AmbientRng,
+        Rule::ThreadOutsideExec,
+        Rule::UnorderedFloatReduce,
+        Rule::LockAcrossIo,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::AmbientRng => "ambient-rng",
+            Rule::ThreadOutsideExec => "thread-outside-exec",
+            Rule::UnorderedFloatReduce => "unordered-float-reduce",
+            Rule::LockAcrossIo => "lock-across-io",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == s)
+    }
+
+    /// One-line invariant statement for reports.
+    pub fn invariant(self) -> &'static str {
+        match self {
+            Rule::HashIter => "no HashMap/HashSet iteration (order nondeterministic)",
+            Rule::WallClock => "no Instant/SystemTime influencing results",
+            Rule::AmbientRng => "no RNG outside the seeded util/rng streams",
+            Rule::ThreadOutsideExec => "no raw threads outside exec/ and mutate/",
+            Rule::UnorderedFloatReduce => "no float reduce over concurrent fan-out",
+            Rule::LockAcrossIo => "no lock held across blocking I/O in server/",
+        }
+    }
+
+    /// Path scope: which repo-relative files the rule applies to.  The
+    /// exemptions are the rule definitions themselves, not allows:
+    /// `exec/` IS the approved thread home, `mutate/` is offline build
+    /// tooling whose job is measuring real wall-clock timeouts, and
+    /// `util/stats.rs`/`exec/` hold the approved fixed-order reducers.
+    pub fn applies_to(self, file: &str) -> bool {
+        match self {
+            Rule::HashIter | Rule::AmbientRng => true,
+            Rule::WallClock => !file.contains("/mutate/"),
+            Rule::ThreadOutsideExec => {
+                !file.contains("/exec/") && !file.contains("/mutate/")
+            }
+            Rule::UnorderedFloatReduce => {
+                !file.contains("/exec/") && !file.ends_with("util/stats.rs")
+            }
+            Rule::LockAcrossIo => file.contains("/server/"),
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// An unsuppressed violation — any one of these fails the run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub excerpt: String,
+}
+
+/// A violation suppressed by a well-formed allow annotation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AllowedFinding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+    pub excerpt: String,
+}
+
+/// An allow annotation that matched no finding (reported, non-fatal:
+/// detector refinements must not turn stale comments into red CI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StaleAllow {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// A malformed annotation (unknown rule, missing reason) — fatal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Problem {
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Outcome of scanning one file — see [`rules::scan_source`].
+#[derive(Clone, Debug, Default)]
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowedFinding>,
+    pub stale_allows: Vec<StaleAllow>,
+    pub problems: Vec<Problem>,
+}
+
+/// Whole-tree lint result.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowedFinding>,
+    pub stale_allows: Vec<StaleAllow>,
+    pub problems: Vec<Problem>,
+}
+
+impl LintReport {
+    /// The CI gate: no unsuppressed violations, no malformed allows.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty() && self.problems.is_empty()
+    }
+}
+
+/// Every `.rs` file under `dir`, recursively, in sorted (deterministic)
+/// path order.
+pub fn collect_rs_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+        {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(dir, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+/// Sweep all of `rust/src/` under the repo `root`.
+pub fn lint_root(root: &Path) -> Result<LintReport> {
+    let src = root.join("rust").join("src");
+    let files = collect_rs_files(&src)?;
+    let mut rep = LintReport { files_scanned: files.len(), ..Default::default() };
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let scan = rules::scan_source(&rel, &text);
+        rep.findings.extend(scan.findings);
+        rep.allows.extend(scan.allows);
+        rep.stale_allows.extend(scan.stale_allows);
+        rep.problems.extend(scan.problems);
+    }
+    Ok(rep)
+}

@@ -1,0 +1,172 @@
+//! Machine- and human-readable renderings of a [`LintReport`]:
+//! schema-stable `detlint.json` (schema id `detlint/v1` — CI asserts on
+//! it with jq) and a markdown summary table.
+
+use crate::util::Json;
+
+use super::{LintReport, Rule};
+
+/// Render the report as the `detlint/v1` JSON document.  Object keys
+/// are sorted by `Json::Obj` (BTreeMap) and every array here is built
+/// in deterministic order (rules in catalog order, findings in sorted
+/// file/line order), so the byte output is stable across runs.
+pub fn to_json(rep: &LintReport) -> Json {
+    let rules = Rule::ALL
+        .iter()
+        .map(|&r| {
+            Json::obj(vec![
+                ("id", Json::str(r.id())),
+                ("invariant", Json::str(r.invariant())),
+                (
+                    "violations",
+                    Json::num(rep.findings.iter().filter(|f| f.rule == r).count() as f64),
+                ),
+                (
+                    "allows",
+                    Json::num(rep.allows.iter().filter(|a| a.rule == r).count() as f64),
+                ),
+            ])
+        })
+        .collect();
+
+    let violations = rep
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::str(&f.file)),
+                ("line", Json::num(f.line as f64)),
+                ("rule", Json::str(f.rule.id())),
+                ("excerpt", Json::str(&f.excerpt)),
+            ])
+        })
+        .collect();
+
+    let allows = rep
+        .allows
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("file", Json::str(&a.file)),
+                ("line", Json::num(a.line as f64)),
+                ("rule", Json::str(a.rule.id())),
+                ("reason", Json::str(&a.reason)),
+                ("excerpt", Json::str(&a.excerpt)),
+            ])
+        })
+        .collect();
+
+    let stale = rep
+        .stale_allows
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("file", Json::str(&s.file)),
+                ("line", Json::num(s.line as f64)),
+                ("rule", Json::str(s.rule.id())),
+                ("reason", Json::str(&s.reason)),
+            ])
+        })
+        .collect();
+
+    let problems = rep
+        .problems
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("file", Json::str(&p.file)),
+                ("line", Json::num(p.line as f64)),
+                ("message", Json::str(&p.message)),
+            ])
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("schema", Json::str("detlint/v1")),
+        ("mode", Json::str("sweep")),
+        ("files_scanned", Json::num(rep.files_scanned as f64)),
+        ("clean", Json::Bool(rep.clean())),
+        ("rules", Json::Arr(rules)),
+        ("violations", Json::Arr(violations)),
+        ("allows", Json::Arr(allows)),
+        ("stale_allows", Json::Arr(stale)),
+        ("problems", Json::Arr(problems)),
+    ])
+}
+
+/// Markdown summary: verdict line, per-rule counts, every violation,
+/// and the full allow ledger (each with its mandatory reason) so a
+/// reviewer sees every sanctioned exception in one table.
+pub fn summary_markdown(rep: &LintReport) -> String {
+    let mut md = String::new();
+    md.push_str("## detlint — determinism & concurrency lint\n\n");
+    md.push_str(&format!(
+        "Files scanned: {} · violations: {} · allows: {} · problems: {} → **{}**\n\n",
+        rep.files_scanned,
+        rep.findings.len(),
+        rep.allows.len(),
+        rep.problems.len(),
+        if rep.clean() { "CLEAN" } else { "DIRTY" },
+    ));
+
+    md.push_str("| rule | invariant | violations | allows |\n");
+    md.push_str("|---|---|---:|---:|\n");
+    for &r in &Rule::ALL {
+        let v = rep.findings.iter().filter(|f| f.rule == r).count();
+        let a = rep.allows.iter().filter(|x| x.rule == r).count();
+        md.push_str(&format!("| `{}` | {} | {v} | {a} |\n", r.id(), r.invariant()));
+    }
+
+    if !rep.findings.is_empty() {
+        md.push_str("\n### Violations\n\n| file:line | rule | excerpt |\n|---|---|---|\n");
+        for f in &rep.findings {
+            md.push_str(&format!(
+                "| `{}:{}` | `{}` | `{}` |\n",
+                f.file,
+                f.line,
+                f.rule.id(),
+                cell(&f.excerpt),
+            ));
+        }
+    }
+
+    if !rep.problems.is_empty() {
+        md.push_str("\n### Problems (malformed annotations — fatal)\n\n");
+        for p in &rep.problems {
+            md.push_str(&format!("- `{}:{}` — {}\n", p.file, p.line, p.message));
+        }
+    }
+
+    if !rep.allows.is_empty() {
+        md.push_str("\n### Allow ledger\n\n| file:line | rule | reason |\n|---|---|---|\n");
+        for a in &rep.allows {
+            md.push_str(&format!(
+                "| `{}:{}` | `{}` | {} |\n",
+                a.file,
+                a.line,
+                a.rule.id(),
+                cell(&a.reason),
+            ));
+        }
+    }
+
+    if !rep.stale_allows.is_empty() {
+        md.push_str("\n### Stale allows (matched nothing — consider removing)\n\n");
+        for s in &rep.stale_allows {
+            md.push_str(&format!(
+                "- `{}:{}` — allow({}) -- {}\n",
+                s.file,
+                s.line,
+                s.rule.id(),
+                s.reason,
+            ));
+        }
+    }
+
+    md
+}
+
+/// Escape a string for a one-line markdown table cell.
+fn cell(s: &str) -> String {
+    s.replace('|', "\\|").replace('\n', " ")
+}

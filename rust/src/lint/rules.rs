@@ -1,0 +1,502 @@
+//! Rule detectors and allow-annotation resolution.
+//!
+//! Everything here works on *masked* lines (string/char-literal
+//! contents and comments blanked by [`crate::util::source::Masker`]),
+//! so a banned token inside a string or comment never fires.  The
+//! annotation syntax itself is parsed from the raw line, since it lives
+//! in a comment by design.
+//!
+//! Heuristics, stated honestly:
+//!
+//! * `hash-iter` tracks identifiers declared with a `HashMap`/`HashSet`
+//!   type in the same file (let-bindings, struct fields, fn params,
+//!   statics) and flags lines where a tracked name is followed by an
+//!   iteration token (`.iter()`, `.keys()`, `.values()`, `.retain(`,
+//!   `.drain(`, …) or appears as a `for … in` source.  Cross-file
+//!   tracking is out of scope — a map handed across a module boundary
+//!   is invisible, which is why the real fix (BTreeMap at the
+//!   declaration) is always preferred over an allow.
+//! * `lock-across-io` tracks `.lock()` guards: a `let g = ….lock()
+//!   .unwrap();` binding stays live until its block dedents (or
+//!   `drop(`), a temporary in a larger expression until its statement's
+//!   `;`.  Any line containing a blocking token while a guard is live
+//!   is flagged.  Opaque calls (a closure invoked under a lock) are
+//!   beyond a line scanner — reviews still own those.
+
+use crate::util::source::{is_ident_byte, Masker};
+
+use super::{AllowedFinding, FileScan, Finding, Problem, Rule, StaleAllow};
+
+/// Iteration tokens for `hash-iter` (order-bearing accessors only;
+/// `get`/`contains_key`/`insert`/`entry` are point ops and stay legal).
+const ITER_TOKENS: [&str; 8] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".retain(",
+    ".drain(",
+];
+
+/// Wall-clock constructors for `wall-clock`.
+const CLOCK_TOKENS: [&str; 3] = ["Instant::now", "SystemTime", "UNIX_EPOCH"];
+
+/// Ambient-entropy constructors for `ambient-rng`.
+const ENTROPY_TOKENS: [&str; 7] = [
+    "thread_rng",
+    "from_entropy",
+    "RandomState",
+    "DefaultHasher",
+    "getrandom",
+    "OsRng",
+    "rand::",
+];
+
+/// Raw-parallelism constructors for `thread-outside-exec`.
+const THREAD_TOKENS: [&str; 3] = ["thread::spawn", "thread::scope", "thread::Builder"];
+
+/// `unordered-float-reduce`: a reduction chained onto a fan-out …
+const PAR_TOKENS: [&str; 3] = ["par_run(", "par_map(", "par_chunks("];
+const REDUCE_TOKENS: [&str; 5] = [".sum()", ".sum::<", ".product()", ".product::<", ".fold("];
+/// … or a shared mutable float accumulator.
+const SHARED_ACC_TOKENS: [&str; 4] = ["Mutex<f64", "Mutex<f32", "RwLock<f64", "RwLock<f32"];
+
+/// Blocking calls for `lock-across-io`.  `persist::save` is the repo's
+/// own state-file writer — known blocking, listed by name.
+const BLOCKING_TOKENS: [&str; 15] = [
+    "std::fs::",
+    "fs::write",
+    "fs::read",
+    "fs::create_dir",
+    "fs::rename",
+    "fs::remove",
+    "File::",
+    ".write_all(",
+    ".read_to_string(",
+    ".read_to_end(",
+    ".sync_all(",
+    "TcpStream::connect",
+    "thread::sleep",
+    "Command::new",
+    "persist::save(",
+];
+
+const ANNOTATION: &str = "// detlint:";
+
+struct LineInfo {
+    /// 1-based line number.
+    num: usize,
+    raw: String,
+    masked: String,
+    /// Raw line, whitespace-trimmed (excerpts, structure checks).
+    trimmed: String,
+    /// Leading-whitespace byte count.
+    indent: usize,
+}
+
+struct AllowAnn {
+    /// Line the annotation sits on.
+    line: usize,
+    /// Line the annotation suppresses.
+    target: usize,
+    rule: Rule,
+    reason: String,
+    used: bool,
+}
+
+/// Scan one file's source.  `file` is the repo-relative path (forward
+/// slashes) — it drives the per-rule path scopes.
+pub fn scan_source(file: &str, src: &str) -> FileScan {
+    let mut scan = FileScan::default();
+    let lines = prepare_lines(src);
+
+    let mut allows = collect_allows(file, &lines, &mut scan.problems);
+
+    let mut raw: Vec<(usize, Rule, String)> = Vec::new();
+    hash_iter(&lines, &mut raw);
+    token_rule(&lines, Rule::WallClock, &CLOCK_TOKENS, &mut raw);
+    token_rule(&lines, Rule::AmbientRng, &ENTROPY_TOKENS, &mut raw);
+    token_rule(&lines, Rule::ThreadOutsideExec, &THREAD_TOKENS, &mut raw);
+    float_reduce(&lines, &mut raw);
+    lock_across_io(&lines, &mut raw);
+
+    raw.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    raw.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);
+
+    for (line, rule, excerpt) in raw {
+        if !rule.applies_to(file) {
+            continue;
+        }
+        match allows.iter_mut().find(|a| a.target == line && a.rule == rule && !a.used) {
+            Some(a) => {
+                a.used = true;
+                scan.allows.push(AllowedFinding {
+                    file: file.to_string(),
+                    line,
+                    rule,
+                    reason: a.reason.clone(),
+                    excerpt,
+                });
+            }
+            None => scan.findings.push(Finding {
+                file: file.to_string(),
+                line,
+                rule,
+                excerpt,
+            }),
+        }
+    }
+
+    for a in allows.into_iter().filter(|a| !a.used) {
+        scan.stale_allows.push(StaleAllow {
+            file: file.to_string(),
+            line: a.line,
+            rule: a.rule,
+            reason: a.reason,
+        });
+    }
+    scan
+}
+
+/// Mask the code region of the file: everything up to (not including)
+/// the first top-level `#[cfg(test)]`.
+fn prepare_lines(src: &str) -> Vec<LineInfo> {
+    let mut out = Vec::new();
+    let mut masker = Masker::new();
+    for (idx, line) in src.lines().enumerate() {
+        let trimmed = line.trim();
+        if trimmed.starts_with("#[cfg(test)]") {
+            break; // tests are oracles, not result paths
+        }
+        let masked = masker.mask_line(line);
+        out.push(LineInfo {
+            num: idx + 1,
+            raw: line.to_string(),
+            masked,
+            trimmed: trimmed.to_string(),
+            indent: line.len() - line.trim_start().len(),
+        });
+    }
+    out
+}
+
+fn excerpt_of(li: &LineInfo) -> String {
+    let mut e = li.trimmed.clone();
+    if e.len() > 120 {
+        let mut cut = 117;
+        while !e.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        e.truncate(cut);
+        e.push_str("...");
+    }
+    e
+}
+
+/// The byte offset of this line's real `//` comment start, if the
+/// comment is a detlint annotation.  "Real" means the masked line is
+/// blank from the `//` to end-of-line — that rejects `// detlint:`
+/// inside string literals (the closing delimiter stays visible after
+/// it) — and the comment text must *begin* with the annotation marker,
+/// which rejects doc comments and prose that merely mention the syntax.
+fn annotation_start(li: &LineInfo) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = li.raw[from..].find("//") {
+        let pos = from + rel;
+        if li.masked[pos..].trim().is_empty() {
+            return li.raw[pos..].starts_with(ANNOTATION).then_some(pos);
+        }
+        from = pos + 1;
+    }
+    None
+}
+
+/// Parse every `// detlint: allow(rule) -- reason` annotation and
+/// resolve which line each one suppresses: a trailing annotation
+/// suppresses its own line; a standalone annotation line suppresses the
+/// next non-annotation line.
+fn collect_allows(file: &str, lines: &[LineInfo], problems: &mut Vec<Problem>) -> Vec<AllowAnn> {
+    let mut out = Vec::new();
+    for (i, li) in lines.iter().enumerate() {
+        let Some(pos) = annotation_start(li) else { continue };
+        let ann = li.raw[pos..].trim();
+        match parse_allow(ann) {
+            Err(msg) => problems.push(Problem {
+                file: file.to_string(),
+                line: li.num,
+                message: msg,
+            }),
+            Ok((rule, reason)) => {
+                let standalone = li.raw[..pos].trim().is_empty();
+                let target = if standalone {
+                    // skip over further standalone annotation lines
+                    let mut j = i + 1;
+                    while j < lines.len() {
+                        let l = &lines[j];
+                        let is_ann = l.raw.trim_start().starts_with(ANNOTATION);
+                        if !is_ann {
+                            break;
+                        }
+                        j += 1;
+                    }
+                    lines.get(j).map_or(li.num, |l| l.num)
+                } else {
+                    li.num
+                };
+                out.push(AllowAnn { line: li.num, target, rule, reason, used: false });
+            }
+        }
+    }
+    out
+}
+
+/// Parse one annotation comment, starting at `// detlint:`.
+fn parse_allow(ann: &str) -> Result<(Rule, String), String> {
+    let body = ann[ANNOTATION.len()..].trim_start();
+    let Some(rest) = body.strip_prefix("allow(") else {
+        return Err(format!(
+            "malformed detlint annotation (expected `// detlint: allow(<rule>) -- <reason>`): `{ann}`"
+        ));
+    };
+    let Some(close) = rest.find(')') else {
+        return Err(format!("unclosed allow(…) in detlint annotation: `{ann}`"));
+    };
+    let id = rest[..close].trim();
+    let Some(rule) = Rule::parse(id) else {
+        let known: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        return Err(format!(
+            "unknown detlint rule `{id}` (known: {})",
+            known.join(", ")
+        ));
+    };
+    let tail = rest[close + 1..].trim_start();
+    let Some(reason) = tail.strip_prefix("--") else {
+        return Err(format!(
+            "detlint allow({id}) is missing its mandatory `-- <reason>`"
+        ));
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Err(format!(
+            "detlint allow({id}) has an empty reason — say why the site is legitimate"
+        ));
+    }
+    Ok((rule, reason.to_string()))
+}
+
+fn is_word_at(masked: &str, pos: usize, len: usize) -> bool {
+    let b = masked.as_bytes();
+    let before_ok = pos == 0 || !is_ident_byte(b[pos - 1]);
+    let after_ok = pos + len >= b.len() || !is_ident_byte(b[pos + len]);
+    before_ok && after_ok
+}
+
+fn find_word(masked: &str, word: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = masked[from..].find(word) {
+        let pos = from + rel;
+        if is_word_at(masked, pos, word.len()) {
+            return Some(pos);
+        }
+        from = pos + 1;
+    }
+    None
+}
+
+/// True if any whole-word occurrence of `word` is immediately followed
+/// by one of `suffixes` (adjacent, so `map.get(k).map(|v| v.iter())`
+/// does not blame `map` for the Vec's iteration).
+fn word_followed_by(masked: &str, word: &str, suffixes: &[&str]) -> bool {
+    let mut from = 0;
+    while let Some(rel) = masked[from..].find(word) {
+        let pos = from + rel;
+        from = pos + 1;
+        if !is_word_at(masked, pos, word.len()) {
+            continue;
+        }
+        let rest = &masked[pos + word.len()..];
+        if suffixes.iter().any(|s| rest.starts_with(s)) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Generic token rule: flag any code line containing one of `tokens`.
+/// `use` items are declarations, not calls — skipped.
+fn token_rule(lines: &[LineInfo], rule: Rule, tokens: &[&str], out: &mut Vec<(usize, Rule, String)>) {
+    for li in lines {
+        if li.trimmed.starts_with("use ") {
+            continue;
+        }
+        if tokens.iter().any(|t| li.masked.contains(t)) {
+            out.push((li.num, rule, excerpt_of(li)));
+        }
+    }
+}
+
+/// R1 — see module docs for the tracking heuristic.
+fn hash_iter(lines: &[LineInfo], out: &mut Vec<(usize, Rule, String)>) {
+    // pass 1: collect hash-typed binding names declared in this file
+    let mut names: Vec<String> = Vec::new();
+    for li in lines {
+        if li.trimmed.starts_with("use ") {
+            continue;
+        }
+        for tok in ["HashMap<", "HashSet<", "HashMap::new", "HashSet::new"] {
+            let mut from = 0;
+            while let Some(rel) = li.masked[from..].find(tok) {
+                let pos = from + rel;
+                from = pos + tok.len();
+                if pos > 0 && is_ident_byte(li.masked.as_bytes()[pos - 1]) {
+                    continue; // tail of a longer identifier
+                }
+                // a return type (`-> HashMap<…>`) binds nothing here
+                if li.masked[..pos].trim_end().ends_with("->") {
+                    continue;
+                }
+                if let Some(name) = binding_name(li, pos) {
+                    if !names.contains(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // pass 2: flag iteration over a tracked name
+    for li in lines {
+        if li.trimmed.starts_with("use ") {
+            continue;
+        }
+        let hit = names.iter().any(|name| {
+            if word_followed_by(&li.masked, name, &ITER_TOKENS) {
+                return true;
+            }
+            // `for k in tracked { … }` — iteration without a method call
+            if let (Some(fpos), Some(ipos)) = (li.masked.find("for "), li.masked.find(" in ")) {
+                if ipos > fpos {
+                    let after_in = &li.masked[ipos + 4..];
+                    return find_word(after_in, name).is_some();
+                }
+            }
+            false
+        });
+        if hit {
+            out.push((li.num, Rule::HashIter, excerpt_of(li)));
+        }
+    }
+}
+
+/// The identifier a hash-typed declaration at `pos` binds: the ident
+/// after `let [mut]`, or the ident before the `name: Type` colon
+/// (struct fields, fn params, statics).
+fn binding_name(li: &LineInfo, pos: usize) -> Option<String> {
+    if let Some(rest) = li.masked.trim_start().strip_prefix("let ") {
+        let rest = rest.trim_start().trim_start_matches("mut ").trim_start();
+        let end = rest.bytes().position(|b| !is_ident_byte(b)).unwrap_or(rest.len());
+        return (end > 0).then(|| rest[..end].to_string());
+    }
+    // last single `:` (not `::`) before the type token
+    let head = li.masked[..pos].as_bytes();
+    let mut k = head.len();
+    let mut colon = None;
+    while k > 0 {
+        k -= 1;
+        if head[k] == b':' {
+            let pair_left = k > 0 && head[k - 1] == b':';
+            let pair_right = k + 1 < head.len() && head[k + 1] == b':';
+            if !pair_left && !pair_right {
+                colon = Some(k);
+                break;
+            }
+            if pair_left {
+                k -= 1; // skip the `::` pair wholesale
+            }
+        }
+    }
+    let colon = colon?;
+    let ident_zone = li.masked[..colon].trim_end();
+    let start = ident_zone
+        .bytes()
+        .rposition(|b| !is_ident_byte(b))
+        .map_or(0, |p| p + 1);
+    let name = &ident_zone[start..];
+    (!name.is_empty() && !name.bytes().next().unwrap().is_ascii_digit())
+        .then(|| name.to_string())
+}
+
+/// R5 — a float reduction chained onto a fan-out on one line, or a
+/// shared float accumulator type anywhere.
+fn float_reduce(lines: &[LineInfo], out: &mut Vec<(usize, Rule, String)>) {
+    for li in lines {
+        if li.trimmed.starts_with("use ") {
+            continue;
+        }
+        let chained = PAR_TOKENS.iter().any(|t| li.masked.contains(t))
+            && REDUCE_TOKENS.iter().any(|t| li.masked.contains(t));
+        let shared = SHARED_ACC_TOKENS.iter().any(|t| li.masked.contains(t));
+        if chained || shared {
+            out.push((li.num, Rule::UnorderedFloatReduce, excerpt_of(li)));
+        }
+    }
+}
+
+/// R6 — guard-lifetime tracking, see module docs.
+fn lock_across_io(lines: &[LineInfo], out: &mut Vec<(usize, Rule, String)>) {
+    #[derive(PartialEq)]
+    enum Kind {
+        /// `let g = ….lock().unwrap();` — lives until its block dedents.
+        Bound,
+        /// lock temporary inside a larger expression — lives until the
+        /// statement's terminating `;`.
+        Temp,
+    }
+    struct Guard {
+        indent: usize,
+        kind: Kind,
+    }
+    let mut guards: Vec<Guard> = Vec::new();
+    for li in lines {
+        if li.trimmed.is_empty() {
+            continue;
+        }
+        let code = li.masked.trim();
+        // scope pops first: fn boundaries clear everything, a dedenting
+        // `}` closes the blocks that own deeper guards
+        if li.trimmed.starts_with("fn ") || li.trimmed.starts_with("pub fn ") {
+            guards.clear();
+        }
+        if code.starts_with('}') {
+            guards.retain(|g| match g.kind {
+                Kind::Bound => g.indent <= li.indent,
+                Kind::Temp => g.indent < li.indent,
+            });
+        }
+        if code.starts_with("drop(") {
+            guards.pop();
+        }
+        if li.masked.contains(".lock()") {
+            let kind = if li.trimmed.starts_with("let ") && code.ends_with(".lock().unwrap();") {
+                Kind::Bound
+            } else {
+                Kind::Temp
+            };
+            guards.push(Guard { indent: li.indent, kind });
+        }
+        if !guards.is_empty()
+            && !li.trimmed.starts_with("use ")
+            && BLOCKING_TOKENS.iter().any(|t| li.masked.contains(t))
+        {
+            out.push((li.num, Rule::LockAcrossIo, excerpt_of(li)));
+        }
+        // a statement's `;` at-or-left-of a temp guard's indent ends it
+        if code.ends_with(';') {
+            guards.retain(|g| g.kind != Kind::Temp || li.indent > g.indent);
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! `detlint --self-check` — lint-the-linter.
+//!
+//! A lint gate that silently stops matching is worse than no gate: the
+//! contract looks enforced and isn't.  So the self-check patches known
+//! violations ("plants") into in-memory copies of *real* repo files —
+//! at least one per rule, plus negative controls (exempt paths, legal
+//! point lookups, a reasoned allow) and one malformed annotation — then
+//! scans the patched copies and demands every plant is reported at the
+//! expected file, rule and line.  Nothing is written to disk.
+//!
+//! Plants are anchored by a substring of an existing source line, not a
+//! line number, so ordinary edits don't break them; if an anchor
+//! disappears entirely the plant fails loudly ("plant rot") instead of
+//! silently skipping, and the anchor must be re-pointed.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{rules, Rule};
+
+/// What the scanner must say about a plant's inserted lines.
+enum Expect {
+    /// An unsuppressed finding of this rule.
+    Violation(Rule),
+    /// An [`super::AllowedFinding`] of this rule, and no finding.
+    Suppressed(Rule),
+    /// A malformed-annotation problem.
+    Problem,
+    /// Nothing at all (negative control: exempt path or legal usage).
+    Clean,
+}
+
+struct Plant {
+    label: &'static str,
+    /// Repo-relative file the plant is patched into.
+    file: &'static str,
+    /// Substring of an existing line; planted lines go right after it.
+    anchor: &'static str,
+    lines: &'static [&'static str],
+    expect: Expect,
+}
+
+/// One plant per rule at minimum, plus negative controls.  Anchors are
+/// chosen on load-bearing lines that the rule's real-world story lives
+/// next to (the BO timer, the persist write guard, the fan-out calls).
+const PLANTS: &[Plant] = &[
+    Plant {
+        label: "hash-iter: map iteration in tuner/bo.rs",
+        file: "rust/src/tuner/bo.rs",
+        anchor: "let t0 = Instant::now();",
+        lines: &[
+            "let planted: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();",
+            "for (k, v) in planted.iter() { let _ = (k, v); }",
+        ],
+        expect: Expect::Violation(Rule::HashIter),
+    },
+    Plant {
+        label: "hash-iter: point lookups stay legal (negative control)",
+        file: "rust/src/flags/catalog.rs",
+        anchor: "pub fn flag_by_name(name: &str)",
+        lines: &[
+            "let planted_m: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();",
+            "let planted_v = planted_m.get(&1).copied();",
+        ],
+        expect: Expect::Clean,
+    },
+    Plant {
+        label: "wall-clock: Instant::now in native/gp.rs",
+        file: "rust/src/native/gp.rs",
+        anchor: "pool.par_chunks(xc, EI_BLOCK",
+        lines: &["let planted_t0 = std::time::Instant::now();"],
+        expect: Expect::Violation(Rule::WallClock),
+    },
+    Plant {
+        label: "wall-clock: SystemTime in server/jobs.rs",
+        file: "rust/src/server/jobs.rs",
+        anchor: "fn evict_expired(&self) {",
+        lines: &["let planted_wall = std::time::SystemTime::now();"],
+        expect: Expect::Violation(Rule::WallClock),
+    },
+    Plant {
+        label: "ambient-rng: RandomState in tuner/sa.rs",
+        file: "rust/src/tuner/sa.rs",
+        anchor: "let t0 = Instant::now();",
+        lines: &["let planted_rs = std::collections::hash_map::RandomState::new();"],
+        expect: Expect::Violation(Rule::AmbientRng),
+    },
+    Plant {
+        label: "thread-outside-exec: spawn in pipeline/mod.rs",
+        file: "rust/src/pipeline/mod.rs",
+        anchor: "let vals = pool.par_run(repeats.max(1), |i| {",
+        lines: &["std::thread::spawn(|| {});"],
+        expect: Expect::Violation(Rule::ThreadOutsideExec),
+    },
+    Plant {
+        label: "thread-outside-exec: exec/ is exempt (negative control)",
+        file: "rust/src/exec/mod.rs",
+        anchor: "pub fn set_global_threads(threads: usize)",
+        lines: &["std::thread::spawn(|| {});"],
+        expect: Expect::Clean,
+    },
+    Plant {
+        label: "unordered-float-reduce: sum over fan-out in datagen/mod.rs",
+        file: "rust/src/datagen/mod.rs",
+        anchor: "let runs: Vec<RunOutcome> = pool.par_map(cfgs, |i, cfg| {",
+        lines: &["let planted_sum: f64 = pool.par_run(4, |i| i as f64).iter().sum();"],
+        expect: Expect::Violation(Rule::UnorderedFloatReduce),
+    },
+    Plant {
+        label: "unordered-float-reduce: Mutex<f64> accumulator in sparksim/runner.rs",
+        file: "rust/src/sparksim/runner.rs",
+        anchor: "let results = pool.par_map(&erngs, |_, erng| {",
+        lines: &["let planted_acc: std::sync::Mutex<f64> = std::sync::Mutex::new(0.0);"],
+        expect: Expect::Violation(Rule::UnorderedFloatReduce),
+    },
+    Plant {
+        label: "lock-across-io: file write under persist_lock in server/api.rs",
+        file: "rust/src/server/api.rs",
+        anchor: "let _write_guard = self.persist_lock.lock().unwrap();",
+        lines: &["std::fs::write(\"/tmp/detlint_planted\", \"x\").ok();"],
+        expect: Expect::Violation(Rule::LockAcrossIo),
+    },
+    Plant {
+        label: "allow without reason is a fatal problem",
+        file: "rust/src/report/mod.rs",
+        anchor: "pub fn save_result(dir: impl AsRef<Path>",
+        lines: &["let planted_p = std::time::Instant::now(); // detlint: allow(wall-clock)"],
+        expect: Expect::Problem,
+    },
+    Plant {
+        label: "allow with reason suppresses (negative control)",
+        file: "rust/src/featsel/mod.rs",
+        anchor: "let sum: f64 = inv.iter().sum();",
+        lines: &[
+            "let planted_ok = std::time::Instant::now(); // detlint: allow(wall-clock) -- planted negative control: annotated with a reason",
+        ],
+        expect: Expect::Suppressed(Rule::WallClock),
+    },
+];
+
+/// Outcome of one plant.
+pub struct PlantResult {
+    pub label: &'static str,
+    pub file: &'static str,
+    pub ok: bool,
+    pub detail: String,
+}
+
+pub fn all_ok(results: &[PlantResult]) -> bool {
+    results.iter().all(|r| r.ok)
+}
+
+/// Render the per-plant outcome table.
+pub fn summary_markdown(results: &[PlantResult]) -> String {
+    let passed = results.iter().filter(|r| r.ok).count();
+    let mut md = String::new();
+    md.push_str("## detlint --self-check\n\n");
+    md.push_str(&format!(
+        "{passed}/{} plants verified → **{}**\n\n| plant | file | outcome |\n|---|---|---|\n",
+        results.len(),
+        if passed == results.len() { "OK" } else { "FAILED" },
+    ));
+    for r in results {
+        md.push_str(&format!(
+            "| {} | `{}` | {} |\n",
+            r.label,
+            r.file,
+            if r.ok { "ok".to_string() } else { format!("**FAIL** — {}", r.detail) },
+        ));
+    }
+    md
+}
+
+/// Patch and scan every plant against the tree under `root`.
+pub fn run(root: &Path) -> Result<Vec<PlantResult>> {
+    PLANTS.iter().map(|p| check_plant(root, p)).collect()
+}
+
+fn check_plant(root: &Path, plant: &Plant) -> Result<PlantResult> {
+    let path = root.join(plant.file);
+    let src = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+
+    let fail = |detail: String| PlantResult {
+        label: plant.label,
+        file: plant.file,
+        ok: false,
+        detail,
+    };
+
+    let lines: Vec<&str> = src.lines().collect();
+    let Some(anchor_idx) = lines.iter().position(|l| l.contains(plant.anchor)) else {
+        return Ok(fail(format!(
+            "plant rot: anchor `{}` no longer exists — re-point the plant",
+            plant.anchor
+        )));
+    };
+
+    // Splice the planted lines in after the anchor, matching its indent
+    // (one level deeper when the anchor opens a block).
+    let anchor_line = lines[anchor_idx];
+    let mut indent: String =
+        anchor_line.chars().take_while(|c| c.is_whitespace()).collect();
+    if anchor_line.trim_end().ends_with('{') {
+        indent.push_str("    ");
+    }
+    let mut patched: Vec<String> = lines.iter().map(|l| l.to_string()).collect();
+    for (k, planted) in plant.lines.iter().enumerate() {
+        patched.insert(anchor_idx + 1 + k, format!("{indent}{planted}"));
+    }
+    let patched_src = patched.join("\n");
+
+    // 1-based line range the planted lines occupy in the patched copy.
+    let lo = anchor_idx + 2;
+    let hi = anchor_idx + 1 + plant.lines.len();
+    let in_range = |n: usize| n >= lo && n <= hi;
+
+    let scan = rules::scan_source(plant.file, &patched_src);
+    let hit_findings: Vec<_> = scan.findings.iter().filter(|f| in_range(f.line)).collect();
+    let hit_allows: Vec<_> = scan.allows.iter().filter(|a| in_range(a.line)).collect();
+    let hit_problems: Vec<_> = scan.problems.iter().filter(|p| in_range(p.line)).collect();
+
+    let detail = match &plant.expect {
+        Expect::Violation(rule) => {
+            if hit_findings.iter().any(|f| f.rule == *rule) {
+                None
+            } else {
+                Some(format!(
+                    "expected a {} violation in lines {lo}..={hi}, scanner reported {:?}",
+                    rule.id(),
+                    hit_findings.iter().map(|f| (f.line, f.rule.id())).collect::<Vec<_>>(),
+                ))
+            }
+        }
+        Expect::Suppressed(rule) => {
+            if !hit_allows.iter().any(|a| a.rule == *rule) {
+                Some(format!("expected an allowed {} finding in lines {lo}..={hi}", rule.id()))
+            } else if !hit_findings.is_empty() {
+                Some("allow failed to suppress: finding still reported".to_string())
+            } else {
+                None
+            }
+        }
+        Expect::Problem => {
+            if hit_problems.is_empty() {
+                Some(format!("expected a malformed-annotation problem in lines {lo}..={hi}"))
+            } else {
+                None
+            }
+        }
+        Expect::Clean => {
+            if hit_findings.is_empty() && hit_problems.is_empty() {
+                None
+            } else {
+                Some(format!(
+                    "expected no report, got {:?}",
+                    hit_findings.iter().map(|f| (f.line, f.rule.id())).collect::<Vec<_>>(),
+                ))
+            }
+        }
+    };
+
+    Ok(match detail {
+        None => PlantResult { label: plant.label, file: plant.file, ok: true, detail: String::new() },
+        Some(d) => fail(d),
+    })
+}

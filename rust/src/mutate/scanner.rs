@@ -5,8 +5,10 @@
 //! lines is enough to find every operator site without false positives.
 //! The rules that keep it honest:
 //!
-//! * string literals and `//` comments are masked (replaced by spaces, so
-//!   byte offsets survive) before any pattern runs;
+//! * string literals (plain, raw, multi-line) and comments are masked
+//!   (replaced by spaces, so byte offsets survive) before any pattern
+//!   runs — the masking lives in [`crate::util::source`], shared with
+//!   the `detlint` determinism lint;
 //! * lines that are comments, attributes, or `use` items are skipped, as
 //!   is anything mentioning `assert`/`ensure!`/`panic!` (mutating an
 //!   assertion weakens the *oracle*, not the code under test);
@@ -17,6 +19,8 @@
 //!   excludes `+=`, `->`, `=>`, unary `-`, deref `*`, and generics.
 
 use std::fmt;
+
+use crate::util::source::{is_ident_byte, Masker};
 
 /// Mutation operator catalog.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -120,14 +124,15 @@ pub fn apply(src: &str, site: &Site) -> String {
 pub fn scan_source(file: &str, src: &str) -> Vec<Site> {
     let mut sites = Vec::new();
     let mut offset = 0usize;
+    let mut masker = Masker::new();
     for (idx, line) in src.split_inclusive('\n').enumerate() {
         let body = line.trim_end_matches(['\n', '\r']);
         let trimmed = body.trim_start();
         if trimmed.starts_with("#[cfg(test)]") {
             break; // everything below is test oracle, not code under test
         }
+        let masked = masker.mask_line(body);
         if !skip_line(trimmed) {
-            let masked = mask_line(body);
             let indent = body.len() - trimmed.len();
             let mut line_sites = Vec::new();
             arith_swap(&masked, &mut line_sites);
@@ -173,45 +178,6 @@ fn skip_line(trimmed: &str) -> bool {
         || trimmed.contains("panic!")
 }
 
-/// Replace string-literal contents and `//` comments with spaces,
-/// preserving byte positions (targets are ASCII-only rust source; any
-/// non-ASCII byte is masked too, so pattern positions stay byte-exact).
-fn mask_line(line: &str) -> String {
-    let bytes = line.as_bytes();
-    let mut out = vec![b' '; bytes.len()];
-    let mut i = 0;
-    let mut in_str = false;
-    while i < bytes.len() {
-        let b = bytes[i];
-        if in_str {
-            if b == b'\\' {
-                i += 2; // skip the escaped byte, keep both masked
-                continue;
-            }
-            if b == b'"' {
-                in_str = false;
-                out[i] = b'"';
-            }
-            i += 1;
-            continue;
-        }
-        if b == b'"' {
-            in_str = true;
-            out[i] = b'"';
-            i += 1;
-            continue;
-        }
-        if b == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
-            break; // rest of line is a comment, stays masked
-        }
-        if b.is_ascii() {
-            out[i] = b;
-        }
-        i += 1;
-    }
-    String::from_utf8(out).expect("mask output is pure ASCII")
-}
-
 type RawSite = (usize, usize, Op, String);
 
 fn find_all(masked: &str, pat: &str) -> Vec<usize> {
@@ -220,10 +186,6 @@ fn find_all(masked: &str, pat: &str) -> Vec<usize> {
 
 fn byte_at(masked: &str, i: usize) -> u8 {
     masked.as_bytes().get(i).copied().unwrap_or(b'\n')
-}
-
-fn is_ident_byte(b: u8) -> bool {
-    b.is_ascii_alphanumeric() || b == b'_'
 }
 
 /// ` + `↔` - `, ` * `↔` / `.  Spacing excludes `+=`, `-=`, `->`, unary
@@ -578,7 +540,7 @@ mod tests {
     #[test]
     fn mask_preserves_offsets() {
         let line = r#"    foo("a + b", x + y); // c + d"#;
-        let m = mask_line(line);
+        let m = Masker::new().mask_line(line);
         assert_eq!(m.len(), line.len());
         assert!(!m.contains("a + b"));
         assert!(!m.contains("c + d"));
@@ -586,5 +548,14 @@ mod tests {
         let i = m.find(" + ").unwrap();
         assert_eq!(&line[i..i + 3], " + ");
         assert_eq!(&line[i - 1..i + 5], "x + y)");
+    }
+
+    #[test]
+    fn scan_skips_sites_inside_multiline_raw_strings() {
+        let src = "fn f() {\n    let s = r#\"a + b\n c + d\"#;\n    let x = y + z;\n}\n";
+        let s = scan_source("f.rs", src);
+        let arith: Vec<_> = s.iter().filter(|x| x.op == Op::ArithSwap).collect();
+        assert_eq!(arith.len(), 1, "{s:?}");
+        assert_eq!(arith[0].line, 4);
     }
 }

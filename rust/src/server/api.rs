@@ -79,7 +79,7 @@
 //! persisted to a JSON state file on every completion and reloaded on
 //! restart.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
@@ -140,7 +140,10 @@ impl Default for ApiOptions {
 /// the async job queue.
 pub struct ApiState {
     pub backend: Arc<dyn MlBackend>,
-    pub datasets: Mutex<HashMap<u64, StoredDataset>>,
+    /// `BTreeMap`, not `HashMap`: `/api/datasets` and the persisted
+    /// snapshot iterate this map, and the ordered map makes both
+    /// ascending-by-id by construction (detlint rule `hash-iter`).
+    pub datasets: Mutex<BTreeMap<u64, StoredDataset>>,
     pub jobs: Arc<JobQueue>,
     next_id: Mutex<u64>,
     state_dir: Option<PathBuf>,
@@ -173,7 +176,7 @@ impl ApiState {
     /// persistence onto every subsequent completion.
     pub fn with_options(backend: Arc<dyn MlBackend>, opts: ApiOptions) -> Arc<ApiState> {
         let jobs = JobQueue::with_limits(opts.workers, opts.job_ttl, opts.queue_capacity);
-        let mut datasets = HashMap::new();
+        let mut datasets = BTreeMap::new();
         let mut next_id = 1u64;
         if let Some(dir) = &opts.state_dir {
             if let Some(saved) = persist::load(dir) {
@@ -231,6 +234,7 @@ impl ApiState {
         let datasets = persist::dataset_snapshot(&self.datasets.lock().unwrap());
         let jobs = self.jobs.terminal_snapshot();
         let state = persist::PersistedState { next_dataset_id, datasets, jobs };
+        // detlint: allow(lock-across-io) -- persist_lock exists to serialize exactly this snapshot + atomic write; data locks are already released
         if let Err(e) = persist::save(dir, &state) {
             eprintln!("warning: failed to persist server state to {}: {e}", dir.display());
         }

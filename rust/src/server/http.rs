@@ -92,6 +92,7 @@ pub fn serve(
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let handler = handler.clone();
+        // detlint: allow(thread-outside-exec) -- I/O-bound connection handling; numeric work still runs on exec::ExecPool
         let _ = std::thread::spawn(move || {
             let _ = handle_connection(stream, &handler);
         });
@@ -103,10 +104,12 @@ pub fn serve(
 pub fn spawn(addr: &str, handler: Arc<Handler>) -> std::io::Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let bound = listener.local_addr()?;
+    // detlint: allow(thread-outside-exec) -- accept loop must outlive the caller; pure I/O, no numeric work
     let _ = std::thread::spawn(move || {
         for stream in listener.incoming() {
             let Ok(stream) = stream else { continue };
             let handler = handler.clone();
+            // detlint: allow(thread-outside-exec) -- I/O-bound connection handling; numeric work still runs on exec::ExecPool
             let _ = std::thread::spawn(move || {
                 let _ = handle_connection(stream, &handler);
             });

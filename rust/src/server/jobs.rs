@@ -35,7 +35,7 @@
 //! Work closures are wrapped in `catch_unwind` so a panicking job marks
 //! itself `failed` instead of killing its worker thread.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -119,6 +119,7 @@ impl JobRecord {
         // only the final duration once it finishes.
         let elapsed = self.elapsed_restored.unwrap_or_else(|| {
             self.finished
+                // detlint: allow(wall-clock) -- elapsed_s reporting for a still-running job; never feeds a result value
                 .unwrap_or_else(Instant::now)
                 .duration_since(self.submitted)
                 .as_secs_f64()
@@ -225,7 +226,10 @@ type TerminalHook = Box<dyn Fn() + Send + Sync>;
 /// The queue: job records + the detached worker pool executing them.
 pub struct JobQueue {
     runner: JobRunner,
-    jobs: Mutex<HashMap<u64, JobRecord>>,
+    /// `BTreeMap`, not `HashMap`: `list`/`terminal_snapshot` iterate the
+    /// records, and the ordered map makes every traversal ascending by
+    /// job id by construction (detlint rule `hash-iter`).
+    jobs: Mutex<BTreeMap<u64, JobRecord>>,
     next_id: Mutex<u64>,
     /// Terminal records older than this are evicted on access (submit /
     /// get / list) — no background reaper thread needed to bound memory.
@@ -252,7 +256,7 @@ impl JobQueue {
     pub fn with_limits(workers: usize, ttl: Duration, capacity: Option<usize>) -> Arc<JobQueue> {
         Arc::new(JobQueue {
             runner: JobRunner::new(workers),
-            jobs: Mutex::new(HashMap::new()),
+            jobs: Mutex::new(BTreeMap::new()),
             next_id: Mutex::new(1),
             ttl,
             capacity,
@@ -275,7 +279,7 @@ impl JobQueue {
 
     /// Drop terminal records whose age (since finishing) exceeds the TTL.
     fn evict_expired(&self) {
-        let now = Instant::now();
+        let now = Instant::now(); // detlint: allow(wall-clock) -- TTL eviction of terminal records, not a result value
         self.jobs.lock().unwrap().retain(|_, rec| {
             let expired = rec.status.is_terminal()
                 && rec.finished.is_some_and(|f| now.duration_since(f) > self.ttl);
@@ -340,7 +344,7 @@ impl JobQueue {
                 status: JobStatus::Queued,
                 result: None,
                 error: None,
-                submitted: Instant::now(),
+                submitted: Instant::now(), // detlint: allow(wall-clock) -- elapsed_s bookkeeping only
                 finished: None,
                 elapsed_restored: None,
                 ctl: Arc::clone(&ctl),
@@ -388,7 +392,7 @@ impl JobQueue {
                 // Terminal records never change again, whatever a late
                 // worker tries to write.
                 Some(rec) if !rec.status.is_terminal() => {
-                    rec.finished = Some(Instant::now());
+                    rec.finished = Some(Instant::now()); // detlint: allow(wall-clock) -- elapsed_s/TTL bookkeeping only
                     match outcome {
                         Ok(json) => {
                             // Ok under a requested cancel is the cooperative
@@ -436,7 +440,7 @@ impl JobQueue {
                 Some(rec) if rec.status == JobStatus::Queued => {
                     rec.ctl.cancel();
                     rec.status = JobStatus::Cancelled;
-                    rec.finished = Some(Instant::now());
+                    rec.finished = Some(Instant::now()); // detlint: allow(wall-clock) -- elapsed_s/TTL bookkeeping only
                     (CancelOutcome::Cancelled, true)
                 }
                 Some(rec) => {
@@ -457,20 +461,18 @@ impl JobQueue {
         self.jobs.lock().unwrap().get(&id).map(JobRecord::to_json)
     }
 
-    /// Snapshot of every job, ascending by id.
+    /// Snapshot of every job, ascending by id (the map is ordered).
     pub fn list(&self) -> Json {
         self.evict_expired();
         let jobs = self.jobs.lock().unwrap();
-        let mut ids: Vec<u64> = jobs.keys().copied().collect();
-        ids.sort_unstable();
-        Json::Arr(ids.iter().map(|id| jobs[id].to_json()).collect())
+        Json::Arr(jobs.values().map(JobRecord::to_json).collect())
     }
 
-    /// Terminal records as restart-safe snapshots, ascending by id.
+    /// Terminal records as restart-safe snapshots, ascending by id (the
+    /// map is ordered).
     pub fn terminal_snapshot(&self) -> Vec<PersistedJob> {
         let jobs = self.jobs.lock().unwrap();
-        let mut out: Vec<PersistedJob> = jobs
-            .values()
+        jobs.values()
             .filter(|r| r.status.is_terminal())
             .map(|r| PersistedJob {
                 id: r.id,
@@ -483,16 +485,14 @@ impl JobQueue {
                         .map_or(0.0, |f| f.duration_since(r.submitted).as_secs_f64())
                 }),
             })
-            .collect();
-        out.sort_by_key(|j| j.id);
-        out
+            .collect()
     }
 
     /// Re-insert terminal records from a previous process and advance the
     /// id counter past them so new submissions never collide.  Their TTL
     /// clock restarts now (the original wall-clock is not preserved).
     pub fn restore(&self, records: Vec<PersistedJob>) {
-        let now = Instant::now();
+        let now = Instant::now(); // detlint: allow(wall-clock) -- restarts the TTL clock for restored records
         let mut jobs = self.jobs.lock().unwrap();
         let mut next = self.next_id.lock().unwrap();
         for pj in records {

@@ -12,7 +12,7 @@
 //! its scratch state was truncated mid-write (the write itself goes
 //! through a temp file + rename to make that window as small as possible).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::datagen::Dataset;
@@ -162,13 +162,13 @@ pub fn load(dir: &Path) -> Option<PersistedState> {
 }
 
 /// Snapshot helper for `ApiState::persist`: clone the dataset map into a
-/// stable, id-ordered vector.  `feat_rows` are left empty — [`save`]
-/// never serializes them (they are recomputed from the unit rows on
-/// load), and they are the bulk of a dataset, so skipping them keeps the
-/// time spent under the datasets lock small.
-pub fn dataset_snapshot(map: &HashMap<u64, StoredDataset>) -> Vec<(u64, StoredDataset)> {
-    let mut out: Vec<(u64, StoredDataset)> = map
-        .iter()
+/// stable, id-ordered vector (`BTreeMap` iteration is already ascending
+/// by id, so the output order is fixed by construction).  `feat_rows`
+/// are left empty — [`save`] never serializes them (they are recomputed
+/// from the unit rows on load), and they are the bulk of a dataset, so
+/// skipping them keeps the time spent under the datasets lock small.
+pub fn dataset_snapshot(map: &BTreeMap<u64, StoredDataset>) -> Vec<(u64, StoredDataset)> {
+    map.iter()
         .map(|(id, d)| {
             (
                 *id,
@@ -185,9 +185,7 @@ pub fn dataset_snapshot(map: &HashMap<u64, StoredDataset>) -> Vec<(u64, StoredDa
                 },
             )
         })
-        .collect();
-    out.sort_by_key(|(id, _)| *id);
-    out
+        .collect()
 }
 
 #[cfg(test)]

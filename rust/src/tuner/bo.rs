@@ -278,7 +278,7 @@ impl Tuner for BoTuner {
         iters: usize,
         ctl: &JobControl,
     ) -> Result<TuneResult> {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // detlint: allow(wall-clock) -- tuning_time_s telemetry; result values are seed-derived
         // Warm-started hypers (a previous job's adapted values) override
         // the default isotropic prior.  Validated *before* the initial
         // design: every init point is a full benchmark evaluation, and

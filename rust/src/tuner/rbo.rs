@@ -58,7 +58,7 @@ impl Tuner for RboTuner {
         iters: usize,
         ctl: &JobControl,
     ) -> Result<TuneResult> {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // detlint: allow(wall-clock) -- tuning_time_s telemetry; result values are seed-derived
         let mut predictor = PredictorObjective::fit(&self.dataset, self.ridge, &self.backend)?;
 
         // Trust region: the LR predictor is only valid near its training

@@ -63,7 +63,7 @@ impl Tuner for SaTuner {
         iters: usize,
         ctl: &JobControl,
     ) -> Result<TuneResult> {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // detlint: allow(wall-clock) -- tuning_time_s telemetry; result values are seed-derived
         let mut rng = Pcg::new(self.cfg.seed);
         let mut history = Vec::new();
         let mut best_history = Vec::new();

@@ -7,6 +7,7 @@ pub mod json;
 pub mod lhs;
 pub mod rng;
 pub mod sobol;
+pub mod source;
 pub mod stats;
 
 pub use json::Json;

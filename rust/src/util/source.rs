@@ -1,0 +1,276 @@
+//! Shared Rust-source masking for the line-based analysis tools
+//! (`mutate/scanner.rs` mutation-site discovery and `lint/` — the
+//! `detlint` determinism pass).
+//!
+//! Neither tool parses Rust.  Both scan rustfmt'd source line by line
+//! and pattern-match on *masked* text: string-literal contents, char
+//! literals, and comments are replaced by spaces so that no pattern can
+//! fire inside them, while every byte keeps its position — offsets into
+//! the masked line are offsets into the pristine line.
+//!
+//! [`Masker`] carries state *across* lines, so multi-line string
+//! literals, raw strings (`r"…"`, `r#"…"#`, any hash depth, `b`
+//! prefixes) and nested block comments (`/* … /* … */ … */`) stay
+//! masked from their opening line to their closing line.  Delimiters
+//! themselves (`"`, `r#"`, `/*`) stay visible; only their interior is
+//! blanked.  Non-ASCII bytes are masked too, so masked output is pure
+//! ASCII and byte positions equal char positions.
+
+/// Cross-line lexical state of [`Masker`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    Code,
+    /// Inside a normal `"…"` string (escapes active).
+    Str,
+    /// Inside a raw string closed by `"` + this many `#`s.
+    RawStr { hashes: usize },
+    /// Inside a block comment at this nesting depth (Rust nests them).
+    BlockComment { depth: usize },
+}
+
+/// Streaming source masker: feed lines top to bottom via
+/// [`Masker::mask_line`]; string/comment state carries across calls.
+pub struct Masker {
+    state: State,
+}
+
+impl Default for Masker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Masker {
+    pub fn new() -> Masker {
+        Masker { state: State::Code }
+    }
+
+    /// True while the masker is inside a multi-line string or comment —
+    /// i.e. the *next* line will not start in code state.
+    pub fn in_suspension(&self) -> bool {
+        self.state != State::Code
+    }
+
+    /// Mask one line (without its trailing newline).  The output has
+    /// exactly the input's byte length: code bytes are copied, string
+    /// contents / char-literal contents / comments / non-ASCII bytes
+    /// become spaces, and string delimiters stay visible.
+    pub fn mask_line(&mut self, line: &str) -> String {
+        let b = line.as_bytes();
+        let mut out = vec![b' '; b.len()];
+        let mut i = 0;
+        while i < b.len() {
+            match self.state {
+                State::Str => {
+                    if b[i] == b'\\' {
+                        i += 2; // escaped byte (or escape at EOL: string continues)
+                        continue;
+                    }
+                    if b[i] == b'"' {
+                        out[i] = b'"';
+                        self.state = State::Code;
+                    }
+                    i += 1;
+                }
+                State::RawStr { hashes } => {
+                    if b[i] == b'"' && b[i + 1..].len() >= hashes
+                        && b[i + 1..i + 1 + hashes].iter().all(|&c| c == b'#')
+                    {
+                        out[i] = b'"';
+                        for k in 0..hashes {
+                            out[i + 1 + k] = b'#';
+                        }
+                        i += 1 + hashes;
+                        self.state = State::Code;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::BlockComment { depth } => {
+                    if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        i += 2;
+                        if depth == 1 {
+                            self.state = State::Code;
+                        } else {
+                            self.state = State::BlockComment { depth: depth - 1 };
+                        }
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        i += 2;
+                        self.state = State::BlockComment { depth: depth + 1 };
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Code => {
+                    let c = b[i];
+                    if c == b'"' {
+                        out[i] = b'"';
+                        self.state = State::Str;
+                        i += 1;
+                    } else if let Some(hashes) = raw_string_start(b, i) {
+                        // keep `r##"` visible, mask the interior
+                        for (k, &rb) in b[i..=i + 1 + hashes].iter().enumerate() {
+                            out[i + k] = rb;
+                        }
+                        i += 2 + hashes;
+                        self.state = State::RawStr { hashes };
+                    } else if c == b'\'' {
+                        match char_literal_end(b, i) {
+                            Some(end) => {
+                                // mask the interior, keep both quotes
+                                out[i] = b'\'';
+                                out[end] = b'\'';
+                                i = end + 1;
+                            }
+                            None => {
+                                // a lifetime (`'a`) — plain code
+                                out[i] = b'\'';
+                                i += 1;
+                            }
+                        }
+                    } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                        break; // line comment: rest stays masked
+                    } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                        i += 2;
+                        self.state = State::BlockComment { depth: 1 };
+                    } else {
+                        if c.is_ascii() {
+                            out[i] = c;
+                        }
+                        i += 1;
+                    }
+                }
+            }
+        }
+        String::from_utf8(out).expect("mask output is pure ASCII")
+    }
+}
+
+/// If `b[i]` opens a raw string (`r"`, `r#"`, `br"`, …), the hash count.
+fn raw_string_start(b: &[u8], i: usize) -> Option<usize> {
+    if b[i] != b'r' {
+        return None;
+    }
+    // `r` must not be the tail of an identifier (`var"` is not raw);
+    // a single preceding `b` (byte raw string) is allowed.
+    if i > 0 && is_ident_byte(b[i - 1]) && !(b[i - 1] == b'b' && (i < 2 || !is_ident_byte(b[i - 2])))
+    {
+        return None;
+    }
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    (j < b.len() && b[j] == b'"').then_some(j - i - 1)
+}
+
+/// If `b[i]` (a `'`) opens a char literal, the index of its closing
+/// quote; `None` means it is a lifetime.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    match b.get(i + 1) {
+        // escaped char: `'\n'`, `'\u{…}'` — closing quote is the next `'`
+        Some(b'\\') => b[i + 2..].iter().position(|&c| c == b'\'').map(|p| i + 2 + p),
+        // plain one-byte char `'x'` needs the very next byte to close it —
+        // anything longer (`'static`) is a lifetime
+        Some(_) if b.get(i + 2) == Some(&b'\'') => Some(i + 2),
+        _ => None,
+    }
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Mask a whole source: one masked line per input line (newlines
+/// stripped), with string/comment state carried across lines.
+pub fn mask_source(src: &str) -> Vec<String> {
+    let mut m = Masker::new();
+    src.lines().map(|l| m.mask_line(l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_line_comments_preserving_offsets() {
+        let line = r#"    foo("a + b", x + y); // c + d"#;
+        let m = Masker::new().mask_line(line);
+        assert_eq!(m.len(), line.len());
+        assert!(!m.contains("a + b"));
+        assert!(!m.contains("c + d"));
+        let i = m.find(" + ").unwrap();
+        assert_eq!(&line[i - 1..i + 5], "x + y)");
+    }
+
+    #[test]
+    fn raw_strings_masked_with_exact_offsets() {
+        let line = r##"    let p = r#"a + "quoted" + b"#; let q = y + z;"##;
+        let m = Masker::new().mask_line(line);
+        assert_eq!(m.len(), line.len());
+        assert!(!m.contains("a + "), "raw interior leaked: {m}");
+        assert!(!m.contains("quoted"));
+        let i = m.find(" + ").unwrap();
+        assert_eq!(&line[i - 1..i + 5], "y + z;");
+    }
+
+    #[test]
+    fn multiline_raw_string_state_carries() {
+        let mut mk = Masker::new();
+        let l1 = mk.mask_line(r##"let s = r#"first + line"##);
+        assert!(mk.in_suspension());
+        let l2 = mk.mask_line(r##"still + masked"#; let t = a + b;"##);
+        assert!(!mk.in_suspension());
+        assert!(!l1.contains("first"));
+        assert!(!l2.contains("still"));
+        let i = l2.find(" + ").unwrap();
+        assert_eq!(&r##"still + masked"#; let t = a + b;"##[i..i + 3], " + ");
+    }
+
+    #[test]
+    fn char_literals_do_not_toggle_string_state() {
+        // the `'"'` char literal must not open a string
+        let line = r#"    if c == '"' { x + y } else { s.push('\n') }"#;
+        let m = Masker::new().mask_line(line);
+        assert_eq!(m.len(), line.len());
+        assert!(m.contains(" + "), "code after char literal stayed visible: {m}");
+        assert!(!m.contains("\\n"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let line = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let m = Masker::new().mask_line(line);
+        assert_eq!(m, line); // pure code, nothing masked
+    }
+
+    #[test]
+    fn nested_block_comments_masked_across_lines() {
+        let mut mk = Masker::new();
+        let l1 = mk.mask_line("let a = 1; /* outer /* inner + */ still");
+        assert!(mk.in_suspension());
+        let l2 = mk.mask_line("masked */ let b = a + 2;");
+        assert!(!mk.in_suspension());
+        assert!(l1.contains("let a = 1;"));
+        assert!(!l1.contains("inner"));
+        assert!(!l2.contains("masked"));
+        assert!(l2.contains("let b = a + 2;"));
+    }
+
+    #[test]
+    fn non_ascii_masked_to_keep_byte_positions() {
+        let line = "let π = 3.0; let x = a + b;";
+        let m = Masker::new().mask_line(line);
+        assert_eq!(m.len(), line.len()); // byte length, π is 2 bytes
+        let i = m.find(" + ").unwrap();
+        assert_eq!(&line.as_bytes()[i..i + 3], b" + ");
+    }
+
+    #[test]
+    fn mask_source_counts_lines() {
+        let src = "fn f() {\n    let s = \"a\n b\";\n}\n";
+        let lines = mask_source(src);
+        assert_eq!(lines.len(), 4);
+        assert!(!lines[2].contains('b'), "second string line masked: {:?}", lines[2]);
+    }
+}

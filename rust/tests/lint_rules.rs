@@ -1,0 +1,271 @@
+//! Unit tier for the detlint determinism lint: the shared masking
+//! module (byte-offset preservation across strings, raw strings and
+//! comments) and one positive + one negative snippet per rule, plus the
+//! allow-annotation workflow (suppression, mandatory reason, unknown
+//! rule, staleness).  Everything runs in-memory through
+//! `lint::rules::scan_source` — no scratch workspace, plain `cargo test`.
+
+use onestoptuner::lint::rules::scan_source;
+use onestoptuner::lint::{FileScan, Rule};
+use onestoptuner::util::source::{mask_source, Masker};
+
+/// Fake repo-relative path in ordinary (unexempt) territory.
+const PLAIN: &str = "rust/src/tuner/fake.rs";
+
+fn findings_of(scan: &FileScan, rule: Rule) -> Vec<usize> {
+    scan.findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+// ---- masking ----------------------------------------------------------
+
+#[test]
+fn masking_blanks_string_contents_at_exact_offsets() {
+    let line = r#"    call("HashMap iter inside string", x); // HashMap comment"#;
+    let masked = Masker::new().mask_line(line);
+    assert_eq!(masked.len(), line.len(), "masking must preserve byte length");
+    assert!(!masked.contains("HashMap"), "string/comment text leaked: {masked}");
+    // the code part survives at identical offsets
+    let i = masked.find("call(").unwrap();
+    assert_eq!(&line[i..i + 5], "call(");
+    let j = masked.find(", x)").unwrap();
+    assert_eq!(&line[j..j + 4], ", x)");
+}
+
+#[test]
+fn masking_handles_raw_strings_with_hashes() {
+    let line = r###"    let p = r##"Instant::now() "quoted" here"##; let q = 1;"###;
+    let masked = Masker::new().mask_line(line);
+    assert_eq!(masked.len(), line.len());
+    assert!(!masked.contains("Instant::now"));
+    assert!(masked.contains("let q = 1;"), "code after raw string lost: {masked}");
+}
+
+#[test]
+fn masking_carries_state_across_multiline_strings() {
+    let src = "let s = \"first\nInstant::now() still in string\n\"; let t = 2;\n";
+    let lines = mask_source(src);
+    assert_eq!(lines.len(), 3);
+    assert!(!lines[1].contains("Instant::now"), "multi-line string leaked: {}", lines[1]);
+    assert!(lines[2].contains("let t = 2;"));
+}
+
+#[test]
+fn banned_tokens_inside_strings_and_comments_do_not_fire() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let a = \"Instant::now() thread_rng SystemTime\";\n",
+        "    // Instant::now() in a comment\n",
+        "    let b = r#\"thread::spawn in a raw string\"#;\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert!(scan.findings.is_empty(), "masked text fired: {:?}", scan.findings);
+}
+
+// ---- hash-iter --------------------------------------------------------
+
+#[test]
+fn hash_iter_flags_iteration_not_declaration_or_lookup() {
+    let src = concat!(
+        "use std::collections::HashMap;\n",
+        "fn f() {\n",
+        "    let mut m: HashMap<u64, f64> = HashMap::new();\n",
+        "    m.insert(1, 2.0);\n",
+        "    let v = m.get(&1).copied();\n",
+        "    for (k, x) in m.iter() {\n",
+        "        let _ = (k, x, v);\n",
+        "    }\n",
+        "    let ks: Vec<u64> = m.keys().copied().collect();\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert_eq!(findings_of(&scan, Rule::HashIter), vec![6, 9]);
+}
+
+#[test]
+fn hash_iter_does_not_blame_the_map_for_a_vec_values_iteration() {
+    // `m.get(k)` yields a Vec; iterating *that* is deterministic.
+    let src = concat!(
+        "fn f(m: &std::collections::HashMap<String, Vec<u64>>) -> usize {\n",
+        "    m.get(\"k\").map(|v| v.iter().count()).unwrap_or(0)\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+}
+
+// ---- wall-clock -------------------------------------------------------
+
+#[test]
+fn wall_clock_flags_instant_and_systemtime_but_not_mutate() {
+    let src = concat!(
+        "use std::time::Instant;\n", // use line: declaration, not a read
+        "fn f() -> f64 {\n",
+        "    let t0 = Instant::now();\n",
+        "    let wall = std::time::SystemTime::now();\n",
+        "    let _ = wall;\n",
+        "    t0.elapsed().as_secs_f64()\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert_eq!(findings_of(&scan, Rule::WallClock), vec![3, 4]);
+    // mutate/ measures real build/test timeouts: exempt by path scope
+    let scan = scan_source("rust/src/mutate/runner.rs", src);
+    assert!(findings_of(&scan, Rule::WallClock).is_empty());
+}
+
+// ---- ambient-rng ------------------------------------------------------
+
+#[test]
+fn ambient_rng_flags_entropy_constructors() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let s = std::collections::hash_map::RandomState::new();\n",
+        "    let _ = s;\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert_eq!(findings_of(&scan, Rule::AmbientRng), vec![2]);
+    // the seeded discipline itself is fine
+    let ok = "fn g() { let r = crate::util::rng::Pcg::seeded(7, 0); let _ = r; }\n";
+    assert!(scan_source(PLAIN, ok).findings.is_empty());
+}
+
+// ---- thread-outside-exec ----------------------------------------------
+
+#[test]
+fn threads_flagged_outside_exec_and_mutate_only() {
+    let src = "fn f() { std::thread::spawn(|| {}); }\n";
+    assert_eq!(
+        findings_of(&scan_source("rust/src/pipeline/mod.rs", src), Rule::ThreadOutsideExec),
+        vec![1]
+    );
+    assert!(scan_source("rust/src/exec/mod.rs", src).findings.is_empty());
+    assert!(scan_source("rust/src/mutate/runner.rs", src).findings.is_empty());
+}
+
+// ---- unordered-float-reduce -------------------------------------------
+
+#[test]
+fn float_reduce_flags_fanout_chains_and_shared_accumulators() {
+    let src = concat!(
+        "fn f(pool: &Pool) -> f64 {\n",
+        "    let acc: std::sync::Mutex<f64> = std::sync::Mutex::new(0.0);\n",
+        "    let s: f64 = pool.par_run(8, |i| i as f64).iter().sum();\n",
+        "    let plain: f64 = vec![1.0, 2.0].iter().sum();\n", // ordered Vec: legal
+        "    s + plain + *acc.lock().unwrap()\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert_eq!(findings_of(&scan, Rule::UnorderedFloatReduce), vec![2, 3]);
+    // the approved fixed-order reducers live in exec/ and util/stats.rs
+    assert!(scan_source("rust/src/util/stats.rs", src)
+        .findings
+        .iter()
+        .all(|f| f.rule != Rule::UnorderedFloatReduce));
+}
+
+// ---- lock-across-io ---------------------------------------------------
+
+#[test]
+fn lock_across_io_tracks_guard_lifetimes() {
+    let src = concat!(
+        "fn f(&self) {\n",
+        "    let guard = self.state.lock().unwrap();\n",
+        "    std::fs::write(\"/tmp/x\", \"y\").unwrap();\n", // under the guard
+        "}\n",
+        "fn g(&self) {\n",
+        "    self.state.lock().unwrap().insert(1);\n", // temp guard dies at `;`
+        "    std::fs::write(\"/tmp/x\", \"y\").unwrap();\n", // lock-free
+        "}\n",
+    );
+    let scan = scan_source("rust/src/server/api.rs", src);
+    assert_eq!(findings_of(&scan, Rule::LockAcrossIo), vec![3]);
+    // outside server/ the rule does not apply at all
+    assert!(scan_source(PLAIN, src).findings.is_empty());
+}
+
+#[test]
+fn lock_across_io_guard_released_by_block_end() {
+    let src = concat!(
+        "fn f(&self) {\n",
+        "    {\n",
+        "        let guard = self.state.lock().unwrap();\n",
+        "        let _ = &*guard;\n",
+        "    }\n",
+        "    std::fs::write(\"/tmp/x\", \"y\").unwrap();\n", // after the block
+        "}\n",
+    );
+    let scan = scan_source("rust/src/server/api.rs", src);
+    assert!(scan.findings.is_empty(), "{:?}", scan.findings);
+}
+
+// ---- allow workflow ---------------------------------------------------
+
+#[test]
+fn allow_with_reason_suppresses_trailing_and_standalone() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let t = std::time::Instant::now(); // detlint: allow(wall-clock) -- timing telemetry only\n",
+        "    // detlint: allow(wall-clock) -- second site, standalone form\n",
+        "    let u = std::time::Instant::now();\n",
+        "    let _ = (t, u);\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert!(scan.findings.is_empty(), "allows failed to suppress: {:?}", scan.findings);
+    assert_eq!(scan.allows.len(), 2);
+    assert!(scan.allows.iter().all(|a| a.rule == Rule::WallClock && !a.reason.is_empty()));
+    assert!(scan.problems.is_empty() && scan.stale_allows.is_empty());
+}
+
+#[test]
+fn allow_without_reason_or_with_unknown_rule_is_fatal() {
+    let no_reason = "fn f() { let t = std::time::Instant::now(); } // detlint: allow(wall-clock)\n";
+    let scan = scan_source(PLAIN, no_reason);
+    assert_eq!(scan.problems.len(), 1, "{:?}", scan.problems);
+    assert!(scan.problems[0].message.contains("reason"));
+
+    let unknown = "// detlint: allow(no-such-rule) -- whatever\nfn f() {}\n";
+    let scan = scan_source(PLAIN, unknown);
+    assert_eq!(scan.problems.len(), 1);
+    assert!(scan.problems[0].message.contains("unknown detlint rule"));
+}
+
+#[test]
+fn stale_allow_is_reported_but_not_fatal() {
+    let src = concat!(
+        "// detlint: allow(wall-clock) -- nothing here reads a clock anymore\n",
+        "fn f() -> u64 { 7 }\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert!(scan.findings.is_empty() && scan.problems.is_empty());
+    assert_eq!(scan.stale_allows.len(), 1);
+    assert_eq!(scan.stale_allows[0].rule, Rule::WallClock);
+}
+
+#[test]
+fn detlint_marker_inside_a_string_is_not_an_annotation() {
+    let src = concat!(
+        "fn f() -> &'static str {\n",
+        "    \"// detlint: allow(wall-clock)\"\n", // string literal, not a comment
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert!(scan.problems.is_empty(), "string content parsed as annotation: {:?}", scan.problems);
+}
+
+// ---- test exemption ---------------------------------------------------
+
+#[test]
+fn scanning_stops_at_cfg_test() {
+    let src = concat!(
+        "fn f() {}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    fn t() { let t0 = std::time::Instant::now(); let _ = t0; }\n",
+        "}\n",
+    );
+    let scan = scan_source(PLAIN, src);
+    assert!(scan.findings.is_empty(), "tests are exempt: {:?}", scan.findings);
+}

@@ -40,6 +40,13 @@ if [[ "$MODE" == "fresh" ]]; then
     echo "== repro $a (--fast) =="
     (cd "$ROOT/rust" && cargo run --release --quiet -- repro "$a" --fast --out "$OUT")
   done
+  # Determinism lint: the sweep's markdown summary (rule table + allow
+  # ledger) goes into the report so a reader sees the reproducibility
+  # contract is actually enforced, not just claimed.  detlint exits
+  # non-zero when dirty, which fails this script via set -e.
+  echo "== detlint sweep =="
+  (cd "$ROOT/rust" && cargo run --release --quiet --bin detlint -- \
+    --out "$OUT/detlint.json") | tee "$OUT/detlint.md"
 else
   for a in "${ARTIFACTS[@]}"; do
     for ext in csv txt; do
@@ -74,6 +81,16 @@ REPORT="$OUT/KICK_TIRES.md"
     echo '```'
     echo
   done
+  if [[ -s "$OUT/detlint.md" ]]; then
+    cat "$OUT/detlint.md"
+    echo
+  else
+    echo "## detlint — determinism & concurrency lint"
+    echo
+    echo '_Skipped (precomputed mode needs no toolchain) — run with `--fresh`,'
+    echo 'or `cargo run --release --bin detlint` directly.  See LINTS.md._'
+    echo
+  fi
 } > "$REPORT"
 
 echo "kick_tires: OK ($MODE) — report at ${REPORT#"$ROOT"/}"
