@@ -181,6 +181,29 @@ fn main() -> anyhow::Result<()> {
     );
     println!("  warm-started job {job} done\n");
 
+    // ---- batched proposal: q-EI with two concurrent runs per round ----
+    println!("POST /api/tune (BO, batch_q 2 — two evaluations per iteration, async)");
+    let (code, body) = post(
+        "/api/tune",
+        r#"{"bench":"lda","gc":"g1","algo":"bo","iters":4,"batch_q":2}"#,
+    );
+    println!("  {code} {body}");
+    anyhow::ensure!(code == 202, "batched tune must be accepted: {body}");
+    let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    let rec = watch(job)?;
+    anyhow::ensure!(
+        rec.get("status").and_then(Json::as_str) == Some("done"),
+        "batched tune failed: {rec}"
+    );
+    println!("  batched job {job} done\n");
+    // A zero batch width is rejected synchronously, never as a failed job.
+    let (code, body) = post(
+        "/api/tune",
+        r#"{"bench":"lda","gc":"g1","algo":"bo","iters":4,"batch_q":0}"#,
+    );
+    anyhow::ensure!(code == 400, "batch_q 0 must be a synchronous 400: {code} {body}");
+    println!("POST /api/tune with batch_q 0 -> {code} (synchronous validation)\n");
+
     // ---- cancellation: abort a long tune mid-flight -------------------
     println!("POST /api/tune (BO, 500 iterations — then DELETE it mid-run)");
     let (code, body) = post(

@@ -1,4 +1,4 @@
-//! Surrogate benchmark, three scenarios behind one JSON writer:
+//! Surrogate benchmark, five scenarios behind one JSON writer:
 //!
 //! * `acquisition` — one-shot serial `gp_ei` (kernel rebuilt + O(n³)
 //!   Cholesky + serial candidate scoring every iteration) vs the
@@ -17,6 +17,11 @@
 //!   d ∈ {8, 16}: the cost of freeing the per-dimension length-scales
 //!   (d+1-parameter gradient + per-dimension distance cache) over the
 //!   tied 2-parameter ascent, reporting the adapted length-scale spread.
+//! * `batch` — whole-tuner constant-liar q-EI at q ∈ {1, 2, 4} over a
+//!   bowl objective with a fixed slab of numeric work per evaluation:
+//!   per-evaluation wall cost as the batch fan-out reclaims concurrency,
+//!   with both the single-point and the batched path asserted
+//!   bit-identical across pool widths before timing.
 //!
 //! Emits `BENCH_surrogate.json` at the repo root; `--smoke` runs reduced
 //! sizes for CI and writes `BENCH_surrogate_smoke.json`.  Both files come
@@ -31,12 +36,17 @@
 #[path = "harness/mod.rs"]
 mod harness;
 
+use std::sync::Arc;
+
 use harness::{section, Bench};
 use onestoptuner::exec::{self, ExecPool};
+use onestoptuner::flags::{FlagConfig, GcMode};
 use onestoptuner::native::gp::GpSurrogate;
 use onestoptuner::runtime::{
     one_shot_gp, GpConfig, GpSession, HyperMode, MlBackend, NativeBackend, N_TRAIN,
 };
+use onestoptuner::tuner::bo::BoConfig;
+use onestoptuner::tuner::{BoTuner, EvalOutcome, Objective, TuneSpace, Tuner};
 use onestoptuner::util::json::Json;
 use onestoptuner::util::rng::Pcg;
 use onestoptuner::util::stats::argmax;
@@ -46,7 +56,7 @@ const D: usize = 16;
 
 /// Scenario keys the output document must always carry — shared between
 /// the builder and the post-write assertion so they cannot drift.
-const SCENARIO_KEYS: [&str; 4] = ["acquisition", "eviction", "adaptation", "ard"];
+const SCENARIO_KEYS: [&str; 5] = ["acquisition", "eviction", "adaptation", "ard", "batch"];
 
 fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
     (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
@@ -130,6 +140,52 @@ fn replay_evict(gp: &mut dyn GpSession, epool: &ExecPool, sc: &Scenario) -> Vec<
 fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Bowl-shaped tuning objective with a fixed slab of numeric work per
+/// evaluation, so the q-EI batch fan-out has real wall-clock to reclaim.
+/// Each evaluation is a pure function of the configuration (no seed
+/// stream), so the batch override is bit-identical at any pool width.
+struct BusyBowl {
+    space: TuneSpace,
+    pool: ExecPool,
+    count: usize,
+    work: usize,
+}
+
+impl BusyBowl {
+    fn eval_one(space: &TuneSpace, work: usize, cfg: &FlagConfig) -> EvalOutcome {
+        let u = space.project(cfg);
+        let mut acc = 0.0f64;
+        for i in 0..work {
+            acc = (acc + u[i % u.len()] + 1.0).sqrt();
+        }
+        let acc = std::hint::black_box(acc);
+        let y = u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum::<f64>() + acc * 0.0;
+        EvalOutcome { y, failure: None, attempts: 1 }
+    }
+}
+
+impl Objective for BusyBowl {
+    fn eval_outcome(&mut self, cfg: &FlagConfig) -> EvalOutcome {
+        self.count += 1;
+        Self::eval_one(&self.space, self.work, cfg)
+    }
+
+    fn eval_outcomes_batch(&mut self, cfgs: &[FlagConfig]) -> Vec<EvalOutcome> {
+        let (space, work) = (&self.space, self.work);
+        let outs = self.pool.par_map(cfgs, |_, cfg| Self::eval_one(space, work, cfg));
+        self.count += outs.len();
+        outs
+    }
+
+    fn evals(&self) -> usize {
+        self.count
+    }
+
+    fn sim_time_s(&self) -> f64 {
+        0.0
+    }
 }
 
 fn main() {
@@ -309,7 +365,79 @@ fn main() {
         ]));
     }
 
-    let path = write_doc(smoke, epool.threads(), [acq_rows, ev_rows, ad_rows, ard_rows]);
+    // ---- batch: whole-tuner constant-liar q-EI at q ∈ {1, 2, 4} -------
+    // Same iteration count per q, so q > 1 buys extra evaluations whose
+    // wall cost the concurrent measurement round amortizes; reported as
+    // per-evaluation milliseconds against the single-point baseline.
+    let (bq_init, bq_cands, bq_iters, bq_work): (usize, usize, usize, usize) =
+        if smoke { (4, 32, 4, 100_000) } else { (6, 64, 10, 1_000_000) };
+    let mut batch_rows = Vec::new();
+    {
+        let mut space = TuneSpace::full(GcMode::G1GC);
+        space.selected.truncate(8);
+        let run = |q: usize, pool: ExecPool| {
+            let mut obj = BusyBowl { space: space.clone(), pool, count: 0, work: bq_work };
+            let mut bo = BoTuner::new(
+                Arc::new(NativeBackend),
+                BoConfig {
+                    n_init: bq_init,
+                    n_candidates: bq_cands,
+                    batch_q: q,
+                    epool: pool,
+                    ..Default::default()
+                },
+            );
+            bo.tune(&space, &mut obj, bq_iters).unwrap()
+        };
+
+        // Cross-check: the single-point path and the batched path must
+        // both be bit-identical across pool widths before we time them.
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for q in [1usize, 4] {
+            let a = run(q, serial);
+            let b = run(q, epool);
+            assert_eq!(
+                bits(&a.best_history),
+                bits(&b.best_history),
+                "q={q} tune diverged across pool widths"
+            );
+        }
+
+        section(&format!(
+            "q-EI batch tuning: q ∈ {{1, 2, 4}}, {bq_iters} iters after {bq_init} init points"
+        ));
+        let mut q1_per_eval_ms = f64::NAN;
+        for q in [1usize, 2, 4] {
+            let evals = bq_init + q * bq_iters;
+            let mut best_y = f64::NAN;
+            let b = Bench::new(format!("batch_q{q}/{bq_init}init_{bq_iters}it/pool{}", epool.threads()))
+                .iters(reps.0, reps.1)
+                .run(|| {
+                    let r = run(q, epool);
+                    best_y = r.best_y;
+                    r.best_history
+                });
+            let per_eval_ms = b.mean_ns / 1e6 / evals as f64;
+            if q == 1 {
+                q1_per_eval_ms = per_eval_ms;
+            }
+            let speedup = q1_per_eval_ms / per_eval_ms;
+            println!("  q={q}: best_y={best_y:.4}, {per_eval_ms:.2} ms/eval ({speedup:.2}x vs q=1)");
+
+            batch_rows.push(Json::obj(vec![
+                ("q", Json::num(q as f64)),
+                ("iters", Json::num(bq_iters as f64)),
+                ("evals", Json::num(evals as f64)),
+                ("eval_rounds", Json::num((bq_init + bq_iters) as f64)),
+                ("best_y", Json::num(best_y)),
+                ("wall_ms", Json::num(b.mean_ns / 1e6)),
+                ("per_eval_ms", Json::num(per_eval_ms)),
+                ("per_eval_speedup_vs_q1", Json::num(speedup)),
+            ]));
+        }
+    }
+
+    let path = write_doc(smoke, epool.threads(), [acq_rows, ev_rows, ad_rows, ard_rows, batch_rows]);
     println!("\nwrote {path}");
 }
 
@@ -317,7 +445,7 @@ fn main() {
 /// from [`SCENARIO_KEYS`], and the written file is parsed back and
 /// re-checked against the same constant, so the full-size and smoke
 /// documents cannot diverge in shape.
-fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 4]) -> &'static str {
+fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 5]) -> &'static str {
     let scenarios: Vec<(&str, Json)> =
         SCENARIO_KEYS.iter().zip(rows).map(|(&k, r)| (k, Json::Arr(r))).collect();
     let doc = Json::obj(vec![

@@ -188,6 +188,10 @@ pub struct Progress {
     pub iters: Option<usize>,
     /// Benchmark runs executed so far.
     pub runs_executed: Option<usize>,
+    /// Runs currently being measured concurrently (the q-EI batch tuner
+    /// sets this to its batch width for the measurement phase and back to
+    /// 0 at the iteration boundary; single-point loops never set it).
+    pub runs_in_flight: Option<usize>,
     /// Validation RMSE after the most recent fit.
     pub last_rmse: Option<f64>,
     /// Best objective value seen so far (minimization).

@@ -12,6 +12,7 @@
 //!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
 //!                   [--gp-hypers fixed|adapt] [--gp-adapt-every K]
 //!                   [--gp-ard] [--gp-init-hypers "l1,..,ld[:noise]"]
+//!                   [--batch-q Q]
 //!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
 //!   serve           [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]
 //!
@@ -147,6 +148,7 @@ fn print_usage() {
          \x20               [--gp-hypers fixed|adapt] [--gp-adapt-every K]   GP surrogate hyper-parameter policy\n\
          \x20               [--gp-ard]                 per-dimension (ARD) length-scales; implies --gp-hypers adapt\n\
          \x20               [--gp-init-hypers \"l1,..,ld[:noise]\"]           warm-start hypers from a previous run\n\
+         \x20               [--batch-q Q]              q-EI: propose and evaluate Q configs per iteration (default 1)\n\
          \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
          \x20 serve         [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]\n\n\
          global options:\n\
@@ -359,6 +361,14 @@ fn cmd_tune(opts: &Opts) -> Result<()> {
     if let Some(spec) = opts.get("gp-init-hypers") {
         let (ls, noise) = parse_init_hypers(spec)?;
         cfg.bo.hypers.init = Some((ls, noise.unwrap_or(cfg.bo.hypers.sigma_n2)));
+    }
+    // Batched q-EI proposal width.  The default of 1 is the bitwise
+    // single-point path; the tuner validates the upper bounds (candidate
+    // pool, GP training budget) before any evaluation runs.
+    if let Some(v) = opts.get("batch-q") {
+        let q: usize = v.parse().context("--batch-q must be a positive integer")?;
+        anyhow::ensure!(q >= 1, "--batch-q must be >= 1");
+        cfg.bo.batch_q = q;
     }
 
     let out = pipeline::run_pipeline(bench, gc, metric, &algos, &cfg, &backend)?;

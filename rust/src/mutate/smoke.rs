@@ -139,6 +139,30 @@ pub fn pinned() -> Vec<Pin> {
                             predictions to 1e-8 across eviction churn",
         },
         Pin {
+            id: "gp-fantasize-counter-del",
+            file: "rust/src/native/gp.rs",
+            op: Op::StmtDelete,
+            original: "self.fantasies += 1;",
+            contains: "self.fantasies += 1;",
+            occurrence: 0,
+            kill_argument: "fantasize no longer opens a fantasy scope, so the paired \
+                            pop_fantasy trips its no-open-fantasy ensure; \
+                            gp_incremental's fantasize/pop round-trip property and \
+                            every batched (q>1) tuner test unwrap that error",
+        },
+        Pin {
+            id: "gp-pop-fantasy-downdate-del",
+            file: "rust/src/native/gp.rs",
+            op: Op::StmtDelete,
+            original: "cholesky_downdate(&mut self.l, last);",
+            contains: "cholesky_downdate(&mut self.l, last);",
+            occurrence: 0,
+            kill_argument: "pop_fantasy shrinks the kernel cache and data rows but \
+                            leaves the Cholesky factor one row too long; the next \
+                            acquire after retraction diverges (or panics on shape), \
+                            killed by gp_incremental's round-trip bitwise pin",
+        },
+        Pin {
             id: "stats-var-divisor-mul",
             file: "rust/src/util/stats.rs",
             op: Op::ArithSwap,

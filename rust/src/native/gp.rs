@@ -50,6 +50,17 @@
 //!   (ei, mu, sigma) is bit-identical to the one-shot path at any pool
 //!   width — the same guarantee the exec subsystem gives the evaluation
 //!   paths (guarded by `tests/gp_incremental.rs`).
+//! * **Fantasy scope** (constant-liar q-EI): `fantasize(x, y_liar)`
+//!   extends the cached factor with `cholesky_push` exactly like
+//!   `observe`, but records the row as *transient* — no adaptation
+//!   cadence, no append bookkeeping.  `pop_fantasy` retracts the most
+//!   recent fantasy with `cholesky_downdate(last)`, which on the last
+//!   row is a pure truncation and therefore the **bitwise inverse** of
+//!   the push (pinned by `tests/property_invariants.rs`), in Fixed and
+//!   Adapt mode alike.  Any fantasize*q → pop_fantasy*q sequence leaves
+//!   the session bit-for-bit where it started, so q-EI selects q points
+//!   against fantasized models in O(qn²) without cloning the GP
+//!   (round-trip pinned by `tests/gp_incremental.rs`).
 //!
 //! **Equality contract** (the lines the tests pin):
 //! `HyperMode::Fixed` is bitwise-equal to the one-shot `gp_ei` reference
@@ -74,10 +85,11 @@
 //! pipeline reports next to the lasso selection, closing the loop back to
 //! the paper's feature-selection stage.
 //!
-//! `cargo bench --bench surrogate` times four scenarios — one-shot vs
+//! `cargo bench --bench surrogate` times five scenarios — one-shot vs
 //! incremental acquisition, eviction-heavy downdate vs rebuild, adaptation
-//! on/off overhead, and isotropic-adapt vs ARD-adapt at d∈{8,16} — and
-//! writes them to `BENCH_surrogate.json` at the repo root.
+//! on/off overhead, isotropic-adapt vs ARD-adapt at d∈{8,16}, and batched
+//! q-EI tuning at q∈{1,2,4} — and writes them to `BENCH_surrogate.json`
+//! at the repo root.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -210,6 +222,11 @@ pub struct GpSurrogate {
     /// with no acquire in between are a *bulk feed*, whose intermediate
     /// hyper-parameters nothing ever reads.
     acquires_at_adapt: usize,
+    /// Open fantasy depth (constant-liar rows appended and not yet
+    /// retracted).  `pop_fantasy` refuses to truncate a real
+    /// observation, and `observe`/`forget` refuse to run inside an open
+    /// fantasy scope — the transient rows must be popped first.
+    fantasies: usize,
 }
 
 impl GpSurrogate {
@@ -236,6 +253,7 @@ impl GpSurrogate {
             appends: 0,
             acquires: AtomicUsize::new(0),
             acquires_at_adapt: 0,
+            fantasies: 0,
         };
         gp.set_lengthscales(cfg.lengthscales.clone());
         gp
@@ -541,6 +559,53 @@ impl GpSurrogate {
         AdaptOutcome { ml: trace, steps, moved }
     }
 
+    /// Append one row to every cache: the shared body of `observe` and
+    /// `fantasize` — kernel row, factor push, input/target rows — with
+    /// *no* adaptation bookkeeping, so a fantasy append is exactly the
+    /// real append minus side effects (and therefore bitwise retractable
+    /// by a last-row truncation).
+    fn push_point(&mut self, x: &[f64], y: f64) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.x.cols,
+            "GP point dim {} != {}",
+            x.len(),
+            self.x.cols
+        );
+        anyhow::ensure!(self.y.len() < self.cap, "GP training rows at cap {}", self.cap);
+        let n = self.y.len();
+        let d = self.x.cols;
+        // One distance pass fills both caches (the per-dimension distance
+        // cache only under Adapt — Fixed never reads it); the kernel
+        // values are the same f64s the scalar kval produced.
+        let adaptive = matches!(self.hyper, HyperMode::Adapt { .. });
+        let mut drow = Vec::with_capacity(if adaptive { (n + 1) * d } else { 0 });
+        let mut krow = Vec::with_capacity(n + 1);
+        let mut sq = vec![0.0; d];
+        for j in 0..n {
+            sqdist_dims(x, self.x.row(j), &mut sq);
+            if adaptive {
+                drow.extend_from_slice(&sq);
+            }
+            krow.push(self.kval_from_dims(&sq));
+        }
+        sqdist_dims(x, x, &mut sq);
+        if adaptive {
+            drow.extend_from_slice(&sq);
+        }
+        krow.push(self.kval_from_dims(&sq) + self.sigma_n2);
+        anyhow::ensure!(
+            cholesky_push(&mut self.l, &krow),
+            "GP kernel matrix must be PD (jitter too small?)"
+        );
+        self.k.push_row(&krow);
+        if adaptive {
+            self.d2.push_row(&drow);
+        }
+        self.x.push_row(x);
+        self.y.push(y);
+        Ok(())
+    }
+
     /// Score one candidate block: kernel rows, interleaved forward solves
     /// (per-candidate op order identical to `solve_lower`), then
     /// (ei, mu, sigma) per candidate.
@@ -621,43 +686,11 @@ impl GpSession for GpSurrogate {
 
     fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
         anyhow::ensure!(
-            x.len() == self.x.cols,
-            "GP point dim {} != {}",
-            x.len(),
-            self.x.cols
+            self.fantasies == 0,
+            "observe inside an open fantasy scope ({} unpopped)",
+            self.fantasies
         );
-        anyhow::ensure!(self.y.len() < self.cap, "GP training rows at cap {}", self.cap);
-        let n = self.y.len();
-        let d = self.x.cols;
-        // One distance pass fills both caches (the per-dimension distance
-        // cache only under Adapt — Fixed never reads it); the kernel
-        // values are the same f64s the scalar kval produced.
-        let adaptive = matches!(self.hyper, HyperMode::Adapt { .. });
-        let mut drow = Vec::with_capacity(if adaptive { (n + 1) * d } else { 0 });
-        let mut krow = Vec::with_capacity(n + 1);
-        let mut sq = vec![0.0; d];
-        for j in 0..n {
-            sqdist_dims(x, self.x.row(j), &mut sq);
-            if adaptive {
-                drow.extend_from_slice(&sq);
-            }
-            krow.push(self.kval_from_dims(&sq));
-        }
-        sqdist_dims(x, x, &mut sq);
-        if adaptive {
-            drow.extend_from_slice(&sq);
-        }
-        krow.push(self.kval_from_dims(&sq) + self.sigma_n2);
-        anyhow::ensure!(
-            cholesky_push(&mut self.l, &krow),
-            "GP kernel matrix must be PD (jitter too small?)"
-        );
-        self.k.push_row(&krow);
-        if adaptive {
-            self.d2.push_row(&drow);
-        }
-        self.x.push_row(x);
-        self.y.push(y);
+        self.push_point(x, y)?;
         if let HyperMode::Adapt { every } = self.hyper {
             self.appends += 1;
             // A session being *used* — acquires interleaving the appends
@@ -680,6 +713,11 @@ impl GpSession for GpSurrogate {
     }
 
     fn forget(&mut self, i: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.fantasies == 0,
+            "forget inside an open fantasy scope ({} unpopped)",
+            self.fantasies
+        );
         anyhow::ensure!(i < self.y.len(), "forget({i}) of {} rows", self.y.len());
         match self.hyper {
             HyperMode::Fixed => {
@@ -711,6 +749,34 @@ impl GpSession for GpSurrogate {
         }
         self.x.remove_row(i);
         self.y.remove(i);
+        Ok(())
+    }
+
+    /// Fantasy append: the exact `observe` arithmetic (shared
+    /// `push_point`) with no adaptation cadence and no append counter —
+    /// the transient row must leave zero trace once popped.
+    fn fantasize(&mut self, x: &[f64], y_liar: f64) -> Result<()> {
+        self.push_point(x, y_liar)?;
+        self.fantasies += 1;
+        Ok(())
+    }
+
+    /// Retract the newest fantasy row from every cache.  On the last row
+    /// `cholesky_downdate` is a pure truncation — the bitwise inverse of
+    /// the `cholesky_push` that appended it (pinned by
+    /// `tests/property_invariants.rs`) — so this is valid in Fixed mode
+    /// too, where interior evictions would demand a rebuild.
+    fn pop_fantasy(&mut self) -> Result<()> {
+        anyhow::ensure!(self.fantasies > 0, "pop_fantasy with no open fantasy");
+        let last = self.y.len() - 1;
+        cholesky_downdate(&mut self.l, last);
+        self.k.remove(last);
+        if matches!(self.hyper, HyperMode::Adapt { .. }) {
+            self.d2.remove(last);
+        }
+        self.x.remove_row(last);
+        self.y.pop();
+        self.fantasies -= 1;
         Ok(())
     }
 
@@ -938,6 +1004,26 @@ mod tests {
         assert!(!out.moved);
         assert_eq!(out.steps, 0);
         assert_eq!(gp.hypers(), (c.lengthscales.clone(), c.sigma_n2));
+    }
+
+    /// The fantasy scope is exclusive: real mutations refuse to run with
+    /// fantasies open, and a pop with nothing open errors.
+    #[test]
+    fn fantasy_scope_guards() {
+        let mut gp = GpSurrogate::new(&cfg(2));
+        let mut rng = Pcg::new(30);
+        for i in 0..5 {
+            gp.observe(&[rng.f64(), rng.f64()], i as f64).unwrap();
+        }
+        assert!(gp.pop_fantasy().is_err(), "no open fantasy to pop");
+        gp.fantasize(&[0.5, 0.5], 4.0).unwrap();
+        assert_eq!(gp.len(), 6);
+        assert!(gp.observe(&[0.1, 0.1], 1.0).is_err(), "observe must wait for pops");
+        assert!(gp.forget(0).is_err(), "forget must wait for pops");
+        gp.pop_fantasy().unwrap();
+        assert_eq!(gp.len(), 5);
+        gp.observe(&[0.1, 0.1], 1.0).unwrap();
+        assert_eq!(gp.len(), 6);
     }
 
     #[test]

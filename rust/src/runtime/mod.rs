@@ -168,6 +168,31 @@ pub trait GpSession: Send {
     /// remaining observations is preserved).
     fn forget(&mut self, i: usize) -> Result<()>;
 
+    /// Append a *fantasy* observation (constant-liar q-EI): a transient
+    /// point the session must be able to retract bitwise via
+    /// [`GpSession::pop_fantasy`].  The contract: any sequence of
+    /// `fantasize` calls followed by the same number of `pop_fantasy`
+    /// calls leaves the session bit-for-bit where it started — no
+    /// hyper-parameter adaptation, no cadence bookkeeping, no other side
+    /// effect may fire on a fantasy.  The default routes through
+    /// `observe`, which satisfies the contract for sessions without
+    /// adaptation state (the one-shot wrapper); stateful sessions
+    /// override it to skip their adaptation bookkeeping.
+    fn fantasize(&mut self, x: &[f64], y_liar: f64) -> Result<()> {
+        self.observe(x, y_liar)
+    }
+
+    /// Retract the most recent [`GpSession::fantasize`] — the bitwise
+    /// inverse of the fantasy append (last-row truncation, which
+    /// `cholesky_downdate(last)` performs exactly; pinned by
+    /// `tests/property_invariants.rs`).  The default forgets the last
+    /// row, correct for any session whose `forget(len-1)` is a pure
+    /// truncation.
+    fn pop_fantasy(&mut self) -> Result<()> {
+        anyhow::ensure!(self.len() > 0, "pop_fantasy on an empty session");
+        self.forget(self.len() - 1)
+    }
+
     /// Expected improvement, posterior mean and std (all in
     /// standardized-target space) at the candidates, sharded over `pool`
     /// in fixed-size blocks — results are index-ordered, so pool width

@@ -26,7 +26,7 @@
 //!                                     backoff_base_s?, backoff_cap_s?,
 //!                                     run_budget_s?,
 //!                                     crash_regions?: [{flag, lo, hi}]},
-//!                           fail_budget?: int}
+//!                           fail_budget?: int, batch_q?: int}
 //!                          -> 202 {job_id, status, poll}
 //!                          (`gp_hypers: "adapt"` turns on GP
 //!                          marginal-likelihood hyper-parameter
@@ -51,7 +51,13 @@
 //!                          caps total measurement failures; once
 //!                          exceeded the job stops at its next checkpoint
 //!                          and lands in the `degraded` terminal state,
-//!                          still carrying its best-so-far result.  Tune
+//!                          still carrying its best-so-far result.
+//!                          `batch_q` proposes that many configurations
+//!                          per BO iteration (constant-liar q-EI) and
+//!                          evaluates them concurrently; 0, non-integers
+//!                          and values beyond the candidate pool size are
+//!                          400s, and the default of 1 keeps the
+//!                          bit-reproducible single-point path.  Tune
 //!                          results always include a `failures` per-kind
 //!                          histogram {crash, oom, wall_cap, hang, total})
 //!   GET  /api/jobs                           all jobs, ascending id
@@ -702,6 +708,26 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
                 as usize,
         ),
     };
+    // Batched q-EI proposal width.  Validated synchronously: a zero or
+    // oversized q would otherwise 202-accept and then kill the job at its
+    // first iteration.
+    let batch_q = match body.get("batch_q") {
+        None => 1usize,
+        Some(j) => {
+            let q = j
+                .as_f64()
+                .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+                .ok_or_else(|| bad("'batch_q' must be a positive integer"))?
+                as usize;
+            let n_candidates = PipelineConfig::default().bo.n_candidates;
+            if q > n_candidates {
+                return Err(bad(format!(
+                    "'batch_q' ({q}) cannot exceed the candidate pool size ({n_candidates})"
+                )));
+            }
+            q
+        }
+    };
 
     // Dataset checks stay synchronous so bad requests fail with 400 now,
     // not with a failed job later; the dataset is snapshotted into the job.
@@ -807,6 +833,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             ctl.set_fail_budget(budget);
         }
         let mut pc = PipelineConfig { tune_iters: iters, ..Default::default() };
+        pc.bo.batch_q = batch_q;
         pc.bo.hypers.mode = gp_mode;
         pc.bo.hypers.ard = gp_ard;
         let default_noise = pc.bo.hypers.sigma_n2;

@@ -158,6 +158,9 @@ fn progress_json(p: &Progress) -> Json {
     if let Some(v) = p.runs_executed {
         pairs.push(("runs_executed", Json::num(v as f64)));
     }
+    if let Some(v) = p.runs_in_flight {
+        pairs.push(("runs_in_flight", Json::num(v as f64)));
+    }
     if let Some(v) = p.last_rmse {
         pairs.push(("last_rmse", Json::num(v)));
     }

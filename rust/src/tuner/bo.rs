@@ -16,6 +16,29 @@
 //! Determination) and makes the result carry a normalized relevance
 //! vector over the tuned flags; [`GpHypers::init`] warm-starts the
 //! session at a previous job's adapted hypers.
+//!
+//! **Batched proposal (q-EI, constant-liar):** [`BoConfig::batch_q`] > 1
+//! proposes q points per iteration by maximizing EI sequentially against
+//! a session temporarily extended with *fantasy* observations at the
+//! constant liar — the worst target observed so far, so the fantasized
+//! model only flattens EI around already-claimed picks, never invents
+//! optimism.  Fantasies ride the session's O(n²)
+//! [`GpSession::fantasize`]/[`GpSession::pop_fantasy`] scope and are all
+//! retracted before the q real measurements run concurrently through
+//! [`Objective::eval_outcomes_batch`]; every outcome is then observed in
+//! pick order (failures individually quarantined and penalized) before
+//! the next acquisition round.  `batch_q = 1` (the default) takes the
+//! exact legacy single-point code path, bitwise identical at every pool
+//! width (`tests/gp_incremental.rs`).
+//!
+//! **Init-design failure semantics:** a failed measurement in the
+//! initial design gets the same worst-observed penalty the iteration
+//! loop applies — computed once after the whole init sweep, in
+//! deterministic order — and the incumbent (`best_y`/`best_x`) is
+//! selected over *successful* runs only.  A crash's garbage reading can
+//! therefore neither poison the surrogate nor seed the incumbent (it
+//! used to do both; the regression tests below and
+//! `tests/exec_parallel.rs` pin the fix).
 
 use std::collections::HashSet;
 use std::time::Instant;
@@ -116,6 +139,14 @@ pub struct BoConfig {
     /// default) keeps the acquisition pick bitwise identical to the
     /// legacy path.
     pub safe_baseline: Option<f64>,
+    /// Points proposed per BO iteration (q-EI).  q > 1 selects q
+    /// candidates sequentially against constant-liar fantasized models
+    /// and measures them concurrently via
+    /// [`Objective::eval_outcomes_batch`]; each pick stays quarantine-
+    /// and safe-baseline-aware.  1 (the default) is the legacy
+    /// single-point path, bitwise unchanged.  Must be >= 1 and <=
+    /// `n_candidates` (`tune_ctl` validates before any evaluation runs).
+    pub batch_q: usize,
 }
 
 impl Default for BoConfig {
@@ -133,7 +164,29 @@ impl Default for BoConfig {
             surrogate: SurrogateMode::Session,
             epool: *exec::global(),
             safe_baseline: None,
+            batch_q: 1,
         }
+    }
+}
+
+/// Salt decorrelating the Sobol-padding streams (dimensions past the
+/// generator's `MAX_DIM`) from every other consumer of the tuner seed.
+const SOBOL_PAD_SALT: u64 = 0x50B0_1FAD;
+
+/// Fill the dimensions past the Sobol generator's `MAX_DIM` with a
+/// seeded per-point stream.  Padding them all with a frozen 0.5 (the old
+/// behaviour) made every init point identical in those dimensions —
+/// duplicated kernel columns and zero exploration there.  Each point
+/// gets its own `index_seed`-derived stream, so padded coordinates are
+/// distinct across points yet bitwise reproducible; spaces at or under
+/// `MAX_DIM` never reach this (strict no-op, no RNG constructed).
+fn pad_init_point(u: &mut Vec<f64>, dim: usize, seed: u64, point_index: u64) {
+    if u.len() >= dim {
+        return;
+    }
+    let mut pad = Pcg::new(exec::index_seed(seed ^ SOBOL_PAD_SALT, point_index));
+    while u.len() < dim {
+        u.push(pad.f64());
     }
 }
 
@@ -316,6 +369,21 @@ impl Tuner for BoTuner {
                 (vec![ls; space.dim()], self.cfg.hypers.sigma_n2)
             }
         };
+        // Like the warm-start hypers: validate the batch width before the
+        // initial design burns benchmark evaluations on a doomed run (the
+        // REST layer 400s the same mistakes synchronously).
+        anyhow::ensure!(self.cfg.batch_q >= 1, "batch_q must be at least 1 (got 0)");
+        anyhow::ensure!(
+            self.cfg.batch_q <= self.cfg.n_candidates,
+            "batch_q ({}) cannot exceed the candidate pool size ({})",
+            self.cfg.batch_q,
+            self.cfg.n_candidates
+        );
+        anyhow::ensure!(
+            self.cfg.batch_q < N_TRAIN,
+            "batch_q ({}) cannot reach the GP training budget ({N_TRAIN})",
+            self.cfg.batch_q
+        );
 
         let mut rng = Pcg::new(self.cfg.seed);
         let mut xs: Vec<Vec<f64>> = Vec::new();
@@ -324,6 +392,10 @@ impl Tuner for BoTuner {
         // Configs whose measurement failed: never re-proposed.
         let mut quarantine: HashSet<Vec<u64>> = HashSet::new();
 
+        // Per-observation failure flags for the initial design (warm-start
+        // rows are historical successes: always empty there, and absent
+        // entries read as "succeeded" below).
+        let mut init_fail: Vec<bool> = Vec::new();
         match &self.warm {
             Some(warm) => {
                 for (x, y) in warm {
@@ -341,7 +413,7 @@ impl Tuner for BoTuner {
                 let mut sobol = Sobol::new(space.dim().min(crate::util::sobol::MAX_DIM));
                 while init_pts.len() < self.cfg.n_init.max(1) {
                     let mut u = sobol.next_point();
-                    u.resize(space.dim(), 0.5);
+                    pad_init_point(&mut u, space.dim(), self.cfg.seed, init_pts.len() as u64);
                     init_pts.push(u);
                 }
                 for u in init_pts {
@@ -350,22 +422,63 @@ impl Tuner for BoTuner {
                         quarantine.insert(unit_key(&u));
                     }
                     history.push(out.y);
+                    init_fail.push(out.failure.is_some());
                     xs.push(u);
                     ys.push(out.y);
+                }
+                // Failed init measurements get the same worst-observed
+                // penalty the iteration loop applies, computed once after
+                // the sweep completes (deterministic order): the raw
+                // garbage reading stays in `history` for telemetry but
+                // must never reach the surrogate or the incumbent.
+                if init_fail.contains(&true) {
+                    let penalty = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    for (y, &failed) in ys.iter_mut().zip(&init_fail) {
+                        if failed {
+                            *y = penalty;
+                        }
+                    }
                 }
             }
         }
         anyhow::ensure!(!xs.is_empty(), "BO needs initial data");
         ctl.note_failures(objective.failures().total());
 
-        let best_i = crate::util::stats::argmin(&ys);
+        // Incumbent over *successful* observations only (first minimum on
+        // ties, like `argmin`); an all-failed init falls back to the
+        // penalized argmin so the loop still has a point to search around.
+        let best_i = {
+            let mut b: Option<usize> = None;
+            for i in 0..ys.len() {
+                if init_fail.get(i).copied().unwrap_or(false) {
+                    continue;
+                }
+                b = match b {
+                    Some(j) if ys[j] <= ys[i] => Some(j),
+                    _ => Some(i),
+                };
+            }
+            b.unwrap_or_else(|| crate::util::stats::argmin(&ys))
+        };
         let mut best_x = xs[best_i].clone();
         let mut best_y = ys[best_i];
-        let mut best_history: Vec<f64> = history.iter().fold(Vec::new(), |mut acc, &y| {
-            let b = acc.last().copied().unwrap_or(f64::INFINITY).min(y);
-            acc.push(b);
-            acc
-        });
+        // Running incumbent per init observation: failures carry the
+        // previous best forward; while nothing has succeeded yet the
+        // penalized running minimum stands in (finite, like the all-failed
+        // incumbent fallback above).  Fault-free this is exactly the old
+        // running minimum over `history`.
+        let mut best_history: Vec<f64> = Vec::with_capacity(history.len());
+        {
+            let mut b = f64::INFINITY;
+            let mut bp = f64::INFINITY;
+            for i in 0..history.len() {
+                bp = bp.min(ys[i]);
+                if !init_fail.get(i).copied().unwrap_or(false) {
+                    b = b.min(history[i]);
+                }
+                best_history.push(if b.is_finite() { b } else { bp });
+            }
+        }
 
         // Surrogate session: initial data is fed once, then each
         // iteration appends one observation instead of refitting.
@@ -391,6 +504,7 @@ impl Tuner for BoTuner {
         }
         drop((xs, ys));
 
+        let q = self.cfg.batch_q;
         for it in 0..iters {
             // Cooperative stop at the iteration boundary — explicit
             // cancellation or an exhausted failure budget (degraded job):
@@ -399,35 +513,102 @@ impl Tuner for BoTuner {
             if ctl.should_stop() {
                 break;
             }
-            // Cap the GP training set at the artifact budget: drop the
-            // worst old point (kernel-cache eviction + factor rebuild).
-            if gp.len() >= N_TRAIN {
+            if q == 1 {
+                // Single-point path, byte-for-byte the pre-batch loop
+                // (same rng consumption, same acquire count): batch_q = 1
+                // stays bitwise identical to the legacy tuner
+                // (`tests/gp_incremental.rs`).
+                //
+                // Cap the GP training set at the artifact budget: drop the
+                // worst old point (kernel-cache eviction + factor rebuild).
+                if gp.len() >= N_TRAIN {
+                    gp.forget(argmax(gp.ys()))?;
+                }
+                let cands = self.candidates(space, &best_x, &mut rng);
+                let (ei, mu, _) = gp.acquire(&self.cfg.epool, &cands, best_y)?;
+                let pick =
+                    pick_candidate(&cands, &ei, &mu, self.cfg.safe_baseline, &quarantine);
+                let x_next = cands[pick].clone();
+                let out = objective.eval_outcome(&space.to_config(&x_next));
+                let y_next = out.y;
+                history.push(y_next);
+                let y_gp = if out.failure.is_some() {
+                    // Quarantine the config and feed the surrogate a penalized
+                    // value: at least as bad as everything observed, so the GP
+                    // learns to avoid the region without swallowing the raw
+                    // garbage magnitude of a failed measurement.
+                    quarantine.insert(unit_key(&x_next));
+                    gp.ys().iter().cloned().fold(y_next, f64::max)
+                } else {
+                    if y_next < best_y {
+                        best_y = y_next;
+                        best_x = x_next.clone();
+                    }
+                    y_next
+                };
+                best_history.push(best_y);
+                gp.observe(&x_next, y_gp)?;
+                ctl.note_failures(objective.failures().total());
+                ctl.update(|p| {
+                    p.iteration = Some(it + 1);
+                    p.iters = Some(iters);
+                    p.runs_executed = Some(objective.evals());
+                    p.best_y = Some(best_y);
+                    p.failures = Some(objective.failures());
+                });
+                continue;
+            }
+            // q-EI constant-liar batch: make room for the q appends this
+            // round will commit (fantasies peak at q-1 extra rows, the
+            // real observations at q), then pick q points sequentially
+            // against fantasized models.
+            while gp.len() > 1 && (gp.len() >= N_TRAIN || gp.len() + q > gpcfg.cap) {
                 gp.forget(argmax(gp.ys()))?;
             }
-            let cands = self.candidates(space, &best_x, &mut rng);
-            let (ei, mu, _) = gp.acquire(&self.cfg.epool, &cands, best_y)?;
-            let pick =
-                pick_candidate(&cands, &ei, &mu, self.cfg.safe_baseline, &quarantine);
-            let x_next = cands[pick].clone();
-            let out = objective.eval_outcome(&space.to_config(&x_next));
-            let y_next = out.y;
-            history.push(y_next);
-            let y_gp = if out.failure.is_some() {
-                // Quarantine the config and feed the surrogate a penalized
-                // value: at least as bad as everything observed, so the GP
-                // learns to avoid the region without swallowing the raw
-                // garbage magnitude of a failed measurement.
-                quarantine.insert(unit_key(&x_next));
-                gp.ys().iter().cloned().fold(y_next, f64::max)
-            } else {
-                if y_next < best_y {
-                    best_y = y_next;
-                    best_x = x_next.clone();
+            ctl.update(|p| p.runs_in_flight = Some(q));
+            let mut picks: Vec<Vec<f64>> = Vec::with_capacity(q);
+            for pi in 0..q {
+                let cands = self.candidates(space, &best_x, &mut rng);
+                let (ei, mu, _) = gp.acquire(&self.cfg.epool, &cands, best_y)?;
+                let pick =
+                    pick_candidate(&cands, &ei, &mu, self.cfg.safe_baseline, &quarantine);
+                let x_pick = cands[pick].clone();
+                if pi + 1 < q {
+                    // Constant liar: pretend the pick came back at the
+                    // worst target observed so far, so the next pick's EI
+                    // collapses around it without inventing optimism.
+                    let liar = gp.ys().iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    gp.fantasize(&x_pick, liar)?;
                 }
-                y_next
-            };
-            best_history.push(best_y);
-            gp.observe(&x_next, y_gp)?;
+                picks.push(x_pick);
+            }
+            // Retract every fantasy before the real measurements: the
+            // session is bit-for-bit back where the round started.
+            for _ in 0..q - 1 {
+                gp.pop_fantasy()?;
+            }
+            let cfgs: Vec<crate::flags::FlagConfig> =
+                picks.iter().map(|u| space.to_config(u)).collect();
+            let outs = objective.eval_outcomes_batch(&cfgs);
+            // Observe all q outcomes, in pick order, before the next
+            // acquisition round — failures individually quarantined and
+            // penalized exactly like the single-point path.
+            for (x_next, out) in picks.into_iter().zip(outs) {
+                let y_next = out.y;
+                history.push(y_next);
+                let y_gp = if out.failure.is_some() {
+                    quarantine.insert(unit_key(&x_next));
+                    gp.ys().iter().cloned().fold(y_next, f64::max)
+                } else {
+                    if y_next < best_y {
+                        best_y = y_next;
+                        best_x = x_next.clone();
+                    }
+                    y_next
+                };
+                best_history.push(best_y);
+                gp.observe(&x_next, y_gp)?;
+            }
             ctl.note_failures(objective.failures().total());
             ctl.update(|p| {
                 p.iteration = Some(it + 1);
@@ -435,6 +616,7 @@ impl Tuner for BoTuner {
                 p.runs_executed = Some(objective.evals());
                 p.best_y = Some(best_y);
                 p.failures = Some(objective.failures());
+                p.runs_in_flight = Some(0);
             });
         }
 
@@ -829,6 +1011,231 @@ mod tests {
             }
         }
         // The winner must come from the feasible region.
+        let best_u = space.project(&r.best_config);
+        assert!(best_u[0] <= 0.8, "best config sits in the failure region");
+    }
+
+    /// Objective whose *first* evaluation — an init-design point — fails
+    /// with a garbage-LOW reading (a crashed measurement can report
+    /// anything).  Successful evals are the 0.7-bowl, so every honest
+    /// value is >= 0.
+    struct PoisonFirstBowl {
+        space: TuneSpace,
+        count: usize,
+        failures: crate::sparksim::FailureHisto,
+    }
+
+    impl Objective for PoisonFirstBowl {
+        fn eval_outcome(&mut self, cfg: &crate::flags::FlagConfig) -> EvalOutcome {
+            self.count += 1;
+            if self.count == 1 {
+                self.failures.record(crate::jvmsim::FailureKind::Crash);
+                return EvalOutcome {
+                    y: -1000.0, // garbage-low: below every honest value
+                    failure: Some(crate::jvmsim::FailureKind::Crash),
+                    attempts: 2,
+                };
+            }
+            let u = self.space.project(cfg);
+            let y = u.iter().map(|&x| (x - 0.7) * (x - 0.7)).sum();
+            EvalOutcome { y, failure: None, attempts: 1 }
+        }
+        fn evals(&self) -> usize {
+            self.count
+        }
+        fn sim_time_s(&self) -> f64 {
+            self.count as f64
+        }
+        fn failures(&self) -> crate::sparksim::FailureHisto {
+            self.failures
+        }
+    }
+
+    /// The headline regression: a failed init observation used to be fed
+    /// to the GP raw AND win the argmin, seeding `best_y` with garbage
+    /// and deflating EI everywhere.  Post-fix the incumbent comes from
+    /// successful runs only and the trajectory never dips below an
+    /// honest value.  (Fails on the pre-fix code: best_y was -1000.)
+    #[test]
+    fn failed_init_observation_cannot_become_incumbent() {
+        let space = small_space();
+        let mut obj =
+            PoisonFirstBowl { space: space.clone(), count: 0, failures: Default::default() };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 6,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 5).unwrap();
+        assert_eq!(r.failures.crash, 1);
+        assert!(
+            r.best_y >= 0.0,
+            "garbage-low failed reading became the incumbent: {}",
+            r.best_y
+        );
+        assert!(
+            r.best_history.iter().all(|&b| b >= 0.0),
+            "best_history dipped to the failed reading: {:?}",
+            r.best_history
+        );
+        // The raw reading stays visible in telemetry.
+        assert!(r.history.contains(&-1000.0));
+    }
+
+    /// All-failed init design: the penalized fallback incumbent keeps the
+    /// loop (and its trajectory) finite instead of poisoned or infinite.
+    #[test]
+    fn all_failed_init_keeps_finite_incumbent() {
+        let space = small_space();
+        let mut obj = FailingBowl::new(space.clone(), -1.0); // everything fails
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 4,
+            n_candidates: 64,
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 2).unwrap();
+        assert!(r.best_y.is_finite());
+        assert!(r.best_history.iter().all(|b| b.is_finite()));
+    }
+
+    /// Records every projected evaluation so the padded init coordinates
+    /// are observable from outside the tuner.
+    struct Recorder {
+        space: TuneSpace,
+        count: usize,
+        seen: Vec<Vec<f64>>,
+    }
+
+    impl Objective for Recorder {
+        fn eval_outcome(&mut self, cfg: &crate::flags::FlagConfig) -> EvalOutcome {
+            self.count += 1;
+            let u = self.space.project(cfg);
+            let y = u.iter().take(4).map(|&x| (x - 0.5) * (x - 0.5)).sum();
+            self.seen.push(u);
+            EvalOutcome { y, failure: None, attempts: 1 }
+        }
+        fn evals(&self) -> usize {
+            self.count
+        }
+        fn sim_time_s(&self) -> f64 {
+            self.count as f64
+        }
+    }
+
+    /// Dimensions past the Sobol generator's MAX_DIM used to be frozen at
+    /// 0.5 in every init point (duplicated kernel columns, zero
+    /// exploration there).  The padded coordinates must be distinct
+    /// across init points, in-range, reproducible, and a strict no-op
+    /// for spaces within the generator's reach.
+    #[test]
+    fn sobol_padding_is_seeded_per_point_not_frozen() {
+        let dim = crate::util::sobol::MAX_DIM + 5;
+        let pad_of = |point_index: u64| -> Vec<f64> {
+            let mut u = vec![0.25; crate::util::sobol::MAX_DIM];
+            pad_init_point(&mut u, dim, 0xb0, point_index);
+            assert_eq!(u.len(), dim);
+            u.split_off(crate::util::sobol::MAX_DIM)
+        };
+        let pads: Vec<Vec<f64>> = (0..4u64).map(pad_of).collect();
+        for (i, a) in pads.iter().enumerate() {
+            assert!(a.iter().all(|v| (0.0..1.0).contains(v)));
+            assert!(a.iter().all(|&v| v != 0.5), "frozen 0.5 padding survived");
+            assert!(a.windows(2).any(|w| w[0] != w[1]), "constant padding stream");
+            for b in &pads[i + 1..] {
+                assert_ne!(a, b, "points {i}+ share a padding stream");
+            }
+        }
+        assert_eq!(pads, (0..4u64).map(pad_of).collect::<Vec<_>>(), "must be reproducible");
+        // Within the generator's reach nothing is touched.
+        let mut full = vec![0.25; 8];
+        pad_init_point(&mut full, 8, 0xb0, 3);
+        assert_eq!(full, vec![0.25; 8]);
+    }
+
+    /// End-to-end over a space wider than MAX_DIM: the tuner runs, and
+    /// two identical runs are bitwise equal (the padding streams are
+    /// seeded, not ambient).
+    #[test]
+    fn tune_past_max_dim_is_reproducible() {
+        let mut sp = TuneSpace::full(GcMode::G1GC);
+        let base = sp.selected.clone();
+        while sp.selected.len() <= crate::util::sobol::MAX_DIM + 4 {
+            let next = base[sp.selected.len() % base.len()];
+            sp.selected.push(next);
+        }
+        assert!(sp.dim() > crate::util::sobol::MAX_DIM);
+        let run = || {
+            let mut obj = Recorder { space: sp.clone(), count: 0, seen: Vec::new() };
+            let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+                n_init: 5,
+                n_candidates: 32,
+                ..Default::default()
+            });
+            let r = bo.tune(&sp, &mut obj, 2).unwrap();
+            (r, obj.seen)
+        };
+        let (r1, seen1) = run();
+        assert_eq!(r1.evals, 5 + 2);
+        let (r2, seen2) = run();
+        assert_eq!(seen1, seen2, "padded init design must be reproducible");
+        assert_eq!(r1.best_y.to_bits(), r2.best_y.to_bits());
+    }
+
+    #[test]
+    fn batch_q_zero_or_oversized_errors_before_any_eval() {
+        let space = small_space();
+        for (q, ncand) in [(0usize, 64usize), (65, 64)] {
+            let mut obj = Bowl { space: space.clone(), count: 0 };
+            let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+                n_init: 4,
+                n_candidates: ncand,
+                batch_q: q,
+                ..Default::default()
+            });
+            let err = bo.tune(&space, &mut obj, 3).unwrap_err().to_string();
+            assert!(err.contains("batch_q"), "{err}");
+            assert_eq!(obj.evals(), 0, "validation must fire before the init design");
+        }
+    }
+
+    #[test]
+    fn batch_tune_runs_q_evals_per_iteration_and_improves() {
+        let space = small_space();
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 6,
+            n_candidates: 128,
+            batch_q: 3,
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 6).unwrap();
+        assert_eq!(r.evals, 6 + 3 * 6, "q configs must be measured per iteration");
+        assert_eq!(r.history.len(), 6 + 18);
+        assert_eq!(r.best_history.len(), 6 + 18);
+        assert!(r.best_y <= r.best_history[5]);
+        assert!(r.best_y < 0.35, "best_y={}", r.best_y);
+        for w in r.best_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn batch_tune_quarantines_failures_individually() {
+        let space = small_space();
+        let mut obj = FailingBowl::new(space.clone(), 0.8);
+        let mut bo = BoTuner::new(Arc::new(NativeBackend), BoConfig {
+            n_init: 6,
+            n_candidates: 64,
+            batch_q: 4,
+            ..Default::default()
+        });
+        let r = bo.tune(&space, &mut obj, 8).unwrap();
+        assert_eq!(r.evals, 6 + 4 * 8);
+        assert_eq!(
+            r.failures.crash,
+            obj.evaluated.iter().filter(|u| u[0] > 0.8).count(),
+            "every in-batch failure must reach the histogram"
+        );
         let best_u = space.project(&r.best_config);
         assert!(best_u[0] <= 0.8, "best config sits in the failure region");
     }

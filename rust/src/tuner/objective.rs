@@ -31,6 +31,17 @@ pub trait Objective {
         self.eval_outcome(cfg).y
     }
 
+    /// Evaluate a batch of configurations (q-EI's concurrent measurement
+    /// round), outcomes in input order.  The contract: outcomes, eval
+    /// counts, and accumulated telemetry must be **bit-identical** to
+    /// calling [`Objective::eval_outcome`] on each config in order — the
+    /// default does exactly that; objectives with an internal fan-out
+    /// override it to run the q measurements concurrently (index-derived
+    /// seeds keep the results pool-width-invariant).
+    fn eval_outcomes_batch(&mut self, cfgs: &[FlagConfig]) -> Vec<EvalOutcome> {
+        cfgs.iter().map(|c| self.eval_outcome(c)).collect()
+    }
+
     /// Benchmark executions consumed so far.
     fn evals(&self) -> usize;
 
@@ -94,6 +105,37 @@ impl Objective for SimObjective<'_> {
             }
         }
         EvalOutcome { y: v, failure: out.failure(), attempts: out.attempts() }
+    }
+
+    /// Concurrent batch: fan the q runs out on this objective's pool
+    /// (each run's *inner* per-executor fan-out goes serial — run results
+    /// are pool-width-invariant, so moving the parallelism one level up
+    /// changes nothing), with the exact per-run seeds the sequential
+    /// path would have drawn (`seed + count + i + 1`).  Telemetry is
+    /// folded in input order afterwards, so counts, histograms, and
+    /// accumulated sim time are bit-identical to q sequential
+    /// `eval_outcome` calls at any pool width.
+    fn eval_outcomes_batch(&mut self, cfgs: &[FlagConfig]) -> Vec<EvalOutcome> {
+        let (runner, seed, base) = (self.runner, self.seed, self.count);
+        let inner = ExecPool::serial();
+        let outs = self.pool.par_map(cfgs, |i, cfg| {
+            runner.run_outcome_on(&inner, cfg, seed.wrapping_add((base + i + 1) as u64))
+        });
+        let mut res = Vec::with_capacity(outs.len());
+        for out in outs {
+            self.count += 1;
+            let m = out.metrics();
+            self.sim_time_s += m.wall_clock_s;
+            let mut v = self.metric.of(m);
+            if let Some(kind) = out.failure() {
+                self.failures.record(kind);
+                if self.metric == Metric::HeapUsage {
+                    v += 50.0;
+                }
+            }
+            res.push(EvalOutcome { y: v, failure: out.failure(), attempts: out.attempts() });
+        }
+        res
     }
 
     fn evals(&self) -> usize {
@@ -284,6 +326,42 @@ mod tests {
         assert_eq!(out.attempts, 1);
         assert_eq!(obj.failures().oom, 1);
         assert!(out.y > 1000.0, "failed run must report the penalty, got {}", out.y);
+    }
+
+    /// The batch path must be bit-identical to q sequential evals — same
+    /// outcomes, same seed stream, same telemetry — at any pool width,
+    /// including under injected faults, and a single eval *after* a batch
+    /// must continue the same per-run seed stream.
+    #[test]
+    fn batch_eval_matches_sequential_bitwise_at_any_width() {
+        use crate::util::rng::Pcg;
+        let plan = FaultPlan { seed: 9, crash_p: 0.3, max_retries: 2, ..Default::default() };
+        let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+        let mut rng = Pcg::new(41);
+        let cfgs: Vec<FlagConfig> =
+            (0..5).map(|_| FlagConfig::random(GcMode::G1GC, &mut rng)).collect();
+        let tail = FlagConfig::default_for(GcMode::G1GC);
+
+        let mut seq = SimObjective::new_on(&runner, Metric::ExecTime, 7, ExecPool::serial());
+        let expect: Vec<EvalOutcome> = cfgs.iter().map(|c| seq.eval_outcome(c)).collect();
+        let expect_tail = seq.eval_outcome(&tail);
+
+        for width in [1usize, 2, 8] {
+            let mut obj =
+                SimObjective::new_on(&runner, Metric::ExecTime, 7, ExecPool::new(width));
+            let got = obj.eval_outcomes_batch(&cfgs);
+            assert_eq!(got, expect, "batch outcomes diverged at width {width}");
+            assert_eq!(obj.evals(), cfgs.len());
+            let got_tail = obj.eval_outcome(&tail);
+            assert_eq!(got_tail, expect_tail, "post-batch seed stream broke at width {width}");
+            assert_eq!(obj.evals(), seq.evals());
+            assert_eq!(
+                obj.sim_time_s().to_bits(),
+                seq.sim_time_s().to_bits(),
+                "sim-time fold diverged at width {width}"
+            );
+            assert_eq!(obj.failures(), seq.failures(), "histograms diverged at width {width}");
+        }
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //! its length-scale/noise to the predictor's response surface and evicts
 //! via the O(n²) downdate, which matters here because RBO typically runs
 //! many more (cheap) iterations than plain BO and crosses the N_TRAIN
-//! eviction threshold sooner.
+//! eviction threshold sooner.  `BoConfig::batch_q` inherits the same way:
+//! an RBO with q > 1 proposes q predictor evaluations per inner
+//! iteration via the constant-liar fantasy scope (cheap either way — the
+//! predictor objective has no fan-out, so its batch round is the
+//! sequential default).
 
 use std::time::Instant;
 

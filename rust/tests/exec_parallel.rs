@@ -179,6 +179,99 @@ fn faulty_tune_identical_across_pool_widths() {
     }
 }
 
+/// The batched q-EI path rides the same invariant: a q=4 tune under the
+/// full fault mix — concurrent measurement rounds fanned out over the
+/// pool, failures quarantined per outcome — must be bit-identical at any
+/// `ExecPool` width (the batch round derives each run's seed from its
+/// index, never from scheduling order).
+#[test]
+fn batch_faulty_tune_identical_across_pool_widths() {
+    let plan = FaultPlan {
+        seed: 0xc4a05,
+        crash_p: 0.25,
+        hang_p: 0.10,
+        spike_p: 0.30,
+        crash_regions: vec![CrashRegion { flag: "MaxHeapSize".to_string(), lo: 0.0, hi: 0.05 }],
+        max_retries: 2,
+        ..Default::default()
+    };
+    let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+    let mut space = TuneSpace::full(GcMode::G1GC);
+    space.selected.truncate(6);
+    let tune_at = |width: usize| {
+        let pool = if width == 1 { ExecPool::serial() } else { ExecPool::new(width) };
+        let mut obj = SimObjective::new_on(&runner, Metric::ExecTime, 3, pool.clone());
+        let mut bo = BoTuner::new(
+            backend(),
+            BoConfig { n_init: 5, n_candidates: 64, batch_q: 4, epool: pool, ..Default::default() },
+        );
+        bo.tune(&space, &mut obj, 8).unwrap()
+    };
+    let serial = tune_at(1);
+    assert_eq!(serial.history.len(), 5 + 4 * 8, "q=4 must run 4 evals per iteration");
+    assert!(
+        serial.failures.total() > 0,
+        "the fault mix must actually fire for this test to mean anything"
+    );
+    for width in [2usize, 8] {
+        let parallel = tune_at(width);
+        let sh: Vec<u64> = serial.history.iter().map(|v| v.to_bits()).collect();
+        let ph: Vec<u64> = parallel.history.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sh, ph, "history differs at width {width}");
+        assert_eq!(serial.best_y.to_bits(), parallel.best_y.to_bits(), "width {width}");
+        assert_eq!(serial.best_config, parallel.best_config, "width {width}");
+        assert_eq!(serial.evals, parallel.evals);
+        assert_eq!(serial.failures, parallel.failures, "histogram differs at width {width}");
+    }
+}
+
+/// A crash region planted directly under the first Sobol init point (all
+/// coordinates 0.5): the init sweep takes a deterministic failure, and
+/// the final winner must be a configuration *outside* the region — a
+/// config that always crashes can never become the incumbent — with the
+/// whole result bit-identical at pool widths 1/2/8.
+#[test]
+fn crashing_init_point_cannot_win_and_is_pool_width_invariant() {
+    let region = CrashRegion { flag: "MaxHeapSize".to_string(), lo: 0.4, hi: 0.6 };
+    let plan = FaultPlan {
+        seed: 0x1417,
+        crash_regions: vec![region.clone()],
+        max_retries: 2,
+        ..Default::default()
+    };
+    let runner = SparkRunner::paper_default(Benchmark::Lda).with_faults(plan);
+    let mut space = TuneSpace::full(GcMode::G1GC);
+    space.selected.truncate(6);
+    let tune_at = |width: usize| {
+        let pool = if width == 1 { ExecPool::serial() } else { ExecPool::new(width) };
+        let mut obj = SimObjective::new_on(&runner, Metric::ExecTime, 3, pool.clone());
+        let mut bo = BoTuner::new(
+            backend(),
+            BoConfig { n_init: 5, n_candidates: 64, epool: pool, ..Default::default() },
+        );
+        bo.tune(&space, &mut obj, 6).unwrap()
+    };
+    let serial = tune_at(1);
+    assert!(
+        serial.failures.total() >= 1,
+        "the first init point sits inside the crash region and must have failed"
+    );
+    assert!(serial.best_y.is_finite());
+    assert!(
+        !region.matches(&serial.best_config),
+        "an always-crashing configuration became the incumbent"
+    );
+    for width in [2usize, 8] {
+        let parallel = tune_at(width);
+        let sh: Vec<u64> = serial.history.iter().map(|v| v.to_bits()).collect();
+        let ph: Vec<u64> = parallel.history.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sh, ph, "history differs at width {width}");
+        assert_eq!(serial.best_y.to_bits(), parallel.best_y.to_bits(), "width {width}");
+        assert_eq!(serial.best_config, parallel.best_config, "width {width}");
+        assert_eq!(serial.failures, parallel.failures, "histogram differs at width {width}");
+    }
+}
+
 /// The experiment drivers must render identical artifacts whatever the
 /// cell fan-out width (`bench_experiments` exercises the same drivers for
 /// wall-clock speedup; this guards that the speedup changes nothing).

@@ -315,6 +315,82 @@ fn bo_tune_result_identical_with_explicit_fixed_hypers() {
     assert_results_identical(&one, &inc, "explicit HyperMode::Fixed");
 }
 
+/// The q-EI entry point at `batch_q: 1` must take the exact legacy
+/// single-point code path: a whole tune with the batch width explicitly
+/// set to 1 stays bitwise equal to the one-shot reference (which has no
+/// batch machinery at all) at every pool width.
+#[test]
+fn batch_q_one_is_bitwise_the_single_point_path() {
+    let space = small_space();
+    let run = |surrogate: SurrogateMode, batch_q: usize, width: usize| {
+        let mut obj = Bowl { space: space.clone(), count: 0 };
+        let mut bo = BoTuner::new(
+            Arc::new(NativeBackend),
+            BoConfig {
+                n_init: 8,
+                n_candidates: 64,
+                surrogate,
+                batch_q,
+                epool: ExecPool::new(width),
+                ..Default::default()
+            },
+        );
+        bo.tune(&space, &mut obj, 10).unwrap()
+    };
+    let reference = run(SurrogateMode::OneShot, 1, 1);
+    for width in [1usize, 2, 8] {
+        let inc = run(SurrogateMode::Session, 1, width);
+        assert_results_identical(&reference, &inc, &format!("batch_q 1, width {width}"));
+    }
+}
+
+/// Fantasy-scope round trip: after q constant-liar fantasies are pushed
+/// and popped again, the session must be restored **bitwise** — same
+/// length, same observations, and a bit-identical acquisition — at pool
+/// widths 1/2/8.  This is the push-inverse contract batched q-EI leans
+/// on every iteration.
+#[test]
+fn fantasize_pop_round_trip_restores_acquisition_bitwise() {
+    let backend = NativeBackend;
+    let d = 6;
+    let cfg = gp_cfg(d);
+    let mut rng = Pcg::new(0x65);
+    let xs = rand_rows(24, d, &mut rng);
+    let ys: Vec<f64> = xs.iter().map(|r| (r[0] * 4.0).sin() + r[1] * r[2] - r[5]).collect();
+    let cands = rand_rows(100, d, &mut rng);
+    let fantasies = rand_rows(3, d, &mut rng);
+
+    for width in [1usize, 2, 8] {
+        let epool = ExecPool::new(width);
+        let mut gp = backend.gp_open(&cfg).unwrap();
+        for (x, &y) in xs.iter().zip(&ys) {
+            gp.observe(x, y).unwrap();
+        }
+        let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let before = gp.acquire(&epool, &cands, best).unwrap();
+
+        let liar = gp.ys().iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for f in &fantasies {
+            gp.fantasize(f, liar).unwrap();
+        }
+        assert_eq!(gp.len(), xs.len() + fantasies.len());
+        // The fantasies must actually be in scope: the acquisition with
+        // the liars pushed differs from the clean one.
+        let during = gp.acquire(&epool, &cands, best).unwrap();
+        assert_ne!(bits(&before.0), bits(&during.0), "fantasies must move EI (width {width})");
+        for _ in 0..fantasies.len() {
+            gp.pop_fantasy().unwrap();
+        }
+
+        assert_eq!(gp.len(), xs.len(), "width {width}");
+        assert_eq!(bits(gp.ys()), bits(&ys), "width {width}");
+        let after = gp.acquire(&epool, &cands, best).unwrap();
+        assert_eq!(bits(&before.0), bits(&after.0), "ei, width {width}");
+        assert_eq!(bits(&before.1), bits(&after.1), "mu, width {width}");
+        assert_eq!(bits(&before.2), bits(&after.2), "sigma, width {width}");
+    }
+}
+
 /// Same equivalence across the N_TRAIN cap: n_init 250 + 10 iterations
 /// forces evictions (kernel-cache removal + Cholesky rebuild) from
 /// iteration 7 on.

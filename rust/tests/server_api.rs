@@ -381,6 +381,32 @@ fn gp_init_hypers_validation_on_tune() {
     assert!(body.contains("141"), "must name the tuning dimension: {body}");
 }
 
+#[test]
+fn batch_q_validation_on_tune() {
+    let addr = server();
+    // Zero, non-integer and oversized widths are synchronous 400s: the
+    // job must never 202-accept a q the tuner would reject at its first
+    // iteration.
+    for bad_body in [
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "batch_q": 0}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "batch_q": 1.5}"#,
+        r#"{"bench": "lda", "gc": "g1", "algo": "bo", "batch_q": 1025}"#,
+    ] {
+        let (code, body) = http_request(addr, "POST", "/api/tune", bad_body).unwrap();
+        assert_eq!(code, 400, "{bad_body} -> {body}");
+        assert!(body.contains("batch_q"), "{body}");
+    }
+    // An explicit q of 1 is the default single-point path: accepted.
+    let (code, body) = http_request(
+        addr,
+        "POST",
+        "/api/tune",
+        r#"{"bench": "lda", "gc": "g1", "algo": "sa", "iters": 1, "batch_q": 1}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+}
+
 /// End-to-end ARD loop closure: an ARD tune reports per-flag hypers and a
 /// relevance object next to the selection, and the reported hypers feed
 /// back into a warm-started follow-up job.  The initial length-scales are
