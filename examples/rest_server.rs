@@ -204,6 +204,34 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(code == 400, "batch_q 0 must be a synchronous 400: {code} {body}");
     println!("POST /api/tune with batch_q 0 -> {code} (synchronous validation)\n");
 
+    // ---- kernel tier: blocked linear algebra behind gp_kernels --------
+    println!("POST /api/tune (BO, gp_kernels blocked — panel/lane surrogate tier, async)");
+    let (code, body) = post(
+        "/api/tune",
+        r#"{"bench":"lda","gc":"g1","algo":"bo","iters":2,"gp_kernels":"blocked"}"#,
+    );
+    println!("  {code} {body}");
+    anyhow::ensure!(code == 202, "blocked-kernel tune must be accepted: {body}");
+    let job = Json::parse(&body).unwrap().get("job_id").unwrap().as_f64().unwrap();
+    let rec = watch(job)?;
+    anyhow::ensure!(
+        rec.get("status").and_then(Json::as_str) == Some("done"),
+        "blocked-kernel tune failed: {rec}"
+    );
+    anyhow::ensure!(
+        rec.get("result").and_then(|v| v.get("gp_kernels")).and_then(Json::as_str)
+            == Some("blocked"),
+        "record must echo the effective kernel tier: {rec}"
+    );
+    println!("  blocked-kernel job {job} done\n");
+    // An unknown tier is rejected synchronously, never as a failed job.
+    let (code, body) = post(
+        "/api/tune",
+        r#"{"bench":"lda","gc":"g1","algo":"bo","iters":2,"gp_kernels":"bogus"}"#,
+    );
+    anyhow::ensure!(code == 400, "unknown gp_kernels must be a synchronous 400: {code} {body}");
+    println!("POST /api/tune with gp_kernels bogus -> {code} (synchronous validation)\n");
+
     // ---- cancellation: abort a long tune mid-flight -------------------
     println!("POST /api/tune (BO, 500 iterations — then DELETE it mid-run)");
     let (code, body) = post(

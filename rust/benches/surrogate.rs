@@ -1,4 +1,4 @@
-//! Surrogate benchmark, five scenarios behind one JSON writer:
+//! Surrogate benchmark, six scenarios behind one JSON writer:
 //!
 //! * `acquisition` — one-shot serial `gp_ei` (kernel rebuilt + O(n³)
 //!   Cholesky + serial candidate scoring every iteration) vs the
@@ -22,6 +22,11 @@
 //!   per-evaluation wall cost as the batch fan-out reclaims concurrency,
 //!   with both the single-point and the batched path asserted
 //!   bit-identical across pool widths before timing.
+//! * `kernels` — `KernelPolicy::Scalar` vs `KernelPolicy::Blocked`
+//!   acquisition loops at n ∈ {64, 128, 256}, d ∈ {8, 16}: the panel/lane
+//!   multi-RHS solve tier against the bitwise-pinned scalar arithmetic.
+//!   Before timing, the blocked EIs are asserted within 1e-8 of scalar
+//!   and bit-identical across pool widths (the tier's two pins).
 //!
 //! Emits `BENCH_surrogate.json` at the repo root; `--smoke` runs reduced
 //! sizes for CI and writes `BENCH_surrogate_smoke.json`.  Both files come
@@ -43,7 +48,7 @@ use onestoptuner::exec::{self, ExecPool};
 use onestoptuner::flags::{FlagConfig, GcMode};
 use onestoptuner::native::gp::GpSurrogate;
 use onestoptuner::runtime::{
-    one_shot_gp, GpConfig, GpSession, HyperMode, MlBackend, NativeBackend, N_TRAIN,
+    one_shot_gp, GpConfig, GpSession, HyperMode, KernelPolicy, MlBackend, NativeBackend, N_TRAIN,
 };
 use onestoptuner::tuner::bo::BoConfig;
 use onestoptuner::tuner::{BoTuner, EvalOutcome, Objective, TuneSpace, Tuner};
@@ -56,7 +61,8 @@ const D: usize = 16;
 
 /// Scenario keys the output document must always carry — shared between
 /// the builder and the post-write assertion so they cannot drift.
-const SCENARIO_KEYS: [&str; 5] = ["acquisition", "eviction", "adaptation", "ard", "batch"];
+const SCENARIO_KEYS: [&str; 6] =
+    ["acquisition", "eviction", "adaptation", "ard", "batch", "kernels"];
 
 fn rand_rows(n: usize, d: usize, rng: &mut Pcg) -> Vec<Vec<f64>> {
     (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
@@ -437,7 +443,66 @@ fn main() {
         }
     }
 
-    let path = write_doc(smoke, epool.threads(), [acq_rows, ev_rows, ad_rows, ard_rows, batch_rows]);
+    // ---- kernels: Scalar vs Blocked linear-algebra tier ---------------
+    // Pure acquisition loops (Fixed hypers, no evictions): the multi-RHS
+    // solve and kernel-row evaluation are the knobs under test.
+    let (kr_ds, kr_ns, kr_m, kr_iters): (&[usize], &[usize], usize, usize) =
+        if smoke { (&[8, 16], &[24, 48], 96, 3) } else { (&[8, 16], &[64, 128, 256], 512, 8) };
+    let mut kr_rows = Vec::new();
+    for &d in kr_ds {
+        for &n in kr_ns {
+            let scalar_cfg = gp_cfg_d(d, N_TRAIN, HyperMode::Fixed);
+            let mut blocked_cfg = scalar_cfg.clone();
+            blocked_cfg.kernels = KernelPolicy::Blocked;
+            let sc = scenario_d(d, n - kr_iters, kr_m, kr_iters, 0x5e7 ^ (d * 1000 + n) as u64);
+
+            // Pin 1: blocked tracks scalar within 1e-8.
+            let a = replay(&mut GpSurrogate::new(&scalar_cfg), &epool, &sc);
+            let b = replay(&mut GpSurrogate::new(&blocked_cfg), &epool, &sc);
+            let diff = max_abs_diff(&a, &b);
+            assert!(
+                diff <= 1e-8,
+                "blocked diverged from scalar: max |Δei| = {diff:e} (d={d}, n={n})"
+            );
+            // Pin 2: blocked is bitwise pool-width invariant.
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            let b_serial = replay(&mut GpSurrogate::new(&blocked_cfg), &serial, &sc);
+            assert_eq!(
+                bits(&b),
+                bits(&b_serial),
+                "blocked EI diverged across pool widths (d={d}, n={n})"
+            );
+
+            section(&format!(
+                "kernel tier: d={d}, {kr_iters} iters ending at n={n}, m={kr_m} candidates"
+            ));
+            let scalar = Bench::new(format!("kernels_scalar/d{d}_{n}tr_{kr_m}c"))
+                .iters(reps.0, reps.1)
+                .run(|| replay(&mut GpSurrogate::new(&scalar_cfg), &epool, &sc));
+            let blocked = Bench::new(format!("kernels_blocked/d{d}_{n}tr_{kr_m}c"))
+                .iters(reps.0, reps.1)
+                .run(|| replay(&mut GpSurrogate::new(&blocked_cfg), &epool, &sc));
+            let speedup = scalar.mean_ns / blocked.mean_ns;
+            println!("  speedup: {speedup:.2}x  (max |Δei| = {diff:.2e})");
+
+            kr_rows.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("n", Json::num(n as f64)),
+                ("m", Json::num(kr_m as f64)),
+                ("iters", Json::num(kr_iters as f64)),
+                ("scalar_ms", Json::num(scalar.mean_ns / 1e6)),
+                ("blocked_ms", Json::num(blocked.mean_ns / 1e6)),
+                ("speedup", Json::num(speedup)),
+                ("max_abs_ei_diff", Json::num(diff)),
+            ]));
+        }
+    }
+
+    let path = write_doc(
+        smoke,
+        epool.threads(),
+        [acq_rows, ev_rows, ad_rows, ard_rows, batch_rows, kr_rows],
+    );
     println!("\nwrote {path}");
 }
 
@@ -445,7 +510,7 @@ fn main() {
 /// from [`SCENARIO_KEYS`], and the written file is parsed back and
 /// re-checked against the same constant, so the full-size and smoke
 /// documents cannot diverge in shape.
-fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 5]) -> &'static str {
+fn write_doc(smoke: bool, threads: usize, rows: [Vec<Json>; 6]) -> &'static str {
     let scenarios: Vec<(&str, Json)> =
         SCENARIO_KEYS.iter().zip(rows).map(|(&k, r)| (k, Json::Arr(r))).collect();
     let doc = Json::obj(vec![

@@ -7,7 +7,7 @@
 //!   a 100% kill rate.  Writes `mutants_smoke.json` at the repo root and
 //!   exits non-zero on any surviving/undead pin or on pin rot.  This is
 //!   the CI step.
-//! * default (full sweep) — scan all mutation sites in the five kernel
+//! * default (full sweep) — scan all mutation sites in the six kernel
 //!   files, run each against its mapped suites plus the `--lib` tier, and
 //!   write `mutants.json` + `mutants.md` at the repo root.  Exits
 //!   non-zero while any survivor lacks an `equivalent` disposition in

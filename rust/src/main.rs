@@ -12,7 +12,7 @@
 //!   tune            --bench B --gc G [--metric M] [--algo A|all] [--iters N]
 //!                   [--gp-hypers fixed|adapt] [--gp-adapt-every K]
 //!                   [--gp-ard] [--gp-init-hypers "l1,..,ld[:noise]"]
-//!                   [--batch-q Q]
+//!                   [--batch-q Q] [--gp-kernels scalar|blocked]
 //!   repro           table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast]
 //!   serve           [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]
 //!
@@ -149,6 +149,7 @@ fn print_usage() {
          \x20               [--gp-ard]                 per-dimension (ARD) length-scales; implies --gp-hypers adapt\n\
          \x20               [--gp-init-hypers \"l1,..,ld[:noise]\"]           warm-start hypers from a previous run\n\
          \x20               [--batch-q Q]              q-EI: propose and evaluate Q configs per iteration (default 1)\n\
+         \x20               [--gp-kernels scalar|blocked]                    surrogate linear-algebra tier (default scalar)\n\
          \x20 repro         table1|table2|table3|fig3|timing|table4|fig7|fig4|fig5|fig6|all [--fast] [--out results]\n\
          \x20 serve         [--port 7878] [--state-dir DIR] [--job-ttl-s 3600]\n\n\
          global options:\n\
@@ -369,6 +370,14 @@ fn cmd_tune(opts: &Opts) -> Result<()> {
         let q: usize = v.parse().context("--batch-q must be a positive integer")?;
         anyhow::ensure!(q >= 1, "--batch-q must be >= 1");
         cfg.bo.batch_q = q;
+    }
+    // Surrogate linear-algebra tier: `scalar` (default) is the
+    // bitwise-pinned reference arithmetic; `blocked` runs the panel/lane
+    // kernels (1e-8 from scalar, bitwise self-reproducible at any
+    // --threads width).
+    if let Some(s) = opts.get("gp-kernels") {
+        cfg.bo.hypers.kernels =
+            onestoptuner::runtime::KernelPolicy::parse(s).context("--gp-kernels scalar|blocked")?;
     }
 
     let out = pipeline::run_pipeline(bench, gc, metric, &algos, &cfg, &backend)?;

@@ -12,7 +12,7 @@
 //! Pipeline (all hand-rolled — the crate is dependency-free by design):
 //!
 //! 1. [`scanner`] — a line-based Rust source scanner (no parser, no new
-//!    deps) discovers mutation sites in the five numeric kernel files
+//!    deps) discovers mutation sites in the six numeric kernel files
 //!    ([`TARGET_FILES`]) and applies the operator catalog ([`Op`]):
 //!    arithmetic swaps, comparison boundary swaps, range
 //!    inclusive/exclusive flips, off-by-one on index arithmetic, constant
@@ -59,8 +59,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 /// The numeric kernel files under mutation, relative to the repo root.
-pub const TARGET_FILES: [&str; 5] = [
+pub const TARGET_FILES: [&str; 6] = [
     "rust/src/native/linalg.rs",
+    "rust/src/native/kernels.rs",
     "rust/src/native/ops.rs",
     "rust/src/native/gp.rs",
     "rust/src/featsel/mod.rs",

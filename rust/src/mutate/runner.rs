@@ -66,6 +66,9 @@ pub fn suites_for(file: &str, full: bool) -> Vec<Suite> {
         "rust/src/native/linalg.rs" => {
             &[Suite::Test("property_invariants"), Suite::Test("gp_downdate"), Suite::Test("gp_incremental")]
         }
+        "rust/src/native/kernels.rs" => {
+            &[Suite::Test("gp_kernels"), Suite::Test("gp_incremental")]
+        }
         "rust/src/native/ops.rs" => &[Suite::Test("gp_incremental"), Suite::Test("gp_ard")],
         "rust/src/native/gp.rs" => {
             &[Suite::Test("gp_incremental"), Suite::Test("gp_downdate"), Suite::Test("gp_ard")]

@@ -85,13 +85,14 @@ pub fn pinned() -> Vec<Pin> {
                             every downdate property",
         },
         Pin {
-            id: "linalg-dims-splice-guard-flip",
+            id: "linalg-dims-pre-move-del",
             file: "rust/src/native/linalg.rs",
-            op: Op::EvictFlip,
-            original: "== idx",
-            contains: "if c == idx {",
-            occurrence: 1,
-            kill_argument: "same guard in PackedDims::remove; killed directly by \
+            op: Op::StmtDelete,
+            original: "self.data.copy_within(start..start + pre, w);",
+            contains: "self.data.copy_within(start..start + pre, w);",
+            occurrence: 0,
+            kill_argument: "PackedDims::remove leaves every row's pre-idx block stale \
+                            (the write cursor still advances); killed directly by \
                             prop_packed_dims_remove_edge_indices",
         },
         Pin {
@@ -103,6 +104,31 @@ pub fn pinned() -> Vec<Pin> {
             occurrence: 0,
             kill_argument: "Mat::remove_row drains two rows (or panics on the last); \
                             killed directly by prop_mat_remove_row_edge_indices",
+        },
+        Pin {
+            id: "kernels-lane-acc-del",
+            file: "rust/src/native/kernels.rs",
+            op: Op::StmtDelete,
+            original: "*pp += lk * xv;",
+            contains: "*pp += lk * xv;",
+            occurrence: 0,
+            kill_argument: "the blocked forward solve drops one lane group's \
+                            contribution per panel; gp_kernels' \
+                            blocked_solves_match_scalar_directly pins the blocked \
+                            solve against the scalar one at 1e-10 on sizes that \
+                            exercise full panels",
+        },
+        Pin {
+            id: "kernels-panel-start-off-by-one",
+            file: "rust/src/native/kernels.rs",
+            op: Op::OffByOne,
+            original: " + 1",
+            contains: "let mut p0 = i + 1;",
+            occurrence: 0,
+            kill_argument: "the blocked transpose solve's first panel skips row i+1's \
+                            coefficient (or reads past the factor on the last row); \
+                            the same 1e-10 direct differential in gp_kernels kills it \
+                            at every tested size",
         },
         Pin {
             id: "ops-rbf-sqdist-div",

@@ -85,22 +85,42 @@
 //! pipeline reports next to the lasso selection, closing the loop back to
 //! the paper's feature-selection stage.
 //!
-//! `cargo bench --bench surrogate` times five scenarios — one-shot vs
+//! **Kernel tier** ([`KernelPolicy`]): everything above describes the
+//! default `Scalar` tier, whose arithmetic the bitwise pins guard.
+//! `Blocked` routes the three hot loops through `native::kernels` — the
+//! panel/lane multi-RHS solves for EI scoring, [`kval_blocked`]'s
+//! fixed-lane weighted sums for trial-kernel rebuilds, and the
+//! panel-blocked `cholesky_rebuild_blocked` for Fixed evictions and
+//! adaptation commits.  Blocking changes summation order only, so a
+//! Blocked session tracks its Scalar twin to 1e-8 (`tests/gp_kernels.rs`)
+//! while staying bitwise self-reproducible at any pool width (fixed
+//! block sizes, fixed reduction trees).  The O(n²)-bandwidth append path
+//! (`push_point`, `cholesky_push`) stays scalar under both policies: the
+//! tier targets the O(n²·m) scoring, O(n²d) trial-kernel, and O(n³)
+//! refactor loops where blocking pays, and keeping appends shared means
+//! a Blocked session's incremental factor is bit-identical to its
+//! Scalar twin's until the first rebuild.
+//!
+//! `cargo bench --bench surrogate` times six scenarios — one-shot vs
 //! incremental acquisition, eviction-heavy downdate vs rebuild, adaptation
-//! on/off overhead, isotropic-adapt vs ARD-adapt at d∈{8,16}, and batched
-//! q-EI tuning at q∈{1,2,4} — and writes them to `BENCH_surrogate.json`
-//! at the repo root.
+//! on/off overhead, isotropic-adapt vs ARD-adapt at d∈{8,16}, batched
+//! q-EI tuning at q∈{1,2,4}, and Scalar-vs-Blocked kernel-tier
+//! acquisition at n∈{64,128,256} — and writes them to
+//! `BENCH_surrogate.json` at the repo root.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
+use super::kernels::{
+    cholesky_rebuild_blocked, kval_blocked, lane_dot, solve_lower_multi,
+};
 use super::linalg::{
     cholesky_downdate, cholesky_push, cholesky_rebuild, Mat, PackedDims, PackedLower,
 };
 use super::ops::{expected_improvement, iso_lengthscale};
 use crate::exec::ExecPool;
-use crate::runtime::{GpConfig, GpSession, HyperMode};
+use crate::runtime::{GpConfig, GpSession, HyperMode, KernelPolicy};
 use crate::util::stats::TargetScaler;
 
 /// Candidates per pool task.  One block shares each streamed factor row
@@ -198,6 +218,10 @@ pub struct GpSurrogate {
     ard: bool,
     cap: usize,
     hyper: HyperMode,
+    /// Which linear-algebra tier scores candidates and rebuilds factors:
+    /// `Scalar` (bitwise-pinned default) or the panel/lane `Blocked`
+    /// tier (1e-8-pinned to Scalar, bitwise self-reproducible).
+    kernels: KernelPolicy,
     /// Training inputs, one flat row each.
     x: Mat,
     /// Raw (unstandardized) targets, observation order.
@@ -245,6 +269,7 @@ impl GpSurrogate {
             ard: cfg.ard,
             cap: cfg.cap,
             hyper: cfg.hyper,
+            kernels: cfg.kernels,
             x: Mat::with_row_capacity(cfg.cap, cfg.dim),
             y: Vec::new(),
             k: PackedLower::new(),
@@ -352,12 +377,17 @@ impl GpSurrogate {
             Some(_) => Vec::new(),
             None => ls.iter().map(|l| 1.0 / (2.0 * l * l)).collect(),
         };
+        let blocked = self.kernels == KernelPolicy::Blocked;
         let mut k = PackedLower::new();
         let mut row: Vec<f64> = Vec::with_capacity(n);
         for i in 0..n {
             row.clear();
             for j in 0..=i {
-                row.push(kval(self.d2.at(i, j), iso, &inv2, self.sigma_f2));
+                row.push(if blocked {
+                    kval_blocked(self.d2.at(i, j), iso, &inv2, self.sigma_f2)
+                } else {
+                    kval(self.d2.at(i, j), iso, &inv2, self.sigma_f2)
+                });
             }
             // d2 diagonal blocks are all-zero, so row[i] was exactly
             // sigma_f2 before the noise.
@@ -365,7 +395,12 @@ impl GpSurrogate {
             k.push_row(&row);
         }
         let mut l = PackedLower::new();
-        if cholesky_rebuild(&k, &mut l) {
+        let pd = if blocked {
+            cholesky_rebuild_blocked(&k, &mut l)
+        } else {
+            cholesky_rebuild(&k, &mut l)
+        };
+        if pd {
             Some((k, l))
         } else {
             None
@@ -606,10 +641,27 @@ impl GpSurrogate {
         Ok(())
     }
 
-    /// Score one candidate block: kernel rows, interleaved forward solves
-    /// (per-candidate op order identical to `solve_lower`), then
-    /// (ei, mu, sigma) per candidate.
+    /// Score one candidate block under the session's [`KernelPolicy`]:
+    /// kernel rows, one multi-RHS forward solve over the whole block,
+    /// then (ei, mu, sigma) per candidate.
     fn score_block(&self, cands: &[Vec<f64>], alpha: &[f64], best_sc: f64) -> Vec<(f64, f64, f64)> {
+        match self.kernels {
+            KernelPolicy::Scalar => self.score_block_scalar(cands, alpha, best_sc),
+            KernelPolicy::Blocked => self.score_block_blocked(cands, alpha, best_sc),
+        }
+    }
+
+    /// Scalar-tier block scoring.  The forward solves are interleaved —
+    /// each factor row streamed once per block — through the k-major
+    /// scalar-order multi-RHS solve, whose *per-candidate* operation
+    /// order is exactly `solve_lower`'s, so every (ei, mu, sigma) is
+    /// bit-identical to the one-shot path at any pool width.
+    fn score_block_scalar(
+        &self,
+        cands: &[Vec<f64>],
+        alpha: &[f64],
+        best_sc: f64,
+    ) -> Vec<(f64, f64, f64)> {
         let n = self.y.len();
         let bs = cands.len();
         let mut sq = vec![0.0; self.x.cols];
@@ -622,26 +674,16 @@ impl GpSurrogate {
                 *o = self.kval_from_dims(&sq);
             }
         }
-        // Interleaved forward solve L v = kc^T, v stored k-major so the
-        // innermost loop is contiguous across candidates.
+        // k-major right-hand sides (the transpose is pure copying, no
+        // arithmetic): the multi-RHS solve's innermost loop is contiguous
+        // across candidates.
         let mut v = vec![0.0; n * bs];
-        let mut acc = vec![0.0; bs];
-        for i in 0..n {
-            let li = self.l.row(i);
-            for (c, a) in acc.iter_mut().enumerate() {
-                *a = kc[c * n + i];
-            }
-            for (k, &lk) in li[..i].iter().enumerate() {
-                let vk = &v[k * bs..k * bs + bs];
-                for (a, &vv) in acc.iter_mut().zip(vk) {
-                    *a -= lk * vv;
-                }
-            }
-            let d = li[i];
-            for (o, &a) in v[i * bs..i * bs + bs].iter_mut().zip(&acc) {
-                *o = a / d;
+        for c in 0..bs {
+            for j in 0..n {
+                v[j * bs + c] = kc[c * n + j];
             }
         }
+        solve_lower_multi(&self.l, &mut v, bs, KernelPolicy::Scalar);
         let mut out = Vec::with_capacity(bs);
         for c in 0..bs {
             let kci = &kc[c * n..(c + 1) * n];
@@ -651,6 +693,51 @@ impl GpSurrogate {
                 let vc = v[k * bs + c];
                 s2 += vc * vc;
             }
+            let var = (self.sigma_f2 - s2).max(1e-12);
+            let s = var.sqrt();
+            out.push((expected_improvement(m, s, best_sc), m, s));
+        }
+        out
+    }
+
+    /// Blocked-tier block scoring: fixed-lane kernel rows, the panel/lane
+    /// multi-RHS solve, lane-reduced posterior terms.  Same terms as the
+    /// scalar tier in a different summation order — 1e-8-pinned by
+    /// `tests/gp_kernels.rs` — and bitwise self-reproducible at any pool
+    /// width (every block size is an algorithm constant).
+    fn score_block_blocked(
+        &self,
+        cands: &[Vec<f64>],
+        alpha: &[f64],
+        best_sc: f64,
+    ) -> Vec<(f64, f64, f64)> {
+        let n = self.y.len();
+        let bs = cands.len();
+        let mut sq = vec![0.0; self.x.cols];
+        let mut kc = vec![0.0; bs * n];
+        for (c, cand) in cands.iter().enumerate() {
+            let row = &mut kc[c * n..(c + 1) * n];
+            for (j, o) in row.iter_mut().enumerate() {
+                sqdist_dims(cand, self.x.row(j), &mut sq);
+                *o = kval_blocked(&sq, self.iso, &self.inv2, self.sigma_f2);
+            }
+        }
+        let mut v = vec![0.0; n * bs];
+        for c in 0..bs {
+            for j in 0..n {
+                v[j * bs + c] = kc[c * n + j];
+            }
+        }
+        solve_lower_multi(&self.l, &mut v, bs, KernelPolicy::Blocked);
+        let mut col = vec![0.0; n];
+        let mut out = Vec::with_capacity(bs);
+        for c in 0..bs {
+            let kci = &kc[c * n..(c + 1) * n];
+            let m = lane_dot(kci, alpha);
+            for (k, o) in col.iter_mut().enumerate() {
+                *o = v[k * bs + c];
+            }
+            let s2 = lane_dot(&col, &col);
             let var = (self.sigma_f2 - s2).max(1e-12);
             let s = var.sqrt();
             out.push((expected_improvement(m, s, best_sc), m, s));
@@ -730,10 +817,12 @@ impl GpSession for GpSurrogate {
                 let mut k = self.k.clone();
                 k.remove(i);
                 let mut l = PackedLower::new();
-                anyhow::ensure!(
-                    cholesky_rebuild(&k, &mut l),
-                    "GP kernel matrix must be PD (jitter too small?)"
-                );
+                let pd = if self.kernels == KernelPolicy::Blocked {
+                    cholesky_rebuild_blocked(&k, &mut l)
+                } else {
+                    cholesky_rebuild(&k, &mut l)
+                };
+                anyhow::ensure!(pd, "GP kernel matrix must be PD (jitter too small?)");
                 self.k = k;
                 self.l = l;
             }

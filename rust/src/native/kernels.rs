@@ -1,0 +1,615 @@
+//! Blocked multi-RHS linear-algebra kernels for the GP hot path, behind
+//! the pinned [`KernelPolicy`].
+//!
+//! Every BO iteration burns its CPU time in three scalar loops: the
+//! per-candidate forward solves of EI scoring (O(n²) each, one per
+//! candidate), the O(n²d) weighted-sum trial-kernel rebuilds over the
+//! `PackedDims` distance cache during hyper adaptation, and the O(n³)
+//! Cholesky rebuild after an eviction or a hyper move.  This module is
+//! the blocked/SIMD-friendly tier for those loops:
+//!
+//! * [`solve_lower_multi`] / [`solve_lower_t_multi`] — multi-RHS
+//!   triangular solves over any [`LowerTri`] factor (packed or dense),
+//!   solving a whole EI candidate block (16 right-hand sides) in one
+//!   pass.  The `Blocked` tier splits the reduction over factor columns
+//!   into fixed [`PANEL`]-wide panels (one partial sum per panel,
+//!   combined in panel order) and walks the right-hand sides in fixed
+//!   [`LANES`]-wide lanes of independent accumulators, so the inner loop
+//!   is branch-free, contiguous, and trivially vectorizable.
+//! * [`cholesky_push_blocked`] / [`cholesky_rebuild_blocked`] — the
+//!   factor extension/rebuild with the same panel-blocked dot products.
+//! * [`lane_sum`] / [`lane_dot`] / [`kval_blocked`] — fixed-lane
+//!   reductions for the ARD weighted-sum kernel expression, used for
+//!   trial-kernel evaluation and the blocked EI posterior terms.
+//! * [`sum_f32acc`] — an *opt-in* f32-accumulate-f64 variant of the
+//!   distance sums.  It is exported and tested but deliberately NOT
+//!   wired into `KernelPolicy::Blocked`: single-precision accumulation
+//!   costs ~1e-7 relative error per sum, which after the kernel `exp`
+//!   and the triangular solves cannot honour the 1e-8 Blocked-vs-Scalar
+//!   pin.  Callers that can afford a looser tolerance (e.g. candidate
+//!   pre-filtering) may opt in explicitly.
+//!
+//! # The `KernelPolicy` contract — what is pinned, and how hard
+//!
+//! Blocking changes the floating-point **summation order**, never the
+//! set of terms, so the two tiers agree analytically and differ only in
+//! round-off.  The pins:
+//!
+//! * **`Scalar` is bitwise-pinned.**  Every `Scalar` entry point here
+//!   (`solve_lower_multi` with `KernelPolicy::Scalar`) reproduces the
+//!   per-RHS operation order of `PackedLower::solve_lower` /
+//!   `solve_lower_t` *exactly* — subtract terms one column at a time in
+//!   index order, divide last — so a Scalar session, and the one-shot
+//!   `gp_ei` reference path that now routes through the multi-RHS
+//!   solve, are byte-for-byte the pre-policy tuner.  Guarded by the
+//!   existing `gp_incremental` / `gp_downdate` / `gp_ard` suites and
+//!   the in-file bitwise tests below.
+//! * **`Blocked` is 1e-8-pinned to `Scalar`.**  `tests/gp_kernels.rs`
+//!   drives both tiers through acquire/adapt/evict churn and pins the
+//!   posteriors within 1e-8 (absolute + relative), plus direct
+//!   solve-level differentials at 1e-10.
+//! * **`Blocked` is bitwise self-reproducible.**  [`PANEL`], [`LANES`]
+//!   and every reduction tree are compile-time constants — never
+//!   derived from pool width, data values, or thread count — and the
+//!   code is free of shared accumulators, so the same inputs produce
+//!   the same bits at any `ExecPool` width (detlint's
+//!   `unordered-float-reduce` rule passes over this module with no
+//!   allows; `tests/gp_kernels.rs` asserts width-invariance directly).
+
+use super::linalg::{Mat, PackedLower};
+use crate::runtime::KernelPolicy;
+
+/// Factor columns per reduction panel in the blocked solves: each panel
+/// contributes one partial sum per right-hand side, combined in panel
+/// order.  A constant of the algorithm — changing it changes Blocked
+/// results (within the 1e-8 pin) and would invalidate recorded bench
+/// numbers, so treat it like a file format.
+pub const PANEL: usize = 32;
+
+/// Right-hand sides per accumulator lane group in the blocked solves,
+/// and the lane width of [`lane_sum`]/[`lane_dot`].  Eight f64 lanes
+/// fill a 512-bit vector register; the EI block (16 candidates) is two
+/// full lane groups.
+pub const LANES: usize = 8;
+
+/// A lower-triangular factor the multi-RHS solves can walk: implemented
+/// by the packed session factor ([`PackedLower`]) and the dense
+/// reference factor ([`Mat`], as produced by `linalg::cholesky`).  Rows
+/// expose at least `i + 1` entries (`tri_row(i)[k]` = `L[i][k]` for
+/// `k <= i`); the column walk of the transposed solve goes through
+/// [`LowerTri::tri_at`].
+pub trait LowerTri {
+    fn tri_n(&self) -> usize;
+    /// Row `i`; indices `0..=i` are the lower-triangle entries.
+    fn tri_row(&self, i: usize) -> &[f64];
+    /// Entry `L[k][i]` for `k >= i` (below-diagonal column walk).
+    fn tri_at(&self, k: usize, i: usize) -> f64;
+}
+
+impl LowerTri for PackedLower {
+    fn tri_n(&self) -> usize {
+        self.n()
+    }
+
+    fn tri_row(&self, i: usize) -> &[f64] {
+        self.row(i)
+    }
+
+    fn tri_at(&self, k: usize, i: usize) -> f64 {
+        self.at(k, i)
+    }
+}
+
+impl LowerTri for Mat {
+    fn tri_n(&self) -> usize {
+        self.rows
+    }
+
+    fn tri_row(&self, i: usize) -> &[f64] {
+        self.row(i)
+    }
+
+    fn tri_at(&self, k: usize, i: usize) -> f64 {
+        self.at(k, i)
+    }
+}
+
+/// Solve `L X = B` for `m` right-hand sides in one pass, in place.
+///
+/// `b` is row-major over factor rows: `b[i * m + c]` is entry `i` of
+/// right-hand side `c` on input and `x[i][c]` on output (the k-major
+/// layout the EI scorer already uses, so the innermost loop is
+/// contiguous across candidates).
+///
+/// `KernelPolicy::Scalar` keeps the per-RHS operation order of
+/// `PackedLower::solve_lower` exactly (bitwise); `Blocked` runs the
+/// panel/lane reduction (1e-8-pinned).
+pub fn solve_lower_multi<L: LowerTri>(l: &L, b: &mut [f64], m: usize, policy: KernelPolicy) {
+    match policy {
+        KernelPolicy::Scalar => solve_lower_multi_scalar(l, b, m),
+        KernelPolicy::Blocked => solve_lower_multi_blocked(l, b, m),
+    }
+}
+
+/// Solve `Lᵀ X = B` for `m` right-hand sides in one pass, in place —
+/// layout and policy contract as [`solve_lower_multi`].
+pub fn solve_lower_t_multi<L: LowerTri>(l: &L, b: &mut [f64], m: usize, policy: KernelPolicy) {
+    match policy {
+        KernelPolicy::Scalar => solve_lower_t_multi_scalar(l, b, m),
+        KernelPolicy::Blocked => solve_lower_t_multi_blocked(l, b, m),
+    }
+}
+
+/// Scalar-order multi-RHS forward solve: for each right-hand side the
+/// operation sequence is exactly `solve_lower`'s (subtract `L[i][k]·x[k]`
+/// for `k = 0..i` in order, then divide by the diagonal), so each output
+/// column is bitwise the single-RHS solve of its input column.
+fn solve_lower_multi_scalar<L: LowerTri>(l: &L, b: &mut [f64], m: usize) {
+    let n = l.tri_n();
+    assert_eq!(b.len(), n * m);
+    if m == 0 {
+        return;
+    }
+    for i in 0..n {
+        let row = l.tri_row(i);
+        let (xs, rest) = b.split_at_mut(i * m);
+        let bi = &mut rest[..m];
+        for (k, &lk) in row[..i].iter().enumerate() {
+            let xk = &xs[k * m..k * m + m];
+            for (a, &xv) in bi.iter_mut().zip(xk) {
+                *a -= lk * xv;
+            }
+        }
+        let diag = row[i];
+        for a in bi.iter_mut() {
+            *a /= diag;
+        }
+    }
+}
+
+/// Scalar-order multi-RHS transposed solve — per-RHS operation order
+/// exactly `solve_lower_t`'s (column walk `k = i+1..n` in order).
+fn solve_lower_t_multi_scalar<L: LowerTri>(l: &L, b: &mut [f64], m: usize) {
+    let n = l.tri_n();
+    assert_eq!(b.len(), n * m);
+    if m == 0 {
+        return;
+    }
+    for i in (0..n).rev() {
+        let (pre, rest) = b.split_at_mut((i + 1) * m);
+        let bi = &mut pre[i * m..];
+        for k in (i + 1)..n {
+            let lki = l.tri_at(k, i);
+            let xk = &rest[(k - (i + 1)) * m..(k - (i + 1)) * m + m];
+            for (a, &xv) in bi.iter_mut().zip(xk) {
+                *a -= lki * xv;
+            }
+        }
+        let diag = l.tri_at(i, i);
+        for a in bi.iter_mut() {
+            *a /= diag;
+        }
+    }
+}
+
+/// Panel/lane-blocked multi-RHS forward solve.  For each factor row the
+/// column reduction runs in fixed [`PANEL`]-wide panels — one partial
+/// sum per right-hand side per panel, subtracted from the accumulator
+/// in panel order — and the right-hand sides advance in [`LANES`]-wide
+/// groups of independent accumulators (remainder columns take the same
+/// panel order one at a time).  The reduction tree is therefore a pure
+/// function of `(n, m)`: bitwise reproducible, pool-width independent.
+fn solve_lower_multi_blocked<L: LowerTri>(l: &L, b: &mut [f64], m: usize) {
+    let n = l.tri_n();
+    assert_eq!(b.len(), n * m);
+    if m == 0 {
+        return;
+    }
+    for i in 0..n {
+        let row = l.tri_row(i);
+        let (xs, rest) = b.split_at_mut(i * m);
+        let bi = &mut rest[..m];
+        let mut p0 = 0;
+        while p0 < i {
+            let p1 = (p0 + PANEL).min(i);
+            let mut c = 0;
+            while c + LANES <= m {
+                let mut part = [0.0f64; LANES];
+                for (k, &lk) in row[p0..p1].iter().enumerate() {
+                    let xk = &xs[(p0 + k) * m + c..(p0 + k) * m + c + LANES];
+                    for (pp, &xv) in part.iter_mut().zip(xk) {
+                        *pp += lk * xv;
+                    }
+                }
+                for (a, &pp) in bi[c..c + LANES].iter_mut().zip(&part) {
+                    *a -= pp;
+                }
+                c += LANES;
+            }
+            for cc in c..m {
+                let mut part = 0.0;
+                for (k, &lk) in row[p0..p1].iter().enumerate() {
+                    part += lk * xs[(p0 + k) * m + cc];
+                }
+                bi[cc] -= part;
+            }
+            p0 = p1;
+        }
+        let diag = row[i];
+        for a in bi.iter_mut() {
+            *a /= diag;
+        }
+    }
+}
+
+/// Panel/lane-blocked multi-RHS transposed solve — the below-diagonal
+/// column walk in fixed [`PANEL`]-wide panels, lanes as in
+/// [`solve_lower_multi_blocked`].
+fn solve_lower_t_multi_blocked<L: LowerTri>(l: &L, b: &mut [f64], m: usize) {
+    let n = l.tri_n();
+    assert_eq!(b.len(), n * m);
+    if m == 0 {
+        return;
+    }
+    for i in (0..n).rev() {
+        let (pre, rest) = b.split_at_mut((i + 1) * m);
+        let bi = &mut pre[i * m..];
+        let mut p0 = i + 1;
+        while p0 < n {
+            let p1 = (p0 + PANEL).min(n);
+            let mut c = 0;
+            while c + LANES <= m {
+                let mut part = [0.0f64; LANES];
+                for k in p0..p1 {
+                    let lki = l.tri_at(k, i);
+                    let xk = &rest[(k - (i + 1)) * m + c..(k - (i + 1)) * m + c + LANES];
+                    for (pp, &xv) in part.iter_mut().zip(xk) {
+                        *pp += lki * xv;
+                    }
+                }
+                for (a, &pp) in bi[c..c + LANES].iter_mut().zip(&part) {
+                    *a -= pp;
+                }
+                c += LANES;
+            }
+            for cc in c..m {
+                let mut part = 0.0;
+                for k in p0..p1 {
+                    part += l.tri_at(k, i) * rest[(k - (i + 1)) * m + cc];
+                }
+                bi[cc] -= part;
+            }
+            p0 = p1;
+        }
+        let diag = l.tri_at(i, i);
+        for a in bi.iter_mut() {
+            *a /= diag;
+        }
+    }
+}
+
+/// Extend a Cholesky factor by one kernel row with panel-blocked dot
+/// products: the blocked counterpart of `linalg::cholesky_push`, same
+/// O(n²) shape, reduction split into [`PANEL`]-wide partial sums.  The
+/// set of multiply-subtract terms is identical — only the summation
+/// tree differs, so the factor matches the scalar push within solve
+/// round-off (1e-8-pinned through `tests/gp_kernels.rs`).  Returns
+/// false (factor untouched) if the extended matrix is not positive
+/// definite.
+pub fn cholesky_push_blocked(l: &mut PackedLower, krow: &[f64]) -> bool {
+    let n = l.n();
+    assert_eq!(krow.len(), n + 1);
+    let mut row = Vec::with_capacity(n + 1);
+    for j in 0..n {
+        let lj = l.row(j);
+        let mut sum = krow[j];
+        let mut p0 = 0;
+        while p0 < j {
+            let p1 = (p0 + PANEL).min(j);
+            let mut part = 0.0;
+            for (rk, ljk) in row[p0..p1].iter().zip(&lj[p0..p1]) {
+                part += rk * ljk;
+            }
+            sum -= part;
+            p0 = p1;
+        }
+        row.push(sum / lj[j]);
+    }
+    let mut sum = krow[n];
+    let mut p0 = 0;
+    while p0 < n {
+        let p1 = (p0 + PANEL).min(n);
+        let mut part = 0.0;
+        for v in &row[p0..p1] {
+            part += v * v;
+        }
+        sum -= part;
+        p0 = p1;
+    }
+    if sum <= 0.0 {
+        return false;
+    }
+    row.push(sum.sqrt());
+    l.push_row(&row);
+    true
+}
+
+/// Refactor `l` from a packed kernel matrix with the blocked panel
+/// push: the `KernelPolicy::Blocked` counterpart of
+/// `linalg::cholesky_rebuild`, used for Fixed-mode evictions and
+/// adaptation commits on Blocked sessions.
+pub fn cholesky_rebuild_blocked(k: &PackedLower, l: &mut PackedLower) -> bool {
+    l.clear();
+    for i in 0..k.n() {
+        if !cholesky_push_blocked(l, k.row(i)) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Width of the fixed-lane reductions ([`lane_sum`]/[`lane_dot`]) over
+/// `PackedDims` d-blocks.  Four lanes, unrolled by hand below, combined
+/// in one fixed tree — small enough that d ∈ {4..32} dimension blocks
+/// still fill at least one full group.
+pub const D_LANES: usize = 4;
+
+/// Fixed-lane sum: accumulate `v` into [`D_LANES`] independent lanes
+/// (lane `j` takes elements `j, j + 4, j + 8, …`) and combine them in
+/// the fixed tree `(l0 + l1) + (l2 + l3)`.  Deterministic for a given
+/// length; differs from the sequential iterator sum only in summation
+/// order.
+pub fn lane_sum(v: &[f64]) -> f64 {
+    let mut lanes = [0.0f64; D_LANES];
+    let mut chunks = v.chunks_exact(D_LANES);
+    for ch in &mut chunks {
+        lanes[0] += ch[0];
+        lanes[1] += ch[1];
+        lanes[2] += ch[2];
+        lanes[3] += ch[3];
+    }
+    for (lane, &x) in lanes.iter_mut().zip(chunks.remainder()) {
+        *lane += x;
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+}
+
+/// Fixed-lane dot product of `a` and `b` (shorter length wins), same
+/// lane layout and combine tree as [`lane_sum`].
+pub fn lane_dot(a: &[f64], b: &[f64]) -> f64 {
+    let len = a.len().min(b.len());
+    let (a, b) = (&a[..len], &b[..len]);
+    let mut lanes = [0.0f64; D_LANES];
+    let mut ac = a.chunks_exact(D_LANES);
+    let mut bc = b.chunks_exact(D_LANES);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        lanes[0] += ca[0] * cb[0];
+        lanes[1] += ca[1] * cb[1];
+        lanes[2] += ca[2] * cb[2];
+        lanes[3] += ca[3] * cb[3];
+    }
+    for ((lane, &x), &y) in lanes.iter_mut().zip(ac.remainder()).zip(bc.remainder()) {
+        *lane += x * y;
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+}
+
+/// The RBF kernel expression over a per-dimension squared-distance
+/// block, with fixed-lane reductions — the `Blocked` counterpart of the
+/// session's scalar `kval`: `iso = Some(1/(2ℓ²))` sums the block first
+/// and scales once, otherwise the per-dimension weighted sum runs
+/// through [`lane_dot`].  Same terms, fixed-lane summation order.
+#[inline]
+pub fn kval_blocked(sq: &[f64], iso: Option<f64>, inv2: &[f64], sf2: f64) -> f64 {
+    match iso {
+        Some(inv) => sf2 * (-lane_sum(sq) * inv).exp(),
+        None => sf2 * (-lane_dot(sq, inv2)).exp(),
+    }
+}
+
+/// f32-accumulate-f64 sum of a distance block: each term is rounded to
+/// f32 and accumulated in f32 lanes, the combined result widened back
+/// to f64.  Half the accumulator bandwidth of [`lane_sum`], at ~1e-7
+/// relative error — deliberately NOT part of `KernelPolicy::Blocked`
+/// (which must hold the 1e-8 pin); exported for callers that opt into
+/// the looser tolerance explicitly.
+pub fn sum_f32acc(v: &[f64]) -> f64 {
+    let mut lanes = [0.0f32; D_LANES];
+    let mut chunks = v.chunks_exact(D_LANES);
+    for ch in &mut chunks {
+        lanes[0] += ch[0] as f32;
+        lanes[1] += ch[1] as f32;
+        lanes[2] += ch[2] as f32;
+        lanes[3] += ch[3] as f32;
+    }
+    for (lane, &x) in lanes.iter_mut().zip(chunks.remainder()) {
+        *lane += x as f32;
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3])) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::linalg::{cholesky_push, cholesky_rebuild};
+    use crate::util::rng::Pcg;
+
+    /// A random well-conditioned lower-triangular factor: unit-ish
+    /// diagonal, small off-diagonal entries.
+    fn rand_factor(n: usize, rng: &mut Pcg) -> PackedLower {
+        let mut l = PackedLower::new();
+        let mut row = Vec::new();
+        for i in 0..n {
+            row.clear();
+            for _ in 0..i {
+                row.push(0.3 * rng.normal());
+            }
+            row.push(1.0 + rng.f64());
+            l.push_row(&row);
+        }
+        l
+    }
+
+    fn rand_rhs(n: usize, m: usize, rng: &mut Pcg) -> Vec<f64> {
+        (0..n * m).map(|_| rng.normal()).collect()
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The Scalar multi-RHS solves must be bitwise the per-column
+    /// single-RHS solves — the refactor that routed `score_block` and
+    /// `gp_ei` through this module rests on this identity.
+    #[test]
+    fn scalar_multi_is_bitwise_the_single_rhs_solve() {
+        let mut rng = Pcg::new(0x4e01);
+        for &(n, m) in &[(1usize, 1usize), (7, 3), (20, 16), (45, 5)] {
+            let l = rand_factor(n, &mut rng);
+            let b = rand_rhs(n, m, &mut rng);
+            let mut fwd = b.clone();
+            solve_lower_multi(&l, &mut fwd, m, KernelPolicy::Scalar);
+            let mut bwd = b.clone();
+            solve_lower_t_multi(&l, &mut bwd, m, KernelPolicy::Scalar);
+            for c in 0..m {
+                let col: Vec<f64> = (0..n).map(|i| b[i * m + c]).collect();
+                let xf = l.solve_lower(&col);
+                let xb = l.solve_lower_t(&col);
+                let got_f: Vec<f64> = (0..n).map(|i| fwd[i * m + c]).collect();
+                let got_b: Vec<f64> = (0..n).map(|i| bwd[i * m + c]).collect();
+                assert_eq!(bits(&xf), bits(&got_f), "fwd n={n} m={m} c={c}");
+                assert_eq!(bits(&xb), bits(&got_b), "bwd n={n} m={m} c={c}");
+            }
+        }
+    }
+
+    /// Blocked solves agree with Scalar within solve round-off, across
+    /// panel boundaries (n around and past PANEL) and lane remainders
+    /// (m not a multiple of LANES).
+    #[test]
+    fn blocked_solves_match_scalar_to_1e10() {
+        let mut rng = Pcg::new(0x4e02);
+        for &(n, m) in &[(5usize, 1usize), (31, 7), (32, 8), (33, 16), (80, 11)] {
+            let l = rand_factor(n, &mut rng);
+            let b = rand_rhs(n, m, &mut rng);
+            for (tag, t) in [("fwd", false), ("bwd", true)] {
+                let mut s = b.clone();
+                let mut bl = b.clone();
+                if t {
+                    solve_lower_t_multi(&l, &mut s, m, KernelPolicy::Scalar);
+                    solve_lower_t_multi(&l, &mut bl, m, KernelPolicy::Blocked);
+                } else {
+                    solve_lower_multi(&l, &mut s, m, KernelPolicy::Scalar);
+                    solve_lower_multi(&l, &mut bl, m, KernelPolicy::Blocked);
+                }
+                for (i, (a, b)) in s.iter().zip(&bl).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-10 * (1.0 + a.abs()),
+                        "{tag} n={n} m={m} [{i}]: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Blocked results are a pure function of the inputs: two runs,
+    /// plus a run through buffers of different prior contents, agree
+    /// bitwise.
+    #[test]
+    fn blocked_solves_are_bitwise_reproducible() {
+        let mut rng = Pcg::new(0x4e03);
+        let (n, m) = (40, 13);
+        let l = rand_factor(n, &mut rng);
+        let b = rand_rhs(n, m, &mut rng);
+        let mut one = b.clone();
+        let mut two = b.clone();
+        solve_lower_multi(&l, &mut one, m, KernelPolicy::Blocked);
+        solve_lower_multi(&l, &mut two, m, KernelPolicy::Blocked);
+        assert_eq!(bits(&one), bits(&two));
+    }
+
+    /// The blocked push/rebuild factors the same kernels the scalar
+    /// path does (within round-off), and fails PD exactly when the
+    /// scalar path fails.
+    #[test]
+    fn blocked_rebuild_matches_scalar_rebuild() {
+        let mut rng = Pcg::new(0x4e04);
+        for &n in &[3usize, 17, 40] {
+            // Build a PD kernel via K = G Gᵀ + n·I from a random factor.
+            let g = rand_factor(n, &mut rng);
+            let mut k = PackedLower::new();
+            let mut row = Vec::new();
+            for i in 0..n {
+                row.clear();
+                for j in 0..=i {
+                    let mut s = 0.0;
+                    for t in 0..=j.min(i) {
+                        let gi = if t <= i { g.at(i, t) } else { 0.0 };
+                        let gj = if t <= j { g.at(j, t) } else { 0.0 };
+                        s += gi * gj;
+                    }
+                    row.push(if i == j { s + 1.0 } else { s });
+                }
+                k.push_row(&row);
+            }
+            let mut ls = PackedLower::new();
+            let mut lb = PackedLower::new();
+            assert!(cholesky_rebuild(&k, &mut ls));
+            assert!(cholesky_rebuild_blocked(&k, &mut lb));
+            for i in 0..n {
+                for (a, b) in ls.row(i).iter().zip(lb.row(i)) {
+                    assert!(
+                        (a - b).abs() <= 1e-10 * (1.0 + a.abs()),
+                        "n={n} row {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+        // Non-PD: both sides refuse.
+        let mut bad = PackedLower::new();
+        bad.push_row(&[1.0]);
+        bad.push_row(&[2.0, 1.0]); // off-diagonal too large: not PD
+        let mut l = PackedLower::new();
+        assert!(!cholesky_rebuild(&bad, &mut l));
+        assert!(!cholesky_rebuild_blocked(&bad, &mut l));
+        let mut l2 = PackedLower::new();
+        assert!(cholesky_push(&mut l2, &[1.0]));
+        assert!(!cholesky_push_blocked(&mut l2, &[2.0, 1.0]));
+    }
+
+    /// Lane reductions: same terms as the sequential sums, fixed tree;
+    /// agreement within round-off, exact on short inputs.
+    #[test]
+    fn lane_reductions_match_sequential() {
+        let mut rng = Pcg::new(0x4e05);
+        for &len in &[0usize, 1, 3, 4, 5, 16, 33] {
+            let v: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..len).map(|_| rng.f64() + 0.1).collect();
+            let seq_sum: f64 = v.iter().sum();
+            let seq_dot: f64 = v.iter().zip(&w).map(|(a, b)| a * b).sum();
+            assert!((lane_sum(&v) - seq_sum).abs() <= 1e-12 * (1.0 + seq_sum.abs()), "len {len}");
+            assert!((lane_dot(&v, &w) - seq_dot).abs() <= 1e-12 * (1.0 + seq_dot.abs()), "len {len}");
+        }
+        // kval_blocked equals the scalar kernel expression within round-off.
+        let sq: Vec<f64> = (0..12).map(|_| rng.f64()).collect();
+        let inv2: Vec<f64> = (0..12).map(|_| rng.f64() + 0.2).collect();
+        let scalar_iso = 2.0 * (-(sq.iter().sum::<f64>()) * 0.7).exp();
+        let scalar_w =
+            2.0 * (-(sq.iter().zip(&inv2).map(|(s, w)| s * w).sum::<f64>())).exp();
+        assert!((kval_blocked(&sq, Some(0.7), &inv2, 2.0) - scalar_iso).abs() <= 1e-12);
+        assert!((kval_blocked(&sq, None, &inv2, 2.0) - scalar_w).abs() <= 1e-12);
+    }
+
+    /// The f32-accumulate variant lands within single-precision
+    /// round-off of the exact sum — and demonstrably NOT within the
+    /// 1e-8 pin's reach on long inputs, which is why it stays opt-in.
+    #[test]
+    fn f32_accumulate_is_close_but_only_f32_close() {
+        let mut rng = Pcg::new(0x4e06);
+        let v: Vec<f64> = (0..256).map(|_| rng.f64()).collect();
+        let exact: f64 = v.iter().sum();
+        let approx = sum_f32acc(&v);
+        assert!((approx - exact).abs() <= 1e-4 * (1.0 + exact.abs()), "{approx} vs {exact}");
+        assert!(approx != exact, "f32 accumulation of 256 random terms matching f64 exactly is wildly improbable");
+    }
+}

@@ -247,13 +247,21 @@ impl PackedLower {
     }
 
     /// Solve `L^T x = b` — arithmetic identical to [`solve_lower_t`].
+    ///
+    /// The column walk reads `L[k][i]` for `k = i+1..n`; rather than
+    /// recomputing the packed offset `off(k) + i` per element, the
+    /// offset is carried as a running stride (`off(k+1) = off(k) + k + 1`).
+    /// Same elements in the same order — the floating-point operation
+    /// sequence is untouched.
     pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
         let n = self.n;
         let mut x = vec![0.0; n];
         for i in (0..n).rev() {
             let mut sum = b[i];
+            let mut o = Self::off(i + 1) + i;
             for k in (i + 1)..n {
-                sum -= self.at(k, i) * x[k];
+                sum -= self.data[o] * x[k];
+                o += k + 1;
             }
             x[i] = sum / self.at(i, i);
         }
@@ -319,20 +327,24 @@ impl PackedDims {
 
     /// Remove row and column `idx` (`Vec::remove` semantics: the order of
     /// the remaining indices is preserved).
+    ///
+    /// Each surviving row `r > idx` keeps two contiguous runs — the `idx`
+    /// blocks before column `idx` and the `r - idx` blocks after it — so
+    /// the splice is two block moves per row instead of one `copy_within`
+    /// per d-block.  Same bytes in the same order as the per-block loop.
     pub fn remove(&mut self, idx: usize) {
         assert!(idx < self.n);
         let d = self.d;
         let mut w = Self::off(idx) * d;
         for r in idx + 1..self.n {
             let start = Self::off(r) * d;
-            for c in 0..=r {
-                if c == idx {
-                    continue;
-                }
-                let src = start + c * d;
-                self.data.copy_within(src..src + d, w);
-                w += d;
-            }
+            let pre = idx * d;
+            self.data.copy_within(start..start + pre, w);
+            w += pre;
+            let post_src = start + (idx + 1) * d;
+            let post = (r - idx) * d;
+            self.data.copy_within(post_src..post_src + post, w);
+            w += post;
         }
         self.n -= 1;
         self.data.truncate(w);

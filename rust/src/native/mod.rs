@@ -1,5 +1,6 @@
 //! Pure-rust mirrors of the L1/L2 compute (cross-check + fallback backend).
 
 pub mod gp;
+pub mod kernels;
 pub mod linalg;
 pub mod ops;

@@ -3,7 +3,9 @@
 //! integration tests cross-check them against the HLO artifacts through
 //! PJRT, and they double as the fallback backend when artifacts are absent.
 
+use super::kernels::solve_lower_multi;
 use super::linalg::{cholesky, solve_lower, solve_lower_t, solve_spd, Mat};
+use crate::runtime::KernelPolicy;
 
 pub const SQRT2: f64 = std::f64::consts::SQRT_2;
 pub const INV_SQRT_2PI: f64 = 0.3989422804014327;
@@ -194,13 +196,30 @@ pub fn gp_ei(
     let alpha = solve_lower_t(&l, &solve_lower(&l, ytr));
 
     let kc = rbf(xc, xtr, lengthscales, sigma_f2);
-    let mut mu = Vec::with_capacity(xc.len());
-    let mut sigma = Vec::with_capacity(xc.len());
-    let mut ei = Vec::with_capacity(xc.len());
-    for kci in (0..xc.len()).map(|i| kc.row(i)) {
+    let mc = xc.len();
+    // One scalar-order multi-RHS forward solve over all candidates: the
+    // per-candidate operation order is exactly `solve_lower`'s, so the
+    // posterior stays bitwise the per-candidate reference this function
+    // has always been (pinned by `tests/gp_incremental.rs`).
+    let mut v = vec![0.0; n * mc];
+    for c in 0..mc {
+        let kci = kc.row(c);
+        for j in 0..n {
+            v[j * mc + c] = kci[j];
+        }
+    }
+    solve_lower_multi(&l, &mut v, mc, KernelPolicy::Scalar);
+    let mut mu = Vec::with_capacity(mc);
+    let mut sigma = Vec::with_capacity(mc);
+    let mut ei = Vec::with_capacity(mc);
+    for (c, kci) in (0..mc).map(|i| (i, kc.row(i))) {
         let m: f64 = kci.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-        let v = solve_lower(&l, kci);
-        let var = (sigma_f2 - v.iter().map(|a| a * a).sum::<f64>()).max(1e-12);
+        let mut s2 = 0.0;
+        for k in 0..n {
+            let vc = v[k * mc + c];
+            s2 += vc * vc;
+        }
+        let var = (sigma_f2 - s2).max(1e-12);
         let s = var.sqrt();
         mu.push(m);
         sigma.push(s);

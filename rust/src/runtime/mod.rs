@@ -89,6 +89,53 @@ impl HyperMode {
     }
 }
 
+/// Linear-algebra kernel tier of a GP session — which *implementation*
+/// of the numeric hot loops (multi-RHS triangular solves in EI scoring,
+/// weighted-sum trial-kernel rebuilds, the O(n³) Cholesky rebuild) the
+/// session runs.  Orthogonal to [`HyperMode`]: the policy never changes
+/// *what* is computed, only the floating-point summation order it is
+/// computed in.
+///
+/// * [`KernelPolicy::Scalar`] (the default) keeps today's arithmetic
+///   exactly: every reduction runs in the scalar loop order the
+///   bitwise pins were recorded against (`tests/gp_incremental.rs`,
+///   `tests/gp_downdate.rs`, `tests/gp_ard.rs`).  A Scalar session is
+///   byte-for-byte the pre-policy tuner.
+/// * [`KernelPolicy::Blocked`] runs the blocked/SIMD-friendly tier in
+///   `native::kernels`: panel-blocked multi-RHS solves with fixed-width
+///   lane accumulators, a blocked-panel Cholesky rebuild, and
+///   fixed-lane weighted sums for trial-kernel evaluation.  Blocking
+///   changes the float reduction order, so Blocked is **not** bitwise
+///   equal to Scalar — it is pinned to Scalar within 1e-8 by
+///   `tests/gp_kernels.rs` — but every block size and reduction tree is
+///   a constant of the algorithm (never derived from pool width or data
+///   values), so a Blocked session is bitwise self-reproducible at any
+///   `ExecPool` width, the same width-invariance contract Scalar
+///   carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelPolicy {
+    #[default]
+    Scalar,
+    Blocked,
+}
+
+impl KernelPolicy {
+    pub fn parse(s: &str) -> Option<KernelPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPolicy::Scalar),
+            "blocked" => Some(KernelPolicy::Blocked),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPolicy::Scalar => "scalar",
+            KernelPolicy::Blocked => "blocked",
+        }
+    }
+}
+
 /// Hyper-parameters + shape of a GP surrogate session.
 #[derive(Clone, Debug)]
 pub struct GpConfig {
@@ -110,6 +157,11 @@ pub struct GpConfig {
     /// move every per-dimension length-scale independently instead of as
     /// one tied parameter.  Has no effect under [`HyperMode::Fixed`].
     pub ard: bool,
+    /// Linear-algebra kernel tier (see [`KernelPolicy`]): `Scalar`
+    /// keeps the bitwise-pinned loop order, `Blocked` runs the
+    /// panel/lane tier pinned to it at 1e-8.  One-shot sessions ignore
+    /// this and always score through the scalar reference arithmetic.
+    pub kernels: KernelPolicy,
 }
 
 impl GpConfig {
@@ -131,6 +183,7 @@ impl GpConfig {
             cap,
             hyper,
             ard: false,
+            kernels: KernelPolicy::Scalar,
         }
     }
 }

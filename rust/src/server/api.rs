@@ -26,7 +26,8 @@
 //!                                     backoff_base_s?, backoff_cap_s?,
 //!                                     run_budget_s?,
 //!                                     crash_regions?: [{flag, lo, hi}]},
-//!                           fail_budget?: int, batch_q?: int}
+//!                           fail_budget?: int, batch_q?: int,
+//!                           gp_kernels?: "scalar"|"blocked"}
 //!                          -> 202 {job_id, status, poll}
 //!                          (`gp_hypers: "adapt"` turns on GP
 //!                          marginal-likelihood hyper-parameter
@@ -57,7 +58,15 @@
 //!                          evaluates them concurrently; 0, non-integers
 //!                          and values beyond the candidate pool size are
 //!                          400s, and the default of 1 keeps the
-//!                          bit-reproducible single-point path.  Tune
+//!                          bit-reproducible single-point path.
+//!                          `gp_kernels` selects the surrogate's
+//!                          linear-algebra tier: "scalar" (default) is
+//!                          the bitwise-pinned reference arithmetic,
+//!                          "blocked" the panel/lane kernel tier — 1e-8
+//!                          from scalar, itself bitwise reproducible at
+//!                          any pool width.  Unknown values are a
+//!                          synchronous 400; the job record echoes the
+//!                          effective tier as `gp_kernels`.  Tune
 //!                          results always include a `failures` per-kind
 //!                          histogram {crash, oom, wall_cap, hang, total})
 //!   GET  /api/jobs                           all jobs, ascending id
@@ -95,7 +104,7 @@ use crate::exec;
 use crate::featsel;
 use crate::flags::{FlagConfig, GcMode};
 use crate::pipeline::{self, Algo, PipelineConfig};
-use crate::runtime::{HyperMode, MlBackend};
+use crate::runtime::{HyperMode, KernelPolicy, MlBackend};
 use crate::server::http::{Request, Response};
 use crate::server::jobs::{self, CancelOutcome, JobQueue};
 use crate::server::persist;
@@ -728,6 +737,15 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             q
         }
     };
+    // Surrogate linear-algebra tier.  Validated synchronously like the
+    // other surrogate knobs: an unknown tier is a 400 now, not a dead job.
+    let gp_kernels = match body.get("gp_kernels") {
+        None => KernelPolicy::Scalar,
+        Some(j) => j
+            .as_str()
+            .and_then(KernelPolicy::parse)
+            .ok_or_else(|| bad("unknown 'gp_kernels' (scalar | blocked)"))?,
+    };
 
     // Dataset checks stay synchronous so bad requests fail with 400 now,
     // not with a failed job later; the dataset is snapshotted into the job.
@@ -836,6 +854,7 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
         pc.bo.batch_q = batch_q;
         pc.bo.hypers.mode = gp_mode;
         pc.bo.hypers.ard = gp_ard;
+        pc.bo.hypers.kernels = gp_kernels;
         let default_noise = pc.bo.hypers.sigma_n2;
         pc.bo.hypers.init = gp_init.map(|(ls, s2n)| (ls, s2n.unwrap_or(default_noise)));
 
@@ -883,6 +902,10 @@ fn tune(state: &Arc<ApiState>, req: &Request) -> ApiResult {
             // withholds relevance when the backend/mode could not adapt,
             // or when the run was too short for the scales to move.
             fields.push(("gp_ard", Json::Bool(out.tune.ard_relevance.is_some())));
+            // The kernel tier, echoed whenever a GP surrogate ran at
+            // all: the knob changes arithmetic (within the 1e-8 pin),
+            // so the record must say which tier produced the result.
+            fields.push(("gp_kernels", Json::str(gp_kernels.name())));
         }
         // Final surrogate hypers: the warm-start payload a follow-up job
         // feeds back via "gp_init_hypers".

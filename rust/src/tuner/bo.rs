@@ -49,7 +49,7 @@ use super::objective::Objective;
 use super::space::TuneSpace;
 use super::{TuneResult, Tuner};
 use crate::exec::{self, ExecPool, JobControl};
-use crate::runtime::{GpConfig, GpSession, HyperMode, MlBackend, N_TRAIN};
+use crate::runtime::{GpConfig, GpSession, HyperMode, KernelPolicy, MlBackend, N_TRAIN};
 use crate::util::rng::Pcg;
 use crate::util::sobol::Sobol;
 use crate::util::stats::argmax;
@@ -75,6 +75,12 @@ pub struct GpHypers {
     /// a normalized per-dimension relevance vector next to the lasso
     /// selection.  Isotropic (off) stays the default.
     pub ard: bool,
+    /// Linear-algebra tier for the native surrogate's hot loops:
+    /// `Scalar` (the default) is bitwise-pinned to the one-shot
+    /// reference; `Blocked` runs the panel/lane kernels — 1e-8 from
+    /// Scalar, bitwise self-reproducible at any pool width.  One-shot
+    /// surrogates and the XLA engine ignore it.
+    pub kernels: KernelPolicy,
     /// Warm-start initial hypers from a previous job's `TuneResult`:
     /// per-dimension length-scales (must match the tuning dimension —
     /// `tune_ctl` errors otherwise) plus noise variance.  Overrides
@@ -90,6 +96,7 @@ impl Default for GpHypers {
             sigma_n2: 0.01,
             mode: HyperMode::Fixed,
             ard: false,
+            kernels: KernelPolicy::Scalar,
             init: None,
         }
     }
@@ -493,6 +500,7 @@ impl Tuner for BoTuner {
             cap: N_TRAIN.max(xs.len()),
             hyper: self.cfg.hypers.mode,
             ard: self.cfg.hypers.ard,
+            kernels: self.cfg.hypers.kernels,
         };
         let backend = std::sync::Arc::clone(&self.backend);
         let mut gp = match self.cfg.surrogate {

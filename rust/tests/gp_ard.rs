@@ -23,7 +23,7 @@
 use onestoptuner::exec::ExecPool;
 use onestoptuner::featsel::ard_relevance;
 use onestoptuner::native::gp::GpSurrogate;
-use onestoptuner::runtime::{GpConfig, GpSession, HyperMode};
+use onestoptuner::runtime::{GpConfig, GpSession, HyperMode, KernelPolicy};
 use onestoptuner::util::rng::Pcg;
 use onestoptuner::util::stats::{argmax, argmin};
 
@@ -45,6 +45,7 @@ fn ard_cfg(d: usize, cap: usize) -> GpConfig {
         cap,
         hyper: HyperMode::Adapt { every: usize::MAX },
         ard: true,
+        kernels: KernelPolicy::Scalar,
     }
 }
 

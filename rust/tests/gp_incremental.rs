@@ -24,7 +24,7 @@ use std::sync::Arc;
 use onestoptuner::exec::ExecPool;
 use onestoptuner::flags::GcMode;
 use onestoptuner::runtime::{
-    one_shot_gp, GpConfig, GpSession, HyperMode, MlBackend, NativeBackend, N_TRAIN,
+    one_shot_gp, GpConfig, GpSession, HyperMode, KernelPolicy, MlBackend, NativeBackend, N_TRAIN,
 };
 use onestoptuner::tuner::bo::{BoConfig, BoTuner, GpHypers, SurrogateMode};
 use onestoptuner::tuner::objective::Objective;
@@ -48,6 +48,7 @@ fn gp_cfg(d: usize) -> GpConfig {
         cap: N_TRAIN,
         hyper: HyperMode::Fixed,
         ard: false,
+        kernels: KernelPolicy::Scalar,
     }
 }
 
